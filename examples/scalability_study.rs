@@ -1,0 +1,89 @@
+//! Scalability study — the paper's §5.3.4 extrapolation, regenerated.
+//!
+//! Runs the analytic simulator (Eq. 1 partition + Eq. 2 wire volume +
+//! calibrated comp share) out to 32 CPU / 32 GPU / 128 mobile-GPU nodes and
+//! prints the Figure 9/10/13 series, optionally calibrated to THIS
+//! machine's measured conv throughput (pass `--calibrate`).
+//!
+//! ```sh
+//! cargo run --release --example scalability_study [--calibrate]
+//! ```
+
+use convdist::devices::{mobile_gpu, paper_cpus, paper_gpus, sample_cluster};
+use convdist::runtime::Runtime;
+use convdist::sim::{simulate_step, ArchShape, SimConfig};
+use convdist::tensor::{Pcg32, Tensor};
+
+/// Measure this container's effective conv GFLOPS with the probe
+/// executable, returning a scale factor for the device catalogs.
+fn measured_scale() -> anyhow::Result<f64> {
+    let rt = Runtime::open(convdist::artifacts_dir())?;
+    let p = rt.arch().probe.clone();
+    let mut rng = Pcg32::seed(3);
+    let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
+    let w = Tensor::randn(&[p.k, p.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+    let b = Tensor::zeros(&[p.k]);
+    let args = [x.into(), w.into(), b.into()];
+    let _ = rt.execute("probe", &args)?;
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let (_, d) = rt.execute_timed("probe", &args)?;
+        best = best.min(d.as_secs_f64());
+    }
+    let gflops = p.flops as f64 / best / 1e9;
+    // PC1 (the paper's CPU master) is the 20-GFLOPS anchor.
+    Ok(gflops / 20.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let calibrate = std::env::args().any(|a| a == "--calibrate");
+    let scale = if calibrate { measured_scale()? } else { 1.0 };
+    if calibrate {
+        println!("calibrated: local probe => gflops scale {scale:.4}\n");
+    }
+
+    let cases = [
+        ("Fig 9a: CPUs, 50:500 @ 64", ArchShape::new(50, 500, 64), paper_cpus(), 20.0),
+        ("Fig 9b: CPUs, 500:1500 @ 1024", ArchShape::new(500, 1500, 1024), paper_cpus(), 20.0),
+        ("Fig 10: GPUs, 500:1500 @ 1024", ArchShape::new(500, 1500, 1024), paper_gpus(), 38.0),
+    ];
+    for (title, arch, catalog, master_cpu) in cases {
+        let mut cfg = SimConfig::paper(arch);
+        cfg.master_cpu_gflops = master_cpu;
+        cfg.gflops_scale = scale;
+        let mut rng = Pcg32::seed(0x5CA1E);
+        let cluster = sample_cluster(&catalog, 32, &mut rng);
+        println!("{title}");
+        println!("  nodes   comm s    conv s    comp s   total s  speedup");
+        let t1 = simulate_step(&cfg, &cluster[..1]).total().as_secs_f64();
+        for n in [1usize, 2, 4, 8, 16, 24, 32] {
+            let b = simulate_step(&cfg, &cluster[..n]);
+            println!(
+                "  {n:>5} {:>8.2} {:>9.2} {:>9.2} {:>9.2} {:>8.2}x",
+                b.comm.as_secs_f64(),
+                b.conv.as_secs_f64(),
+                b.comp.as_secs_f64(),
+                b.total().as_secs_f64(),
+                t1 / b.total().as_secs_f64()
+            );
+        }
+        println!();
+    }
+
+    // Fig 13: mobile-GPU fleet with a desktop master, out to 128 nodes.
+    println!("Fig 13: mobile GPUs (desktop master), 500:1500 @ 1024");
+    let arch = ArchShape::new(500, 1500, 1024);
+    let mut cfg = SimConfig::paper(arch);
+    cfg.master_cpu_gflops = 38.0;
+    cfg.gflops_scale = scale;
+    let mut fleet = vec![paper_gpus()[0].clone()];
+    fleet.extend(std::iter::repeat(mobile_gpu()).take(127));
+    println!("  nodes  total s  speedup");
+    let t1 = simulate_step(&cfg, &fleet[..1]).total().as_secs_f64();
+    for n in [1usize, 2, 8, 32, 64, 128] {
+        let b = simulate_step(&cfg, &fleet[..n]);
+        println!("  {n:>5} {:>8.2} {:>8.2}x", b.total().as_secs_f64(), t1 / b.total().as_secs_f64());
+    }
+    println!("\n(paper: speedup stabilizes after ~8 desktop nodes; 32 mobile GPUs are not\n enough to match desktop clusters, 128 close the gap given bandwidth)");
+    Ok(())
+}

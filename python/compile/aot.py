@@ -1,0 +1,262 @@
+"""AOT pipeline: lower every model segment to HLO *text* + write manifest.json.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts [--arch k1:k2]
+                                       [--batch N] [--img N]
+
+The manifest records, for every executable, its file, argument names/shapes/
+dtypes and output names/shapes/dtypes; the rust runtime is driven entirely by
+the manifest and never hard-codes a shape.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = "f32"
+I32 = "i32"
+_DTYPES = {F32: jnp.float32, I32: jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the rust
+    side unwraps with ``to_tuple``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Emitter:
+    """Lowers named segments and accumulates manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(
+        self,
+        name: str,
+        fn: Callable,
+        args: Sequence[tuple],  # (arg_name, shape, dtype)
+        outs: Sequence[tuple],  # (out_name, shape, dtype)
+        flops: int = 0,
+    ) -> None:
+        specs = [jax.ShapeDtypeStruct(tuple(s), _DTYPES[d]) for _, s, d in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries[name] = {
+            "file": fname,
+            "args": [[n, list(s), d] for n, s, d in args],
+            "outs": [[n, list(s), d] for n, s, d in outs],
+            # Nominal FLOPs of one execution — drives the virtual-time
+            # device emulation (devices::Throttle::Virtual) and §Perf
+            # roofline estimates.
+            "flops": int(flops),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name:28s} {len(text):>9d} chars")
+
+
+# Probe workload is fixed across every experiment so performance ratios are
+# comparable between devices (paper §4.1.1 runs the same N-d convolution on
+# every node).
+PROBE_BATCH, PROBE_CH, PROBE_IMG, PROBE_K = 16, 3, 32, 32
+
+
+def conv_fwd_flops(batch: int, kb: int, cin: int, hout: int) -> int:
+    """2 * B * K * OH^2 * C * KH * KW (one multiply-add per tap)."""
+    return 2 * batch * kb * hout * hout * cin * M.KH * M.KW
+
+
+def build_all(cfg: M.ArchConfig, out_dir: str) -> dict:
+    em = Emitter(out_dir)
+    B, C0, IMG = cfg.batch, cfg.in_ch, cfg.img
+    c1o, p1o, c2o, p2o = cfg.c1_out, cfg.p1_out, cfg.c2_out, cfg.p2_out
+
+    # --- conv shard executables (the distributed hot path) ----------------
+    layer_specs = [
+        ("conv1", C0, IMG, c1o, cfg.buckets1),
+        ("conv2", cfg.k1, p1o, c2o, cfg.buckets2),
+    ]
+    for lname, cin, hin, hout, buckets in layer_specs:
+        for kb in buckets:
+            x_s = ("x", (B, cin, hin, hin), F32)
+            w_s = ("w", (kb, cin, M.KH, M.KW), F32)
+            b_s = ("b", (kb,), F32)
+            y_s = ("y", (B, kb, hout, hout), F32)
+            gy_s = ("gy", (B, kb, hout, hout), F32)
+            fwd_fl = conv_fwd_flops(B, kb, cin, hout)
+            em.emit(f"{lname}_fwd_b{kb}", M.conv_fwd_seg, [x_s, w_s, b_s], [y_s],
+                    flops=fwd_fl)
+            em.emit(
+                f"{lname}_bwd_b{kb}",
+                M.conv_bwd_seg,
+                [x_s, w_s, gy_s],
+                [
+                    ("gx", (B, cin, hin, hin), F32),
+                    ("gw", (kb, cin, M.KH, M.KW), F32),
+                    ("gb", (kb,), F32),
+                ],
+                # wgrad + xgrad are each another conv of the same volume.
+                flops=2 * fwd_fl,
+            )
+
+    # --- master-resident segments ------------------------------------------
+    for lname, k, hout, pout in [("mid1", cfg.k1, c1o, p1o), ("mid2", cfg.k2, c2o, p2o)]:
+        y_s = ("y", (B, k, hout, hout), F32)
+        p_s = ("p", (B, k, pout, pout), F32)
+        # LRN+pool: ~20 flops per activation (window sum, powers, division).
+        mid_fl = 20 * B * k * hout * hout
+        em.emit(f"{lname}_fwd", M.mid_fwd_seg, [y_s], [p_s], flops=mid_fl)
+        em.emit(
+            f"{lname}_bwd",
+            M.mid_bwd_seg,
+            [y_s, ("gp", (B, k, pout, pout), F32)],
+            [("gy", (B, k, hout, hout), F32)],
+            flops=2 * mid_fl,
+        )
+
+    p2_s = ("p2", (B, cfg.k2, p2o, p2o), F32)
+    wf_s = ("wf", (cfg.fc_in, cfg.num_classes), F32)
+    bf_s = ("bf", (cfg.num_classes,), F32)
+    lab_s = ("labels", (B,), I32)
+    head_fl = 2 * B * cfg.fc_in * cfg.num_classes
+    em.emit(
+        "head_grad",
+        M.head_grad_seg,
+        [p2_s, wf_s, bf_s, lab_s],
+        [
+            ("loss", (), F32),
+            ("gp2", (B, cfg.k2, p2o, p2o), F32),
+            ("gwf", (cfg.fc_in, cfg.num_classes), F32),
+            ("gbf", (cfg.num_classes,), F32),
+        ],
+        flops=3 * head_fl,
+    )
+    em.emit("head_eval", M.head_eval_seg, [p2_s, wf_s, bf_s],
+            [("logits", (B, cfg.num_classes), F32)], flops=head_fl)
+
+    # --- fused full-network executables (baselines) -------------------------
+    pshapes = M.param_shapes(cfg)
+    param_args = [(n, pshapes[n], F32) for n in M.PARAM_NAMES]
+    grad_outs = [("loss", (), F32)] + [
+        (f"g{n}", pshapes[n], F32) for n in M.PARAM_NAMES
+    ]
+    def full_fwd_flops(bb):
+        return (
+            conv_fwd_flops(bb, cfg.k1, C0, c1o)
+            + conv_fwd_flops(bb, cfg.k2, cfg.k1, c2o)
+            + 20 * bb * (cfg.k1 * c1o * c1o + cfg.k2 * c2o * c2o)
+            + 2 * bb * cfg.fc_in * cfg.num_classes
+        )
+
+    for bb in cfg.batch_buckets:
+        em.emit(
+            f"grad_full_b{bb}",
+            M.grad_full_seg,
+            [("x", (bb, C0, IMG, IMG), F32), ("labels", (bb,), I32)] + param_args,
+            grad_outs,
+            flops=3 * full_fwd_flops(bb),
+        )
+    em.emit(
+        "eval_full",
+        M.eval_full_seg,
+        [("x", (B, C0, IMG, IMG), F32)] + param_args,
+        [("logits", (B, cfg.num_classes), F32)],
+        flops=full_fwd_flops(B),
+    )
+
+    # --- calibration probe (paper §4.1.1) -----------------------------------
+    em.emit(
+        "probe",
+        M.probe_seg,
+        [
+            ("x", (PROBE_BATCH, PROBE_CH, PROBE_IMG, PROBE_IMG), F32),
+            ("w", (PROBE_K, PROBE_CH, M.KH, M.KW), F32),
+            ("b", (PROBE_K,), F32),
+        ],
+        [("y", (PROBE_BATCH, PROBE_K, PROBE_IMG - M.KH + 1, PROBE_IMG - M.KW + 1), F32)],
+        flops=conv_fwd_flops(PROBE_BATCH, PROBE_K, PROBE_CH, PROBE_IMG - M.KH + 1),
+    )
+
+    manifest = {
+        "version": 1,
+        "config": {
+            "k1": cfg.k1,
+            "k2": cfg.k2,
+            "batch": cfg.batch,
+            "img": cfg.img,
+            "in_ch": cfg.in_ch,
+            "num_classes": cfg.num_classes,
+            "kh": M.KH,
+            "kw": M.KW,
+            "c1_out": c1o,
+            "p1_out": p1o,
+            "c2_out": c2o,
+            "p2_out": p2o,
+            "fc_in": cfg.fc_in,
+            "buckets1": cfg.buckets1,
+            "buckets2": cfg.buckets2,
+            "batch_buckets": cfg.batch_buckets,
+            "param_shapes": {n: list(pshapes[n]) for n in M.PARAM_NAMES},
+            "param_order": list(M.PARAM_NAMES),
+            "probe": {
+                "batch": PROBE_BATCH,
+                "in_ch": PROBE_CH,
+                "img": PROBE_IMG,
+                "k": PROBE_K,
+                # FLOPs of one probe execution (2*MACs), used to convert the
+                # measured probe time into a GFLOPS performance value.
+                "flops": 2
+                * PROBE_BATCH
+                * PROBE_K
+                * PROBE_CH
+                * (PROBE_IMG - M.KH + 1) ** 2
+                * M.KH
+                * M.KW,
+            },
+        },
+        "executables": em.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--arch", default="32:64", help="k1:k2 kernel counts")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--img", type=int, default=32)
+    args = ap.parse_args()
+    cfg = M.ArchConfig.parse(args.arch, batch=args.batch, img=args.img)
+    print(f"AOT: arch {cfg.k1}:{cfg.k2} batch={cfg.batch} img={cfg.img} -> {args.out}")
+    manifest = build_all(cfg, args.out)
+    n = len(manifest["executables"])
+    print(f"wrote {n} executables + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

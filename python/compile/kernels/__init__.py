@@ -1,0 +1,16 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (the convolutions)."""
+
+from .conv2d import conv2d, conv2d_fwd, conv2d_wgrad, conv2d_xgrad
+from .pool import maxpool2
+from .ref import conv2d_ref, lrn_ref, maxpool2_ref
+
+__all__ = [
+    "conv2d",
+    "conv2d_fwd",
+    "conv2d_wgrad",
+    "conv2d_xgrad",
+    "maxpool2",
+    "conv2d_ref",
+    "lrn_ref",
+    "maxpool2_ref",
+]

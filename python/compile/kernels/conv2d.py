@@ -1,0 +1,208 @@
+"""Pallas 2-D convolution (valid, stride 1, NCHW) — the paper's hot spot.
+
+The paper (Marques et al., 2017) distributes exactly this operation: the
+convolutional layers account for 60-90% of CNN training time, forward AND
+backward, so both directions are implemented as Pallas kernels here:
+
+  * ``conv2d_fwd``   y[b,k]  = sum_c  x[b,c]  * w[k,c]          (valid corr.)
+  * ``conv2d_wgrad`` gw[k,c] = sum_b  x[b,c]  * gy[b,k]         (valid corr.)
+  * ``conv2d_xgrad`` gx[b,c] = sum_k  pad(gy)[b,k] * flip(w)[c,k] (full corr.)
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's CUDA
+mapping assigns one threadblock per output tile.  On a systolic-array target
+the win comes from phrasing the whole operation as ONE MXU-shaped GEMM: the
+kernel builds the im2col matrix ``[C*KH*KW, BT*OH*OW]`` in VMEM and issues a
+single ``[K, C*KH*KW] @ [C*KH*KW, N]`` contraction.  Contracting over
+C*KH*KW (75 for the paper's 5x5 RGB layer) instead of per-offset C keeps the
+systolic array fed even for shallow layers — the per-offset formulation ran
+~10x slower on layer 1 (C=3) because a 3-deep inner dimension cannot fill
+the pipeline (§Perf in EXPERIMENTS.md records the before/after).
+
+BlockSpec tiles the batch so the input block plus its im2col expansion fit
+the VMEM budget; ``interpret=True`` everywhere because the CPU PJRT plugin
+cannot execute Mosaic custom-calls — interpret mode lowers to portable HLO
+which both pytest and the rust runtime execute bit-identically.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv2d", "conv2d_fwd", "conv2d_wgrad", "conv2d_xgrad", "batch_tile"]
+
+# Per-tile scratch budget.  A real TPU build would set this to ~12 MiB (VMEM
+# minus headroom), giving smaller batch tiles; under CPU interpret mode the
+# "VMEM" is just an XLA buffer and grid steps cost interpreter overhead, so
+# the budget is raised to keep CIFAR-scale batches in one grid step.  The
+# TPU sizing arithmetic is documented in DESIGN.md §Hardware-Adaptation.
+VMEM_BUDGET_BYTES = 64 * (1 << 20)
+
+
+def _im2col(x: jax.Array, oh: int, ow: int, kh: int, kw: int) -> jax.Array:
+    """[BT,C,H,W] -> [KH*KW*C, BT*OH*OW] patch matrix ((ki,kj)-major rows)."""
+    bt, c, _, _ = x.shape
+    n = bt * oh * ow
+    cols = []
+    for ki in range(kh):
+        for kj in range(kw):
+            cols.append(
+                x[:, :, ki : ki + oh, kj : kj + ow].transpose(1, 0, 2, 3).reshape(c, n)
+            )
+    return jnp.concatenate(cols, axis=0)
+
+
+def _w_as_gemm(w: jax.Array) -> jax.Array:
+    """[K,C,KH,KW] -> [K, KH*KW*C], row order matching :func:`_im2col`."""
+    k = w.shape[0]
+    return w.transpose(0, 2, 3, 1).reshape(k, -1)
+
+
+# Channel depth below which the per-offset contraction cannot fill the
+# vector/systolic pipeline and the full-im2col GEMM wins despite its 25x
+# patch-matrix traffic (conv layer 1 on RGB: C=3).
+SHALLOW_C = 8
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int):
+    """One batch tile: o[BT,K,OH,OW] = conv(x, w) + b.
+
+    Two execution strategies (chosen statically at trace time):
+    * deep input (C >= SHALLOW_C): accumulate one `[K,C] @ [C,N]` GEMM per
+      filter offset — no patch-matrix materialization, so the cost of the
+      kernel-sharded executables actually scales with K (the property the
+      paper's Eq. 1 partitioning relies on);
+    * shallow input: single `[K, KH*KW*C] @ [KH*KW*C, N]` GEMM over the
+      materialized im2col matrix, because a C=3 inner dimension starves the
+      pipeline (measured 10x slowdown — EXPERIMENTS.md §Perf).
+    """
+    bt, c, _, _ = x_ref.shape
+    _, k, oh, ow = o_ref.shape
+    n = bt * oh * ow
+    x = x_ref[...]
+    if c >= SHALLOW_C:
+        acc = jnp.zeros((k, n), jnp.float32)
+        for ki in range(kh):
+            for kj in range(kw):
+                patch = (
+                    x[:, :, ki : ki + oh, kj : kj + ow].transpose(1, 0, 2, 3).reshape(c, n)
+                )
+                acc = acc + w_ref[:, :, ki, kj] @ patch
+    else:
+        colmat = _im2col(x, oh, ow, kh, kw)  # [KH*KW*C, N]
+        acc = _w_as_gemm(w_ref[...]) @ colmat
+    out = (acc + b_ref[...][:, None]).reshape(k, bt, oh, ow)
+    o_ref[...] = out.transpose(1, 0, 2, 3)
+
+
+def batch_tile(bsz: int, c: int, h: int, w: int, kh: int, kw: int) -> int:
+    """Largest batch tile whose input block + im2col expansion fits the
+    scratch budget (and divides the batch so every grid step is full)."""
+    per_image = (1 + kh * kw) * c * h * w * 4
+    tile = max(1, VMEM_BUDGET_BYTES // max(per_image, 1))
+    tile = min(tile, bsz)
+    while bsz % tile:
+        tile -= 1
+    return tile
+
+
+def conv2d_fwd(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Valid stride-1 convolution (cross-correlation), NCHW/OIHW -> NCHW."""
+    bsz, c, h, wdt = x.shape
+    k, wc, kh, kw = w.shape
+    if wc != c:
+        raise ValueError(f"channel mismatch: x has {c}, w has {wc}")
+    if b.shape != (k,):
+        raise ValueError(f"bias must be [{k}], got {b.shape}")
+    oh, ow = h - kh + 1, wdt - kw + 1
+    if oh <= 0 or ow <= 0:
+        raise ValueError(f"kernel {kh}x{kw} larger than input {h}x{wdt}")
+    bt = batch_tile(bsz, c, h, wdt, kh, kw)
+    return pl.pallas_call(
+        partial(_fwd_kernel, kh=kh, kw=kw),
+        grid=(bsz // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, c, h, wdt), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((k, c, kh, kw), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, k, oh, ow), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k, oh, ow), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _wgrad_kernel(x_ref, gy_ref, gw_ref, gb_ref, *, kh: int, kw: int):
+    """gw[K,C,ki,kj] = sum_{b,oh,ow} x[b,c,oh+ki,ow+kj] * gy[b,k,oh,ow].
+
+    Same im2col matrix as the forward pass, transposed GEMM:
+    ``[K, N] @ [N, KH*KW*C]``.
+    """
+    bsz, c, _, _ = x_ref.shape
+    _, k, oh, ow = gy_ref.shape
+    n = bsz * oh * ow
+    gy = gy_ref[...]
+    gy_mat = gy.transpose(1, 0, 2, 3).reshape(k, n)  # [K, N]
+    x = x_ref[...]
+    # Per-offset [K,N] @ [N,C] contractions: N is always large, so the
+    # pipeline stays fed without materializing the im2col matrix, and the
+    # GEMM cost scales with the shard's K.
+    for ki in range(kh):
+        for kj in range(kw):
+            patch = x[:, :, ki : ki + oh, kj : kj + ow].transpose(1, 0, 2, 3).reshape(c, n)
+            gw_ref[:, :, ki, kj] = gy_mat @ patch.T
+    gb_ref[...] = gy.sum(axis=(0, 2, 3))
+
+
+def conv2d_wgrad(x: jax.Array, gy: jax.Array, kh: int, kw: int):
+    """Gradients w.r.t. the kernels and bias of :func:`conv2d_fwd`."""
+    bsz, c, h, wdt = x.shape
+    gb, k, oh, ow = gy.shape
+    if gb != bsz:
+        raise ValueError(f"batch mismatch: x has {bsz}, gy has {gb}")
+    if (oh, ow) != (h - kh + 1, wdt - kw + 1):
+        raise ValueError(f"gy spatial {oh}x{ow} inconsistent with {h}x{wdt} conv {kh}x{kw}")
+    return pl.pallas_call(
+        partial(_wgrad_kernel, kh=kh, kw=kw),
+        out_shape=(
+            jax.ShapeDtypeStruct((k, c, kh, kw), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ),
+        interpret=True,
+    )(x, gy)
+
+
+def conv2d_xgrad(w: jax.Array, gy: jax.Array) -> jax.Array:
+    """Gradient w.r.t. the input: full correlation of gy with flipped kernels.
+
+    Expressed as the *same* Pallas forward kernel with the roles of the
+    channel axes swapped — gx = conv_fwd(pad(gy), flip(w)^T) — so the one
+    kernel body covers both propagation directions.
+    """
+    k, c, kh, kw = w.shape
+    gyp = jnp.pad(gy, ((0, 0), (0, 0), (kh - 1, kh - 1), (kw - 1, kw - 1)))
+    # [C, K, KH, KW], spatially flipped.
+    wt = jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)
+    return conv2d_fwd(gyp, wt, jnp.zeros((c,), jnp.float32))
+
+
+@jax.custom_vjp
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Differentiable valid conv2d; every direction runs the Pallas kernels."""
+    return conv2d_fwd(x, w, b)
+
+
+def _conv2d_vjp_fwd(x, w, b):
+    return conv2d_fwd(x, w, b), (x, w)
+
+
+def _conv2d_vjp_bwd(res, gy):
+    x, w = res
+    _, _, kh, kw = w.shape
+    gw, gb = conv2d_wgrad(x, gy, kh, kw)
+    gx = conv2d_xgrad(w, gy)
+    return gx, gw, gb
+
+
+conv2d.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)

@@ -1,0 +1,34 @@
+"""Pallas 2x2/stride-2 max-pooling kernel (forward).
+
+Used on the inference/eval path (no gradient needed there); the training
+graph pools via the differentiable reshape-max in ``model.py`` so autodiff
+stays in plain jnp.  Checked against ``ref.maxpool2_ref`` by pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["maxpool2"]
+
+
+def _maxpool2_kernel(x_ref, o_ref):
+    x = x_ref[0]  # [C, H, W]
+    c, h, w = x.shape
+    blocks = x.reshape(c, h // 2, 2, w // 2, 2)
+    o_ref[...] = blocks.max(axis=(2, 4))[None]
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """Non-overlapping 2x2 max pool with stride 2 over NCHW input."""
+    bsz, c, h, w = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2 requires even spatial dims, got {h}x{w}")
+    return pl.pallas_call(
+        _maxpool2_kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h // 2, w // 2), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c, h // 2, w // 2), jnp.float32),
+        interpret=True,
+    )(x)

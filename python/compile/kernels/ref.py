@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest asserts kernel == ref (and jax.grad(kernel) == jax.grad(ref)) over
+hypothesis-swept shapes; nothing in this module is ever exported to HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["conv2d_ref", "maxpool2_ref", "lrn_ref"]
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Valid stride-1 cross-correlation via lax.conv_general_dilated."""
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def maxpool2_ref(x: jax.Array) -> jax.Array:
+    """2x2 max pooling, stride 2 (paper's 'pooling layer, with stride 2')."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def lrn_ref(
+    x: jax.Array, *, n: int = 5, k: float = 2.0, alpha: float = 1e-4, beta: float = 0.75
+) -> jax.Array:
+    """AlexNet-style local response normalization across channels.
+
+    The paper's architecture interleaves a 'normalization layer' after each
+    convolution; LRN is the standard choice for that slot in 2017-era CNNs.
+    """
+    sq = x * x
+    half = n // 2
+    # Sum sq over a window of `n` adjacent channels, zero-padded.
+    padded = jnp.pad(sq, ((0, 0), (half, n - 1 - half), (0, 0), (0, 0)))
+    window = sum(padded[:, i : i + x.shape[1]] for i in range(n))
+    return x / jnp.power(k + alpha * window, beta)

@@ -1,0 +1,244 @@
+"""L2: the paper's CNN as JAX segment functions calling the Pallas kernels.
+
+Architecture (paper §5.2, CIFAR-10):
+
+    conv 5x5 (C1) -> LRN -> maxpool /2 -> conv 5x5 (C2) -> LRN -> maxpool /2
+    -> fully connected -> softmax loss
+
+The network is cut into the exact segments the distributed runtime needs
+(DESIGN.md §3): the conv layers — the part the paper distributes — are their
+own fwd/bwd executables parameterised by the *kernel-shard* size, while the
+LRN+pool "mid" blocks and the FC+softmax "head" stay on the master.  Every
+segment is a pure function exported to HLO text by ``aot.py``; composing the
+segments must reproduce ``grad_full`` exactly, which pytest asserts.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, maxpool2
+
+KH = KW = 5  # paper: 5x5 kernels in both conv layers
+POOL = 2  # paper: pooling stride 2
+
+
+# --------------------------------------------------------------------------
+# Architecture description
+# --------------------------------------------------------------------------
+
+
+def bucket_ladder(k: int, steps: int = 8) -> List[int]:
+    """Shard-size buckets for a conv layer with `k` kernels.
+
+    HLO executables have static shapes but Eq. 1 assigns data-dependent shard
+    sizes, so the partitioner rounds every shard up to the nearest bucket and
+    zero-pads.  Eighths of `k`, rounded up to a multiple of 4, bound padding
+    waste by ~12.5% worst-case.
+    """
+    raw = sorted({-(-k * i // steps) for i in range(1, steps + 1)})
+    buckets = sorted({min(k, -(-r // 4) * 4) for r in raw})
+    assert buckets[-1] == k
+    return buckets
+
+
+@dataclass
+class ArchConfig:
+    """Shapes of one experiment architecture (paper notation 'k1:k2')."""
+
+    k1: int = 16
+    k2: int = 32
+    batch: int = 64
+    img: int = 32
+    in_ch: int = 3
+    num_classes: int = 10
+
+    # Derived spatial sizes (valid conv, /2 pool), e.g. 32->28->14->10->5.
+    @property
+    def c1_out(self) -> int:
+        return self.img - KH + 1
+
+    @property
+    def p1_out(self) -> int:
+        return self.c1_out // POOL
+
+    @property
+    def c2_out(self) -> int:
+        return self.p1_out - KH + 1
+
+    @property
+    def p2_out(self) -> int:
+        return self.c2_out // POOL
+
+    @property
+    def fc_in(self) -> int:
+        return self.k2 * self.p2_out * self.p2_out
+
+    buckets1: List[int] = field(default_factory=list)
+    buckets2: List[int] = field(default_factory=list)
+    batch_buckets: List[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.c1_out % POOL or self.c2_out % POOL:
+            raise ValueError(f"architecture {self.k1}:{self.k2} img={self.img} "
+                             "does not pool evenly")
+        if not self.buckets1:
+            self.buckets1 = bucket_ladder(self.k1)
+        if not self.buckets2:
+            self.buckets2 = bucket_ladder(self.k2)
+        if not self.batch_buckets:
+            bb = {self.batch}
+            b = self.batch
+            while b % 2 == 0 and b > max(2, self.batch // 8):
+                b //= 2
+                bb.add(b)
+            self.batch_buckets = sorted(bb)
+
+    @classmethod
+    def parse(cls, spec: str, batch: int = 64, img: int = 32) -> "ArchConfig":
+        """Parse the paper's 'k1:k2' notation, e.g. '500:1500'."""
+        k1, k2 = (int(p) for p in spec.split(":"))
+        return cls(k1=k1, k2=k2, batch=batch, img=img)
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+
+def lrn(x: jax.Array, n: int = 5, k: float = 2.0, alpha: float = 1e-4,
+        beta: float = 0.75) -> jax.Array:
+    """Differentiable LRN (same math as kernels.ref.lrn_ref)."""
+    sq = x * x
+    half = n // 2
+    padded = jnp.pad(sq, ((0, 0), (half, n - 1 - half), (0, 0), (0, 0)))
+    window = sum(padded[:, i : i + x.shape[1]] for i in range(n))
+    return x / jnp.power(k + alpha * window, beta)
+
+
+def pool2(x: jax.Array) -> jax.Array:
+    """Differentiable 2x2/stride-2 max pool (reshape-max; jax handles vjp)."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def mid_segment(y: jax.Array) -> jax.Array:
+    """The master-resident block between a conv layer and the next: LRN+pool."""
+    return pool2(lrn(y))
+
+
+def head_logits(p2: jax.Array, wf: jax.Array, bf: jax.Array) -> jax.Array:
+    return p2.reshape(p2.shape[0], -1) @ wf + bf
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def head_loss(p2, wf, bf, labels):
+    return softmax_xent(head_logits(p2, wf, bf), labels)
+
+
+# --------------------------------------------------------------------------
+# Full network (params as a flat tuple so HLO arg order is self-evident)
+# --------------------------------------------------------------------------
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "wf", "bf")
+
+
+def param_shapes(cfg: ArchConfig) -> Dict[str, tuple]:
+    return {
+        "w1": (cfg.k1, cfg.in_ch, KH, KW),
+        "b1": (cfg.k1,),
+        "w2": (cfg.k2, cfg.k1, KH, KW),
+        "b2": (cfg.k2,),
+        "wf": (cfg.fc_in, cfg.num_classes),
+        "bf": (cfg.num_classes,),
+    }
+
+
+def forward(params, x):
+    """Full forward pass: logits."""
+    w1, b1, w2, b2, wf, bf = params
+    p1 = mid_segment(conv2d(x, w1, b1))
+    p2 = mid_segment(conv2d(p1, w2, b2))
+    return head_logits(p2, wf, bf)
+
+
+def loss_full(params, x, labels):
+    return softmax_xent(forward(params, x), labels)
+
+
+# --------------------------------------------------------------------------
+# Exported segment functions.  Flat-arg signatures only (HLO interchange).
+# --------------------------------------------------------------------------
+
+
+def conv_fwd_seg(x, w, b):
+    """Worker executable: conv a kernel shard. -> (y,)"""
+    return (conv2d(x, w, b),)
+
+
+def conv_bwd_seg(x, w, gy):
+    """Worker executable: shard backward. -> (gx_partial, gw, gb).
+
+    gx is *partial* — the master sums the gx of every shard (conv is linear
+    in the kernels, so sharding the K axis shards gx additively).
+    """
+    _, vjp = jax.vjp(lambda xx, ww, bb: conv2d(xx, ww, bb), x, w,
+                     jnp.zeros((w.shape[0],), jnp.float32))
+    gx, gw, gb = vjp(gy)
+    return gx, gw, gb
+
+
+def mid_fwd_seg(y):
+    """Master executable: LRN + pool. -> (p,)"""
+    return (mid_segment(y),)
+
+
+def mid_bwd_seg(y, gp):
+    """Master executable: vjp of LRN + pool (recompute-in-bwd). -> (gy,)"""
+    _, vjp = jax.vjp(mid_segment, y)
+    (gy,) = vjp(gp)
+    return (gy,)
+
+
+def head_grad_seg(p2, wf, bf, labels):
+    """Master executable: loss + grads wrt (p2, wf, bf). -> (loss, gp2, gwf, gbf)"""
+    loss, grads = jax.value_and_grad(head_loss, argnums=(0, 1, 2))(p2, wf, bf, labels)
+    return (loss,) + grads
+
+
+def head_eval_seg(p2, wf, bf):
+    """Master executable: logits for accuracy eval (uses the Pallas pool on
+    the way in, so the eval path exercises maxpool2 end-to-end)."""
+    return (head_logits(p2, wf, bf),)
+
+
+def grad_full_seg(x, labels, w1, b1, w2, b2, wf, bf):
+    """Single-device / data-parallel executable: full fused fwd+bwd.
+    -> (loss, gw1, gb1, gw2, gb2, gwf, gbf)
+    """
+    params = (w1, b1, w2, b2, wf, bf)
+    loss, grads = jax.value_and_grad(loss_full)(params, x, labels)
+    return (loss,) + tuple(grads)
+
+
+def eval_full_seg(x, w1, b1, w2, b2, wf, bf):
+    """Inference executable: logits for the full network.
+
+    The eval path routes pooling through the Pallas ``maxpool2`` kernel
+    (training uses the differentiable jnp pool).
+    """
+    p1 = maxpool2(lrn(conv2d(x, w1, b1)))
+    p2 = maxpool2(lrn(conv2d(p1, w2, b2)))
+    return (head_logits(p2, wf, bf),)
+
+
+def probe_seg(x, w, b):
+    """Calibration probe (paper §4.1.1): the 'quick test' every device runs
+    so the master can compute Eq. 1 performance ratios. -> (y,)"""
+    return (conv2d(x, w, b),)

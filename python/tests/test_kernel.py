@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and seeds; every property is checked in both
+forward and backward (vjp) directions — the paper distributes the
+convolutions of *training*, so the gradients are as load-bearing as the
+forward pass.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 4),  # batch
+    st.integers(1, 5),  # in channels
+    st.integers(1, 6),  # out channels (kernels)
+    st.sampled_from([(1, 6), (3, 8), (5, 9), (2, 5)]),  # (kernel hw, img hw)
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(0, 2**31 - 1))
+def test_conv2d_fwd_matches_ref(dims, seed):
+    b, c, k, (khw, hw) = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, c, hw, hw)
+    w = rand(rng, k, c, khw, khw)
+    bias = rand(rng, k)
+    got = K.conv2d(x, w, bias)
+    want = K.conv2d_ref(x, w, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_strategy, st.integers(0, 2**31 - 1))
+def test_conv2d_grads_match_ref(dims, seed):
+    b, c, k, (khw, hw) = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, c, hw, hw)
+    w = rand(rng, k, c, khw, khw)
+    bias = rand(rng, k)
+
+    def loss(fn):
+        return lambda x, w, b: jnp.sum(jnp.tanh(fn(x, w, b)))
+
+    got = jax.grad(loss(K.conv2d), argnums=(0, 1, 2))(x, w, bias)
+    want = jax.grad(loss(K.conv2d_ref), argnums=(0, 1, 2))(x, w, bias)
+    for g, r, name in zip(got, want, "xwb"):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(r), rtol=1e-3, atol=1e-4, err_msg=f"grad {name}"
+        )
+
+
+def test_conv2d_kernel_axis_is_linear():
+    """The property the whole paper rests on: convolving a kernel *shard*
+    yields exactly the corresponding slice of the full feature map."""
+    rng = np.random.default_rng(0)
+    x = rand(rng, 2, 3, 10, 10)
+    w = rand(rng, 8, 3, 5, 5)
+    b = rand(rng, 8)
+    full = K.conv2d(x, w, b)
+    lo, hi = 2, 7
+    shard = K.conv2d(x, w[lo:hi], b[lo:hi])
+    np.testing.assert_allclose(
+        np.asarray(full[:, lo:hi]), np.asarray(shard), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_conv2d_zero_padded_kernels_extend_without_disturbing():
+    """Bucket rounding: zero-padding the kernel axis must leave real outputs
+    bit-identical and produce all-zero padding maps (bias also padded)."""
+    rng = np.random.default_rng(1)
+    x = rand(rng, 2, 3, 8, 8)
+    w = rand(rng, 5, 3, 3, 3)
+    b = rand(rng, 5)
+    wp = jnp.concatenate([w, jnp.zeros((3, 3, 3, 3), jnp.float32)])
+    bp = jnp.concatenate([b, jnp.zeros((3,), jnp.float32)])
+    got = K.conv2d(x, wp, bp)
+    np.testing.assert_array_equal(np.asarray(got[:, :5]), np.asarray(K.conv2d(x, w, b)))
+    assert np.all(np.asarray(got[:, 5:]) == 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 3),
+    st.integers(1, 4),
+    st.sampled_from([2, 4, 6, 8]),
+    st.integers(0, 2**31 - 1),
+)
+def test_maxpool2_matches_ref(b, c, hw, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, c, hw, hw)
+    np.testing.assert_array_equal(
+        np.asarray(K.maxpool2(x)), np.asarray(K.maxpool2_ref(x))
+    )
+
+
+def test_maxpool2_rejects_odd_spatial():
+    with pytest.raises(ValueError):
+        K.maxpool2(jnp.zeros((1, 1, 5, 5), jnp.float32))
+
+
+def test_conv2d_rejects_bad_shapes():
+    x = jnp.zeros((1, 3, 8, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        K.conv2d_fwd(x, jnp.zeros((4, 2, 5, 5), jnp.float32), jnp.zeros(4))  # chan mismatch
+    with pytest.raises(ValueError):
+        K.conv2d_fwd(x, jnp.zeros((4, 3, 5, 5), jnp.float32), jnp.zeros(3))  # bias mismatch
+    with pytest.raises(ValueError):
+        K.conv2d_fwd(x, jnp.zeros((4, 3, 9, 9), jnp.float32), jnp.zeros(4))  # kernel > img
+
+
+def test_lrn_ref_properties():
+    """LRN must be sign-preserving and shrink magnitudes."""
+    rng = np.random.default_rng(3)
+    x = rand(rng, 2, 8, 4, 4, scale=2.0)
+    y = K.lrn_ref(x)
+    assert np.all(np.sign(np.asarray(y)) == np.sign(np.asarray(x)))
+    assert np.all(np.abs(np.asarray(y)) <= np.abs(np.asarray(x)) + 1e-6)
+
+
+def test_conv2d_wgrad_direct():
+    """conv2d_wgrad standalone (it is its own executable path in bwd)."""
+    rng = np.random.default_rng(4)
+    x = rand(rng, 3, 2, 9, 9)
+    w = rand(rng, 4, 2, 5, 5)
+    gy = rand(rng, 3, 4, 5, 5)
+    gw, gb = K.conv2d_wgrad(x, gy, 5, 5)
+
+    # Against autodiff of the reference.
+    def f(w):
+        return jnp.vdot(K.conv2d_ref(x, w, jnp.zeros(4)), gy)
+
+    gw_ref = jax.grad(f)(w)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gy.sum(axis=(0, 2, 3))), rtol=1e-5)
+
+
+def test_conv2d_xgrad_direct():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 2, 3, 9, 9)
+    w = rand(rng, 4, 3, 5, 5)
+    gy = rand(rng, 2, 4, 5, 5)
+    gx = K.conv2d_xgrad(w, gy)
+
+    def f(x):
+        return jnp.vdot(K.conv2d_ref(x, w, jnp.zeros(4)), gy)
+
+    gx_ref = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref), rtol=1e-4, atol=1e-4)

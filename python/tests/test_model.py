@@ -1,0 +1,171 @@
+"""L2 correctness: the exported segments must compose into the full model.
+
+The distributed runtime (rust) chains conv/mid/head segment executables;
+these tests prove, in pure JAX, that the *same functions* the AOT pipeline
+exports compose to the fused `grad_full` — i.e. the distributed step is
+mathematically identical to single-device training.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_cfg(k1=4, k2=6, batch=2):
+    return M.ArchConfig(k1=k1, k2=k2, batch=batch)
+
+
+def make_inputs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    shapes = M.param_shapes(cfg)
+    params = tuple(
+        jnp.asarray(rng.standard_normal(shapes[n]) * 0.1, jnp.float32) for n in M.PARAM_NAMES
+    )
+    x = jnp.asarray(
+        rng.standard_normal((cfg.batch, cfg.in_ch, cfg.img, cfg.img)), jnp.float32
+    )
+    labels = jnp.asarray(rng.integers(0, cfg.num_classes, cfg.batch), jnp.int32)
+    return params, x, labels
+
+
+def test_spatial_chain():
+    cfg = make_cfg()
+    assert (cfg.c1_out, cfg.p1_out, cfg.c2_out, cfg.p2_out) == (28, 14, 10, 5)
+    assert cfg.fc_in == cfg.k2 * 25
+
+
+def test_bucket_ladder_properties():
+    for k in [5, 16, 32, 50, 500, 1500]:
+        ladder = M.bucket_ladder(k)
+        assert ladder[-1] == k
+        assert ladder == sorted(set(ladder))
+        # Any shard size 1..k fits in a bucket with <= max(4/k, ~18%) waste.
+        for n in range(1, k + 1):
+            b = min(x for x in ladder if x >= n)
+            assert b - n <= max(4, -(-k // 8)), (k, n, b)
+
+
+def test_arch_parse():
+    cfg = M.ArchConfig.parse("500:1500", batch=1024)
+    assert (cfg.k1, cfg.k2, cfg.batch) == (500, 1500, 1024)
+    with pytest.raises(ValueError):
+        M.ArchConfig(k1=4, k2=4, img=31)  # does not pool evenly
+
+
+def test_segment_forward_composition_equals_full():
+    cfg = make_cfg()
+    params, x, labels = make_inputs(cfg)
+    w1, b1, w2, b2, wf, bf = params
+    # Chain the exported segments exactly as the rust master does.
+    (y1,) = M.conv_fwd_seg(x, w1, b1)
+    (p1,) = M.mid_fwd_seg(y1)
+    (y2,) = M.conv_fwd_seg(p1, w2, b2)
+    (p2,) = M.mid_fwd_seg(y2)
+    (logits,) = M.head_eval_seg(p2, wf, bf)
+    want = M.forward(params, x)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_segment_backward_composition_equals_grad_full():
+    """Full distributed backward chain == fused jax.grad."""
+    cfg = make_cfg()
+    params, x, labels = make_inputs(cfg, seed=1)
+    w1, b1, w2, b2, wf, bf = params
+
+    # Forward chain with residuals.
+    (y1,) = M.conv_fwd_seg(x, w1, b1)
+    (p1,) = M.mid_fwd_seg(y1)
+    (y2,) = M.conv_fwd_seg(p1, w2, b2)
+    (p2,) = M.mid_fwd_seg(y2)
+    # Head grad.
+    loss, gp2, gwf, gbf = M.head_grad_seg(p2, wf, bf, labels)
+    # Backward chain.
+    (gy2,) = M.mid_bwd_seg(y2, gp2)
+    gp1, gw2, gb2 = M.conv_bwd_seg(p1, w2, gy2)
+    (gy1,) = M.mid_bwd_seg(y1, gp1)
+    _, gw1, gb1 = M.conv_bwd_seg(x, w1, gy1)
+
+    ref = M.grad_full_seg(x, labels, *params)
+    ref_loss, rgw1, rgb1, rgw2, rgb2, rgwf, rgbf = ref
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+    for got, want, name in [
+        (gw1, rgw1, "gw1"),
+        (gb1, rgb1, "gb1"),
+        (gw2, rgw2, "gw2"),
+        (gb2, rgb2, "gb2"),
+        (gwf, rgwf, "gwf"),
+        (gbf, rgbf, "gbf"),
+    ]:
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-5, err_msg=name
+        )
+
+
+@settings(max_examples=5, deadline=None, print_blob=True)
+@given(st.integers(2, 6), st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_sharded_conv_bwd_sums_to_full(k1, k2, seed):
+    """Kernel-sharded backward: gx partials sum to the full gx, and gw/gb
+    shards concatenate to the full gradients — the linearity the rust master
+    relies on when gathering (dist_conv_bwd)."""
+    cfg = make_cfg(k1=k1, k2=k2)
+    params, x, _ = make_inputs(cfg, seed=seed)
+    w1, b1, *_ = params
+    rng = np.random.default_rng(seed + 1)
+    gy = jnp.asarray(
+        rng.standard_normal((cfg.batch, k1, cfg.c1_out, cfg.c1_out)), jnp.float32
+    )
+    full_gx, full_gw, full_gb = M.conv_bwd_seg(x, w1, gy)
+    cut = max(1, k1 // 2)
+    gx_a, gw_a, gb_a = M.conv_bwd_seg(x, w1[:cut], gy[:, :cut])
+    gx_b, gw_b, gb_b = M.conv_bwd_seg(x, w1[cut:], gy[:, cut:])
+    # Tolerances are scaled to the gradient magnitudes: gw accumulates
+    # B*OH*OW float32 products, so absolute error grows with the reduction.
+    def close(got, want, name):
+        got, want = np.asarray(got), np.asarray(want)
+        scale = max(np.abs(want).max(), 1.0)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3 * scale, err_msg=name)
+
+    close(gx_a + gx_b, full_gx, "gx")
+    close(np.concatenate([gw_a, gw_b]), full_gw, "gw")
+    close(np.concatenate([gb_a, gb_b]), full_gb, "gb")
+
+
+def test_loss_decreases_under_sgd():
+    """A few fused-gradient steps must reduce the loss on a fixed batch —
+    the python-side sanity check behind the e2e rust example."""
+    cfg = make_cfg(k1=4, k2=6, batch=8)
+    params, x, labels = make_inputs(cfg, seed=2)
+    params = list(params)
+    first = None
+    lr = 0.1
+    for _ in range(20):
+        out = M.grad_full_seg(x, labels, *params)
+        loss, grads = out[0], out[1:]
+        if first is None:
+            first = float(loss)
+        params = [p - lr * g for p, g in zip(params, grads)]
+    assert float(loss) < first * 0.8, (first, float(loss))
+
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.5, 0.5, 0.5]], jnp.float32)
+    labels = jnp.asarray([0, 2], jnp.int32)
+    got = float(M.softmax_xent(logits, labels))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1.0 + np.exp(-1.0))
+    want = -0.5 * (np.log(p0) + np.log(1.0 / 3.0))
+    assert abs(got - want) < 1e-5
+
+
+def test_eval_full_matches_forward():
+    """The Pallas-pooling eval path must agree with the training forward."""
+    cfg = make_cfg()
+    params, x, _ = make_inputs(cfg, seed=3)
+    (logits,) = M.eval_full_seg(x, *params)
+    want = M.forward(params, x)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,91 @@
+//! `cargo bench --bench hot_paths` — microbenchmarks of the L3 hot path,
+//! the §Perf evidence base: wire protocol encode/decode, tensor
+//! slice/concat/pad (shard assembly), Eq. 1 partitioning, PJRT executable
+//! dispatch, and the full distributed step.
+//!
+//! Requires `make artifacts` for the PJRT-backed benches.
+
+use convdist::cluster::{spawn_inproc, DistTrainer};
+use convdist::config::TrainerConfig;
+use convdist::data::{Dataset, SyntheticCifar};
+use convdist::devices::Throttle;
+use convdist::proto::{read_frame, write_frame, Message, WireTensor};
+use convdist::runtime::Runtime;
+use convdist::sched::partition_layer;
+use convdist::tensor::{Pcg32, Tensor, Value};
+use convdist::util::bench::Bencher;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bencher::default();
+    let mut rng = Pcg32::seed(7);
+
+    // --- proto: the per-batch ConvWork frame (inputs + kernels + bias) -----
+    let inputs = Tensor::randn(&[64, 32, 14, 14], &mut rng);
+    let kernels = Tensor::randn(&[32, 32, 5, 5], &mut rng);
+    let bias = Tensor::randn(&[32], &mut rng);
+    let msg = Message::ConvWork {
+        seq: 1,
+        layer: 2,
+        dir: 0,
+        bucket: 32,
+        inputs: WireTensor::from(&inputs),
+        kernels: WireTensor::from(&kernels),
+        extra: Some(WireTensor::from(&bias)),
+    };
+    let mut encoded = Vec::new();
+    write_frame(&mut encoded, &msg)?;
+    println!("ConvWork frame: {:.2} MiB", encoded.len() as f64 / (1 << 20) as f64);
+    b.run("proto::encode ConvWork (1.6 MiB)", || {
+        let mut buf = Vec::with_capacity(encoded.len());
+        write_frame(&mut buf, &msg).unwrap();
+        buf
+    });
+    b.run("proto::decode ConvWork (1.6 MiB)", || {
+        read_frame(&mut std::io::Cursor::new(&encoded)).unwrap()
+    });
+
+    // --- tensor ops on the gather path --------------------------------------
+    let maps = Tensor::randn(&[64, 64, 10, 10], &mut rng);
+    b.run("tensor::slice_axis1 (64ch -> 21ch)", || maps.slice_axis1(21, 42).unwrap());
+    let parts: Vec<Tensor> = vec![
+        maps.slice_axis1(0, 21).unwrap(),
+        maps.slice_axis1(21, 42).unwrap(),
+        maps.slice_axis1(42, 64).unwrap(),
+    ];
+    b.run("tensor::concat_axis1 (3 shards)", || Tensor::concat_axis1(&parts).unwrap());
+    let w = Tensor::randn(&[21, 32, 5, 5], &mut rng);
+    b.run("tensor::pad_axis0 (21 -> 24 kernels)", || w.pad_axis0(24).unwrap());
+
+    // --- Eq. 1 partitioning --------------------------------------------------
+    let times: Vec<f64> = (0..16).map(|i| 0.01 * (1.0 + (i % 5) as f64)).collect();
+    let buckets: Vec<usize> = (1..=32).map(|i| i * 48).collect();
+    b.run("sched::partition_layer (1500 kernels, 16 devices)", || {
+        partition_layer(1500, &times, &buckets).unwrap()
+    });
+
+    // --- PJRT dispatch + full distributed step ------------------------------
+    let artifacts = convdist::artifacts_dir();
+    let rt = Runtime::open(&artifacts)?;
+    let arch = rt.arch().clone();
+    let x = Tensor::randn(&[arch.batch, arch.k1, arch.p1_out, arch.p1_out], &mut rng);
+    let wk = Tensor::randn(&[arch.k2, arch.k1, arch.kh, arch.kw], &mut rng);
+    let bk = Tensor::zeros(&[arch.k2]);
+    let exec = format!("conv2_fwd_b{}", arch.k2);
+    let args = [Value::F32(x), Value::F32(wk), Value::F32(bk)];
+    rt.execute(&exec, &args)?; // compile outside the timing loop
+    b.run(&format!("runtime::execute {exec}"), || rt.execute(&exec, &args).unwrap());
+
+    let cfg = TrainerConfig { steps: 1, calib_rounds: 1, ..Default::default() };
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 9);
+    let batch = ds.batch(arch.batch, 0)?;
+    let mut cluster = spawn_inproc(artifacts, &[Throttle::none(); 2], None);
+    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none())?;
+    dist.step(&batch)?; // warm caches
+    let slow = Bencher { budget: std::time::Duration::from_secs(6), max_iters: 12, warmup: 1 };
+    slow.run("cluster::step end-to-end (3 devices)", || dist.step(&batch).unwrap());
+    let r = dist.step(&batch)?;
+    println!("  step breakdown: {}", r.breakdown);
+    dist.shutdown()?;
+    cluster.join()?;
+    Ok(())
+}

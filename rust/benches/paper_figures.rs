@@ -1,0 +1,17 @@
+//! `cargo bench --bench paper_figures` — regenerates every *figure* of the
+//! paper's evaluation (Figures 5-13) and times the generators.  Output rows
+//! are the reproduction record that EXPERIMENTS.md quotes.
+
+use convdist::sim::figures;
+use convdist::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher::quick();
+    for id in ["fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13"] {
+        let fig = figures::generate(id).expect("known id");
+        println!("\n{}", fig.render());
+        b.run(&format!("generate::{id}"), || {
+            std::hint::black_box(figures::generate(id).unwrap())
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench paper_tables` — regenerates every *table* of the
+//! paper's evaluation (Tables 1, 4, 5 + the Amdahl/§5.3.1 anchors) and
+//! times the generators.  Output rows are the reproduction record that
+//! EXPERIMENTS.md quotes.
+
+use convdist::sim::figures;
+use convdist::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher::quick();
+    for id in ["table1", "table4", "table5", "amdahl"] {
+        let fig = figures::generate(id).expect("known id");
+        println!("\n{}", fig.render());
+        b.run(&format!("generate::{id}"), || {
+            std::hint::black_box(figures::generate(id).unwrap())
+        });
+    }
+}

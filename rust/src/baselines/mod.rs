@@ -1,0 +1,211 @@
+//! Baselines the paper compares against.
+//!
+//! * [`SingleDeviceTrainer`] — the reference point for every speedup: the
+//!   whole network trained on one device via the fused `grad_full`
+//!   executable.  Also the numeric ground truth the distributed trainer
+//!   must match bit-for-bit-ish (same math, different partitioning).
+//! * [`DataParallelTrainer`] — §2.2.1: each replica computes full-network
+//!   gradients on a batch shard; gradients are averaged and applied once.
+//!   This is the TensorFlow/Vishnu-style comparison (Table 1) and exhibits
+//!   its failure mode on heterogeneous fleets (the step waits for the
+//!   slowest replica).
+//! * [`dp_sim_step_time`] — analytic step-time model for the Table 1 anchor.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::config::TrainerConfig;
+use crate::data::Batch;
+use crate::devices::Throttle;
+use crate::metrics::{Breakdown, Phase, PhaseTimer};
+use crate::model::{Grads, Params, Sgd};
+use crate::runtime::Runtime;
+use crate::sim::ArchShape;
+use crate::tensor::Value;
+
+/// Run `grad_full_b{batch}` and split the outputs into (loss, grads).
+fn run_grad_full(
+    rt: &Runtime,
+    params: &Params,
+    images: Value,
+    labels: Value,
+    batch: usize,
+) -> Result<(f32, Grads)> {
+    let name = format!("grad_full_b{batch}");
+    let mut args = vec![images, labels];
+    args.extend(params.in_order().into_iter().map(Value::F32));
+    let outs = rt.execute(&name, &args)?;
+    let mut it = outs.into_iter();
+    let loss = it.next().unwrap().as_f32()?.item()?;
+    let mut grads = Grads::zeros_like(params);
+    for name in params.names().to_vec() {
+        grads.set(&name, it.next().unwrap().as_f32()?.clone());
+    }
+    Ok((loss, grads))
+}
+
+/// The 1-device reference trainer.
+pub struct SingleDeviceTrainer {
+    rt: Arc<Runtime>,
+    pub params: Params,
+    opt: Sgd,
+    throttle: Throttle,
+}
+
+impl SingleDeviceTrainer {
+    pub fn new(rt: Arc<Runtime>, cfg: &TrainerConfig, throttle: Throttle) -> Result<Self> {
+        let params = Params::init(rt.arch(), cfg.seed)?;
+        Ok(Self { rt, params, opt: Sgd::new(cfg.lr, cfg.momentum, cfg.weight_decay), throttle })
+    }
+
+    pub fn step(&mut self, batch: &Batch) -> Result<(f32, Breakdown)> {
+        let mut timer = PhaseTimer::default();
+        let b = batch.labels.len();
+        let t0 = std::time::Instant::now();
+        let (loss, grads) = run_grad_full(
+            &self.rt,
+            &self.params,
+            Value::F32(batch.images.clone()),
+            Value::I32(batch.labels.clone()),
+            b,
+        )?;
+        let padded = self.throttle.pad(t0.elapsed(), self.rt.flops(&format!("grad_full_b{b}")));
+        // grad_full fuses conv and non-conv; attribute by the arch's conv
+        // FLOP share so breakdowns remain comparable with the cluster's.
+        let arch = self.rt.arch();
+        let shape = ArchShape {
+            k1: arch.k1,
+            k2: arch.k2,
+            batch: b,
+            img: arch.img,
+            in_ch: arch.in_ch,
+            kh: arch.kh,
+            kw: arch.kw,
+        };
+        let share = crate::sim::comp_share(&shape);
+        timer.record(Phase::Conv, padded.mul_f64(1.0 - share));
+        timer.record(Phase::Comp, padded.mul_f64(share));
+        timer.time(Phase::Comp, || self.opt.step(&mut self.params, &grads))?;
+        Ok((loss, timer.breakdown))
+    }
+}
+
+/// Data-parallel trainer over `replicas` emulated devices.
+///
+/// The batch is split *evenly* (the paper's §2.2.1 critique: every replica
+/// gets the same share regardless of its speed), each shard runs the fused
+/// gradient executable, gradients are weighted-averaged, one SGD step is
+/// applied.  Replica `i` may be throttled to emulate a heterogeneous fleet;
+/// the step time is the max over replicas (synchronous updates).
+pub struct DataParallelTrainer {
+    rt: Arc<Runtime>,
+    pub params: Params,
+    opt: Sgd,
+    throttles: Vec<Throttle>,
+}
+
+impl DataParallelTrainer {
+    pub fn new(rt: Arc<Runtime>, cfg: &TrainerConfig, throttles: Vec<Throttle>) -> Result<Self> {
+        ensure!(!throttles.is_empty(), "need at least one replica");
+        let params = Params::init(rt.arch(), cfg.seed)?;
+        Ok(Self { rt, params, opt: Sgd::new(cfg.lr, cfg.momentum, cfg.weight_decay), throttles })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.throttles.len()
+    }
+
+    pub fn step(&mut self, batch: &Batch) -> Result<(f32, Breakdown)> {
+        let n = self.throttles.len();
+        let b = batch.labels.len();
+        ensure!(b % n == 0, "batch {b} not divisible by {n} replicas");
+        let shard = b / n;
+        ensure!(
+            self.rt.arch().batch_buckets.contains(&shard),
+            "no grad_full bucket for per-replica batch {shard} (buckets {:?})",
+            self.rt.arch().batch_buckets
+        );
+        let mut timer = PhaseTimer::default();
+        let mut acc = Grads::zeros_like(&self.params);
+        let mut loss_sum = 0f32;
+        let mut slowest = Duration::ZERO;
+        for (i, throttle) in self.throttles.clone().into_iter().enumerate() {
+            let images = batch.images.slice_axis0(i * shard, (i + 1) * shard)?;
+            let labels = batch.labels.slice_axis0(i * shard, (i + 1) * shard)?;
+            let t0 = std::time::Instant::now();
+            let (loss, grads) = run_grad_full(
+                &self.rt,
+                &self.params,
+                Value::F32(images),
+                Value::I32(labels),
+                shard,
+            )?;
+            // Replicas run concurrently on real clusters; we execute them
+            // sequentially and report the max (synchronous semantics).
+            slowest =
+                slowest.max(throttle.pad(t0.elapsed(), self.rt.flops(&format!("grad_full_b{shard}"))));
+            // Average of per-shard means: every shard has equal weight.
+            acc.axpy(1.0 / n as f32, &grads)?;
+            loss_sum += loss / n as f32;
+        }
+        timer.record(Phase::Conv, slowest);
+        timer.time(Phase::Comp, || self.opt.step(&mut self.params, &acc))?;
+        Ok((loss_sum, timer.breakdown))
+    }
+}
+
+/// Analytic data-parallel step time for the Table 1 anchor: `n` identical
+/// K20m-class GPUs in one machine, TF's CIFAR-10 CNN.
+///
+/// `T(n) = compute/(n·g) + ring-sync(params) + fixed overhead` — the fixed
+/// overhead (session dispatch + input pipeline, which TF's own comments
+/// blame for the flat 3-4 GPU scaling) is calibrated once against the
+/// 1-GPU row and held for every n.
+pub fn dp_sim_step_time(arch: &ArchShape, n: usize) -> f64 {
+    const K20M_GFLOPS: f64 = 100.0; // effective conv throughput (2015 TF)
+    const PCIE_GBPS: f64 = 6.0; // gen3 x8 effective
+    const OVERHEAD_S: f64 = 0.03; // dispatch + input pipeline per step
+    const LAUNCH_S: f64 = 0.004; // per-GPU kernel-launch/queue cost
+    // TF cifar10 params ≈ 1.07M plus our FC sizing; conv params negligible.
+    let params = (arch.k1 * arch.in_ch + arch.k2 * arch.k1) * arch.kh * arch.kw
+        + arch.k2 * arch.p2_out() * arch.p2_out() * 384; // fc stack
+    let compute = arch.conv_flops_train() * 1.35 / (n as f64 * K20M_GFLOPS * 1e9);
+    let sync = if n == 1 {
+        0.0
+    } else {
+        // Ring all-reduce: 2(n-1)/n of the gradient bytes per device.
+        2.0 * (n as f64 - 1.0) / n as f64 * (params * 4) as f64 / (PCIE_GBPS * 1e9 / 8.0)
+    };
+    compute + sync + OVERHEAD_S + LAUNCH_S * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_big_gain_then_flat() {
+        let arch = ArchShape::new(64, 64, 128);
+        let t: Vec<f64> = (1..=4).map(|n| dp_sim_step_time(&arch, n)).collect();
+        let s2 = t[0] / t[1];
+        let s4 = t[0] / t[3];
+        assert!(s2 > 1.4, "1→2 GPUs must show a clear win, got {s2}");
+        // 3→4 barely improves (paper: "it doesn't seem to be scalable").
+        let gain34 = t[2] / t[3];
+        assert!(gain34 < 1.15, "3→4 should be nearly flat, got {gain34}");
+        assert!(s4 < 4.0, "overheads must keep 4-GPU speedup sublinear, got {s4}");
+    }
+
+    #[test]
+    fn dp_sim_monotone_nonincreasing() {
+        let arch = ArchShape::new(64, 64, 128);
+        let mut prev = f64::MAX;
+        for n in 1..=4 {
+            let t = dp_sim_step_time(&arch, n);
+            assert!(t <= prev * 1.02, "step time should not grow much with GPUs");
+            prev = t;
+        }
+    }
+}

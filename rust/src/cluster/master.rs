@@ -1,0 +1,531 @@
+//! Algorithm 1 — the master node.
+//!
+//! Owns the full parameter set, the training loop and the non-convolutional
+//! layers; scatters per-layer kernel shards to the slaves (same inputs,
+//! different kernels), convolves its own shard meanwhile (Algorithm 1 lines
+//! 15-17), gathers and reassembles the feature maps, and runs SGD.
+//!
+//! Extension beyond the paper: if a worker dies mid-training the master
+//! drops it, re-runs the Eq. 1 partition over the survivors and retries the
+//! batch — the paper's protocol has no recovery story, but a production
+//! coordinator needs one.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::TrainerConfig;
+use crate::data::Batch;
+use crate::devices::Throttle;
+use crate::metrics::{Breakdown, Phase, PhaseTimer};
+use crate::model::{Grads, Params, Sgd};
+use crate::net::Link;
+use crate::proto::{Message, WireTensor};
+use crate::runtime::{ConvDir, Manifest, Runtime};
+use crate::sched::{partition_layer, Shard};
+use crate::tensor::{Tensor, Value};
+
+/// Outcome of one distributed training step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub loss: f32,
+    pub breakdown: Breakdown,
+    /// Bytes moved over all links during the step (Eq. 2 ground truth).
+    pub bytes_moved: u64,
+    /// Devices that participated (master included).
+    pub devices: usize,
+}
+
+struct WorkerSlot {
+    link: Box<dyn Link>,
+    alive: bool,
+}
+
+/// The master node: Algorithm 1 plus calibration, Eq. 1 partitioning and
+/// parameter updates.
+pub struct DistTrainer {
+    rt: Arc<Runtime>,
+    workers: Vec<WorkerSlot>,
+    /// Probe seconds per device; index 0 = master, i+1 = worker i.
+    probe_times: Vec<f64>,
+    shards1: Vec<Shard>,
+    shards2: Vec<Shard>,
+    pub params: Params,
+    opt: Sgd,
+    master_throttle: Throttle,
+    /// Scatter-round sequence number (stale-reply filtering after retries).
+    seq: u32,
+}
+
+impl DistTrainer {
+    /// Handshake, calibrate (paper §4.1.1) and partition (Eq. 1).
+    pub fn new(
+        rt: Arc<Runtime>,
+        links: Vec<Box<dyn Link>>,
+        cfg: &TrainerConfig,
+        master_throttle: Throttle,
+    ) -> Result<Self> {
+        let mut workers: Vec<WorkerSlot> =
+            links.into_iter().map(|link| WorkerSlot { link, alive: true }).collect();
+        // Hello handshake.
+        for (i, w) in workers.iter_mut().enumerate() {
+            match w.link.recv()? {
+                Message::Hello { version, .. } => {
+                    ensure!(version == super::worker::PROTO_VERSION, "worker {i} protocol v{version}");
+                }
+                other => bail!("worker {i}: expected Hello, got {}", other.tag()),
+            }
+        }
+        let params = Params::init(rt.arch(), cfg.seed)?;
+        let mut trainer = Self {
+            rt,
+            workers,
+            probe_times: vec![],
+            shards1: vec![],
+            shards2: vec![],
+            params,
+            opt: Sgd::new(cfg.lr, cfg.momentum, cfg.weight_decay),
+            master_throttle,
+            seq: 0,
+        };
+        trainer.calibrate(cfg.calib_rounds)?;
+        trainer.partition()?;
+        Ok(trainer)
+    }
+
+    /// Run the probe on every device concurrently; fill `probe_times`.
+    fn calibrate(&mut self, rounds: u32) -> Result<()> {
+        for w in self.workers.iter_mut().filter(|w| w.alive) {
+            w.link.send(&Message::Calibrate { rounds })?;
+        }
+        // Master probes itself while the slaves probe.
+        let my_secs = {
+            let p = &self.rt.arch().probe;
+            let mut rng = crate::tensor::Pcg32::seed_stream(0xCA11B, 0);
+            let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
+            let w = Tensor::randn(&[p.k, p.in_ch, self.rt.arch().kh, self.rt.arch().kw], &mut rng);
+            let b = Tensor::zeros(&[p.k]);
+            let args = [Value::F32(x), Value::F32(w), Value::F32(b)];
+            let _ = self.rt.execute("probe", &args)?; // absorb compile
+            let flops = self.rt.flops("probe");
+            let mut best = f64::MAX;
+            for _ in 0..rounds.max(1) {
+                let (_, real) = self.rt.execute_timed("probe", &args)?;
+                best = best.min(self.master_throttle.pad(real, flops).as_secs_f64());
+            }
+            best
+        };
+        let mut times = vec![my_secs];
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            if !w.alive {
+                times.push(f64::INFINITY);
+                continue;
+            }
+            match w.link.recv()? {
+                Message::CalibrateResult { seconds } => times.push(seconds),
+                Message::Error { reason } => bail!("worker {i} calibration failed: {reason}"),
+                other => bail!("worker {i}: expected CalibrateResult, got {}", other.tag()),
+            }
+        }
+        self.probe_times = times;
+        Ok(())
+    }
+
+    /// Eq. 1 partition of both conv layers over the alive devices.
+    fn partition(&mut self) -> Result<()> {
+        let arch = self.rt.arch().clone();
+        // Device ids that are alive: master (0) plus live workers.
+        let active: Vec<usize> = std::iter::once(0)
+            .chain(self.workers.iter().enumerate().filter(|(_, w)| w.alive).map(|(i, _)| i + 1))
+            .collect();
+        let times: Vec<f64> = active.iter().map(|&d| self.probe_times[d]).collect();
+        let remap = |mut shards: Vec<Shard>| -> Vec<Shard> {
+            for s in &mut shards {
+                s.device = active[s.device];
+            }
+            shards
+        };
+        self.shards1 = remap(partition_layer(arch.k1, &times, &arch.buckets1)?);
+        self.shards2 = remap(partition_layer(arch.k2, &times, &arch.buckets2)?);
+        Ok(())
+    }
+
+    pub fn probe_times(&self) -> &[f64] {
+        &self.probe_times
+    }
+
+    /// Replace the Eq. 1 partition with a *naive equal split* — the
+    /// data-parallel assumption the paper argues against (§4.1.1).  Used by
+    /// ablations to measure what Eq. 1 buys on a heterogeneous cluster.
+    pub fn partition_equal(&mut self) -> Result<()> {
+        let saved = std::mem::take(&mut self.probe_times);
+        self.probe_times = vec![1.0; saved.len()];
+        let r = self.partition();
+        self.probe_times = saved;
+        r
+    }
+
+    pub fn shards(&self, layer: usize) -> &[Shard] {
+        match layer {
+            1 => &self.shards1,
+            2 => &self.shards2,
+            _ => panic!("layer {layer} out of range"),
+        }
+    }
+
+    pub fn alive_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.workers.iter().map(|w| w.link.bytes_moved()).sum()
+    }
+
+    /// One training step with single-retry recovery: if a worker dies, drop
+    /// it, re-partition, and rerun the batch on the survivors.
+    pub fn step(&mut self, batch: &Batch) -> Result<StepResult> {
+        loop {
+            let alive_before = self.alive_workers();
+            match self.try_step(batch) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    if self.alive_workers() < alive_before {
+                        // A worker died; Eq. 1 re-partition and retry.
+                        self.partition()?;
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn try_step(&mut self, batch: &Batch) -> Result<StepResult> {
+        let bytes0 = self.total_bytes();
+        let mut timer = PhaseTimer::default();
+        let arch = self.rt.arch().clone();
+        ensure!(
+            batch.images.shape() == [arch.batch, arch.in_ch, arch.img, arch.img],
+            "batch shape {:?} does not match compiled arch",
+            batch.images.shape()
+        );
+
+        // ---------------- forward ----------------
+        let shards1 = self.shards1.clone();
+        let shards2 = self.shards2.clone();
+        let w1 = self.params.get("w1")?.clone();
+        let b1 = self.params.get("b1")?.clone();
+        let y1 = self.dist_conv_fwd(1, &batch.images, &w1, &b1, &shards1, &mut timer)?;
+        let p1 = self.master_exec1("mid1_fwd", Value::F32(y1.clone()), &mut timer)?;
+
+        let w2 = self.params.get("w2")?.clone();
+        let b2 = self.params.get("b2")?.clone();
+        let y2 = self.dist_conv_fwd(2, &p1, &w2, &b2, &shards2, &mut timer)?;
+        let p2 = self.master_exec1("mid2_fwd", Value::F32(y2.clone()), &mut timer)?;
+
+        // head: loss + gradients wrt (p2, wf, bf)
+        let wf = self.params.get("wf")?.clone();
+        let bf = self.params.get("bf")?.clone();
+        let outs = timer.time(Phase::Comp, || {
+            self.rt.execute(
+                "head_grad",
+                &[
+                    Value::F32(p2),
+                    Value::F32(wf),
+                    Value::F32(bf),
+                    Value::I32(batch.labels.clone()),
+                ],
+            )
+        })?;
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().as_f32()?.item()?;
+        let gp2 = it.next().unwrap();
+        let gwf = it.next().unwrap().as_f32()?.clone();
+        let gbf = it.next().unwrap().as_f32()?.clone();
+
+        // ---------------- backward ----------------
+        let gy2 = {
+            let outs = timer.time(Phase::Comp, || {
+                self.rt.execute("mid2_bwd", &[Value::F32(y2), gp2])
+            })?;
+            outs.into_iter().next().unwrap().as_f32()?.clone()
+        };
+        let (gp1, gw2, gb2) = self.dist_conv_bwd(2, &p1, &w2, &gy2, &shards2, &mut timer)?;
+        let gy1 = {
+            let outs = timer.time(Phase::Comp, || {
+                self.rt.execute("mid1_bwd", &[Value::F32(y1), Value::F32(gp1)])
+            })?;
+            outs.into_iter().next().unwrap().as_f32()?.clone()
+        };
+        // Input-layer gx is discarded (no layer below), but the executable
+        // computes it anyway — same cost structure as the paper's convn.
+        let (_gx, gw1, gb1) = self.dist_conv_bwd(1, &batch.images, &w1, &gy1, &shards1, &mut timer)?;
+
+        // ---------------- update ----------------
+        timer.time(Phase::Comp, || -> Result<()> {
+            let mut grads = Grads::zeros_like(&self.params);
+            grads.set("w1", gw1);
+            grads.set("b1", gb1);
+            grads.set("w2", gw2);
+            grads.set("b2", gb2);
+            grads.set("wf", gwf);
+            grads.set("bf", gbf);
+            self.opt.step(&mut self.params, &grads)
+        })?;
+
+        // Batch acknowledged (Algorithm 1 line 21).
+        self.broadcast(&Message::AllOk);
+
+        Ok(StepResult {
+            loss,
+            breakdown: timer.breakdown,
+            bytes_moved: self.total_bytes() - bytes0,
+            devices: 1 + self.alive_workers(),
+        })
+    }
+
+    /// Distributed conv forward: scatter shards, convolve own shard, gather
+    /// and reassemble `y[B, K, H', W']`.
+    fn dist_conv_fwd(
+        &mut self,
+        layer: usize,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        shards: &[Shard],
+        timer: &mut PhaseTimer,
+    ) -> Result<Tensor> {
+        let t0 = Instant::now();
+        self.seq += 1;
+        let seq = self.seq;
+        // Scatter to workers (Algorithm 1 lines 8-13): same inputs,
+        // different kernels.
+        for s in shards.iter().filter(|s| s.device != 0) {
+            let wk = w.slice_axis0(s.lo, s.hi)?;
+            let bk = b.slice_axis0(s.lo, s.hi)?;
+            let msg = Message::ConvWork {
+                seq,
+                layer: layer as u8,
+                dir: 0,
+                bucket: s.bucket as u32,
+                inputs: WireTensor::from(x),
+                kernels: WireTensor::from(&wk),
+                extra: Some(WireTensor::from(&bk)),
+            };
+            self.send_to(s.device - 1, &msg)?;
+        }
+        // Master's own shard overlaps with the slaves' compute.
+        let mut parts: Vec<(usize, Tensor)> = Vec::with_capacity(shards.len());
+        let mut slowest = Duration::ZERO;
+        if let Some(s) = shards.iter().find(|s| s.device == 0) {
+            let (y, secs) = self.local_conv_fwd(layer, s, x, w, b)?;
+            slowest = slowest.max(secs);
+            parts.push((s.lo, y));
+        }
+        // Gather (Algorithm 1 lines 19-22).
+        for s in shards.iter().filter(|s| s.device != 0) {
+            let (mut outputs, seconds) = self.recv_result(s.device - 1, seq)?;
+            ensure!(outputs.len() == 1, "fwd ConvResult must carry 1 tensor");
+            slowest = slowest.max(Duration::from_secs_f64(seconds));
+            parts.push((s.lo, outputs.remove(0).into_tensor()?));
+        }
+        parts.sort_by_key(|(lo, _)| *lo);
+        let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+        let y = Tensor::concat_axis1(&tensors)?;
+        let wall = t0.elapsed();
+        // Paper's attribution: Conv = slowest device; the rest of the phase
+        // wall time is transfer = Comm.
+        timer.record(Phase::Conv, slowest);
+        timer.record(Phase::Comm, wall.saturating_sub(slowest));
+        Ok(y)
+    }
+
+    /// Distributed conv backward: returns (gx_summed, gw_full, gb_full).
+    fn dist_conv_bwd(
+        &mut self,
+        layer: usize,
+        x: &Tensor,
+        w: &Tensor,
+        gy: &Tensor,
+        shards: &[Shard],
+        timer: &mut PhaseTimer,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let t0 = Instant::now();
+        self.seq += 1;
+        let seq = self.seq;
+        for s in shards.iter().filter(|s| s.device != 0) {
+            let wk = w.slice_axis0(s.lo, s.hi)?;
+            let gyk = gy.slice_axis1(s.lo, s.hi)?;
+            let msg = Message::ConvWork {
+                seq,
+                layer: layer as u8,
+                dir: 1,
+                bucket: s.bucket as u32,
+                inputs: WireTensor::from(x),
+                kernels: WireTensor::from(&wk),
+                extra: Some(WireTensor::from(&gyk)),
+            };
+            self.send_to(s.device - 1, &msg)?;
+        }
+        let mut gx = Tensor::zeros(x.shape());
+        let mut gw_parts: Vec<(usize, Tensor)> = Vec::new();
+        let mut gb_parts: Vec<(usize, Tensor)> = Vec::new();
+        let mut slowest = Duration::ZERO;
+        if let Some(s) = shards.iter().find(|s| s.device == 0) {
+            let (gxp, gw, gb, secs) = self.local_conv_bwd(layer, s, x, w, gy)?;
+            slowest = slowest.max(secs);
+            gx.add_assign(&gxp)?;
+            gw_parts.push((s.lo, gw));
+            gb_parts.push((s.lo, gb));
+        }
+        for s in shards.iter().filter(|s| s.device != 0) {
+            let (outputs, seconds) = self.recv_result(s.device - 1, seq)?;
+            ensure!(outputs.len() == 3, "bwd ConvResult must carry 3 tensors");
+            slowest = slowest.max(Duration::from_secs_f64(seconds));
+            let mut it = outputs.into_iter();
+            // Partial input-cotangents sum (conv is linear in K).
+            gx.add_assign(&it.next().unwrap().into_tensor()?)?;
+            gw_parts.push((s.lo, it.next().unwrap().into_tensor()?));
+            gb_parts.push((s.lo, it.next().unwrap().into_tensor()?));
+        }
+        gw_parts.sort_by_key(|(lo, _)| *lo);
+        gb_parts.sort_by_key(|(lo, _)| *lo);
+        let gw = Tensor::concat_axis0(&gw_parts.into_iter().map(|(_, t)| t).collect::<Vec<_>>())?;
+        let gb = Tensor::concat_axis0(&gb_parts.into_iter().map(|(_, t)| t).collect::<Vec<_>>())?;
+        let wall = t0.elapsed();
+        timer.record(Phase::Conv, slowest);
+        timer.record(Phase::Comm, wall.saturating_sub(slowest));
+        Ok((gx, gw, gb))
+    }
+
+    fn local_conv_fwd(
+        &self,
+        layer: usize,
+        s: &Shard,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+    ) -> Result<(Tensor, Duration)> {
+        let exec = Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket);
+        let wk = w.slice_axis0(s.lo, s.hi)?.pad_axis0(s.bucket)?;
+        let bk = b.slice_axis0(s.lo, s.hi)?.pad_axis0(s.bucket)?;
+        let args = [Value::F32(x.clone()), Value::F32(wk), Value::F32(bk)];
+        let (outs, real) = self.rt.execute_timed(&exec, &args)?;
+        let padded = self.master_throttle.pad(real, self.rt.flops(&exec));
+        let y = outs.into_iter().next().unwrap().as_f32()?.slice_axis1(0, s.len())?;
+        Ok((y, padded))
+    }
+
+    fn local_conv_bwd(
+        &self,
+        layer: usize,
+        s: &Shard,
+        x: &Tensor,
+        w: &Tensor,
+        gy: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor, Duration)> {
+        let exec = Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket);
+        let wk = w.slice_axis0(s.lo, s.hi)?.pad_axis0(s.bucket)?;
+        let gyk = super::worker::pad_axis1(&gy.slice_axis1(s.lo, s.hi)?, s.bucket)?;
+        let args = [Value::F32(x.clone()), Value::F32(wk), Value::F32(gyk)];
+        let (outs, real) = self.rt.execute_timed(&exec, &args)?;
+        let padded = self.master_throttle.pad(real, self.rt.flops(&exec));
+        let mut it = outs.into_iter();
+        let gx = it.next().unwrap().as_f32()?.clone();
+        let gw = it.next().unwrap().as_f32()?.slice_axis0(0, s.len())?;
+        let gb = it.next().unwrap().as_f32()?.slice_axis0(0, s.len())?;
+        Ok((gx, gw, gb, padded))
+    }
+
+    /// Run a 1-in/1-out master segment, attributing time to Comp.
+    fn master_exec1(&self, name: &str, arg: Value, timer: &mut PhaseTimer) -> Result<Tensor> {
+        let outs = timer.time(Phase::Comp, || self.rt.execute(name, &[arg]))?;
+        Ok(outs.into_iter().next().unwrap().as_f32()?.clone())
+    }
+
+    fn send_to(&mut self, worker: usize, msg: &Message) -> Result<()> {
+        let slot = &mut self.workers[worker];
+        if !slot.alive {
+            bail!("worker {worker} is dead");
+        }
+        if let Err(e) = slot.link.send(msg) {
+            slot.alive = false;
+            return Err(anyhow!("worker {worker} died on send: {e:#}"));
+        }
+        Ok(())
+    }
+
+    fn recv_from(&mut self, worker: usize) -> Result<Message> {
+        let slot = &mut self.workers[worker];
+        if !slot.alive {
+            bail!("worker {worker} is dead");
+        }
+        match slot.link.recv() {
+            Ok(m) => Ok(m),
+            Err(e) => {
+                slot.alive = false;
+                Err(anyhow!("worker {worker} died on recv: {e:#}"))
+            }
+        }
+    }
+
+    /// Receive the ConvResult for scatter round `seq` from `worker`,
+    /// discarding stale replies left over from an aborted round (a worker
+    /// death triggers re-partition + retry; survivors may still flush
+    /// results for the old round).
+    fn recv_result(&mut self, worker: usize, seq: u32) -> Result<(Vec<WireTensor>, f64)> {
+        loop {
+            match self.recv_from(worker)? {
+                Message::ConvResult { seq: got, outputs, seconds } => {
+                    if got == seq {
+                        return Ok((outputs, seconds));
+                    }
+                    ensure!(got < seq, "worker {worker} replied from the future: {got} > {seq}");
+                    // Stale reply from an aborted round: drop and re-read.
+                }
+                Message::Error { reason } => bail!("worker failed: {reason}"),
+                other => bail!("expected ConvResult, got {}", other.tag()),
+            }
+        }
+    }
+
+    /// Best-effort broadcast (ignores dead links).
+    fn broadcast(&mut self, msg: &Message) {
+        for w in self.workers.iter_mut().filter(|w| w.alive) {
+            if w.link.send(msg).is_err() {
+                w.alive = false;
+            }
+        }
+    }
+
+    /// Evaluate accuracy on a batch with the fused eval executable.
+    pub fn eval_accuracy(&self, batch: &Batch) -> Result<f32> {
+        let mut args = vec![Value::F32(batch.images.clone())];
+        args.extend(self.params.in_order().into_iter().map(Value::F32));
+        let outs = self.rt.execute("eval_full", &args)?;
+        let logits = outs.into_iter().next().unwrap().as_f32()?.clone();
+        let classes = self.rt.arch().num_classes;
+        let n = batch.labels.len();
+        let mut correct = 0usize;
+        for i in 0..n {
+            let row = &logits.data()[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 == batch.labels.data()[i] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f32 / n as f32)
+    }
+
+    /// Algorithm 1 lines 27-29: tell every slave training is over.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.broadcast(&Message::TrainOver);
+        Ok(())
+    }
+}

@@ -1,0 +1,91 @@
+//! The paper's system contribution: master/slave distributed convolution.
+//!
+//! * [`worker`] — Algorithm 2: receive inputs + a kernel shard, convolve,
+//!   send the feature maps back, repeat until `TrainOver`.
+//! * [`master`] — Algorithm 1: calibrate, partition by Eq. 1, then per batch
+//!   scatter ConvWork / compute own shard / gather, run the non-conv layers
+//!   locally, and update parameters.
+//! * [`spawn_inproc`] — single-process cluster: workers on threads connected
+//!   by in-proc links (optionally bandwidth-shaped and throttled), sharing
+//!   one PJRT client.  The TCP path (`convdist worker` / `convdist master`)
+//!   uses the identical code over real sockets.
+
+mod master;
+mod worker;
+
+pub use master::{DistTrainer, StepResult};
+pub use worker::{compute_conv_work, worker_loop, WorkerOptions};
+
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::devices::Throttle;
+use crate::net::{inproc_pair, Link, LinkModel, ShapedLink};
+use crate::runtime::Runtime;
+
+/// Handles to an in-process worker fleet: the master-side links plus the
+/// join handles (joined on `TrainOver` so panics propagate to tests).
+pub struct InprocCluster {
+    pub links: Vec<Box<dyn Link>>,
+    pub handles: Vec<JoinHandle<Result<()>>>,
+}
+
+/// Spawn one in-process worker per entry of `throttles`; `throttles[i]`
+/// slows worker `i` to emulate a heterogeneous device; `shape` meters every
+/// frame through the given bandwidth/latency model.
+///
+/// Each worker opens its *own* [`Runtime`] over `artifacts` — PJRT client
+/// handles are not `Send` (the paper's slaves are separate machines with
+/// their own Matlab processes; one runtime per device mirrors that).
+pub fn spawn_inproc(
+    artifacts: PathBuf,
+    throttles: &[Throttle],
+    shape: Option<LinkModel>,
+) -> InprocCluster {
+    let mut links: Vec<Box<dyn Link>> = Vec::new();
+    let mut handles = Vec::new();
+    for (i, &throttle) in throttles.iter().enumerate() {
+        let (master_end, worker_end) = inproc_pair();
+        let dir = artifacts.clone();
+        let opts = WorkerOptions { worker_id: i as u32 + 1, throttle };
+        let handle = std::thread::Builder::new()
+            .name(format!("convdist-worker-{}", i + 1))
+            .spawn(move || {
+                let rt = Runtime::open(&dir)?;
+                // Shaping is applied on the worker side for its sends;
+                // master-side sends are shaped on the master's link.
+                match shape {
+                    Some(m) => worker_loop(ShapedLink::new(worker_end, m), rt, opts),
+                    None => worker_loop(worker_end, rt, opts),
+                }
+            })
+            .expect("spawning worker thread");
+        let master_link: Box<dyn Link> = match shape {
+            Some(m) => Box::new(ShapedLink::new(master_end, m)),
+            None => Box::new(master_end),
+        };
+        links.push(master_link);
+        handles.push(handle);
+    }
+    InprocCluster { links, handles }
+}
+
+impl InprocCluster {
+    /// Take ownership of the master-side links (leaves the join handles).
+    pub fn take_links(&mut self) -> Vec<Box<dyn Link>> {
+        std::mem::take(&mut self.links)
+    }
+
+    /// Join all workers, propagating the first error/panic.
+    pub fn join(self) -> Result<()> {
+        for h in self.handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        Ok(())
+    }
+}

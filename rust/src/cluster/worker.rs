@@ -1,0 +1,196 @@
+//! Algorithm 2 — the slave node.
+//!
+//! ```text
+//! connectSocket(server)
+//! while trainOver == 0:
+//!     inputs  <= readSocket(server)
+//!     numMaps <= readSocket(server)
+//!     kernels <= readSocket(server)
+//!     for maps = 1 to numMaps: output = convn(inputs, maps)
+//!     output  => writeSocket(server)
+//!     allOk   <= readSocket(server)
+//! ```
+//!
+//! Differences from the paper's Matlab loop: (1) the three reads are one
+//! self-describing `ConvWork` frame; (2) backward-pass work arrives on the
+//! same loop (`dir = 1`) because the paper distributes "forward and backward
+//! propagation included"; (3) the worker reports its pure compute seconds so
+//! the master can attribute Conv vs Comm time exactly.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::devices::Throttle;
+use crate::net::Link;
+use crate::proto::{Message, WireTensor};
+use crate::runtime::{ConvDir, Manifest, Runtime};
+use crate::tensor::{Tensor, Value};
+
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerOptions {
+    pub worker_id: u32,
+    /// Emulated device slowdown (see `devices::Throttle`).
+    pub throttle: Throttle,
+}
+
+pub const PROTO_VERSION: u32 = 1;
+
+/// Run the slave loop until `TrainOver` (or a protocol error).
+pub fn worker_loop(mut link: impl Link, rt: Arc<Runtime>, opts: WorkerOptions) -> Result<()> {
+    link.send(&Message::Hello { worker_id: opts.worker_id, version: PROTO_VERSION })?;
+    loop {
+        match link.recv()? {
+            Message::Calibrate { rounds } => {
+                let seconds = run_probe(&rt, &opts, rounds)?;
+                link.send(&Message::CalibrateResult { seconds })?;
+            }
+            Message::ConvWork { seq, layer, dir, bucket, inputs, kernels, extra } => {
+                let reply = compute_conv_work(
+                    &rt, opts.throttle, seq, layer, dir, bucket as usize, inputs, kernels, extra,
+                );
+                match reply {
+                    Ok(msg) => link.send(&msg)?,
+                    Err(e) => {
+                        link.send(&Message::Error { reason: format!("worker {}: {e:#}", opts.worker_id) })?;
+                        bail!("worker {} failed conv work: {e:#}", opts.worker_id);
+                    }
+                }
+            }
+            Message::AllOk => { /* batch acknowledged (Algorithm 2 line 18) */ }
+            Message::TrainOver => return Ok(()),
+            Message::Error { reason } => bail!("master reported error: {reason}"),
+            other => bail!("unexpected message for worker: {}", other.tag()),
+        }
+    }
+}
+
+/// Paper §4.1.1: run the fixed probe convolution `rounds` times, report the
+/// minimum (the steady-state rate — first call may include compile time,
+/// which the warmup absorbs).
+fn run_probe(rt: &Runtime, opts: &WorkerOptions, rounds: u32) -> Result<f64> {
+    let p = &rt.arch().probe;
+    let mut rng = crate::tensor::Pcg32::seed_stream(0xCA11B, opts.worker_id as u64);
+    let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
+    let w = Tensor::randn(&[p.k, p.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+    let b = Tensor::zeros(&[p.k]);
+    let args = [Value::F32(x), Value::F32(w), Value::F32(b)];
+    rt.warmup(&["probe"])?;
+    let _ = rt.execute("probe", &args)?; // absorb first-call effects
+    let flops = rt.flops("probe");
+    let mut best = f64::MAX;
+    for _ in 0..rounds.max(1) {
+        let (_, real) = rt.execute_timed("probe", &args)?;
+        let padded = opts.throttle.pad(real, flops);
+        best = best.min(padded.as_secs_f64());
+    }
+    Ok(best)
+}
+
+/// Execute one shard of conv work (fwd or bwd) and build the reply.
+/// Public so tests and custom worker harnesses can reuse the exact compute
+/// path (e.g. the failure-injection worker).
+#[allow(clippy::too_many_arguments)]
+pub fn compute_conv_work(
+    rt: &Runtime,
+    throttle: Throttle,
+    seq: u32,
+    layer: u8,
+    dir: u8,
+    bucket: usize,
+    inputs: WireTensor,
+    kernels: WireTensor,
+    extra: Option<WireTensor>,
+) -> Result<Message> {
+    let x = inputs.into_tensor()?;
+    let w = kernels.into_tensor()?;
+    let shard_len = w.shape()[0];
+    // The wire carries the true shard (paper: comm volume scales with the
+    // kernel count); padding up to the compiled bucket happens locally.
+    let w_pad = w.pad_axis0(bucket)?;
+    let dirv = match dir {
+        0 => ConvDir::Fwd,
+        1 => ConvDir::Bwd,
+        d => bail!("bad conv dir {d}"),
+    };
+    let exec = Manifest::conv_exec(layer as usize, dirv, bucket);
+    match dirv {
+        ConvDir::Fwd => {
+            let bias = extra.ok_or_else(|| anyhow::anyhow!("fwd ConvWork missing bias"))?.into_tensor()?;
+            let b_pad = bias.pad_axis0(bucket)?;
+            let args = [Value::F32(x), Value::F32(w_pad), Value::F32(b_pad)];
+            let (outs, real) = rt.execute_timed(&exec, &args)?;
+            let padded = throttle.pad(real, rt.flops(&exec));
+            let y = outs.into_iter().next().unwrap();
+            // Slice the zero-kernel padding back off before it hits the wire.
+            let y = y.as_f32()?.slice_axis1(0, shard_len)?;
+            Ok(Message::ConvResult {
+                seq,
+                outputs: vec![WireTensor::from(&y)],
+                seconds: padded.as_secs_f64(),
+            })
+        }
+        ConvDir::Bwd => {
+            let gy = extra.ok_or_else(|| anyhow::anyhow!("bwd ConvWork missing gy"))?.into_tensor()?;
+            // gy slice is [B, shard, H, W]; pad the channel axis to bucket.
+            let gy_pad = pad_axis1(&gy, bucket)?;
+            let args = [Value::F32(x), Value::F32(w_pad), Value::F32(gy_pad)];
+            let (outs, real) = rt.execute_timed(&exec, &args)?;
+            let padded = throttle.pad(real, rt.flops(&exec));
+            let mut it = outs.into_iter();
+            let gx = it.next().unwrap(); // full input cotangent (partial sum)
+            let gw = it.next().unwrap().as_f32()?.slice_axis0(0, shard_len)?;
+            let gb = it.next().unwrap().as_f32()?.slice_axis0(0, shard_len)?;
+            Ok(Message::ConvResult {
+                seq,
+                outputs: vec![
+                    WireTensor::from(gx.as_f32()?),
+                    WireTensor::from(&gw),
+                    WireTensor::from(&gb),
+                ],
+                seconds: padded.as_secs_f64(),
+            })
+        }
+    }
+}
+
+/// Zero-pad axis 1 (feature-map channels) up to `n`.
+pub(crate) fn pad_axis1(t: &Tensor, n: usize) -> Result<Tensor> {
+    let shape = t.shape().to_vec();
+    anyhow::ensure!(shape.len() >= 2, "pad_axis1 needs rank >= 2");
+    if shape[1] == n {
+        return Ok(t.clone());
+    }
+    anyhow::ensure!(n > shape[1], "pad_axis1 target {n} < {}", shape[1]);
+    let mut padded_shape = shape.clone();
+    padded_shape[1] = n;
+    let inner: usize = shape[2..].iter().product();
+    let mut out = Tensor::zeros(&padded_shape);
+    let (b, k) = (shape[0], shape[1]);
+    for bi in 0..b {
+        let src = &t.data()[bi * k * inner..(bi + 1) * k * inner];
+        let dst_base = bi * n * inner;
+        out.data_mut()[dst_base..dst_base + k * inner].copy_from_slice(src);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    #[test]
+    fn pad_axis1_roundtrip() {
+        let mut rng = Pcg32::seed(3);
+        let t = Tensor::randn(&[2, 3, 4, 4], &mut rng);
+        let p = pad_axis1(&t, 5).unwrap();
+        assert_eq!(p.shape(), &[2, 5, 4, 4]);
+        assert_eq!(p.slice_axis1(0, 3).unwrap(), t);
+        // Padding region is zero.
+        let zeros = p.slice_axis1(3, 5).unwrap();
+        assert!(zeros.data().iter().all(|&v| v == 0.0));
+        // No-op when already at target.
+        assert_eq!(pad_axis1(&t, 3).unwrap(), t);
+    }
+}

@@ -1,0 +1,299 @@
+//! Experiment configuration — JSON in, validated structs out.
+//!
+//! One file describes a full run: device roster, bandwidth model, trainer
+//! knobs.  The CLI, the examples and the figure harness all consume the same
+//! struct, so every experiment is replayable from a checked-in config.
+//! (JSON rather than TOML: the offline build carries its own JSON parser,
+//! `util::json`.)
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    /// Human name for logs/CSV.
+    pub name: String,
+    pub trainer: TrainerConfig,
+    pub cluster: ClusterConfig,
+    pub network: NetworkConfig,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainerConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// Log every `log_every` steps.
+    pub log_every: usize,
+    /// Calibration probe repetitions (paper's "quick test").
+    pub calib_rounds: u32,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            seed: 42,
+            log_every: 10,
+            calib_rounds: 3,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Worker count *excluding* the master (the master also convolves —
+    /// Algorithm 1 lines 15-17 — so `devices = workers + 1`).
+    pub workers: usize,
+    /// Device roster: "paper-cpus", "paper-gpus", "highend-cpus",
+    /// "highend-gpus", "mobile-gpus", or "uniform".
+    pub devices: String,
+    /// Throttle real executions to the roster's relative speeds.
+    pub throttle: bool,
+    /// Worker listen addresses for TCP mode; empty = in-process threads.
+    pub worker_addrs: Vec<String>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { workers: 3, devices: "paper-cpus".into(), throttle: false, worker_addrs: vec![] }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkConfig {
+    /// Link bandwidth in Mbps (paper measured ~5 Mbps on Wi-Fi).
+    pub bandwidth_mbps: f64,
+    /// One-way latency in milliseconds.
+    pub latency_ms: f64,
+    /// Apply the shaping to real links (otherwise links run at native
+    /// loopback speed and comm time is measured, not modeled).
+    pub shaped: bool,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self { bandwidth_mbps: 5.0, latency_ms: 2.0, shaped: false }
+    }
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            trainer: TrainerConfig::default(),
+            cluster: ClusterConfig::default(),
+            network: NetworkConfig::default(),
+        }
+    }
+}
+
+/// Checked field extraction: errors on unknown keys so typos fail loudly.
+fn check_keys(v: &Json, allowed: &[&str], section: &str) -> Result<()> {
+    for key in v.as_obj()?.keys() {
+        ensure!(allowed.contains(&key.as_str()), "unknown key {key:?} in {section}");
+    }
+    Ok(())
+}
+
+impl ExperimentConfig {
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing experiment config JSON")?;
+        check_keys(&v, &["name", "trainer", "cluster", "network"], "config root")?;
+        let mut cfg = ExperimentConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            ..Default::default()
+        };
+        if let Some(t) = v.opt("trainer") {
+            check_keys(
+                t,
+                &["steps", "lr", "momentum", "weight_decay", "seed", "log_every", "calib_rounds"],
+                "trainer",
+            )?;
+            let d = &mut cfg.trainer;
+            if let Some(x) = t.opt("steps") {
+                d.steps = x.as_usize()?;
+            }
+            if let Some(x) = t.opt("lr") {
+                d.lr = x.as_f64()? as f32;
+            }
+            if let Some(x) = t.opt("momentum") {
+                d.momentum = x.as_f64()? as f32;
+            }
+            if let Some(x) = t.opt("weight_decay") {
+                d.weight_decay = x.as_f64()? as f32;
+            }
+            if let Some(x) = t.opt("seed") {
+                d.seed = x.as_u64()?;
+            }
+            if let Some(x) = t.opt("log_every") {
+                d.log_every = x.as_usize()?.max(1);
+            }
+            if let Some(x) = t.opt("calib_rounds") {
+                d.calib_rounds = x.as_usize()? as u32;
+            }
+        }
+        if let Some(c) = v.opt("cluster") {
+            check_keys(c, &["workers", "devices", "throttle", "worker_addrs"], "cluster")?;
+            let d = &mut cfg.cluster;
+            if let Some(x) = c.opt("workers") {
+                d.workers = x.as_usize()?;
+            }
+            if let Some(x) = c.opt("devices") {
+                d.devices = x.as_str()?.to_string();
+            }
+            if let Some(x) = c.opt("throttle") {
+                d.throttle = x.as_bool()?;
+            }
+            if let Some(x) = c.opt("worker_addrs") {
+                d.worker_addrs =
+                    x.as_arr()?.iter().map(|a| Ok(a.as_str()?.to_string())).collect::<Result<_>>()?;
+            }
+        }
+        if let Some(n) = v.opt("network") {
+            check_keys(n, &["bandwidth_mbps", "latency_ms", "shaped"], "network")?;
+            let d = &mut cfg.network;
+            if let Some(x) = n.opt("bandwidth_mbps") {
+                d.bandwidth_mbps = x.as_f64()?;
+            }
+            if let Some(x) = n.opt("latency_ms") {
+                d.latency_ms = x.as_f64()?;
+            }
+            if let Some(x) = n.opt("shaped") {
+                d.shaped = x.as_bool()?;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.trainer.steps > 0, "steps must be > 0");
+        ensure!(self.trainer.lr > 0.0, "lr must be > 0");
+        ensure!(
+            (0.0..1.0).contains(&self.trainer.momentum),
+            "momentum must be in [0,1), got {}",
+            self.trainer.momentum
+        );
+        ensure!(self.network.bandwidth_mbps > 0.0, "bandwidth must be > 0");
+        ensure!(
+            self.cluster.worker_addrs.is_empty()
+                || self.cluster.worker_addrs.len() == self.cluster.workers,
+            "worker_addrs ({}) must match workers ({})",
+            self.cluster.worker_addrs.len(),
+            self.cluster.workers
+        );
+        let known =
+            ["paper-cpus", "paper-gpus", "highend-cpus", "highend-gpus", "mobile-gpus", "uniform"];
+        ensure!(
+            known.contains(&self.cluster.devices.as_str()),
+            "unknown device roster {:?} (expected one of {known:?})",
+            self.cluster.devices
+        );
+        Ok(())
+    }
+
+    /// Resolve the device roster, master first, sized `workers + 1`.
+    pub fn device_profiles(&self) -> Vec<crate::devices::DeviceProfile> {
+        use crate::devices::*;
+        let n = self.cluster.workers + 1;
+        let catalog = match self.cluster.devices.as_str() {
+            "paper-gpus" => paper_gpus(),
+            "highend-cpus" => highend_cpus(),
+            "highend-gpus" => highend_gpus(),
+            "mobile-gpus" => {
+                // §5.4.1: desktop master + mobile workers.
+                let mut v = vec![paper_gpus()[0].clone()];
+                v.extend(std::iter::repeat(mobile_gpu()).take(self.cluster.workers));
+                return v;
+            }
+            "uniform" => {
+                return vec![DeviceProfile::new("uniform", DeviceKind::Cpu, 30.0); n];
+            }
+            _ => paper_cpus(),
+        };
+        let mut rng = crate::tensor::Pcg32::seed(self.trainer.seed);
+        sample_cluster(&catalog, n, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_json() {
+        let cfg = ExperimentConfig::from_json_str(r#"{"name": "quick"}"#).unwrap();
+        assert_eq!(cfg.cluster.workers, 3);
+        assert_eq!(cfg.network.bandwidth_mbps, 5.0);
+        assert_eq!(cfg.trainer.steps, 200);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{
+              "name": "hetero",
+              "trainer": {"steps": 50, "lr": 0.1, "seed": 7},
+              "cluster": {"workers": 2, "devices": "paper-gpus", "throttle": true},
+              "network": {"bandwidth_mbps": 25.0, "shaped": true}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.trainer.steps, 50);
+        assert_eq!(cfg.cluster.workers, 2);
+        assert!(cfg.cluster.throttle);
+        assert!(cfg.network.shaped);
+        assert_eq!(cfg.network.bandwidth_mbps, 25.0);
+    }
+
+    #[test]
+    fn rejects_bad_values_and_typos() {
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "bad", "trainer": {"momentum": 1.5}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "bad", "cluster": {"devices": "quantum"}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"nmae": "typo"}"#).is_err());
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "bad", "trainer": {"stepz": 1}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn device_roster_sizes() {
+        let mut cfg = ExperimentConfig::from_json_str(r#"{"name": "r"}"#).unwrap();
+        cfg.cluster.workers = 7;
+        assert_eq!(cfg.device_profiles().len(), 8);
+        cfg.cluster.devices = "mobile-gpus".into();
+        let profs = cfg.device_profiles();
+        assert_eq!(profs.len(), 8);
+        assert!(profs[0].gflops > profs[1].gflops * 5.0, "desktop master, mobile workers");
+    }
+
+    #[test]
+    fn worker_addr_mismatch_rejected() {
+        let r = ExperimentConfig::from_json_str(
+            r#"{"name": "x", "cluster": {"workers": 2, "worker_addrs": ["a:1"]}}"#,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! Device profiles — the paper's heterogeneous testbed, reconstructed.
+//!
+//! The paper's Tables 2 and 3 list four laptops (Intel i5/i7 CPUs; Radeon
+//! 7500M + NVIDIA 840M/940M/GTX 950M GPUs) with "near maximum throughput
+//! performances in the range 790–1170 GFLOPS" for the GPUs.  We model every
+//! device as a sustained-GFLOPS profile and reproduce heterogeneity on one
+//! machine two ways:
+//!
+//! 1. **Throttle** (real runs): pad each PJRT execution to a virtual
+//!    duration (relative multiple or flops/virtual-GFLOPS), so the wire,
+//!    the partitioner and the straggler structure behave exactly as if the
+//!    device were the modeled one — even on a single-core host.
+//! 2. **Analytic profiles** (simulator, Figures 9–13): conv time =
+//!    FLOPs / (gflops · utilization), with Gaussian-sampled per-node
+//!    variation exactly as the paper's scalability study does.
+
+use std::time::Duration;
+
+use crate::tensor::Pcg32;
+
+/// What kind of silicon a profile models (the paper builds CPU-only and
+/// GPU-only clusters — §4.1.1 "Hybrid CPU-CPU and GPU-GPU computing").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    MobileGpu,
+}
+
+/// A named device with a sustained conv throughput estimate.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    /// Sustained GFLOPS on the conv workload (not peak datasheet numbers —
+    /// these are effective rates that reproduce the paper's relative
+    /// speeds; absolute scale cancels in every speedup).
+    pub gflops: f64,
+}
+
+impl DeviceProfile {
+    pub const fn new(name: &'static str, kind: DeviceKind, gflops: f64) -> Self {
+        Self { name, kind, gflops }
+    }
+
+    /// Seconds to execute `flops` on this device.
+    pub fn exec_time(&self, flops: f64) -> f64 {
+        flops / (self.gflops * 1e9)
+    }
+}
+
+/// Paper Table 2 — the CPU cluster, in introduction order (PC1 = master).
+/// Effective conv GFLOPS estimated from core count x clock x SIMD width of
+/// each part; only the *ratios* matter for speedups.
+pub fn paper_cpus() -> Vec<DeviceProfile> {
+    vec![
+        DeviceProfile::new("PC1 i5-3210M", DeviceKind::Cpu, 20.0),
+        DeviceProfile::new("PC2 i7-4700HQ", DeviceKind::Cpu, 38.0),
+        DeviceProfile::new("PC3 i7-5500U", DeviceKind::Cpu, 24.0),
+        DeviceProfile::new("PC4 i7-6700HQ", DeviceKind::Cpu, 42.0),
+    ]
+}
+
+/// Paper Table 3 — the GPU cluster (PC2 = master; PC1's Radeon is excluded
+/// because the paper's CUDA path cannot use it).  The paper quotes 790–1170
+/// GFLOPS *peak* throughput; the profiles below are effective Matlab-CUDA
+/// conv throughput at ~10% of peak, calibrated so the simulated GPU/CPU
+/// conv-time ratio reproduces the paper's Fig. 8 breakdown (a Matlab
+/// `gpuArray` convn never approaches datasheet FLOPs).
+pub fn paper_gpus() -> Vec<DeviceProfile> {
+    vec![
+        DeviceProfile::new("PC2 GeForce 840M", DeviceKind::Gpu, 79.0),
+        DeviceProfile::new("PC3 GeForce 940M", DeviceKind::Gpu, 90.0),
+        DeviceProfile::new("PC4 GTX 950M", DeviceKind::Gpu, 117.0),
+    ]
+}
+
+/// §5.4 "high-end devices" sweep: desktop-class parts, same era.
+pub fn highend_cpus() -> Vec<DeviceProfile> {
+    vec![
+        DeviceProfile::new("HE i7-6950X", DeviceKind::Cpu, 160.0),
+        DeviceProfile::new("HE i7-6900K", DeviceKind::Cpu, 140.0),
+        DeviceProfile::new("HE E5-2690v4", DeviceKind::Cpu, 150.0),
+        DeviceProfile::new("HE i7-6850K", DeviceKind::Cpu, 120.0),
+    ]
+}
+
+pub fn highend_gpus() -> Vec<DeviceProfile> {
+    // Same ~10% effective-of-peak scaling as `paper_gpus`.
+    vec![
+        DeviceProfile::new("HE GTX 1080", DeviceKind::Gpu, 800.0),
+        DeviceProfile::new("HE TITAN X", DeviceKind::Gpu, 1000.0),
+        DeviceProfile::new("HE GTX 1070", DeviceKind::Gpu, 600.0),
+    ]
+}
+
+/// §5.4.1: mobile GPUs are "about 10 times slower" than the desktop GPUs
+/// used; master stays a desktop GPU.
+pub fn mobile_gpu() -> DeviceProfile {
+    DeviceProfile::new("Mobile GPU (Tegra-class)", DeviceKind::MobileGpu, 9.5)
+}
+
+/// Sample `n` per-node profiles between the catalog's worst and best, with
+/// Gaussian spread — the paper's Figure 9/10 methodology ("assigned random
+/// performance values with Gaussian distribution, varying between worst and
+/// best case scenario").
+pub fn sample_cluster(catalog: &[DeviceProfile], n: usize, rng: &mut Pcg32) -> Vec<DeviceProfile> {
+    assert!(!catalog.is_empty());
+    let lo = catalog.iter().map(|d| d.gflops).fold(f64::MAX, f64::min);
+    let hi = catalog.iter().map(|d| d.gflops).fold(f64::MIN, f64::max);
+    let mid = 0.5 * (lo + hi);
+    let sigma = (hi - lo) / 4.0; // ±2σ spans the observed range
+    (0..n)
+        .map(|i| {
+            if i < catalog.len() {
+                // First nodes are the real measured devices, like the paper
+                // growing its own 4-node cluster before extrapolating.
+                catalog[i].clone()
+            } else {
+                let g = (mid + sigma * rng.next_gaussian() as f64).clamp(lo, hi);
+                DeviceProfile { name: "sampled", kind: catalog[0].kind, gflops: g }
+            }
+        })
+        .collect()
+}
+
+/// Real-execution device emulation: makes the local host *behave like* a
+/// slower device by sleep-padding after each compute call.
+///
+/// Two modes:
+/// * `Relative(s)` — pad to `s x` the measured duration.  Simple, but on a
+///   single-core host concurrent workers inflate each other's measurements
+///   *before* padding, so relative mode cannot demonstrate overlap.
+/// * `Virtual { gflops }` — pad to `max(real, flops / gflops)` using the
+///   executable's nominal FLOPs from the manifest.  The virtual time is a
+///   deterministic function of the workload, exactly like the analytic
+///   simulator's device model, so sleeps dominate and genuinely overlap
+///   across workers even on one core.  This is the mode the heterogeneity
+///   experiments use.
+#[derive(Clone, Copy, Debug)]
+pub enum Throttle {
+    None,
+    Relative(f64),
+    Virtual { gflops: f64 },
+}
+
+impl Throttle {
+    pub fn none() -> Self {
+        Throttle::None
+    }
+
+    pub fn new(slowdown: f64) -> Self {
+        assert!(slowdown >= 1.0, "throttle slowdown must be >= 1, got {slowdown}");
+        if slowdown == 1.0 {
+            Throttle::None
+        } else {
+            Throttle::Relative(slowdown)
+        }
+    }
+
+    pub fn virtual_gflops(gflops: f64) -> Self {
+        assert!(gflops > 0.0, "virtual gflops must be positive");
+        Throttle::Virtual { gflops }
+    }
+
+    /// Given the real compute duration and the executable's nominal FLOPs,
+    /// sleep the deficit and return the duration the emulated device "took".
+    pub fn pad(&self, real: Duration, flops: u64) -> Duration {
+        let target = match self {
+            Throttle::None => real,
+            Throttle::Relative(s) => real.mul_f64(*s),
+            Throttle::Virtual { gflops } => {
+                let virt = Duration::from_secs_f64(flops as f64 / (gflops * 1e9));
+                virt.max(real)
+            }
+        };
+        let pad = target.saturating_sub(real);
+        if !pad.is_zero() {
+            std::thread::sleep(pad);
+        }
+        target
+    }
+
+    /// Virtual-time throttles mirroring a device roster's *relative* speeds,
+    /// with the fastest device pinned at `base_gflops` of virtual throughput
+    /// (pick it well below the host's real rate so virtual time dominates).
+    pub fn virtual_cluster(profiles: &[DeviceProfile], base_gflops: f64) -> Vec<Throttle> {
+        let best = profiles.iter().map(|p| p.gflops).fold(f64::MIN, f64::max);
+        profiles
+            .iter()
+            .map(|p| Throttle::virtual_gflops(base_gflops * p.gflops / best))
+            .collect()
+    }
+
+    /// Relative throttles for a device set (legacy mode; see enum docs).
+    pub fn for_profiles(profiles: &[DeviceProfile]) -> Vec<Throttle> {
+        let best = profiles.iter().map(|p| p.gflops).fold(f64::MIN, f64::max);
+        profiles.iter().map(|p| Throttle::new(best / p.gflops)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_time_inversely_proportional_to_gflops() {
+        let fast = DeviceProfile::new("f", DeviceKind::Cpu, 100.0);
+        let slow = DeviceProfile::new("s", DeviceKind::Cpu, 25.0);
+        let flops = 1e9;
+        assert!((slow.exec_time(flops) / fast.exec_time(flops) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_catalogs_shapes() {
+        assert_eq!(paper_cpus().len(), 4);
+        assert_eq!(paper_gpus().len(), 3);
+        assert!(paper_gpus().iter().all(|d| d.kind == DeviceKind::Gpu));
+        // GPU effective range: 10% of the paper's 790–1170 GFLOPS peak.
+        for g in paper_gpus() {
+            assert!((79.0..=117.0).contains(&g.gflops));
+        }
+    }
+
+    #[test]
+    fn mobile_gpu_is_about_10x_slower() {
+        let desktop_mean =
+            paper_gpus().iter().map(|d| d.gflops).sum::<f64>() / paper_gpus().len() as f64;
+        let ratio = desktop_mean / mobile_gpu().gflops;
+        assert!((8.0..=12.0).contains(&ratio), "mobile ratio {ratio}");
+    }
+
+    #[test]
+    fn sampled_cluster_within_range_and_reproducible() {
+        let mut rng = Pcg32::seed(11);
+        let c = sample_cluster(&paper_cpus(), 32, &mut rng);
+        assert_eq!(c.len(), 32);
+        let (lo, hi) = (20.0, 42.0);
+        assert!(c.iter().all(|d| (lo..=hi).contains(&d.gflops)));
+        // First 4 are the real devices.
+        assert_eq!(c[0].name, "PC1 i5-3210M");
+        let mut rng2 = Pcg32::seed(11);
+        let c2 = sample_cluster(&paper_cpus(), 32, &mut rng2);
+        assert_eq!(c[10].gflops, c2[10].gflops);
+    }
+
+    #[test]
+    fn throttle_relative_pads_to_target() {
+        let t = Throttle::new(3.0);
+        let real = Duration::from_millis(10);
+        let start = std::time::Instant::now();
+        let reported = t.pad(real, 0);
+        assert!(start.elapsed() >= Duration::from_millis(19));
+        assert_eq!(reported, Duration::from_millis(30));
+    }
+
+    #[test]
+    fn throttle_virtual_is_work_deterministic() {
+        // 1 GFLOPS virtual device: 2e7 flops = 20ms regardless of the real
+        // measured duration (as long as real <= virtual).
+        let t = Throttle::virtual_gflops(1.0);
+        let reported = t.pad(Duration::from_millis(2), 20_000_000);
+        assert_eq!(reported, Duration::from_millis(20));
+        // Real slower than virtual: no sleep, report real.
+        let reported = t.pad(Duration::from_millis(50), 20_000_000);
+        assert_eq!(reported, Duration::from_millis(50));
+        // None mode is a no-op.
+        assert_eq!(Throttle::none().pad(Duration::from_millis(3), 1 << 40), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn virtual_cluster_mirrors_profile_ratios() {
+        let th = Throttle::virtual_cluster(&paper_cpus(), 2.0);
+        assert_eq!(th.len(), 4);
+        // PC4 (42 GFLOPS) fastest -> pinned at base 2.0 virtual GFLOPS.
+        match th[3] {
+            Throttle::Virtual { gflops } => assert!((gflops - 2.0).abs() < 1e-12),
+            ref other => panic!("expected Virtual, got {other:?}"),
+        }
+        // PC1 (20 GFLOPS) -> 2.0 * 20/42.
+        match th[0] {
+            Throttle::Virtual { gflops } => assert!((gflops - 2.0 * 20.0 / 42.0).abs() < 1e-12),
+            ref other => panic!("expected Virtual, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! # convdist
+//!
+//! A production-grade reproduction of *"Distributed learning of CNNs on
+//! heterogeneous CPU/GPU architectures"* (Marques, Falcão, Alexandre, 2017):
+//! model-parallel CNN training where **only the convolutional layers are
+//! distributed**, each device receiving the same inputs but a kernel shard
+//! proportional to its calibrated speed (Eq. 1 of the paper).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — master/worker coordination, calibration,
+//!   Eq. 1 workload partitioning, wire protocol, transports (in-proc, TCP,
+//!   bandwidth-shaped), SGD, data pipeline, analytic scalability simulator,
+//!   and the data-parallel baseline.
+//! * **L2** — the CNN's segments written in JAX, AOT-lowered to HLO text
+//!   (`python/compile/`), executed here via PJRT ([`runtime`]).
+//! * **L1** — Pallas convolution kernels (fwd + both grads), the paper's
+//!   60–90 % hot spot.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod devices;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod proto;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Default artifact directory, relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifact directory: `$CONVDIST_ARTIFACTS` or ./artifacts,
+/// walking up from the current directory (so tests/benches work from any
+/// cargo working dir).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("CONVDIST_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

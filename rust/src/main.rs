@@ -1,0 +1,271 @@
+//! `convdist` — CLI for the distributed-CNN-training reproduction.
+//!
+//! ```text
+//! convdist train     [--config exp.json] [--workers N] [--steps N]
+//!                    [--throttle] [--shaped]
+//! convdist worker    [--listen 127.0.0.1:7701] [--id N] [--slowdown X]
+//! convdist master    --workers host:port,host:port [--config exp.json] [--steps N]
+//! convdist calibrate [--rounds N]
+//! convdist figures   [--id fig5|table4|...] [--csv]
+//! convdist baseline  [--kind single|dp] [--replicas N] [--steps N]
+//! convdist stats
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use convdist::baselines::{DataParallelTrainer, SingleDeviceTrainer};
+use convdist::cluster::{spawn_inproc, worker_loop, DistTrainer, WorkerOptions};
+use convdist::config::{ExperimentConfig, TrainerConfig};
+use convdist::data::default_dataset;
+use convdist::devices::Throttle;
+use convdist::net::{LinkModel, TcpLink};
+use convdist::runtime::Runtime;
+use convdist::sim::figures;
+use convdist::util::cli::Args;
+
+const USAGE: &str = "usage: convdist <train|worker|master|calibrate|figures|baseline> [options]
+  train      --config F --workers N --steps N --throttle --shaped
+  worker     --listen ADDR --id N --slowdown X
+  master     --workers a:p,b:p --config F --steps N
+  calibrate  --rounds N
+  figures    --id ID --csv          (IDs: table1 fig5 fig6 fig7 fig8 table4 table5
+                                          fig9 fig10 fig11 fig12 fig13 amdahl)
+  baseline   --kind single|dp --replicas N --steps N
+common: --artifacts DIR";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
+        "master" => cmd_master(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "figures" => cmd_figures(&args),
+        "baseline" => cmd_baseline(&args),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn artifacts_path(args: &Args) -> std::path::PathBuf {
+    match args.opt("artifacts") {
+        Some(p) => p.into(),
+        None => convdist::artifacts_dir(),
+    }
+}
+
+fn open_runtime(args: &Args) -> Result<Arc<Runtime>> {
+    let dir = artifacts_path(args);
+    let rt = Runtime::open(&dir)?;
+    eprintln!(
+        "runtime: platform={} arch={}:{} batch={} ({} executables)",
+        rt.platform(),
+        rt.arch().k1,
+        rt.arch().k2,
+        rt.arch().batch,
+        rt.manifest().executables.len()
+    );
+    Ok(rt)
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(p) => ExperimentConfig::load(p)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(w) = args.get_opt::<usize>("workers").ok().flatten() {
+        cfg.cluster.workers = w;
+    }
+    if let Some(s) = args.get_opt::<usize>("steps")? {
+        cfg.trainer.steps = s;
+    }
+    if args.flag("throttle") {
+        cfg.cluster.throttle = true;
+    }
+    if args.flag("shaped") {
+        cfg.network.shaped = true;
+    }
+    Ok(cfg)
+}
+
+fn run_training(rt: Arc<Runtime>, mut trainer: DistTrainer, tcfg: &TrainerConfig) -> Result<()> {
+    let arch = rt.arch().clone();
+    let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, tcfg.seed);
+    eprintln!("calibration (probe seconds): {:?}", trainer.probe_times());
+    for (layer, k) in [(1usize, arch.k1), (2usize, arch.k2)] {
+        let shards: Vec<String> = trainer
+            .shards(layer)
+            .iter()
+            .map(|s| format!("dev{}:{}..{} (b{})", s.device, s.lo, s.hi, s.bucket))
+            .collect();
+        eprintln!("conv{layer} ({k} kernels) -> {}", shards.join(" "));
+    }
+    let mut total = convdist::metrics::Breakdown::default();
+    for step in 0..tcfg.steps {
+        let batch = ds.batch(arch.batch, step)?;
+        let res = trainer.step(&batch)?;
+        total.add(&res.breakdown);
+        if step % tcfg.log_every == 0 || step + 1 == tcfg.steps {
+            eprintln!(
+                "step {step:>4}  loss {:.4}  devices {}  {}  wire {:.2} MiB",
+                res.loss,
+                res.devices,
+                res.breakdown,
+                res.bytes_moved as f64 / (1 << 20) as f64
+            );
+        }
+    }
+    let eval = ds.batch(arch.batch, tcfg.steps + 1)?;
+    let acc = trainer.eval_accuracy(&eval)?;
+    eprintln!("final held-out accuracy: {:.1}%", acc * 100.0);
+    eprintln!("cumulative: {total}");
+    if std::env::var("CONVDIST_STATS").is_ok() {
+        eprintln!("master-runtime executable stats (slowest first):");
+        for (name, s) in rt.stats() {
+            eprintln!(
+                "  {name:28} {:>5} calls  {:>10.3?} total  {:>9.3?}/call",
+                s.calls,
+                s.total,
+                s.total / s.calls.max(1) as u32
+            );
+        }
+    }
+    trainer.shutdown()?;
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = open_runtime(args)?;
+    let profiles = cfg.device_profiles();
+    let throttles = if cfg.cluster.throttle {
+        // Virtual-time emulation: fastest device pinned at 2 virtual GFLOPS
+        // so sleeps dominate the host's real compute (see devices::Throttle).
+        Throttle::virtual_cluster(&profiles, 2.0)
+    } else {
+        vec![Throttle::none(); profiles.len()]
+    };
+    eprintln!(
+        "cluster: {} workers + master, devices={} throttle={} shaped={}",
+        cfg.cluster.workers, cfg.cluster.devices, cfg.cluster.throttle, cfg.network.shaped
+    );
+    let shape = cfg.network.shaped.then(|| LinkModel {
+        bandwidth_bps: cfg.network.bandwidth_mbps * 1e6,
+        latency: std::time::Duration::from_secs_f64(cfg.network.latency_ms / 1e3),
+    });
+    let mut cluster = spawn_inproc(artifacts_path(args), &throttles[1..], shape);
+    let trainer = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg.trainer, throttles[0])?;
+    run_training(rt, trainer, &cfg.trainer)?;
+    cluster.handles.into_iter().try_for_each(|h| h.join().unwrap())?;
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let listen = args.opt("listen").unwrap_or("127.0.0.1:7701");
+    let id: u32 = args.get("id", 1)?;
+    let slowdown: f64 = args.get("slowdown", 1.0)?;
+    let listener = std::net::TcpListener::bind(listen)?;
+    eprintln!("worker {id} listening on {listen} (slowdown {slowdown}x)");
+    let link = TcpLink::accept_one(&listener)?;
+    let opts = WorkerOptions { worker_id: id, throttle: Throttle::new(slowdown.max(1.0)) };
+    worker_loop(link, rt, opts)?;
+    eprintln!("worker {id}: TrainOver received, shutting down");
+    Ok(())
+}
+
+fn cmd_master(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = open_runtime(args)?;
+    let workers = args.require("workers")?;
+    let mut links: Vec<Box<dyn convdist::net::Link>> = Vec::new();
+    for addr in workers.split(',').filter(|s| !s.is_empty()) {
+        eprintln!("connecting to worker {addr}");
+        links.push(Box::new(TcpLink::connect(addr.trim())?));
+    }
+    if links.is_empty() {
+        bail!("no worker addresses given");
+    }
+    let trainer = DistTrainer::new(rt.clone(), links, &cfg.trainer, Throttle::none())?;
+    run_training(rt, trainer, &cfg.trainer)
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let rounds: u32 = args.get("rounds", 5)?;
+    let probe = rt.arch().probe.clone();
+    let mut rng = convdist::tensor::Pcg32::seed(1);
+    let x =
+        convdist::tensor::Tensor::randn(&[probe.batch, probe.in_ch, probe.img, probe.img], &mut rng);
+    let w = convdist::tensor::Tensor::randn(&[probe.k, probe.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+    let b = convdist::tensor::Tensor::zeros(&[probe.k]);
+    let args_v = [x.into(), w.into(), b.into()];
+    let _ = rt.execute("probe", &args_v)?;
+    let mut best = f64::MAX;
+    for i in 0..rounds.max(1) {
+        let (_, d) = rt.execute_timed("probe", &args_v)?;
+        eprintln!("round {i}: {:.6}s", d.as_secs_f64());
+        best = best.min(d.as_secs_f64());
+    }
+    let gflops = probe.flops as f64 / best / 1e9;
+    println!("probe best: {best:.6}s  ->  {gflops:.2} effective GFLOPS");
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let figs = match args.opt("id") {
+        Some(id) => vec![figures::generate(id).ok_or_else(|| {
+            anyhow::anyhow!("unknown figure id {id:?} (try fig5..fig13, table1/4/5, amdahl)")
+        })?],
+        None => figures::all(),
+    };
+    for f in figs {
+        if args.flag("csv") {
+            println!("# {}", f.id);
+            print!("{}", f.to_csv());
+        } else {
+            println!("{}", f.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let mut tcfg = TrainerConfig::default();
+    if let Some(s) = args.get_opt::<usize>("steps")? {
+        tcfg.steps = s;
+    }
+    let replicas: usize = args.get("replicas", 2)?;
+    let arch = rt.arch().clone();
+    let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, tcfg.seed);
+    match args.opt("kind").unwrap_or("single") {
+        "single" => {
+            let mut t = SingleDeviceTrainer::new(rt, &tcfg, Throttle::none())?;
+            for step in 0..tcfg.steps {
+                let batch = ds.batch(arch.batch, step)?;
+                let (loss, b) = t.step(&batch)?;
+                if step % tcfg.log_every == 0 {
+                    eprintln!("step {step:>4}  loss {loss:.4}  {b}");
+                }
+            }
+        }
+        "dp" => {
+            let mut t = DataParallelTrainer::new(rt, &tcfg, vec![Throttle::none(); replicas])?;
+            for step in 0..tcfg.steps {
+                let batch = ds.batch(arch.batch, step)?;
+                let (loss, b) = t.step(&batch)?;
+                if step % tcfg.log_every == 0 {
+                    eprintln!("step {step:>4}  loss {loss:.4}  replicas {replicas}  {b}");
+                }
+            }
+        }
+        other => bail!("unknown baseline kind {other:?} (single|dp)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Timing breakdowns in the paper's vocabulary.
+//!
+//! Figures 6 and 8 split a training step into exactly three phases:
+//! * **Comm.** — master↔slave transfer time,
+//! * **Conv.** — convolution time "by the slowest node" (not cumulative),
+//! * **Comp.** — everything that is not a convolution (LRN, pool, FC, loss,
+//!   optimizer).
+//!
+//! [`Breakdown`] carries those three durations through the whole system:
+//! real cluster runs fill it from wall clocks, the analytic simulator fills
+//! it from the Eq. 2 model, and the figure harness prints either.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Comm/Conv/Comp split of one step (or one averaged step).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub comm: Duration,
+    pub conv: Duration,
+    pub comp: Duration,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> Duration {
+        self.comm + self.conv + self.comp
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.comm += other.comm;
+        self.conv += other.conv;
+        self.comp += other.comp;
+    }
+
+    pub fn scale(&self, f: f64) -> Breakdown {
+        Breakdown {
+            comm: self.comm.mul_f64(f),
+            conv: self.conv.mul_f64(f),
+            comp: self.comp.mul_f64(f),
+        }
+    }
+
+    /// Phase percentages `(comm, conv, comp)` — the paper quotes e.g.
+    /// "communication time rising from 19% with 2 GPUs to 30%".
+    pub fn percentages(&self) -> (f64, f64, f64) {
+        let t = self.total().as_secs_f64();
+        if t == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            100.0 * self.comm.as_secs_f64() / t,
+            100.0 * self.conv.as_secs_f64() / t,
+            100.0 * self.comp.as_secs_f64() / t,
+        )
+    }
+
+    /// Speedup of `self` relative to a reference breakdown.
+    pub fn speedup_vs(&self, reference: &Breakdown) -> f64 {
+        reference.total().as_secs_f64() / self.total().as_secs_f64()
+    }
+}
+
+impl fmt::Display for Breakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (pc, pv, pp) = self.percentages();
+        write!(
+            f,
+            "total {:8.3}s  comm {:7.3}s ({pc:4.1}%)  conv {:7.3}s ({pv:4.1}%)  comp {:7.3}s ({pp:4.1}%)",
+            self.total().as_secs_f64(),
+            self.comm.as_secs_f64(),
+            self.conv.as_secs_f64(),
+            self.comp.as_secs_f64(),
+        )
+    }
+}
+
+/// Accumulates phase time with explicit start/stop, panicking on misuse in
+/// debug builds (a phase left open is a bookkeeping bug).
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    pub breakdown: Breakdown,
+    open: Option<(Phase, Instant)>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Comm,
+    Conv,
+    Comp,
+}
+
+impl PhaseTimer {
+    pub fn start(&mut self, phase: Phase) {
+        debug_assert!(self.open.is_none(), "phase {:?} still open", self.open);
+        self.open = Some((phase, Instant::now()));
+    }
+
+    pub fn stop(&mut self) {
+        let (phase, t0) = self.open.take().expect("stop() without start()");
+        self.record(phase, t0.elapsed());
+    }
+
+    /// Record an externally measured duration (e.g. a worker-reported conv
+    /// time, or a simulated comm time).
+    pub fn record(&mut self, phase: Phase, d: Duration) {
+        match phase {
+            Phase::Comm => self.breakdown.comm += d,
+            Phase::Conv => self.breakdown.conv += d,
+            Phase::Comp => self.breakdown.comp += d,
+        }
+    }
+
+    /// Run `f`, attributing its wall time to `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(phase, t0.elapsed());
+        out
+    }
+}
+
+/// One figure/table row as emitted by the harness: label + series of
+/// (x, value) points; rendered as aligned text or CSV.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        for (x, y) in &self.points {
+            s.push_str(&format!("{},{x},{y}\n", self.label));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_percentages_sum_to_100() {
+        let b = Breakdown {
+            comm: Duration::from_millis(100),
+            conv: Duration::from_millis(300),
+            comp: Duration::from_millis(100),
+        };
+        let (c, v, p) = b.percentages();
+        assert!((c + v + p - 100.0).abs() < 1e-9);
+        assert!((c - 20.0).abs() < 1e-9);
+        assert!((v - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_vs_reference() {
+        let one = Breakdown { conv: Duration::from_secs(10), ..Default::default() };
+        let four = Breakdown {
+            conv: Duration::from_secs(2),
+            comm: Duration::from_secs(1),
+            ..Default::default()
+        };
+        assert!((four.speedup_vs(&one) - 10.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_timer_attributes_time() {
+        let mut t = PhaseTimer::default();
+        t.time(Phase::Conv, || std::thread::sleep(Duration::from_millis(5)));
+        t.record(Phase::Comm, Duration::from_millis(7));
+        assert!(t.breakdown.conv >= Duration::from_millis(5));
+        assert_eq!(t.breakdown.comm, Duration::from_millis(7));
+        assert_eq!(t.breakdown.comp, Duration::ZERO);
+    }
+
+    #[test]
+    fn series_csv() {
+        let mut s = Series::new("cpu4");
+        s.push(1.0, 1.5);
+        s.push(2.0, 2.5);
+        assert_eq!(s.to_csv(), "cpu4,1,1.5\ncpu4,2,2.5\n");
+    }
+}

@@ -1,0 +1,226 @@
+//! Parameter store + optimizer.
+//!
+//! The master owns the full parameter set (the paper's master "is in charge
+//! of training the remaining network", §4.1.2); gradients come back from HLO
+//! executables and the update runs here in rust — identical code path for
+//! the distributed trainer and both baselines, so loss curves are directly
+//! comparable.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::ArchSpec;
+use crate::tensor::{Pcg32, Tensor};
+
+/// Named parameter tensors in manifest order (`w1 b1 w2 b2 wf bf`).
+#[derive(Clone, Debug)]
+pub struct Params {
+    order: Vec<String>,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Params {
+    /// Kaiming-uniform init: `U(±sqrt(6 / fan_in))` for weights, zero bias.
+    pub fn init(arch: &ArchSpec, seed: u64) -> Result<Self> {
+        let mut tensors = BTreeMap::new();
+        for (i, name) in arch.param_order.iter().enumerate() {
+            let shape = arch
+                .param_shapes
+                .get(name)
+                .ok_or_else(|| anyhow!("param {name} missing from manifest"))?
+                .clone();
+            let mut rng = Pcg32::seed_stream(seed, i as u64);
+            let t = if name.starts_with('b') {
+                Tensor::zeros(&shape)
+            } else {
+                // fan_in: conv OIHW -> C*KH*KW; fc [in, out] -> in.
+                let fan_in: usize = if shape.len() == 4 {
+                    shape[1] * shape[2] * shape[3]
+                } else {
+                    shape[0]
+                };
+                let a = (6.0f32 / fan_in as f32).sqrt();
+                Tensor::uniform(&shape, a, &mut rng)
+            };
+            tensors.insert(name.clone(), t);
+        }
+        Ok(Self { order: arch.param_order.clone(), tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("no param {name}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.tensors.get_mut(name).ok_or_else(|| anyhow!("no param {name}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let slot = self.get_mut(name)?;
+        ensure!(slot.shape() == t.shape(), "param {name} shape change");
+        *slot = t;
+        Ok(())
+    }
+
+    /// Tensors in manifest order — the exact argument order the fused
+    /// executables expect.
+    pub fn in_order(&self) -> Vec<Tensor> {
+        self.order.iter().map(|n| self.tensors[n].clone()).collect()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn l2norm(&self) -> f32 {
+        self.tensors.values().map(|t| t.l2norm().powi(2)).sum::<f32>().sqrt()
+    }
+
+    /// Max |a-b| across all parameters (distributed-vs-single check).
+    pub fn max_abs_diff(&self, other: &Params) -> Result<f32> {
+        let mut worst = 0f32;
+        for name in &self.order {
+            worst = worst.max(self.tensors[name].max_abs_diff(&other.tensors[name])?);
+        }
+        Ok(worst)
+    }
+}
+
+/// Gradients, same naming/order as [`Params`].
+#[derive(Clone, Debug)]
+pub struct Grads {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Grads {
+    pub fn zeros_like(params: &Params) -> Self {
+        let tensors =
+            params.order.iter().map(|n| (n.clone(), Tensor::zeros(params.tensors[n].shape()))).collect();
+        Self { tensors }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("no grad {name}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    /// `self += s * other` (data-parallel gradient averaging).
+    pub fn axpy(&mut self, s: f32, other: &Grads) -> Result<()> {
+        for (name, t) in &mut self.tensors {
+            t.axpy(s, other.get(name)?)?;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for t in self.tensors.values_mut() {
+            t.scale(s);
+        }
+    }
+}
+
+/// SGD with classical momentum and decoupled weight decay.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: BTreeMap<String, Tensor>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        Self { lr, momentum, weight_decay, velocity: BTreeMap::new() }
+    }
+
+    /// `v = μv + g + λθ;  θ -= lr·v`
+    pub fn step(&mut self, params: &mut Params, grads: &Grads) -> Result<()> {
+        for name in params.order.clone() {
+            let g = grads.get(&name)?.clone();
+            let p = params.get_mut(&name)?;
+            let v = self
+                .velocity
+                .entry(name.clone())
+                .or_insert_with(|| Tensor::zeros(p.shape()));
+            ensure!(v.shape() == g.shape(), "velocity/grad shape mismatch for {name}");
+            // v = momentum * v + g (+ wd * p)
+            v.scale(self.momentum);
+            v.axpy(1.0, &g)?;
+            if self.weight_decay != 0.0 {
+                v.axpy(self.weight_decay, p)?;
+            }
+            p.axpy(-self.lr, &v.clone())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tiny_arch;
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let arch = tiny_arch();
+        let a = Params::init(&arch, 42).unwrap();
+        let b = Params::init(&arch, 42).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.0);
+        let c = Params::init(&arch, 43).unwrap();
+        assert!(a.max_abs_diff(&c).unwrap() > 0.0);
+        // Kaiming bound for w1: sqrt(6/75) ≈ 0.283.
+        let w1 = a.get("w1").unwrap();
+        let bound = (6.0f32 / 75.0).sqrt();
+        assert!(w1.data().iter().all(|v| v.abs() <= bound));
+        assert!(a.get("b1").unwrap().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sgd_moves_against_gradient() {
+        let arch = tiny_arch();
+        let mut p = Params::init(&arch, 1).unwrap();
+        let before = p.get("wf").unwrap().data()[0];
+        let mut g = Grads::zeros_like(&p);
+        let mut gwf = Tensor::zeros(&[200, 10]);
+        gwf.data_mut()[0] = 2.0;
+        g.set("wf", gwf);
+        let mut opt = Sgd::new(0.1, 0.0, 0.0);
+        opt.step(&mut p, &g).unwrap();
+        let after = p.get("wf").unwrap().data()[0];
+        assert!((after - (before - 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let arch = tiny_arch();
+        let mut p = Params::init(&arch, 1).unwrap();
+        let mut g = Grads::zeros_like(&p);
+        let mut gwf = Tensor::zeros(&[200, 10]);
+        gwf.data_mut()[0] = 1.0;
+        g.set("wf", gwf);
+        let start = p.get("wf").unwrap().data()[0];
+        let mut opt = Sgd::new(0.1, 0.9, 0.0);
+        opt.step(&mut p, &g).unwrap(); // v=1,   Δ=-0.1
+        opt.step(&mut p, &g).unwrap(); // v=1.9, Δ=-0.19
+        let got = p.get("wf").unwrap().data()[0];
+        assert!((got - (start - 0.29)).abs() < 1e-6, "{got} vs {}", start - 0.29);
+    }
+
+    #[test]
+    fn grads_axpy_average() {
+        let arch = tiny_arch();
+        let p = Params::init(&arch, 1).unwrap();
+        let mut acc = Grads::zeros_like(&p);
+        let mut g1 = Grads::zeros_like(&p);
+        let mut t = Tensor::zeros(&[10]);
+        t.data_mut()[3] = 4.0;
+        g1.set("bf", t);
+        acc.axpy(0.5, &g1).unwrap();
+        acc.axpy(0.5, &g1).unwrap();
+        assert_eq!(acc.get("bf").unwrap().data()[3], 4.0);
+    }
+}

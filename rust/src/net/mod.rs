@@ -1,0 +1,236 @@
+//! Transports.  One trait, three implementations:
+//!
+//! * [`InProcLink`]  — lock-step channel pair for deterministic tests and the
+//!   single-process cluster launcher (`convdist train`).  Messages still go
+//!   through full encode/decode so the wire format is exercised everywhere.
+//! * [`TcpLink`]     — real sockets; the paper's deployment shape (workers
+//!   listen, master connects — Algorithm 1 line 2).
+//! * [`ShapedLink`]  — wraps any link and meters bytes through a token-bucket
+//!   bandwidth + fixed latency model, reproducing the paper's ~5 Mbps Wi-Fi.
+//!   This is what lets a loopback cluster exhibit the paper's comm/conv/comp
+//!   ratios (§5.3.4: "the bandwidth is approximately constant, averaging at
+//!   5 Mbps").
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::proto::{frame_len, read_frame, write_frame, Message};
+
+/// A reliable, ordered, bidirectional message link.
+pub trait Link: Send {
+    fn send(&mut self, msg: &Message) -> Result<()>;
+    fn recv(&mut self) -> Result<Message>;
+    /// Cumulative bytes sent + received (Eq. 2 accounting).
+    fn bytes_moved(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// In-process link
+// ---------------------------------------------------------------------------
+
+/// One endpoint of an in-process link.
+pub struct InProcLink {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    bytes: u64,
+}
+
+/// A connected pair of in-process endpoints.
+pub fn inproc_pair() -> (InProcLink, InProcLink) {
+    let (atx, brx) = std::sync::mpsc::channel();
+    let (btx, arx) = std::sync::mpsc::channel();
+    (
+        InProcLink { tx: atx, rx: arx, bytes: 0 },
+        InProcLink { tx: btx, rx: brx, bytes: 0 },
+    )
+}
+
+impl Link for InProcLink {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, msg)?;
+        self.bytes += buf.len() as u64;
+        self.tx.send(buf).map_err(|_| anyhow::anyhow!("in-proc peer hung up"))?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let buf = self.rx.recv().map_err(|_| anyhow::anyhow!("in-proc peer hung up"))?;
+        self.bytes += buf.len() as u64;
+        read_frame(&mut std::io::Cursor::new(buf))
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.bytes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP link
+// ---------------------------------------------------------------------------
+
+pub struct TcpLink {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    bytes: u64,
+}
+
+impl TcpLink {
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true)?;
+        let reader = BufReader::with_capacity(1 << 20, stream.try_clone()?);
+        let writer = BufWriter::with_capacity(1 << 20, stream);
+        Ok(Self { reader, writer, bytes: 0 })
+    }
+
+    /// Master side: connect to a worker's listen address (Algorithm 1
+    /// `connectSocket(slave)`), retrying briefly so worker start-up order
+    /// does not matter.
+    pub fn connect(addr: impl ToSocketAddrs + Clone + std::fmt::Debug) -> Result<Self> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match TcpStream::connect(addr.clone()) {
+                Ok(s) => return Self::from_stream(s),
+                Err(e) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50));
+                    let _ = e;
+                }
+                Err(e) => return Err(e).with_context(|| format!("connecting to {addr:?}")),
+            }
+        }
+    }
+
+    /// Worker side: accept exactly one master connection.
+    pub fn accept_one(listener: &TcpListener) -> Result<Self> {
+        let (stream, _peer) = listener.accept()?;
+        Self::from_stream(stream)
+    }
+}
+
+impl Link for TcpLink {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        self.bytes += frame_len(msg) as u64;
+        write_frame(&mut self.writer, msg)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let msg = read_frame(&mut self.reader)?;
+        self.bytes += frame_len(&msg) as u64;
+        Ok(msg)
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.bytes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bandwidth shaping
+// ---------------------------------------------------------------------------
+
+/// Bandwidth/latency model for a link (paper: ~5 Mbps Wi-Fi, §5.3.4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Payload bandwidth in bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way latency added to every frame.
+    pub latency: Duration,
+}
+
+impl LinkModel {
+    pub fn mbps(mbps: f64) -> Self {
+        Self { bandwidth_bps: mbps * 1e6, latency: Duration::from_millis(2) }
+    }
+
+    /// Transfer time Eq. 2-style: bytes over the modeled link.
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        Duration::from_secs_f64(bytes as f64 * 8.0 / self.bandwidth_bps) + self.latency
+    }
+}
+
+/// Wraps a link; every `send` blocks for the modeled transfer time (the
+/// receiver side is left unshaped so a frame is charged exactly once).
+pub struct ShapedLink<L: Link> {
+    inner: L,
+    model: LinkModel,
+}
+
+impl<L: Link> ShapedLink<L> {
+    pub fn new(inner: L, model: LinkModel) -> Self {
+        Self { inner, model }
+    }
+}
+
+impl<L: Link> Link for ShapedLink<L> {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let dt = self.model.transfer_time(frame_len(msg));
+        std::thread::sleep(dt);
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.inner.recv()
+    }
+
+    fn bytes_moved(&self) -> u64 {
+        self.inner.bytes_moved()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_roundtrip() {
+        let (mut a, mut b) = inproc_pair();
+        a.send(&Message::Calibrate { rounds: 3 }).unwrap();
+        assert_eq!(b.recv().unwrap(), Message::Calibrate { rounds: 3 });
+        b.send(&Message::AllOk).unwrap();
+        assert_eq!(a.recv().unwrap(), Message::AllOk);
+        assert!(a.bytes_moved() > 0);
+    }
+
+    #[test]
+    fn tcp_roundtrip_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut worker = TcpLink::accept_one(&listener).unwrap();
+            let msg = worker.recv().unwrap();
+            worker.send(&msg).unwrap(); // echo
+        });
+        let mut master = TcpLink::connect(addr).unwrap();
+        let sent = Message::Hello { worker_id: 7, version: 1 };
+        master.send(&sent).unwrap();
+        assert_eq!(master.recv().unwrap(), sent);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn shaped_link_delays_sends() {
+        let (a, mut b) = inproc_pair();
+        // 1 Mbps: the ~37-byte AllOk frame ~0.3ms, dominated by 20ms latency.
+        let model =
+            LinkModel { bandwidth_bps: 1e6, latency: Duration::from_millis(20) };
+        let mut shaped = ShapedLink::new(a, model);
+        let t0 = Instant::now();
+        shaped.send(&Message::AllOk).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert_eq!(b.recv().unwrap(), Message::AllOk);
+    }
+
+    #[test]
+    fn link_model_transfer_time_scales() {
+        let m = LinkModel::mbps(5.0);
+        let t1 = m.transfer_time(1_000_000);
+        let t2 = m.transfer_time(2_000_000);
+        // 1 MB at 5 Mbps = 1.6 s (+2 ms latency).
+        assert!((t1.as_secs_f64() - 1.602).abs() < 1e-3, "{t1:?}");
+        assert!(t2 > t1);
+    }
+}

@@ -1,0 +1,245 @@
+//! Message bodies — the vocabulary of Algorithms 1 & 2.
+//!
+//! Hand-rolled little-endian encoding (no serde on the hot path): tensor
+//! payloads dominate every frame and are copied at memcpy speed.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::tensor::Tensor;
+
+/// A tensor on the wire: shape + raw f32 data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireTensor {
+    pub shape: Vec<u32>,
+    pub data: Vec<f32>,
+}
+
+impl WireTensor {
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Tensor::new(self.shape.iter().map(|&d| d as usize).collect(), self.data.clone())
+    }
+
+    pub fn into_tensor(self) -> Result<Tensor> {
+        Tensor::new(self.shape.iter().map(|&d| d as usize).collect(), self.data)
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
+        // Bulk-copy the f32 payload as bytes (little-endian hosts only,
+        // which PJRT CPU already assumes).
+        let bytes =
+            unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+
+    fn decode_from(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let rank = take_u32(buf, pos)? as usize;
+        ensure!(rank <= 8, "tensor rank {rank} too large");
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(take_u32(buf, pos)?);
+        }
+        let n = take_u32(buf, pos)? as usize;
+        let expect: u64 = shape.iter().map(|&d| d as u64).product();
+        ensure!(expect == n as u64, "tensor payload {n} != shape product {expect}");
+        ensure!(buf.len() >= *pos + n * 4, "tensor payload truncated");
+        let mut data = vec![0f32; n];
+        let src = &buf[*pos..*pos + n * 4];
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), data.as_mut_ptr() as *mut u8, n * 4);
+        }
+        *pos += n * 4;
+        Ok(Self { shape, data })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        8 + self.shape.len() * 4 + self.data.len() * 4
+    }
+}
+
+impl From<&Tensor> for WireTensor {
+    fn from(t: &Tensor) -> Self {
+        Self {
+            shape: t.shape().iter().map(|&d| d as u32).collect(),
+            data: t.data().to_vec(),
+        }
+    }
+}
+
+/// Everything master and slaves say to each other.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Slave -> master on connect.
+    Hello { worker_id: u32, version: u32 },
+    /// Master -> slave: run the calibration probe `rounds` times, report the
+    /// best time (paper §4.1.1: "a quick test is performed on all machines").
+    Calibrate { rounds: u32 },
+    /// Slave -> master: probe seconds (minimum over rounds).
+    CalibrateResult { seconds: f64 },
+    /// Master -> slave: convolve these inputs with this kernel shard
+    /// (Algorithm 1 lines 9–13: "All slaves receive same inputs but
+    /// different kernels").  `dir` 0 = forward, 1 = backward; backward packs
+    /// the output-cotangent slice in `extra`.
+    ConvWork {
+        /// Scatter-round sequence number; echoed in `ConvResult` so the
+        /// master can discard stale replies after an aborted step (worker
+        /// failure triggers a re-partition + retry — see cluster::master).
+        seq: u32,
+        layer: u8,
+        dir: u8,
+        bucket: u32,
+        inputs: WireTensor,
+        kernels: WireTensor,
+        /// fwd: bias [K]; bwd: gy slice [B,K,H,W].
+        extra: Option<WireTensor>,
+    },
+    /// Slave -> master: the produced feature maps (fwd: `[y]`; bwd:
+    /// `[gx_partial, gw, gb]`), plus the pure compute seconds so the master
+    /// can attribute Conv vs Comm time in the Figure 6/8 breakdowns.
+    ConvResult { seq: u32, outputs: Vec<WireTensor>, seconds: f64 },
+    /// Master -> slave after gathering a batch (Algorithm 1 line 21).
+    AllOk,
+    /// Master -> slave: training finished, shut down (Algorithm 1 line 28).
+    TrainOver,
+    /// Either direction: fatal error with reason.
+    Error { reason: String },
+}
+
+const ID_HELLO: u8 = 0x01;
+const ID_CALIBRATE: u8 = 0x02;
+const ID_CALIBRATE_RESULT: u8 = 0x03;
+const ID_CONV_WORK: u8 = 0x04;
+const ID_CONV_RESULT: u8 = 0x05;
+const ID_ALL_OK: u8 = 0x06;
+const ID_TRAIN_OVER: u8 = 0x07;
+const ID_ERROR: u8 = 0x08;
+
+impl Message {
+    /// -> (message id, payload bytes)
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut out = Vec::new();
+        match self {
+            Message::Hello { worker_id, version } => {
+                out.extend_from_slice(&worker_id.to_le_bytes());
+                out.extend_from_slice(&version.to_le_bytes());
+                (ID_HELLO, out)
+            }
+            Message::Calibrate { rounds } => {
+                out.extend_from_slice(&rounds.to_le_bytes());
+                (ID_CALIBRATE, out)
+            }
+            Message::CalibrateResult { seconds } => {
+                out.extend_from_slice(&seconds.to_le_bytes());
+                (ID_CALIBRATE_RESULT, out)
+            }
+            Message::ConvWork { seq, layer, dir, bucket, inputs, kernels, extra } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.push(*layer);
+                out.push(*dir);
+                out.extend_from_slice(&bucket.to_le_bytes());
+                inputs.encode_into(&mut out);
+                kernels.encode_into(&mut out);
+                out.push(extra.is_some() as u8);
+                if let Some(e) = extra {
+                    e.encode_into(&mut out);
+                }
+                (ID_CONV_WORK, out)
+            }
+            Message::ConvResult { seq, outputs, seconds } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&seconds.to_le_bytes());
+                out.push(outputs.len() as u8);
+                for t in outputs {
+                    t.encode_into(&mut out);
+                }
+                (ID_CONV_RESULT, out)
+            }
+            Message::AllOk => (ID_ALL_OK, out),
+            Message::TrainOver => (ID_TRAIN_OVER, out),
+            Message::Error { reason } => {
+                out.extend_from_slice(reason.as_bytes());
+                (ID_ERROR, out)
+            }
+        }
+    }
+
+    pub fn decode(id: u8, buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let msg = match id {
+            ID_HELLO => Message::Hello {
+                worker_id: take_u32(buf, &mut pos)?,
+                version: take_u32(buf, &mut pos)?,
+            },
+            ID_CALIBRATE => Message::Calibrate { rounds: take_u32(buf, &mut pos)? },
+            ID_CALIBRATE_RESULT => Message::CalibrateResult { seconds: take_f64(buf, &mut pos)? },
+            ID_CONV_WORK => {
+                let seq = take_u32(buf, &mut pos)?;
+                ensure!(buf.len() >= pos + 2, "ConvWork truncated");
+                let layer = buf[pos];
+                let dir = buf[pos + 1];
+                pos += 2;
+                let bucket = take_u32(buf, &mut pos)?;
+                let inputs = WireTensor::decode_from(buf, &mut pos)?;
+                let kernels = WireTensor::decode_from(buf, &mut pos)?;
+                ensure!(buf.len() > pos, "ConvWork missing extra flag");
+                let has_extra = buf[pos] != 0;
+                pos += 1;
+                let extra = if has_extra {
+                    Some(WireTensor::decode_from(buf, &mut pos)?)
+                } else {
+                    None
+                };
+                Message::ConvWork { seq, layer, dir, bucket, inputs, kernels, extra }
+            }
+            ID_CONV_RESULT => {
+                let seq = take_u32(buf, &mut pos)?;
+                let seconds = take_f64(buf, &mut pos)?;
+                ensure!(buf.len() > pos, "ConvResult missing count");
+                let n = buf[pos] as usize;
+                pos += 1;
+                let mut outputs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    outputs.push(WireTensor::decode_from(buf, &mut pos)?);
+                }
+                Message::ConvResult { seq, outputs, seconds }
+            }
+            ID_ALL_OK => Message::AllOk,
+            ID_TRAIN_OVER => Message::TrainOver,
+            ID_ERROR => Message::Error { reason: String::from_utf8_lossy(buf).into_owned() },
+            other => bail!("unknown message id {other:#x}"),
+        };
+        Ok(msg)
+    }
+
+    /// Short tag for logging/metrics.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "Hello",
+            Message::Calibrate { .. } => "Calibrate",
+            Message::CalibrateResult { .. } => "CalibrateResult",
+            Message::ConvWork { .. } => "ConvWork",
+            Message::ConvResult { .. } => "ConvResult",
+            Message::AllOk => "AllOk",
+            Message::TrainOver => "TrainOver",
+            Message::Error { .. } => "Error",
+        }
+    }
+}
+
+fn take_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    ensure!(buf.len() >= *pos + 4, "payload truncated at {pos}");
+    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+fn take_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    ensure!(buf.len() >= *pos + 8, "payload truncated at {pos}");
+    let v = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}

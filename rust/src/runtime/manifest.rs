@@ -1,0 +1,306 @@
+//! `artifacts/manifest.json` — the contract between the python AOT pipeline
+//! and the rust runtime.  The runtime never hard-codes a shape: every
+//! executable's argument/output signature comes from here, and every call is
+//! validated against it before touching PJRT.  Parsed with the in-tree
+//! [`crate::util::json`] parser (offline build — no serde).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// `(name, shape, dtype)` triple, serialized as a JSON array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec(pub String, pub Vec<usize>, pub String);
+
+impl ArgSpec {
+    pub fn name(&self) -> &str {
+        &self.0
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.1
+    }
+
+    pub fn dtype(&self) -> &str {
+        &self.2
+    }
+
+    pub fn elements(&self) -> usize {
+        self.1.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let a = v.as_arr()?;
+        ensure!(a.len() == 3, "arg spec must be [name, shape, dtype]");
+        Ok(ArgSpec(a[0].as_str()?.to_string(), a[1].as_usize_vec()?, a[2].as_str()?.to_string()))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecutableSpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<ArgSpec>,
+    /// Nominal FLOPs of one execution (virtual-time emulation + §Perf).
+    pub flops: u64,
+    pub sha256: String,
+}
+
+impl ExecutableSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            file: v.get("file")?.as_str()?.to_string(),
+            args: v.get("args")?.as_arr()?.iter().map(ArgSpec::from_json).collect::<Result<_>>()?,
+            outs: v.get("outs")?.as_arr()?.iter().map(ArgSpec::from_json).collect::<Result<_>>()?,
+            flops: v.opt("flops").map(|f| f.as_u64()).transpose()?.unwrap_or(0),
+            sha256: v.opt("sha256").and_then(|s| s.as_str().ok()).unwrap_or("").to_string(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProbeSpec {
+    pub batch: usize,
+    pub in_ch: usize,
+    pub img: usize,
+    pub k: usize,
+    /// FLOPs of one probe execution; measured time -> GFLOPS performance value.
+    pub flops: u64,
+}
+
+/// Shapes of the compiled architecture (paper notation `k1:k2`).
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub k1: usize,
+    pub k2: usize,
+    pub batch: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub c1_out: usize,
+    pub p1_out: usize,
+    pub c2_out: usize,
+    pub p2_out: usize,
+    pub fc_in: usize,
+    pub buckets1: Vec<usize>,
+    pub buckets2: Vec<usize>,
+    pub batch_buckets: Vec<usize>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub param_order: Vec<String>,
+    pub probe: ProbeSpec,
+}
+
+impl ArchSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let p = v.get("probe")?;
+        let probe = ProbeSpec {
+            batch: p.get("batch")?.as_usize()?,
+            in_ch: p.get("in_ch")?.as_usize()?,
+            img: p.get("img")?.as_usize()?,
+            k: p.get("k")?.as_usize()?,
+            flops: p.get("flops")?.as_u64()?,
+        };
+        let mut param_shapes = BTreeMap::new();
+        for (name, shape) in v.get("param_shapes")?.as_obj()? {
+            param_shapes.insert(name.clone(), shape.as_usize_vec()?);
+        }
+        let param_order = v
+            .get("param_order")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            k1: v.get("k1")?.as_usize()?,
+            k2: v.get("k2")?.as_usize()?,
+            batch: v.get("batch")?.as_usize()?,
+            img: v.get("img")?.as_usize()?,
+            in_ch: v.get("in_ch")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            kh: v.get("kh")?.as_usize()?,
+            kw: v.get("kw")?.as_usize()?,
+            c1_out: v.get("c1_out")?.as_usize()?,
+            p1_out: v.get("p1_out")?.as_usize()?,
+            c2_out: v.get("c2_out")?.as_usize()?,
+            p2_out: v.get("p2_out")?.as_usize()?,
+            fc_in: v.get("fc_in")?.as_usize()?,
+            buckets1: v.get("buckets1")?.as_usize_vec()?,
+            buckets2: v.get("buckets2")?.as_usize_vec()?,
+            batch_buckets: v.get("batch_buckets")?.as_usize_vec()?,
+            param_shapes,
+            param_order,
+            probe,
+        })
+    }
+
+    /// Kernel count of conv layer `l` (1-based, matching the paper's C1/C2).
+    pub fn kernels(&self, layer: usize) -> usize {
+        match layer {
+            1 => self.k1,
+            2 => self.k2,
+            _ => panic!("conv layer {layer} out of range"),
+        }
+    }
+
+    pub fn buckets(&self, layer: usize) -> &[usize] {
+        match layer {
+            1 => &self.buckets1,
+            2 => &self.buckets2,
+            _ => panic!("conv layer {layer} out of range"),
+        }
+    }
+
+    /// Input (channels, height) of conv layer `l`.
+    pub fn conv_input(&self, layer: usize) -> (usize, usize) {
+        match layer {
+            1 => (self.in_ch, self.img),
+            2 => (self.k1, self.p1_out),
+            _ => panic!("conv layer {layer} out of range"),
+        }
+    }
+
+    /// Output height of conv layer `l`.
+    pub fn conv_output(&self, layer: usize) -> usize {
+        match layer {
+            1 => self.c1_out,
+            2 => self.c2_out,
+            _ => panic!("conv layer {layer} out of range"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u32,
+    pub config: ArchSpec,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::from_json_str(&raw, dir)
+    }
+
+    pub fn from_json_str(raw: &str, dir: &Path) -> Result<Self> {
+        let v = Json::parse(raw).context("parsing manifest.json")?;
+        let version = v.get("version")?.as_usize()? as u32;
+        ensure!(version == 1, "unsupported manifest version {version}");
+        let config = ArchSpec::from_json(v.get("config")?)?;
+        let mut executables = BTreeMap::new();
+        for (name, spec) in v.get("executables")?.as_obj()? {
+            let spec = ExecutableSpec::from_json(spec)
+                .with_context(|| format!("executable {name:?}"))?;
+            ensure!(
+                dir.join(&spec.file).exists(),
+                "manifest lists {name} but {} is missing",
+                spec.file
+            );
+            executables.insert(name.clone(), spec);
+        }
+        Ok(Manifest { version, config, executables, dir: dir.to_path_buf() })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no executable named {name:?} in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.spec(name)?.file))
+    }
+
+    /// Name of the conv fwd/bwd executable for `layer` at shard bucket `kb`.
+    pub fn conv_exec(layer: usize, dir: ConvDir, kb: usize) -> String {
+        let d = match dir {
+            ConvDir::Fwd => "fwd",
+            ConvDir::Bwd => "bwd",
+        };
+        format!("conv{layer}_{d}_b{kb}")
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvDir {
+    Fwd,
+    Bwd,
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A small hand-built ArchSpec used by unit tests across the crate.
+    pub fn tiny_arch() -> ArchSpec {
+        let mut param_shapes = BTreeMap::new();
+        param_shapes.insert("w1".into(), vec![4, 3, 5, 5]);
+        param_shapes.insert("b1".into(), vec![4]);
+        param_shapes.insert("w2".into(), vec![8, 4, 5, 5]);
+        param_shapes.insert("b2".into(), vec![8]);
+        param_shapes.insert("wf".into(), vec![200, 10]);
+        param_shapes.insert("bf".into(), vec![10]);
+        ArchSpec {
+            k1: 4,
+            k2: 8,
+            batch: 2,
+            img: 32,
+            in_ch: 3,
+            num_classes: 10,
+            kh: 5,
+            kw: 5,
+            c1_out: 28,
+            p1_out: 14,
+            c2_out: 10,
+            p2_out: 5,
+            fc_in: 200,
+            buckets1: vec![4],
+            buckets2: vec![4, 8],
+            batch_buckets: vec![2],
+            param_shapes,
+            param_order: ["w1", "b1", "w2", "b2", "wf", "bf"].iter().map(|s| s.to_string()).collect(),
+            probe: ProbeSpec { batch: 1, in_ch: 1, img: 8, k: 1, flops: 100 },
+        }
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let doc = r#"{
+         "version": 1,
+         "config": {
+           "k1": 4, "k2": 8, "batch": 2, "img": 32, "in_ch": 3,
+           "num_classes": 10, "kh": 5, "kw": 5,
+           "c1_out": 28, "p1_out": 14, "c2_out": 10, "p2_out": 5,
+           "fc_in": 200, "buckets1": [4], "buckets2": [4, 8],
+           "batch_buckets": [2],
+           "param_shapes": {"w1": [4,3,5,5], "b1": [4], "w2": [8,4,5,5],
+                            "b2": [8], "wf": [200,10], "bf": [10]},
+           "param_order": ["w1","b1","w2","b2","wf","bf"],
+           "probe": {"batch": 1, "in_ch": 1, "img": 8, "k": 1, "flops": 100}
+         },
+         "executables": {}
+        }"#;
+        let m = Manifest::from_json_str(doc, Path::new("/tmp")).unwrap();
+        assert_eq!(m.config.k1, 4);
+        assert_eq!(m.config.buckets(2), &[4, 8]);
+        assert_eq!(m.config.conv_input(2), (4, 14));
+        assert!(m.spec("nope").is_err());
+        assert_eq!(Manifest::conv_exec(1, ConvDir::Fwd, 8), "conv1_fwd_b8");
+        assert_eq!(Manifest::conv_exec(2, ConvDir::Bwd, 12), "conv2_bwd_b12");
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_missing_file() {
+        let doc = r#"{"version": 2, "config": {}, "executables": {}}"#;
+        assert!(Manifest::from_json_str(doc, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the CPU
+//! client from the rust hot path.  Python never runs at request time.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily on first use and cached; the manifest
+//! drives all shape/dtype validation.
+
+mod manifest;
+
+pub use manifest::{ArchSpec, ArgSpec, ConvDir, ExecutableSpec, Manifest, ProbeSpec};
+
+#[cfg(test)]
+pub(crate) use manifest::tests::tiny_arch;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::tensor::{ITensor, Tensor, Value};
+
+/// Converts the `xla` crate's error type (which is not `Sync`) into eyre.
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// A compiled-executable handle plus its manifest signature.
+struct CachedExec {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ExecutableSpec,
+}
+
+/// Cumulative execution statistics, per executable (feeds §Perf and the
+/// Comm/Conv/Comp breakdowns of Figures 6/8).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total: Duration,
+}
+
+/// The L3-side runtime: one PJRT CPU client + a lazy executable cache.
+///
+/// `Runtime` is shared behind `Arc`: compilation and stats are mutex-guarded,
+/// execution itself is reentrant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<CachedExec>>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Arc<Self>> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr).context("creating PJRT CPU client")?;
+        Ok(Arc::new(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn arch(&self) -> &ArchSpec {
+        &self.manifest.config
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named executable.
+    fn get(&self, name: &str) -> Result<Arc<CachedExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        // Compile outside the lock: first-touch compiles of different
+        // executables can proceed in parallel across worker threads.
+        let spec = self.manifest.spec(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(xerr)
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(xerr)
+            .with_context(|| format!("compiling {name}"))?;
+        let cached = Arc::new(CachedExec { exe, spec });
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| cached.clone());
+        Ok(cached)
+    }
+
+    /// Pre-compile a set of executables (used at cluster start-up so the
+    /// first training batch is not billed the compile time).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with `args`, validating the call against the manifest.
+    /// Returns the output tensors in manifest order.
+    pub fn execute(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        let cached = self.get(name)?;
+        let spec = &cached.spec;
+        ensure!(
+            args.len() == spec.args.len(),
+            "{name}: expected {} args, got {}",
+            spec.args.len(),
+            args.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (v, a) in args.iter().zip(&spec.args) {
+            ensure!(
+                v.shape() == a.shape(),
+                "{name}: arg {:?} shape {:?} != manifest {:?}",
+                a.name(),
+                v.shape(),
+                a.shape()
+            );
+            ensure!(
+                v.dtype() == a.dtype(),
+                "{name}: arg {:?} dtype {} != manifest {}",
+                a.name(),
+                v.dtype(),
+                a.dtype()
+            );
+            literals.push(to_literal(v)?);
+        }
+
+        let t0 = Instant::now();
+        let bufs = cached.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        // return_tuple=True in aot.py: one output buffer holding a tuple.
+        let tuple = bufs[0][0].to_literal_sync().map_err(xerr)?;
+        let elapsed = t0.elapsed();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls += 1;
+            s.total += elapsed;
+        }
+
+        let parts = tuple.to_tuple().map_err(xerr)?;
+        ensure!(
+            parts.len() == spec.outs.len(),
+            "{name}: executable returned {} outputs, manifest says {}",
+            parts.len(),
+            spec.outs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&spec.outs)
+            .map(|(lit, o)| from_literal(&lit, o))
+            .collect()
+    }
+
+    /// Execute and also report the wall-clock compute time (the Throttle
+    /// emulation and the calibration probe need the raw duration).
+    pub fn execute_timed(&self, name: &str, args: &[Value]) -> Result<(Vec<Value>, Duration)> {
+        let t0 = Instant::now();
+        let outs = self.execute(name, args)?;
+        Ok((outs, t0.elapsed()))
+    }
+
+    /// Nominal FLOPs of one execution of `name` (0 if unknown).
+    pub fn flops(&self, name: &str) -> u64 {
+        self.manifest.spec(name).map(|s| s.flops).unwrap_or(0)
+    }
+
+    /// Snapshot of per-executable cumulative stats, slowest first.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total.cmp(&a.1.total));
+        v
+    }
+}
+
+fn to_literal(v: &Value) -> Result<xla::Literal> {
+    let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
+    match v {
+        Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims).map_err(xerr),
+        Value::I32(t) => xla::Literal::vec1(t.data()).reshape(&dims).map_err(xerr),
+    }
+}
+
+fn from_literal(lit: &xla::Literal, spec: &ArgSpec) -> Result<Value> {
+    let shape = spec.shape().to_vec();
+    match spec.dtype() {
+        "f32" => Ok(Value::F32(Tensor::new(shape, lit.to_vec::<f32>().map_err(xerr)?)?)),
+        "i32" => Ok(Value::I32(ITensor::new(shape, lit.to_vec::<i32>().map_err(xerr)?)?)),
+        d => Err(anyhow!("unsupported dtype {d} in manifest")),
+    }
+}

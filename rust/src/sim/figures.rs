@@ -1,0 +1,579 @@
+//! Generators for every table and figure of the paper's evaluation section.
+//!
+//! Each generator returns a [`Figure`] — headers + rows — that the CLI
+//! (`convdist figures`), the criterion benches and EXPERIMENTS.md all share.
+//! Where the paper prints a number we also print it (`paper` column), so the
+//! reproduction can be judged row by row.
+
+use crate::baselines::dp_sim_step_time;
+use crate::devices::{
+    highend_cpus, highend_gpus, mobile_gpu, paper_cpus, paper_gpus, sample_cluster, DeviceProfile,
+};
+use crate::tensor::Pcg32;
+
+use super::{simulate_step, speedup, ArchShape, SimConfig};
+
+/// One reproduced table/figure, ready to render.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub id: &'static str,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: String,
+}
+
+impl Figure {
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        if !self.notes.is_empty() {
+            out.push_str(&format!("note: {}\n", self.notes));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+const BATCHES: [usize; 5] = [64, 128, 256, 512, 1024];
+
+fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Paper Table 1: TensorFlow multi-GPU CIFAR-10 step times (the paper's
+/// data-parallel comparison anchor), reproduced with our data-parallel
+/// model on K20m-class devices sharing one machine.
+pub fn table1() -> Figure {
+    // TF's cifar10 model: 2 conv layers of 64 kernels, batch 128.
+    let arch = ArchShape::new(64, 64, 128);
+    let paper = ["0.35-0.60", "0.13-0.20", "0.13-0.18", "~0.10"];
+    let mut rows = Vec::new();
+    let t1 = dp_sim_step_time(&arch, 1);
+    for n in 1..=4usize {
+        let t = dp_sim_step_time(&arch, n);
+        rows.push(vec![
+            format!("{n} Tesla K20M"),
+            f3(t),
+            f2(t1 / t),
+            paper[n - 1].to_string(),
+        ]);
+    }
+    Figure {
+        id: "table1",
+        title: "Data-parallel multi-GPU step time (TensorFlow anchor)".into(),
+        headers: vec!["system".into(), "step s/batch".into(), "speedup".into(), "paper s/batch".into()],
+        rows,
+        notes: "shape to reproduce: large gain 1→2 GPUs, then flattening for 3-4 \
+                (paper: 'it doesn't seem to be scalable'); absolute TF times include \
+                input-pipeline overheads we do not model"
+            .into(),
+    }
+}
+
+/// Figure 5: CPU-cluster speedup, 4 archs x 5 batch sizes x 1-4 CPUs.
+pub fn fig5() -> Figure {
+    let mut rows = Vec::new();
+    for arch in ArchShape::paper_archs(0) {
+        for &batch in &BATCHES {
+            let a = ArchShape { batch, ..arch };
+            let cfg = SimConfig::paper(a);
+            let mut row = vec![a.label(), batch.to_string()];
+            for n in 2..=4usize {
+                row.push(f2(speedup(&cfg, &paper_cpus()[..n])));
+            }
+            rows.push(row);
+        }
+    }
+    Figure {
+        id: "fig5",
+        title: "CPU cluster speedup vs #CPUs (1-4), per arch and batch".into(),
+        headers: vec!["arch".into(), "batch".into(), "2 cpus".into(), "3 cpus".into(), "4 cpus".into()],
+        rows,
+        notes: "paper anchors: smallest net ≈1.3/1.5/>1.5x; largest net up to 3.28x at 4 CPUs"
+            .into(),
+    }
+}
+
+/// Figure 6: elapsed-time breakdown (Comm/Conv/Comp), batch 1024, CPUs 1-4.
+pub fn fig6() -> Figure {
+    breakdown_figure(
+        "fig6",
+        "CPU elapsed time per 1024-image batch: Comm/Conv/Comp",
+        &paper_cpus(),
+        20.0,
+        4,
+        "paper: comp share of 1-CPU time falls 25%→13% from smallest to largest net; \
+         largest net speedups 1.98/2.73/3.28x for 2/3/4 CPUs",
+    )
+}
+
+/// Figure 7: GPU-cluster speedup, 4 archs x 5 batch sizes x 1-3 GPUs.
+pub fn fig7() -> Figure {
+    let mut rows = Vec::new();
+    for arch in ArchShape::paper_archs(0) {
+        for &batch in &BATCHES {
+            let a = ArchShape { batch, ..arch };
+            let mut cfg = SimConfig::paper(a);
+            cfg.master_cpu_gflops = 38.0; // PC2 hosts the GPU master
+            let mut row = vec![a.label(), batch.to_string()];
+            for n in 2..=3usize {
+                row.push(f2(speedup(&cfg, &paper_gpus()[..n])));
+            }
+            rows.push(row);
+        }
+    }
+    Figure {
+        id: "fig7",
+        title: "GPU cluster speedup vs #GPUs (1-3), per arch and batch".into(),
+        headers: vec!["arch".into(), "batch".into(), "2 gpus".into(), "3 gpus".into()],
+        rows,
+        notes: "paper reports speedups *decreasing* with net size (2.45x smallest → 2.0x \
+                largest at 3 GPUs); under wire-exact Eq. 2 accounting the trend reverses — \
+                small nets lose to activation-shipping cost.  Documented deviation \
+                (EXPERIMENTS.md §Deviations): the paper's trend requires activation \
+                transfer to be free."
+            .into(),
+    }
+}
+
+/// Figure 8: GPU breakdown, batch 1024, GPUs 1-3.
+pub fn fig8() -> Figure {
+    breakdown_figure(
+        "fig8",
+        "GPU elapsed time per 1024-image batch: Comm/Conv/Comp",
+        &paper_gpus(),
+        38.0,
+        3,
+        "paper: with 3 GPUs communication ≈30% of step time and comm+comp dominate",
+    )
+}
+
+fn breakdown_figure(
+    id: &'static str,
+    title: &str,
+    devices: &[DeviceProfile],
+    master_cpu: f64,
+    max_n: usize,
+    notes: &str,
+) -> Figure {
+    let mut rows = Vec::new();
+    for arch in ArchShape::paper_archs(1024) {
+        let mut cfg = SimConfig::paper(arch);
+        cfg.master_cpu_gflops = master_cpu;
+        let t1 = simulate_step(&cfg, &devices[..1]).total().as_secs_f64();
+        for n in 1..=max_n {
+            let b = simulate_step(&cfg, &devices[..n]);
+            let (pc, pv, pp) = b.percentages();
+            rows.push(vec![
+                arch.label(),
+                n.to_string(),
+                f3(b.comm.as_secs_f64()),
+                f3(b.conv.as_secs_f64()),
+                f3(b.comp.as_secs_f64()),
+                f3(b.total().as_secs_f64()),
+                format!("{pc:.0}/{pv:.0}/{pp:.0}"),
+                f2(t1 / b.total().as_secs_f64()),
+            ]);
+        }
+    }
+    Figure {
+        id,
+        title: title.into(),
+        headers: vec![
+            "arch".into(),
+            "devices".into(),
+            "comm s".into(),
+            "conv s".into(),
+            "comp s".into(),
+            "total s".into(),
+            "% c/v/p".into(),
+            "speedup".into(),
+        ],
+        rows,
+        notes: notes.into(),
+    }
+}
+
+/// Table 4: best CPU speedups per arch x device count (max over batches).
+pub fn table4() -> Figure {
+    let paper: [[f64; 3]; 4] =
+        [[1.40, 1.51, 1.56], [1.68, 1.93, 2.10], [1.69, 2.15, 2.33], [1.98, 2.74, 3.28]];
+    best_speedup_table("table4", "Best CPU speedups (max over batch sizes)", &paper_cpus(), 20.0, &[2, 3, 4], &paper)
+}
+
+/// Table 5: best GPU speedups per arch x device count.
+pub fn table5() -> Figure {
+    let paper: [[f64; 3]; 4] =
+        [[1.96, 2.45, 0.0], [1.89, 2.23, 0.0], [1.78, 2.09, 0.0], [1.66, 2.00, 0.0]];
+    best_speedup_table("table5", "Best GPU speedups (max over batch sizes)", &paper_gpus(), 38.0, &[2, 3], &paper)
+}
+
+fn best_speedup_table(
+    id: &'static str,
+    title: &str,
+    devices: &[DeviceProfile],
+    master_cpu: f64,
+    counts: &[usize],
+    paper: &[[f64; 3]; 4],
+) -> Figure {
+    let mut rows = Vec::new();
+    for (ai, arch) in ArchShape::paper_archs(0).into_iter().enumerate() {
+        let mut row = vec![arch.label()];
+        for (ci, &n) in counts.iter().enumerate() {
+            let best = BATCHES
+                .iter()
+                .map(|&batch| {
+                    let a = ArchShape { batch, ..arch };
+                    let mut cfg = SimConfig::paper(a);
+                    cfg.master_cpu_gflops = master_cpu;
+                    speedup(&cfg, &devices[..n])
+                })
+                .fold(0.0, f64::max);
+            row.push(f2(best));
+            row.push(if paper[ai][ci] > 0.0 { f2(paper[ai][ci]) } else { "-".into() });
+        }
+        rows.push(row);
+    }
+    let mut headers = vec!["arch".into()];
+    for &n in counts {
+        headers.push(format!("{n} dev"));
+        headers.push(format!("paper {n}"));
+    }
+    Figure { id, title: title.into(), headers, rows, notes: String::new() }
+}
+
+/// Figure 9: CPU scalability to 32 nodes (smallest net @ 64 and largest @
+/// 1024), Gaussian-sampled node speeds — the paper's §5.3.4 simulation.
+pub fn fig9() -> Figure {
+    let mut rows = Vec::new();
+    let cases =
+        [(ArchShape::new(50, 500, 64), "small@64"), (ArchShape::new(500, 1500, 1024), "large@1024")];
+    for (arch, label) in cases {
+        let cfg = SimConfig::paper(arch);
+        let mut rng = Pcg32::seed(0xF19);
+        let cluster = sample_cluster(&paper_cpus(), 32, &mut rng);
+        let t1 = simulate_step(&cfg, &cluster[..1]).total().as_secs_f64();
+        for n in [1usize, 2, 4, 8, 16, 24, 32] {
+            let b = simulate_step(&cfg, &cluster[..n]);
+            rows.push(vec![
+                label.to_string(),
+                n.to_string(),
+                f3(b.comm.as_secs_f64()),
+                f3(b.conv.as_secs_f64()),
+                f3(b.comp.as_secs_f64()),
+                f3(b.total().as_secs_f64()),
+                f2(t1 / b.total().as_secs_f64()),
+            ]);
+        }
+    }
+    Figure {
+        id: "fig9",
+        title: "CPU cluster scalability, 1-32 nodes (simulated per §5.3.4)".into(),
+        headers: vec![
+            "case".into(),
+            "nodes".into(),
+            "comm s".into(),
+            "conv s".into(),
+            "comp s".into(),
+            "total s".into(),
+            "speedup".into(),
+        ],
+        rows,
+        notes: "paper: little benefit past 4 CPUs, speedup stabilizes after ~8 nodes; \
+                conv bottleneck with 1 CPU flips to comm+comp with many"
+            .into(),
+    }
+}
+
+/// Figure 10: GPU scalability to 32 nodes, largest net @ 1024.
+pub fn fig10() -> Figure {
+    let arch = ArchShape::new(500, 1500, 1024);
+    let mut cfg = SimConfig::paper(arch);
+    cfg.master_cpu_gflops = 38.0;
+    let mut rng = Pcg32::seed(0xF10);
+    let cluster = sample_cluster(&paper_gpus(), 32, &mut rng);
+    let t1 = simulate_step(&cfg, &cluster[..1]).total().as_secs_f64();
+    let mut rows = Vec::new();
+    for n in [1usize, 2, 4, 8, 16, 24, 32] {
+        let b = simulate_step(&cfg, &cluster[..n]);
+        rows.push(vec![
+            n.to_string(),
+            f3(b.comm.as_secs_f64()),
+            f3(b.conv.as_secs_f64()),
+            f3(b.comp.as_secs_f64()),
+            f3(b.total().as_secs_f64()),
+            f2(t1 / b.total().as_secs_f64()),
+        ]);
+    }
+    Figure {
+        id: "fig10",
+        title: "GPU cluster scalability, 1-32 nodes, 500:1500 @ 1024".into(),
+        headers: vec![
+            "nodes".into(),
+            "comm s".into(),
+            "conv s".into(),
+            "comp s".into(),
+            "total s".into(),
+            "speedup".into(),
+        ],
+        rows,
+        notes: "paper: speedup virtually stagnates for ≥8 nodes; comm+comp dominate \
+                because GPU convs are cheap"
+            .into(),
+    }
+}
+
+/// Figures 11/12: speedup vs (bandwidth, nodes) for low/mid vs high-end
+/// device catalogs.
+fn bandwidth_sweep(
+    id: &'static str,
+    title: &str,
+    lowmid: Vec<DeviceProfile>,
+    highend: Vec<DeviceProfile>,
+    master_cpu_low: f64,
+    master_cpu_high: f64,
+) -> Figure {
+    let arch = ArchShape::new(500, 1500, 1024);
+    let mut rows = Vec::new();
+    for (catalog, label, mc) in
+        [(lowmid, "low/mid", master_cpu_low), (highend, "high-end", master_cpu_high)]
+    {
+        let mut rng = Pcg32::seed(0xF11);
+        let cluster = sample_cluster(&catalog, 32, &mut rng);
+        for bw in [25.0, 100.0, 250.0, 675.0, 5000.0] {
+            let mut cfg = SimConfig::paper(arch);
+            cfg.bandwidth_mbps = bw;
+            cfg.master_cpu_gflops = mc;
+            let mut row = vec![label.to_string(), format!("{bw}")];
+            for n in [2usize, 4, 8, 16, 32] {
+                row.push(f2(speedup(&cfg, &cluster[..n])));
+            }
+            rows.push(row);
+        }
+    }
+    Figure {
+        id,
+        title: title.into(),
+        headers: vec![
+            "devices".into(),
+            "Mbps".into(),
+            "n=2".into(),
+            "n=4".into(),
+            "n=8".into(),
+            "n=16".into(),
+            "n=32".into(),
+        ],
+        rows,
+        notes: "paper: low-end vs high-end peak speedups are nearly identical — comm and \
+                comp are the bottleneck; bandwidth moves the ceiling, device class only \
+                moves how few nodes reach it (and slow links can push GPU speedup below 1x)"
+            .into(),
+    }
+}
+
+pub fn fig11() -> Figure {
+    bandwidth_sweep(
+        "fig11",
+        "CPU speedup vs bandwidth and nodes, low/mid vs high-end",
+        paper_cpus(),
+        highend_cpus(),
+        20.0,
+        150.0,
+    )
+}
+
+pub fn fig12() -> Figure {
+    bandwidth_sweep(
+        "fig12",
+        "GPU speedup vs bandwidth and nodes, low/mid vs high-end",
+        paper_gpus(),
+        highend_gpus(),
+        38.0,
+        60.0,
+    )
+}
+
+/// Figure 13: mobile-GPU cluster (desktop master), 32 and 128 nodes.
+pub fn fig13() -> Figure {
+    let arch = ArchShape::new(500, 1500, 1024);
+    let mut rows = Vec::new();
+    for max_n in [32usize, 128] {
+        let mut cluster = vec![paper_gpus()[0].clone()]; // desktop master (§5.4.1)
+        cluster.extend(std::iter::repeat(mobile_gpu()).take(max_n - 1));
+        for bw in [25.0, 100.0, 250.0, 675.0, 5000.0] {
+            let mut cfg = SimConfig::paper(arch);
+            cfg.bandwidth_mbps = bw;
+            cfg.master_cpu_gflops = 38.0;
+            let mut row = vec![max_n.to_string(), format!("{bw}")];
+            for n in [2usize, 8, 32, 128] {
+                if n > max_n {
+                    row.push("-".into());
+                } else {
+                    row.push(f2(speedup(&cfg, &cluster[..n])));
+                }
+            }
+            rows.push(row);
+        }
+    }
+    Figure {
+        id: "fig13",
+        title: "Mobile-GPU cluster speedup (desktop master), 32 and 128 nodes".into(),
+        headers: vec![
+            "cluster".into(),
+            "Mbps".into(),
+            "n=2".into(),
+            "n=8".into(),
+            "n=32".into(),
+            "n=128".into(),
+        ],
+        rows,
+        notes: "paper: 32 mobile GPUs cannot match desktop-cluster speedups; 128 can, \
+                given bandwidth — mobile parts are ~10x slower but far more numerous"
+            .into(),
+    }
+}
+
+/// §5.3.1/§5.4 anchors: Amdahl ceiling + zero-comm speedup.
+pub fn amdahl() -> Figure {
+    let mut rows = Vec::new();
+    for arch in ArchShape::paper_archs(1024) {
+        let share = super::comp_share(&arch);
+        let ceiling = 1.0 / share;
+        let mut cfg = SimConfig::paper(arch);
+        cfg.bandwidth_mbps = 1e9; // communication-free limit
+        let mut rng = Pcg32::seed(0xA3DA);
+        let cluster = sample_cluster(&paper_cpus(), 64, &mut rng);
+        let s = speedup(&cfg, &cluster);
+        rows.push(vec![arch.label(), format!("{:.0}%", share * 100.0), f2(ceiling), f2(s)]);
+    }
+    Figure {
+        id: "amdahl",
+        title: "Amdahl ceiling vs comm-free 64-node speedup".into(),
+        headers: vec!["arch".into(), "comp share".into(), "ceiling".into(), "64-node s".into()],
+        rows,
+        notes: "paper §5.3.1: largest net comp=13% ⇒ max ≈7.76x; §5.3.4 quotes ≈4.3x \
+                for zero comm at moderate node counts"
+            .into(),
+    }
+}
+
+/// All figures in paper order.
+pub fn all() -> Vec<Figure> {
+    vec![
+        table1(),
+        fig5(),
+        fig6(),
+        fig7(),
+        fig8(),
+        table4(),
+        table5(),
+        fig9(),
+        fig10(),
+        fig11(),
+        fig12(),
+        fig13(),
+        amdahl(),
+    ]
+}
+
+/// Lookup by id.
+pub fn generate(id: &str) -> Option<Figure> {
+    all().into_iter().find(|f| f.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_generate_nonempty() {
+        for f in all() {
+            assert!(!f.rows.is_empty(), "{} has no rows", f.id);
+            for row in &f.rows {
+                assert_eq!(row.len(), f.headers.len(), "{} row width", f.id);
+            }
+            assert!(f.render().contains(f.id));
+            assert!(f.to_csv().lines().count() == f.rows.len() + 1);
+        }
+    }
+
+    #[test]
+    fn table4_monotonic_in_devices_for_largest_net() {
+        let t4 = table4();
+        // Last row = 500:1500; ours columns are 1,3,5.
+        let row = t4.rows.last().unwrap();
+        let s2: f64 = row[1].parse().unwrap();
+        let s3: f64 = row[3].parse().unwrap();
+        let s4: f64 = row[5].parse().unwrap();
+        assert!(s2 < s3 && s3 < s4, "CPU speedup must grow with devices: {s2} {s3} {s4}");
+        // Headline: within ~35% of the paper's 3.28x.
+        assert!((2.1..=4.5).contains(&s4), "4-CPU largest-net speedup {s4}");
+    }
+
+    #[test]
+    fn table5_gpu_speedups_below_cpu_and_small_net_unprofitable() {
+        // DEVIATION (documented in EXPERIMENTS.md): the paper reports GPU
+        // speedups *decreasing* with net size (2.45x smallest), which is
+        // only possible if shipping activations were free.  Under
+        // wire-exact Eq. 2 accounting the small net cannot profit from GPU
+        // distribution at all, and the large net profits less on GPUs than
+        // on CPUs (that part matches the paper).
+        let t5 = table5();
+        let small3: f64 = t5.rows[0][3].parse().unwrap(); // 3 GPUs, smallest
+        let large3: f64 = t5.rows[3][3].parse().unwrap(); // 3 GPUs, largest
+        assert!(small3 < 1.2, "small-net GPU distribution cannot win under Eq.2: {small3}");
+        assert!(large3 > 1.0, "large-net GPU distribution must still win: {large3}");
+        let t4 = table4();
+        let cpu_large4: f64 = t4.rows[3][5].parse().unwrap();
+        assert!(cpu_large4 > large3, "Table 4 vs 5: CPUs outspeed GPUs on the largest net");
+    }
+
+    #[test]
+    fn fig9_saturates() {
+        let f = fig9();
+        // large@1024 rows: speedup at 32 nodes should be < 2x speedup at 8.
+        let rows: Vec<_> = f.rows.iter().filter(|r| r[0] == "large@1024").collect();
+        let s8: f64 = rows.iter().find(|r| r[1] == "8").unwrap()[6].parse().unwrap();
+        let s32: f64 = rows.iter().find(|r| r[1] == "32").unwrap()[6].parse().unwrap();
+        assert!(s32 < s8 * 1.6, "speedup should stabilize after ~8 nodes: {s8} -> {s32}");
+        // Wire-exact comm grows ~linearly with node count (inputs are
+        // broadcast per slave), so past the optimum the speedup *declines*
+        // rather than stagnating as in the paper's coarser model.
+        assert!(s32 >= s8 * 0.4, "decline past the optimum should be gradual: {s8} -> {s32}");
+    }
+}

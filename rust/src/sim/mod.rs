@@ -1,0 +1,344 @@
+//! Analytic performance simulator — the paper's own scalability methodology
+//! (§5.3.4), implemented as a first-class system.
+//!
+//! The paper extrapolates beyond its 4-laptop testbed with a model built
+//! from (a) the Eq. 2 upload volume, (b) the measured ~5 Mbps bandwidth and
+//! (c) per-device performance values sampled between the worst and best
+//! measured devices.  This module is that model:
+//!
+//! * conv time  — Eq. 1 integer partition via [`crate::sched::apportion`],
+//!   the layer finishes with its slowest shard;
+//! * comm time  — the wire volume our *actual protocol* moves (Eq. 2 plus
+//!   the backward-pass tensors the paper's formula leaves implicit), pushed
+//!   through the master's single link;
+//! * comp time  — the non-conv layers, which stay on the master.  The comp
+//!   share is a property of the authors' Matlab stack (25 % of a 1-CPU step
+//!   on the smallest net, 13 % on the largest — Fig. 6); we calibrate a
+//!   per-arch ratio to those reported numbers and document it (DESIGN.md §2).
+//!
+//! Real throttled cluster runs cross-validate the model at small scale
+//! (`rust/tests/sim_validation.rs`).
+
+pub mod figures;
+
+use std::time::Duration;
+
+use crate::devices::DeviceProfile;
+use crate::metrics::Breakdown;
+use crate::sched::{apportion, workload_shares};
+
+/// Architecture geometry for simulation — independent of compiled artifacts
+/// so paper-scale networks (500:1500 @ batch 1024) can be modeled without
+/// compiling them.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArchShape {
+    pub k1: usize,
+    pub k2: usize,
+    pub batch: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+}
+
+impl ArchShape {
+    pub fn new(k1: usize, k2: usize, batch: usize) -> Self {
+        Self { k1, k2, batch, img: 32, in_ch: 3, kh: 5, kw: 5 }
+    }
+
+    /// The four architectures of §5.2, smallest to largest.
+    pub fn paper_archs(batch: usize) -> [ArchShape; 4] {
+        [
+            Self::new(50, 500, batch),
+            Self::new(150, 800, batch),
+            Self::new(300, 1000, batch),
+            Self::new(500, 1500, batch),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}:{}", self.k1, self.k2)
+    }
+
+    // Spatial chain 32 -> 28 -> 14 -> 10 -> 5 (valid 5x5 conv, /2 pool).
+    pub fn c1_out(&self) -> usize {
+        self.img - self.kh + 1
+    }
+
+    pub fn p1_out(&self) -> usize {
+        self.c1_out() / 2
+    }
+
+    pub fn c2_out(&self) -> usize {
+        self.p1_out() - self.kh + 1
+    }
+
+    pub fn p2_out(&self) -> usize {
+        self.c2_out() / 2
+    }
+
+    /// Geometry of conv layer `l`: (in_ch, in_hw, out_hw, kernels).
+    pub fn layer(&self, l: usize) -> (usize, usize, usize, usize) {
+        match l {
+            1 => (self.in_ch, self.img, self.c1_out(), self.k1),
+            2 => (self.k1, self.p1_out(), self.c2_out(), self.k2),
+            _ => panic!("layer {l}"),
+        }
+    }
+
+    /// FLOPs of one *kernel* of conv layer `l`, forward pass
+    /// (2·B·OH²·C·KH·KW — one multiply-add per tap per output pixel).
+    pub fn flops_per_kernel_fwd(&self, l: usize) -> f64 {
+        let (c, _, oh, _) = self.layer(l);
+        2.0 * self.batch as f64 * (oh * oh) as f64 * c as f64 * (self.kh * self.kw) as f64
+    }
+
+    /// Training multiplies conv cost ~3x: forward + weight-grad + input-grad
+    /// are each a convolution of the same volume.
+    pub const TRAIN_CONV_FACTOR: f64 = 3.0;
+
+    pub fn conv_flops_fwd(&self) -> f64 {
+        (1..=2).map(|l| self.flops_per_kernel_fwd(l) * self.layer(l).3 as f64).sum()
+    }
+
+    pub fn conv_flops_train(&self) -> f64 {
+        self.conv_flops_fwd() * Self::TRAIN_CONV_FACTOR
+    }
+
+    /// Eq. 2, verbatim: elements exchanged for the *forward* distribution of
+    /// both conv layers (inputs broadcast + kernels out + maps back).
+    /// `n_slaves` is the number of slave nodes and `slave_share` the summed
+    /// Eq. 1 share of the slaves (the master's own shard never leaves it).
+    pub fn eq2_upload_elements(&self, n_slaves: usize, slave_share: f64) -> f64 {
+        let mut total = 0.0;
+        for l in 1..=2 {
+            let (in_ch, in_hw, out_hw, num_k) = self.layer(l);
+            let inputs = (in_hw * in_hw * in_ch * self.batch) as f64 * n_slaves as f64;
+            let kernels = (self.kh * self.kw * num_k * in_ch) as f64 * slave_share;
+            let outputs = (out_hw * out_hw * num_k * self.batch) as f64 * slave_share;
+            total += inputs + kernels + outputs;
+        }
+        total
+    }
+
+    /// Elements the backward pass moves (our protocol, mirrored by
+    /// `cluster::master::dist_conv_bwd`): gy slices + kernel resend out;
+    /// gx partials + gw + gb back.  Eq. 2 leaves these implicit; the real
+    /// wire moves them, so the model counts them.
+    pub fn bwd_upload_elements(&self, n_slaves: usize, slave_share: f64) -> f64 {
+        let mut total = 0.0;
+        for l in 1..=2 {
+            let (in_ch, in_hw, out_hw, num_k) = self.layer(l);
+            let gy = (out_hw * out_hw * num_k * self.batch) as f64 * slave_share;
+            let kernels = 2.0 * (self.kh * self.kw * num_k * in_ch) as f64 * slave_share; // out + gw back
+            let gx = (in_hw * in_hw * in_ch * self.batch) as f64 * n_slaves as f64;
+            total += gy + kernels + gx;
+        }
+        total
+    }
+}
+
+/// Comp-share calibration: fraction of a 1-CPU training step spent on
+/// non-conv layers, per §5.3.1 ("going from 25% with the smallest network to
+/// 13% when training the largest one").  Interpolated in log(conv FLOPs).
+pub fn comp_share(arch: &ArchShape) -> f64 {
+    // Anchors: the four paper archs at batch 1024.
+    let probe = ArchShape { batch: 1024, ..*arch };
+    let x = probe.conv_flops_train().log10();
+    let small = ArchShape::new(50, 500, 1024).conv_flops_train().log10();
+    let large = ArchShape::new(500, 1500, 1024).conv_flops_train().log10();
+    let t = ((x - small) / (large - small)).clamp(0.0, 1.0);
+    0.25 + t * (0.13 - 0.25)
+}
+
+/// Effective master-link bandwidth used by default, in Mbps.
+///
+/// **Calibrated, documented deviation from the paper** (see EXPERIMENTS.md
+/// §Deviations): the paper quotes ~5 Mbps Wi-Fi, but its own Eq. 2 volumes
+/// at 5 Mbps give *hours* per 1024-image batch — two orders of magnitude
+/// more than the comm shares it reports (19–30 % on the GPU cluster,
+/// Fig. 8).  We keep Eq. 2 honest and instead calibrate the effective
+/// bandwidth so the simulated 3-GPU comm share lands on the Fig. 8 anchor.
+pub const EFFECTIVE_BANDWIDTH_MBPS: f64 = 675.0;
+
+/// Simulator inputs beyond the device list.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub arch: ArchShape,
+    /// Master's single link, bits per second.
+    pub bandwidth_mbps: f64,
+    /// Wire bytes per element (we ship f32 = 4; the paper shipped f64 = 8).
+    pub bytes_per_elem: f64,
+    /// Train (fwd+bwd, the paper's experiments) or forward only.
+    pub training: bool,
+    /// CPU GFLOPS of the master *machine* — comp always runs on a CPU even
+    /// in the GPU cluster ("the computation of the remaining layers is
+    /// performed on the CPU", §5.3.2).
+    pub master_cpu_gflops: f64,
+    /// Global throughput scale: set from a measured local probe to anchor
+    /// absolute times to this container; 1.0 keeps the catalog's values.
+    pub gflops_scale: f64,
+}
+
+impl SimConfig {
+    pub fn paper(arch: ArchShape) -> Self {
+        Self {
+            arch,
+            bandwidth_mbps: EFFECTIVE_BANDWIDTH_MBPS,
+            bytes_per_elem: 4.0,
+            training: true,
+            master_cpu_gflops: 20.0, // PC1's CPU
+            gflops_scale: 1.0,
+        }
+    }
+}
+
+/// Simulate one training step on `devices` (index 0 = master).  Returns the
+/// paper's Comm/Conv/Comp breakdown.
+pub fn simulate_step(cfg: &SimConfig, devices: &[DeviceProfile]) -> Breakdown {
+    assert!(!devices.is_empty());
+    let arch = &cfg.arch;
+    let conv_factor = if cfg.training { ArchShape::TRAIN_CONV_FACTOR } else { 1.0 };
+
+    // --- Conv: Eq. 1 integer partition, slowest shard wins -----------------
+    // Probe time per device is inversely proportional to its GFLOPS.
+    let probe_times: Vec<f64> =
+        devices.iter().map(|d| 1.0 / (d.gflops * cfg.gflops_scale)).collect();
+    let shares = workload_shares(&probe_times).expect("valid probe times");
+    let mut conv = 0.0f64;
+    let mut slave_share = 0.0f64;
+    for l in 1..=2 {
+        let k = arch.layer(l).3;
+        let counts = apportion(k, &shares).expect("apportion");
+        let fpk = arch.flops_per_kernel_fwd(l) * conv_factor;
+        let t_layer = counts
+            .iter()
+            .zip(devices)
+            .map(|(&n, d)| n as f64 * fpk / (d.gflops * cfg.gflops_scale * 1e9))
+            .fold(0.0, f64::max);
+        conv += t_layer;
+        // Kernel-weighted share of work that leaves the master.
+        slave_share += counts.iter().skip(1).sum::<usize>() as f64 / k as f64 / 2.0;
+    }
+
+    // --- Comm: Eq. 2 volume through the master's link ----------------------
+    let n_slaves = devices.len() - 1;
+    let mut elements = arch.eq2_upload_elements(n_slaves, slave_share);
+    if cfg.training {
+        elements += arch.bwd_upload_elements(n_slaves, slave_share);
+    }
+    let comm = if n_slaves == 0 {
+        0.0
+    } else {
+        elements * cfg.bytes_per_elem * 8.0 / (cfg.bandwidth_mbps * 1e6)
+    };
+
+    // --- Comp: calibrated non-conv share, always on the master CPU ---------
+    let share = comp_share(arch);
+    let conv_1dev_cpu =
+        arch.conv_flops_fwd() * conv_factor / (cfg.master_cpu_gflops * cfg.gflops_scale * 1e9);
+    let comp = conv_1dev_cpu * share / (1.0 - share);
+
+    Breakdown {
+        comm: Duration::from_secs_f64(comm),
+        conv: Duration::from_secs_f64(conv),
+        comp: Duration::from_secs_f64(comp),
+    }
+}
+
+/// Speedup of an `n`-device cluster over its own master alone — the paper's
+/// definition ("speedup is obtained by comparing execution time against a
+/// single device of the same type").
+pub fn speedup(cfg: &SimConfig, devices: &[DeviceProfile]) -> f64 {
+    let t1 = simulate_step(cfg, &devices[..1]).total().as_secs_f64();
+    let tn = simulate_step(cfg, devices).total().as_secs_f64();
+    t1 / tn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{paper_cpus, paper_gpus};
+
+    #[test]
+    fn conv_flops_match_hand_count() {
+        // Smallest net, batch 64, layer 1: 2*64*50*28^2*3*25.
+        let a = ArchShape::new(50, 500, 64);
+        let l1 = a.flops_per_kernel_fwd(1) * 50.0;
+        assert!((l1 - 2.0 * 64.0 * 50.0 * 784.0 * 75.0).abs() < 1.0);
+        assert!(a.conv_flops_train() > a.conv_flops_fwd());
+    }
+
+    #[test]
+    fn comp_share_matches_paper_anchors() {
+        assert!((comp_share(&ArchShape::new(50, 500, 1024)) - 0.25).abs() < 1e-9);
+        assert!((comp_share(&ArchShape::new(500, 1500, 1024)) - 0.13).abs() < 1e-9);
+        let mid = comp_share(&ArchShape::new(300, 1000, 1024));
+        assert!((0.13..0.25).contains(&mid));
+    }
+
+    #[test]
+    fn single_device_has_no_comm() {
+        let cfg = SimConfig::paper(ArchShape::new(50, 500, 64));
+        let b = simulate_step(&cfg, &paper_cpus()[..1]);
+        assert_eq!(b.comm, Duration::ZERO);
+        assert!(b.conv > Duration::ZERO);
+        assert!(b.comp > Duration::ZERO);
+    }
+
+    #[test]
+    fn speedup_above_one_for_paper_cpu_cluster() {
+        // Fig. 5d headline: 4 CPUs on 500:1500 @ 1024 must land near 3.3x.
+        let cfg = SimConfig::paper(ArchShape::new(500, 1500, 1024));
+        let s = speedup(&cfg, &paper_cpus());
+        assert!(s > 2.0 && s < 5.0, "4-CPU speedup {s}");
+    }
+
+    #[test]
+    fn more_bandwidth_less_comm() {
+        let arch = ArchShape::new(500, 1500, 1024);
+        let mut cfg = SimConfig::paper(arch);
+        cfg.bandwidth_mbps = 50.0;
+        let slow = simulate_step(&cfg, &paper_cpus());
+        cfg.bandwidth_mbps = 500.0;
+        let fast = simulate_step(&cfg, &paper_cpus());
+        assert!(fast.comm < slow.comm);
+        assert_eq!(fast.conv, slow.conv);
+    }
+
+    #[test]
+    fn gpu_cluster_speedup_smaller_than_cpu_on_large_net() {
+        // Table 4 vs Table 5: on 500:1500 CPUs reach ~3.3x while GPUs only
+        // ~2x — the GPU conv is so fast that comm+comp dominate.
+        let arch = ArchShape::new(500, 1500, 1024);
+        let mut cfg = SimConfig::paper(arch);
+        let s_cpu = speedup(&cfg, &paper_cpus());
+        cfg.master_cpu_gflops = 38.0; // PC2 hosts the GPU master
+        let s_gpu = speedup(&cfg, &paper_gpus());
+        assert!(s_gpu < s_cpu, "gpu {s_gpu} vs cpu {s_cpu}");
+    }
+
+    #[test]
+    fn amdahl_bound_holds() {
+        // §5.3.1: comp = 13% of 1-CPU time on the largest net limits the
+        // speedup to ~7.76x no matter how many devices.
+        let arch = ArchShape::new(500, 1500, 1024);
+        let mut cfg = SimConfig::paper(arch);
+        cfg.bandwidth_mbps = 1e6; // free comm
+        let many: Vec<_> =
+            (0..64).map(|_| crate::devices::paper_cpus()[0].clone()).collect();
+        let s = speedup(&cfg, &many);
+        assert!(s < 1.0 / 0.13 + 0.2, "speedup {s} violates Amdahl bound");
+        assert!(s > 5.0, "64 free-comm devices should approach the bound, got {s}");
+    }
+
+    #[test]
+    fn eq2_volume_grows_with_slaves_and_kernels() {
+        let small = ArchShape::new(50, 500, 64);
+        let large = ArchShape::new(500, 1500, 64);
+        assert!(
+            large.eq2_upload_elements(3, 0.75) > small.eq2_upload_elements(3, 0.75)
+        );
+        assert!(small.eq2_upload_elements(4, 0.8) > small.eq2_upload_elements(2, 0.8));
+    }
+}

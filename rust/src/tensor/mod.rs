@@ -1,0 +1,390 @@
+//! Dense host tensors (f32 / i32) used on every boundary of the system:
+//! PJRT literals, wire messages, parameter store and data pipeline.
+//!
+//! Layout is always row-major (C order) and, for activations/kernels, NCHW /
+//! OIHW — the same convention the JAX segments were lowered with.
+
+mod rng;
+
+pub use rng::Pcg32;
+
+use anyhow::{bail, ensure, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} does not match {} elements",
+            shape,
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// Uniform on [-a, a] — used by the Kaiming-style initializer.
+    pub fn uniform(shape: &[usize], a: f32, rng: &mut Pcg32) -> Self {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * a).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Standard-normal entries (Box–Muller) — synthetic data / probe inputs.
+    pub fn randn(shape: &[usize], rng: &mut Pcg32) -> Self {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.next_gaussian()).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        ensure!(self.data.len() == 1, "item() on tensor of {} elements", self.data.len());
+        Ok(self.data[0])
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == self.data.len(),
+            "reshape {:?} -> {:?} changes element count",
+            self.shape,
+            shape
+        );
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Slice `[lo, hi)` along axis 0 (kernel shards: w[K,C,KH,KW] -> rows).
+    pub fn slice_axis0(&self, lo: usize, hi: usize) -> Result<Self> {
+        ensure!(!self.shape.is_empty(), "slice_axis0 on scalar");
+        ensure!(lo <= hi && hi <= self.shape[0], "slice [{lo},{hi}) out of {}", self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(Self { shape, data: self.data[lo * row..hi * row].to_vec() })
+    }
+
+    /// Slice `[lo, hi)` along axis 1 (feature maps: y[B,K,H,W] -> channel range).
+    pub fn slice_axis1(&self, lo: usize, hi: usize) -> Result<Self> {
+        ensure!(self.shape.len() >= 2, "slice_axis1 needs rank >= 2");
+        let (b, k) = (self.shape[0], self.shape[1]);
+        ensure!(lo <= hi && hi <= k, "slice [{lo},{hi}) out of {k}");
+        let inner: usize = self.shape[2..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[1] = hi - lo;
+        let mut data = Vec::with_capacity(b * (hi - lo) * inner);
+        for bi in 0..b {
+            let base = bi * k * inner;
+            data.extend_from_slice(&self.data[base + lo * inner..base + hi * inner]);
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// Concatenate along axis 1 — reassembling gathered feature-map shards
+    /// `y_i[B,K_i,H,W]` into the full `y[B,K,H,W]` (Algorithm 1 line 20:
+    /// "the master node reshapes and rearranges them").
+    pub fn concat_axis1(parts: &[Tensor]) -> Result<Self> {
+        ensure!(!parts.is_empty(), "concat of zero tensors");
+        let first = &parts[0];
+        ensure!(first.shape.len() >= 2, "concat_axis1 needs rank >= 2");
+        let b = first.shape[0];
+        let inner: usize = first.shape[2..].iter().product();
+        let mut k_total = 0;
+        for p in parts {
+            ensure!(p.shape.len() == first.shape.len(), "rank mismatch in concat");
+            ensure!(p.shape[0] == b, "batch mismatch in concat");
+            ensure!(
+                p.shape[2..] == first.shape[2..],
+                "inner shape mismatch in concat: {:?} vs {:?}",
+                p.shape,
+                first.shape
+            );
+            k_total += p.shape[1];
+        }
+        let mut shape = first.shape.clone();
+        shape[1] = k_total;
+        let mut data = Vec::with_capacity(b * k_total * inner);
+        for bi in 0..b {
+            for p in parts {
+                let k = p.shape[1];
+                let base = bi * k * inner;
+                data.extend_from_slice(&p.data[base..base + k * inner]);
+            }
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// Concatenate along axis 0 (stacking kernel shards back together).
+    pub fn concat_axis0(parts: &[Tensor]) -> Result<Self> {
+        ensure!(!parts.is_empty(), "concat of zero tensors");
+        let first = &parts[0];
+        let mut n_total = 0;
+        for p in parts {
+            ensure!(
+                p.shape[1..] == first.shape[1..],
+                "inner shape mismatch in concat: {:?} vs {:?}",
+                p.shape,
+                first.shape
+            );
+            n_total += p.shape[0];
+        }
+        let mut shape = first.shape.clone();
+        shape[0] = n_total;
+        let mut data = Vec::with_capacity(n_total * first.shape[1..].iter().product::<usize>());
+        for p in parts {
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// Zero-pad axis 0 up to `n` rows (bucket rounding of kernel shards).
+    pub fn pad_axis0(&self, n: usize) -> Result<Self> {
+        ensure!(!self.shape.is_empty(), "pad_axis0 on scalar");
+        ensure!(n >= self.shape[0], "pad to {n} smaller than {}", self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        let mut data = self.data.clone();
+        data.resize(n * row, 0.0);
+        Ok(Self { shape, data })
+    }
+
+    /// Elementwise `self += other` (summing partial input-cotangents).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        ensure!(self.shape == other.shape, "add shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// Elementwise `self += s * other` (gradient averaging and SGD).
+    pub fn axpy(&mut self, s: f32, other: &Tensor) -> Result<()> {
+        ensure!(self.shape == other.shape, "axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Max |a - b| — the numeric-equivalence metric used by integration tests.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        ensure!(self.shape == other.shape, "diff shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    pub fn l2norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// A dense row-major i32 tensor (labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ITensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl ITensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} does not match {} elements",
+            shape,
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn slice_axis0(&self, lo: usize, hi: usize) -> Result<Self> {
+        ensure!(!self.shape.is_empty(), "slice_axis0 on scalar");
+        ensure!(lo <= hi && hi <= self.shape[0], "slice [{lo},{hi}) out of {}", self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(Self { shape, data: self.data[lo * row..hi * row].to_vec() })
+    }
+}
+
+/// Either tensor type — what an executable argument or wire payload holds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32(ITensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "f32",
+            Value::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Value::F32(t) => t.size_bytes(),
+            Value::I32(t) => t.len() * 4,
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<ITensor> for Value {
+    fn from(t: ITensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_concat_axis1_roundtrip() {
+        let mut rng = Pcg32::seed(7);
+        let t = Tensor::randn(&[2, 6, 3, 3], &mut rng);
+        let a = t.slice_axis1(0, 2).unwrap();
+        let b = t.slice_axis1(2, 5).unwrap();
+        let c = t.slice_axis1(5, 6).unwrap();
+        let back = Tensor::concat_axis1(&[a, b, c]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn slice_concat_axis0_roundtrip() {
+        let mut rng = Pcg32::seed(8);
+        let t = Tensor::randn(&[7, 4, 5, 5], &mut rng);
+        let a = t.slice_axis0(0, 3).unwrap();
+        let b = t.slice_axis0(3, 7).unwrap();
+        let back = Tensor::concat_axis0(&[a, b]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn pad_axis0_zero_fills() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let p = t.pad_axis0(4).unwrap();
+        assert_eq!(p.shape(), &[4, 2]);
+        assert_eq!(&p.data()[4..], &[0.0; 4]);
+        // And unpadding recovers the original.
+        assert_eq!(p.slice_axis0(0, 2).unwrap(), t);
+    }
+
+    #[test]
+    fn axpy_and_diff() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let mut b = Tensor::zeros(&[3]);
+        b.axpy(2.0, &a).unwrap();
+        assert_eq!(b.data(), &[2.0, 4.0, 6.0]);
+        assert!((b.max_abs_diff(&a).unwrap() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.clone().add_assign(&b).is_err());
+        assert!(Tensor::new(vec![2, 2], vec![0.0; 3]).is_err());
+        assert!(a.slice_axis1(1, 3).is_err());
+    }
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut r1 = Pcg32::seed(42);
+        let mut r2 = Pcg32::seed(42);
+        let a = Tensor::randn(&[16], &mut r1);
+        let b = Tensor::randn(&[16], &mut r2);
+        assert_eq!(a, b);
+    }
+}

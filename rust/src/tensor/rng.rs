@@ -1,0 +1,95 @@
+//! PCG32: small, fast, deterministic PRNG — no external dependency so every
+//! experiment is reproducible from a single u64 seed across platforms.
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn seed(seed: u64) -> Self {
+        Self::seed_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn seed_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, n).
+    pub fn next_below(&mut self, n: u32) -> u32 {
+        // Lemire's method without the rejection loop is fine here: n is tiny
+        // (class counts, device counts) relative to 2^32 so bias < 1e-7.
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_gaussian(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f32();
+            if u1 > 1e-7 {
+                let u2 = self.next_f32();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_separated() {
+        let mut a = Pcg32::seed(1);
+        let mut b = Pcg32::seed(1);
+        assert_eq!(a.next_u32(), b.next_u32());
+        let mut c = Pcg32::seed_stream(1, 99);
+        assert_ne!(a.next_u32(), c.next_u32());
+    }
+
+    #[test]
+    fn uniform_bounds_and_moments() {
+        let mut rng = Pcg32::seed(3);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.next_f32()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!((mean - 0.5).abs() < 0.01, "uniform mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg32::seed(4);
+        let xs: Vec<f32> = (0..20_000).map(|_| rng.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "gaussian mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "gaussian var {var}");
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut rng = Pcg32::seed(5);
+        for _ in 0..1000 {
+            assert!(rng.next_below(10) < 10);
+        }
+    }
+}

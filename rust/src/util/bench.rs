@@ -1,0 +1,91 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warms up, runs timed iterations until a wall budget or iteration cap,
+//! reports min/mean/p50/p90 per iteration.  Used by `rust/benches/*` (which
+//! are `harness = false` cargo bench targets).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>6} iters  mean {:>12?}  min {:>12?}  p50 {:>12?}  p90 {:>12?}",
+            self.name, self.iters, self.mean, self.min, self.p50, self.p90
+        )
+    }
+}
+
+pub struct Bencher {
+    /// Wall-clock budget per benchmark.
+    pub budget: Duration,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { budget: Duration::from_secs(2), max_iters: 1000, warmup: 2 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self { budget: Duration::from_millis(500), max_iters: 200, warmup: 1 }
+    }
+
+    /// Time `f` repeatedly; prints and returns the summary.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < 3 || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let iters = samples.len();
+        let mean = samples.iter().sum::<Duration>() / iters as u32;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean,
+            min: samples[0],
+            p50: samples[iters / 2],
+            p90: samples[(iters * 9 / 10).min(iters - 1)],
+        };
+        println!("{res}");
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_statistics() {
+        let b = Bencher { budget: Duration::from_millis(50), max_iters: 20, warmup: 1 };
+        let r = b.run("sleep-1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.iters >= 3);
+        assert!(r.min >= Duration::from_millis(1));
+        assert!(r.p90 >= r.p50 && r.p50 >= r.min);
+        assert!(r.mean >= r.min);
+    }
+}

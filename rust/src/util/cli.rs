@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser: `--flag`, `--key value`, positional subcommand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: a subcommand plus `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare token is the subcommand; `--key value`
+    /// pairs and bare `--flag`s may appear in any order.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // A value follows unless the next token is another option or
+                // the end (then it's a boolean flag).
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        if out.opts.insert(key.to_string(), v).is_some() {
+                            bail!("duplicate option --{key}");
+                        }
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|e| anyhow!("--{name} {v:?}: {e}"))?)),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.opt(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_and_flags() {
+        let a = args("train --workers 3 --csv --steps 10");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get::<usize>("workers", 0).unwrap(), 3);
+        assert_eq!(a.get::<usize>("steps", 0).unwrap(), 10);
+        assert!(a.flag("csv"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get::<usize>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(["a".into(), "b".into()]).is_err());
+        assert!(Args::parse(["x".into(), "--n".into(), "3".into(), "--n".into(), "4".into()])
+            .is_err());
+        let a = args("train --steps abc");
+        assert!(a.get::<usize>("steps", 0).is_err());
+        assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("figures --csv");
+        assert!(a.flag("csv"));
+        assert_eq!(a.opt("csv"), None);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree substrates that would normally be external crates — the build
+//! environment is offline, so: JSON parsing ([`json`]), CLI argument parsing
+//! ([`cli`]) and the bench harness ([`bench`]) live here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;

@@ -1,0 +1,27 @@
+//! Shared helpers for integration tests (require `make artifacts`).
+
+use std::sync::Arc;
+
+use convdist::runtime::Runtime;
+
+/// Open the repo's artifact directory; panics with a actionable message if
+/// `make artifacts` has not been run.
+pub fn runtime() -> Arc<Runtime> {
+    let dir = convdist::artifacts_dir();
+    Runtime::open(&dir).unwrap_or_else(|e| {
+        panic!("integration tests need artifacts (run `make artifacts`): {e:#}")
+    })
+}
+
+/// Default trainer config for fast tests.
+pub fn fast_cfg(steps: usize) -> convdist::config::TrainerConfig {
+    convdist::config::TrainerConfig {
+        steps,
+        lr: 0.03,
+        momentum: 0.9,
+        weight_decay: 0.0,
+        seed: 42,
+        log_every: 100,
+        calib_rounds: 1,
+    }
+}

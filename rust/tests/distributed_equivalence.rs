@@ -1,0 +1,144 @@
+//! The paper's central correctness claim, verified on the real stack:
+//! distributing the convolutional layers "diminish[es] the training time
+//! without affecting the classification performance" — i.e. the distributed
+//! step computes the *same* update as single-device training.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target orders this).
+
+mod common;
+
+use convdist::baselines::{DataParallelTrainer, SingleDeviceTrainer};
+use convdist::cluster::{spawn_inproc, DistTrainer};
+use convdist::data::{Dataset, SyntheticCifar};
+use convdist::devices::Throttle;
+
+#[test]
+fn distributed_step_matches_single_device() {
+    let rt = common::runtime();
+    let arch = rt.arch().clone();
+    let cfg = common::fast_cfg(4);
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 7);
+
+    // Reference: fused single-device trainer.
+    let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none()).unwrap();
+    let mut single_losses = Vec::new();
+    for step in 0..cfg.steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        let (loss, _) = single.step(&batch).unwrap();
+        single_losses.push(loss);
+    }
+
+    // Distributed: master + 2 workers, same seed.
+    let mut cluster = spawn_inproc(convdist::artifacts_dir(), &[Throttle::none(); 2], None);
+    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut dist_losses = Vec::new();
+    for step in 0..cfg.steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        let res = dist.step(&batch).unwrap();
+        assert_eq!(res.devices, 3);
+        dist_losses.push(res.loss);
+    }
+
+    // Same losses step for step (segmented vs fused float paths differ only
+    // by reduction order).
+    for (i, (a, b)) in single_losses.iter().zip(&dist_losses).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * a.abs().max(1.0),
+            "step {i}: single {a} vs distributed {b}"
+        );
+    }
+    // And the parameters themselves must agree.
+    let diff = dist.params.max_abs_diff(&single.params).unwrap();
+    assert!(diff < 5e-3, "param divergence after {} steps: {diff}", cfg.steps);
+
+    dist.shutdown().unwrap();
+    cluster.join().unwrap();
+}
+
+#[test]
+fn distributed_matches_with_heterogeneous_throttles() {
+    // Unequal shards (Eq. 1 splits 1x/2x/4x devices) must not change the
+    // numerics, only the partition.
+    let rt = common::runtime();
+    let arch = rt.arch().clone();
+    let cfg = common::fast_cfg(2);
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 9);
+
+    let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none()).unwrap();
+    let mut cluster = spawn_inproc(
+        convdist::artifacts_dir(),
+        &[Throttle::new(2.0), Throttle::new(4.0)],
+        None,
+    );
+    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+
+    // The throttled workers must have received *smaller* shards.
+    let shards = dist.shards(2);
+    let master_shard = shards.iter().find(|s| s.device == 0).map(|s| s.len()).unwrap_or(0);
+    let w2_shard = shards.iter().find(|s| s.device == 2).map(|s| s.len()).unwrap_or(0);
+    assert!(
+        master_shard > w2_shard,
+        "Eq.1 must give the 4x-slower device fewer kernels: master {master_shard} vs w2 {w2_shard}"
+    );
+
+    for step in 0..cfg.steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        let (sl, _) = single.step(&batch).unwrap();
+        let r = dist.step(&batch).unwrap();
+        assert!((sl - r.loss).abs() < 1e-3 * sl.abs().max(1.0), "step {step}: {sl} vs {}", r.loss);
+    }
+    let diff = dist.params.max_abs_diff(&single.params).unwrap();
+    assert!(diff < 5e-3, "param divergence: {diff}");
+    dist.shutdown().unwrap();
+    cluster.join().unwrap();
+}
+
+#[test]
+fn data_parallel_baseline_trains_and_differs_by_averaging_only() {
+    let rt = common::runtime();
+    let arch = rt.arch().clone();
+    let cfg = common::fast_cfg(3);
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 11);
+
+    let mut dp = DataParallelTrainer::new(rt.clone(), &cfg, vec![Throttle::none(); 2]).unwrap();
+    let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none()).unwrap();
+    for step in 0..cfg.steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        let (dl, _) = dp.step(&batch).unwrap();
+        let (sl, _) = single.step(&batch).unwrap();
+        // Mean-of-shard-means == full-batch mean for equal shards, so the
+        // loss and gradients agree up to float reassociation.
+        assert!((dl - sl).abs() < 1e-3 * sl.abs().max(1.0), "step {step}: dp {dl} vs single {sl}");
+    }
+    let diff = dp.params.max_abs_diff(&single.params).unwrap();
+    assert!(diff < 5e-3, "dp vs single param divergence: {diff}");
+}
+
+#[test]
+fn training_reduces_loss_and_beats_chance_accuracy() {
+    // The e2e learning signal at test scale: 15 steps of distributed
+    // training on the synthetic task must cut the loss and beat 10-class
+    // chance on a held-out batch.
+    let rt = common::runtime();
+    let arch = rt.arch().clone();
+    let cfg = common::fast_cfg(15);
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 13);
+
+    let mut cluster = spawn_inproc(convdist::artifacts_dir(), &[Throttle::none(); 2], None);
+    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..cfg.steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        let r = dist.step(&batch).unwrap();
+        first.get_or_insert(r.loss);
+        last = r.loss;
+    }
+    let first = first.unwrap();
+    assert!(last < first, "loss must fall: {first} -> {last}");
+    let held_out = ds.batch(arch.batch, 10_000).unwrap();
+    let acc = dist.eval_accuracy(&held_out).unwrap();
+    assert!(acc > 0.15, "accuracy {acc} should beat 10-class chance");
+    dist.shutdown().unwrap();
+    cluster.join().unwrap();
+}

@@ -1,0 +1,251 @@
+//! Seeded randomized property tests over the coordinator substrates —
+//! the offline stand-in for proptest (documented in Cargo.toml).  Each
+//! property runs hundreds of random cases from a fixed-seed PCG stream, so
+//! failures are reproducible by seed.
+//!
+//! These tests need no artifacts (pure L3 logic).
+
+use convdist::proto::{frame_len, read_frame, write_frame, Message, WireTensor};
+use convdist::sched::{apportion, bottleneck_cost, fit_bucket, partition_layer, workload_shares, Shard};
+use convdist::tensor::{Pcg32, Tensor};
+
+const CASES: usize = 300;
+
+fn rand_times(rng: &mut Pcg32, n: usize) -> Vec<f64> {
+    (0..n).map(|_| 0.01 + rng.next_f32() as f64 * 10.0).collect()
+}
+
+#[test]
+fn prop_partition_tiles_layer_exactly() {
+    let mut rng = Pcg32::seed(1001);
+    for case in 0..CASES {
+        let n_dev = 1 + rng.next_below(8) as usize;
+        let k = 1 + rng.next_below(200) as usize;
+        let times = rand_times(&mut rng, n_dev);
+        // Bucket ladder mirroring model.bucket_ladder.
+        let buckets: Vec<usize> = (1..=8)
+            .map(|i| ((k * i + 7) / 8 + 3) / 4 * 4)
+            .map(|b| b.clamp(1, k))
+            .collect();
+        let shards = partition_layer(k, &times, &buckets)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        let mut prev_hi = 0usize;
+        for s in &shards {
+            assert_eq!(s.lo, prev_hi, "case {case}: shards must tile contiguously");
+            assert!(s.len() > 0 && s.len() <= s.bucket, "case {case}: bucket fit");
+            prev_hi = s.hi;
+        }
+        assert_eq!(prev_hi, k, "case {case}: full coverage");
+        // No device appears twice.
+        let mut devs: Vec<usize> = shards.iter().map(|s| s.device).collect();
+        devs.sort_unstable();
+        devs.dedup();
+        assert_eq!(devs.len(), shards.len(), "case {case}: duplicate device");
+    }
+}
+
+#[test]
+fn prop_eq1_shares_normalized_and_inverse_to_time() {
+    let mut rng = Pcg32::seed(1002);
+    for case in 0..CASES {
+        let n = 1 + rng.next_below(16) as usize;
+        let times = rand_times(&mut rng, n);
+        let shares = workload_shares(&times).unwrap();
+        let sum: f64 = shares.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "case {case}: shares sum {sum}");
+        // Faster device never gets a smaller share.
+        for i in 0..n {
+            for j in 0..n {
+                if times[i] < times[j] {
+                    assert!(
+                        shares[i] >= shares[j] - 1e-12,
+                        "case {case}: t{i}={} < t{j}={} but share {} < {}",
+                        times[i],
+                        times[j],
+                        shares[i],
+                        shares[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_apportion_exact_and_fair() {
+    let mut rng = Pcg32::seed(1003);
+    for case in 0..CASES {
+        let n = 1 + rng.next_below(12) as usize;
+        let k = 1 + rng.next_below(2000) as usize;
+        let times = rand_times(&mut rng, n);
+        let shares = workload_shares(&times).unwrap();
+        let counts = apportion(k, &shares).unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), k, "case {case}");
+        // Largest-remainder: every count within 1 of the ideal.
+        for (c, s) in counts.iter().zip(&shares) {
+            let ideal = s * k as f64;
+            assert!(
+                (*c as f64 - ideal).abs() <= 1.0 + 1e-9,
+                "case {case}: count {c} vs ideal {ideal:.3}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_eq1_split_never_worse_than_equal_split() {
+    // The paper's whole premise, as an invariant: the Eq. 1 partition's
+    // bottleneck cost <= the equal split's bottleneck cost (continuous
+    // buckets so padding does not blur the comparison).
+    let mut rng = Pcg32::seed(1004);
+    for case in 0..CASES {
+        let n = 2 + rng.next_below(6) as usize;
+        let k = n * (1 + rng.next_below(100) as usize);
+        let times = rand_times(&mut rng, n);
+        let buckets: Vec<usize> = (1..=k).collect();
+        let balanced = partition_layer(k, &times, &buckets).unwrap();
+        let per = k / n;
+        let naive: Vec<Shard> = (0..n)
+            .map(|i| Shard { device: i, lo: i * per, hi: (i + 1) * per, bucket: per })
+            .collect();
+        let b = bottleneck_cost(&balanced, &times);
+        let q = bottleneck_cost(&naive, &times);
+        assert!(
+            b <= q * 1.0001 + 1e-12,
+            "case {case}: balanced {b} worse than equal {q} (times {times:?})"
+        );
+    }
+}
+
+#[test]
+fn prop_fit_bucket_minimal() {
+    let mut rng = Pcg32::seed(1005);
+    for _ in 0..CASES {
+        let mut buckets: Vec<usize> = (0..1 + rng.next_below(10) as usize)
+            .map(|_| 1 + rng.next_below(512) as usize)
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let n = 1 + rng.next_below(512) as usize;
+        match fit_bucket(n, &buckets) {
+            Ok(b) => {
+                assert!(b >= n);
+                assert!(buckets.iter().all(|&x| x < n || x >= b), "not minimal");
+            }
+            Err(_) => assert!(buckets.iter().all(|&x| x < n)),
+        }
+    }
+}
+
+fn rand_tensor(rng: &mut Pcg32) -> WireTensor {
+    let rank = 1 + rng.next_below(4) as usize;
+    let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.next_below(6) as usize).collect();
+    WireTensor::from(&Tensor::randn(&shape, rng))
+}
+
+fn rand_message(rng: &mut Pcg32) -> Message {
+    match rng.next_below(8) {
+        0 => Message::Hello { worker_id: rng.next_u32(), version: rng.next_u32() },
+        1 => Message::Calibrate { rounds: rng.next_u32() },
+        2 => Message::CalibrateResult { seconds: rng.next_f32() as f64 },
+        3 => Message::ConvWork {
+            seq: rng.next_u32(),
+            layer: (1 + rng.next_below(2)) as u8,
+            dir: rng.next_below(2) as u8,
+            bucket: rng.next_below(64),
+            inputs: rand_tensor(rng),
+            kernels: rand_tensor(rng),
+            extra: if rng.next_below(2) == 0 { Some(rand_tensor(rng)) } else { None },
+        },
+        4 => Message::ConvResult {
+            seq: rng.next_u32(),
+            outputs: (0..rng.next_below(4)).map(|_| rand_tensor(rng)).collect(),
+            seconds: rng.next_f32() as f64,
+        },
+        5 => Message::AllOk,
+        6 => Message::TrainOver,
+        _ => Message::Error { reason: format!("e{}", rng.next_u32()) },
+    }
+}
+
+#[test]
+fn prop_protocol_roundtrips_random_messages() {
+    let mut rng = Pcg32::seed(2001);
+    for case in 0..CASES {
+        let msg = rand_message(&mut rng);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        assert_eq!(buf.len(), frame_len(&msg), "case {case}: frame_len mismatch");
+        let back = read_frame(&mut std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(back, msg, "case {case}");
+    }
+}
+
+#[test]
+fn prop_corrupted_frames_error_never_panic() {
+    // Flip a random byte (or truncate) in a valid frame: decoding must
+    // return Err or an unequal message — never panic, never hang.
+    let mut rng = Pcg32::seed(2002);
+    for case in 0..CASES {
+        let msg = rand_message(&mut rng);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        if rng.next_below(4) == 0 {
+            let cut = 1 + rng.next_below(buf.len() as u32 - 1) as usize;
+            buf.truncate(cut);
+        } else {
+            let pos = rng.next_below(buf.len() as u32) as usize;
+            buf[pos] ^= 1 << rng.next_below(8);
+        }
+        match read_frame(&mut std::io::Cursor::new(buf)) {
+            Ok(decoded) => {
+                // A flip inside the payload is caught by CRC, so a clean
+                // decode can only come from a flip that the CRC re-matches —
+                // astronomically unlikely; a flip in the *length/magic/id*
+                // fields errors. Accept equal-decodes only.
+                assert_eq!(decoded, msg, "case {case}: silent corruption");
+            }
+            Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn prop_tensor_slice_concat_inverse() {
+    let mut rng = Pcg32::seed(2003);
+    for case in 0..CASES {
+        let b = 1 + rng.next_below(4) as usize;
+        let k = 2 + rng.next_below(24) as usize;
+        let h = 1 + rng.next_below(6) as usize;
+        let t = Tensor::randn(&[b, k, h, h], &mut rng);
+        // Random partition of the k axis.
+        let mut cuts: Vec<usize> = (0..rng.next_below(3)).map(|_| 1 + rng.next_below(k as u32 - 1) as usize).collect();
+        cuts.push(0);
+        cuts.push(k);
+        cuts.sort_unstable();
+        cuts.dedup();
+        let parts: Vec<Tensor> = cuts
+            .windows(2)
+            .map(|w| t.slice_axis1(w[0], w[1]).unwrap())
+            .collect();
+        let back = Tensor::concat_axis1(&parts).unwrap();
+        assert_eq!(back, t, "case {case}");
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_mutations() {
+    use convdist::util::json::Json;
+    let seed_doc = r#"{"a": [1, 2.5, {"b": "x\ny"}], "c": true, "d": null}"#;
+    let mut rng = Pcg32::seed(2004);
+    for _ in 0..CASES {
+        let mut bytes = seed_doc.as_bytes().to_vec();
+        for _ in 0..1 + rng.next_below(4) {
+            let pos = rng.next_below(bytes.len() as u32) as usize;
+            bytes[pos] = (rng.next_below(94) + 32) as u8;
+        }
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s); // must not panic
+        }
+    }
+}

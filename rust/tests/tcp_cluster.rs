@@ -1,0 +1,133 @@
+//! The real deployment shape: workers listening on TCP sockets, master
+//! connecting over loopback — Algorithm 1 line 2 verbatim.  Numerics must
+//! match the in-proc path (it is the same code over a different Link).
+
+mod common;
+
+use std::net::TcpListener;
+
+use convdist::cluster::{worker_loop, DistTrainer, WorkerOptions};
+use convdist::data::{Dataset, SyntheticCifar};
+use convdist::devices::Throttle;
+use convdist::net::{Link, LinkModel, ShapedLink, TcpLink};
+use convdist::runtime::Runtime;
+
+fn spawn_tcp_worker(id: u32, slowdown: f64) -> (std::net::SocketAddr, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let rt = Runtime::open(convdist::artifacts_dir())?;
+        let link = TcpLink::accept_one(&listener)?;
+        worker_loop(link, rt, WorkerOptions { worker_id: id, throttle: Throttle::new(slowdown) })
+    });
+    (addr, handle)
+}
+
+#[test]
+fn tcp_cluster_trains_and_matches_inproc_losses() {
+    let rt = common::runtime();
+    let arch = rt.arch().clone();
+    let cfg = common::fast_cfg(2);
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 21);
+
+    let (addr1, h1) = spawn_tcp_worker(1, 1.0);
+    let (addr2, h2) = spawn_tcp_worker(2, 1.0);
+    let links: Vec<Box<dyn Link>> = vec![
+        Box::new(TcpLink::connect(addr1).unwrap()),
+        Box::new(TcpLink::connect(addr2).unwrap()),
+    ];
+    let mut dist = DistTrainer::new(rt.clone(), links, &cfg, Throttle::none()).unwrap();
+
+    // In-proc reference with identical seeds.
+    let mut cluster = convdist::cluster::spawn_inproc(
+        convdist::artifacts_dir(),
+        &[Throttle::none(); 2],
+        None,
+    );
+    let mut inproc = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+
+    for step in 0..cfg.steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        let a = dist.step(&batch).unwrap();
+        let b = inproc.step(&batch).unwrap();
+        assert!(
+            (a.loss - b.loss).abs() < 1e-4 * a.loss.abs().max(1.0),
+            "step {step}: tcp {} vs inproc {}",
+            a.loss,
+            b.loss
+        );
+        assert!(a.bytes_moved > 0, "tcp cluster must move bytes");
+    }
+    let diff = dist.params.max_abs_diff(&inproc.params).unwrap();
+    assert!(diff < 1e-4, "tcp vs inproc params: {diff}");
+
+    dist.shutdown().unwrap();
+    inproc.shutdown().unwrap();
+    h1.join().unwrap().unwrap();
+    h2.join().unwrap().unwrap();
+    cluster.join().unwrap();
+}
+
+#[test]
+fn shaped_link_inflates_comm_share() {
+    // With bandwidth shaping on, the measured Comm share of the step must
+    // rise — the §5.4 observation that slow links erase the speedup.
+    let rt = common::runtime();
+    let arch = rt.arch().clone();
+    let cfg = common::fast_cfg(1);
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 22);
+    let batch = ds.batch(arch.batch, 1).unwrap();
+
+    // Unshaped.
+    let mut c1 = convdist::cluster::spawn_inproc(convdist::artifacts_dir(), &[Throttle::none()], None);
+    let mut t1 = DistTrainer::new(rt.clone(), c1.take_links(), &cfg, Throttle::none()).unwrap();
+    let _ = t1.step(&batch).unwrap(); // compile warm-up
+    let fast = t1.step(&batch).unwrap();
+
+    // Shaped to ~200 Mbps: the ~14 MiB of per-step traffic costs ~0.6 s.
+    let model = LinkModel::mbps(200.0);
+    let mut c2 = convdist::cluster::spawn_inproc(
+        convdist::artifacts_dir(),
+        &[Throttle::none()],
+        Some(model),
+    );
+    let mut t2 = DistTrainer::new(rt.clone(), c2.take_links(), &cfg, Throttle::none()).unwrap();
+    let _ = t2.step(&batch).unwrap();
+    let slow = t2.step(&batch).unwrap();
+
+    assert!(
+        slow.breakdown.comm > fast.breakdown.comm,
+        "shaping must increase comm: {:?} vs {:?}",
+        slow.breakdown.comm,
+        fast.breakdown.comm
+    );
+    // Losses identical: shaping affects time, never numerics.
+    assert!((slow.loss - fast.loss).abs() < 1e-5);
+
+    t1.shutdown().unwrap();
+    t2.shutdown().unwrap();
+    c1.join().unwrap();
+    c2.join().unwrap();
+}
+
+#[test]
+fn shaped_tcp_roundtrip_bytes_accounted() {
+    // ShapedLink over real TCP: bytes_moved on both ends agree with the
+    // frame sizes (Eq. 2 accounting is exact, not sampled).
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = std::thread::spawn(move || {
+        let mut link = TcpLink::accept_one(&listener).unwrap();
+        let msg = link.recv().unwrap();
+        link.send(&msg).unwrap();
+        link.bytes_moved()
+    });
+    let mut master = ShapedLink::new(TcpLink::connect(addr).unwrap(), LinkModel::mbps(1000.0));
+    let msg = convdist::proto::Message::Calibrate { rounds: 9 };
+    master.send(&msg).unwrap();
+    let echoed = master.recv().unwrap();
+    assert_eq!(echoed, msg);
+    let worker_bytes = h.join().unwrap();
+    assert_eq!(master.bytes_moved(), worker_bytes);
+    assert_eq!(master.bytes_moved() as usize, 2 * convdist::proto::frame_len(&msg));
+}
