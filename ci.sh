@@ -1,0 +1,11 @@
+#!/usr/bin/env sh
+# Full CI gate, mirrored by .github/workflows/ci.yml.
+# Runs on the default (native) feature set — fully offline.
+set -eux
+
+cargo fmt --all --check
+cargo clippy --all-targets -- -D warnings
+cargo build --release
+cargo test -q
+# The PJRT path must keep compiling even though it is an offline stub.
+cargo check --features pjrt

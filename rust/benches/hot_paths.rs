@@ -1,9 +1,11 @@
 //! `cargo bench --bench hot_paths` — microbenchmarks of the L3 hot path,
 //! the §Perf evidence base: wire protocol encode/decode, tensor
-//! slice/concat/pad (shard assembly), Eq. 1 partitioning, PJRT executable
+//! slice/concat/pad (shard assembly), Eq. 1 partitioning, executable
 //! dispatch, and the full distributed step.
 //!
-//! Requires `make artifacts` for the PJRT-backed benches.
+//! Runs against the default native CPU backend — no artifacts needed.
+//! (With `--features pjrt` + `CONVDIST_BACKEND=pjrt` the same benches time
+//! the PJRT path instead, given `make artifacts`.)
 
 use convdist::cluster::{spawn_inproc, DistTrainer};
 use convdist::config::TrainerConfig;

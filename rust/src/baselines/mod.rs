@@ -2,8 +2,9 @@
 //!
 //! * [`SingleDeviceTrainer`] — the reference point for every speedup: the
 //!   whole network trained on one device via the fused `grad_full`
-//!   executable.  Also the numeric ground truth the distributed trainer
-//!   must match bit-for-bit-ish (same math, different partitioning).
+//!   executable (served by whichever backend the [`Runtime`] carries).
+//!   Also the numeric ground truth the distributed trainer must match
+//!   bit-for-bit-ish (same math, different partitioning).
 //! * [`DataParallelTrainer`] — §2.2.1: each replica computes full-network
 //!   gradients on a batch shard; gradients are averaged and applied once.
 //!   This is the TensorFlow/Vishnu-style comparison (Table 1) and exhibits

@@ -3,7 +3,10 @@
 //! Owns the full parameter set, the training loop and the non-convolutional
 //! layers; scatters per-layer kernel shards to the slaves (same inputs,
 //! different kernels), convolves its own shard meanwhile (Algorithm 1 lines
-//! 15-17), gathers and reassembles the feature maps, and runs SGD.
+//! 15-17), gathers and reassembles the feature maps, and runs SGD.  All
+//! compute goes through the [`Runtime`] executable contract, so the same
+//! loop drives the native CPU backend and (with `--features pjrt`) the
+//! AOT-HLO path.
 //!
 //! Extension beyond the paper: if a worker dies mid-training the master
 //! drops it, re-runs the Eq. 1 partition over the survivors and retries the

@@ -6,9 +6,9 @@
 //!   scatter ConvWork / compute own shard / gather, run the non-conv layers
 //!   locally, and update parameters.
 //! * [`spawn_inproc`] — single-process cluster: workers on threads connected
-//!   by in-proc links (optionally bandwidth-shaped and throttled), sharing
-//!   one PJRT client.  The TCP path (`convdist worker` / `convdist master`)
-//!   uses the identical code over real sockets.
+//!   by in-proc links (optionally bandwidth-shaped and throttled).  The TCP
+//!   path (`convdist worker` / `convdist master`) uses the identical code
+//!   over real sockets.
 
 mod master;
 mod worker;
@@ -36,9 +36,10 @@ pub struct InprocCluster {
 /// slows worker `i` to emulate a heterogeneous device; `shape` meters every
 /// frame through the given bandwidth/latency model.
 ///
-/// Each worker opens its *own* [`Runtime`] over `artifacts` — PJRT client
-/// handles are not `Send` (the paper's slaves are separate machines with
-/// their own Matlab processes; one runtime per device mirrors that).
+/// Each worker opens its *own* [`Runtime`] over `artifacts` — the paper's
+/// slaves are separate machines with their own Matlab processes, and one
+/// runtime per device mirrors that (it also keeps per-device executable
+/// stats and throttling state independent).
 pub fn spawn_inproc(
     artifacts: PathBuf,
     throttles: &[Throttle],

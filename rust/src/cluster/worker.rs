@@ -66,8 +66,8 @@ pub fn worker_loop(mut link: impl Link, rt: Arc<Runtime>, opts: WorkerOptions) -
 }
 
 /// Paper §4.1.1: run the fixed probe convolution `rounds` times, report the
-/// minimum (the steady-state rate — first call may include compile time,
-/// which the warmup absorbs).
+/// minimum (the steady-state rate — the first call may include executable
+/// preparation time, which the warmup absorbs).
 fn run_probe(rt: &Runtime, opts: &WorkerOptions, rounds: u32) -> Result<f64> {
     let p = &rt.arch().probe;
     let mut rng = crate::tensor::Pcg32::seed_stream(0xCA11B, opts.worker_id as u64);

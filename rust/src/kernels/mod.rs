@@ -1,0 +1,650 @@
+//! L1: pure-rust CPU kernels for the paper's hot path — the native stand-in
+//! for the Pallas convolution kernels (the paper's 60–90 % of training time).
+//!
+//! Conventions match `python/compile/kernels/ref.py` exactly: activations are
+//! NCHW, kernels OIHW, convolutions are valid-padding stride-1
+//! cross-correlations.  Convolutions are im2col + a blocked row-major GEMM,
+//! rayon-parallel over the batch axis (bwd reduces the kernel-gradient over
+//! per-image partials).  All math is f32, the compute dtype the AOT pipeline
+//! used, so wire payloads and parameter stores are unchanged.
+
+use rayon::prelude::*;
+
+/// LRN hyper-parameters — fixed by the model definition
+/// (`python/compile/model.py::lrn`), not tunable at run time.
+pub const LRN_N: usize = 5;
+pub const LRN_K: f32 = 2.0;
+pub const LRN_ALPHA: f32 = 1e-4;
+pub const LRN_BETA: f32 = 0.75;
+
+// ---------------------------------------------------------------------------
+// GEMM primitives (row-major, accumulate-into-out)
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] += a[m,kd] * b[kd,n]`.  Saxpy inner loop over contiguous rows of
+/// `b`/`out` so the autovectorizer gets stride-1 access; zero `a` entries are
+/// skipped, which makes zero-padded kernel buckets nearly free.
+pub fn gemm_acc(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), kd * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * kd..(i + 1) * kd];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] += a[m,kd] * b[n,kd]^T` — both operands read along contiguous
+/// rows (dot products), the layout the kernel-gradient contraction wants.
+pub fn gemm_abt_acc(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), n * kd);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * kd..(i + 1) * kd];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * kd..(j + 1) * kd];
+            let mut acc = 0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// `out[m,n] += a[rows,m]^T * b[rows,n]` (both stored row-major).
+pub fn gemm_atb_acc(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), m * n);
+    for r in 0..rows {
+        let arow = &a[r * m..(r + 1) * m];
+        let brow = &b[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col / col2im
+// ---------------------------------------------------------------------------
+
+/// Unfold one image `x[c,h,w]` into `col[c*kh*kw, oh*ow]` (valid, stride 1).
+fn im2col(x: &[f32], c: usize, h: usize, w: usize, kh: usize, kw: usize, col: &mut [f32]) {
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    debug_assert_eq!(x.len(), c * h * w);
+    debug_assert_eq!(col.len(), c * kh * kw * oh * ow);
+    let mut r = 0usize;
+    for ci in 0..c {
+        for di in 0..kh {
+            for dj in 0..kw {
+                let row = &mut col[r * oh * ow..(r + 1) * oh * ow];
+                r += 1;
+                for oi in 0..oh {
+                    let src = &x[(ci * h + oi + di) * w + dj..][..ow];
+                    row[oi * ow..(oi + 1) * ow].copy_from_slice(src);
+                }
+            }
+        }
+    }
+}
+
+/// Fold `col[c*kh*kw, oh*ow]` back into `gx[c,h,w]` with `+=` (the adjoint
+/// of [`im2col`]); `gx` must be zero-initialized by the caller.
+fn col2im(col: &[f32], c: usize, h: usize, w: usize, kh: usize, kw: usize, gx: &mut [f32]) {
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let mut r = 0usize;
+    for ci in 0..c {
+        for di in 0..kh {
+            for dj in 0..kw {
+                let row = &col[r * oh * ow..(r + 1) * oh * ow];
+                r += 1;
+                for oi in 0..oh {
+                    let dst = &mut gx[(ci * h + oi + di) * w + dj..][..ow];
+                    for (d, &s) in dst.iter_mut().zip(&row[oi * ow..(oi + 1) * ow]) {
+                        *d += s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Convolution
+// ---------------------------------------------------------------------------
+
+/// Forward: `x[b,c,h,w] * w[k,c,kh,kw] + bias[k] -> y[b,k,oh,ow]`.
+/// Same semantics as `conv2d_ref` in `python/compile/kernels/ref.py`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fwd(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    wd: usize,
+    k: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let (oh, ow) = (h - kh + 1, wd - kw + 1);
+    let ckk = c * kh * kw;
+    let mut y = vec![0f32; b * k * oh * ow];
+    y.par_chunks_mut(k * oh * ow)
+        .zip(x.par_chunks(c * h * wd))
+        .for_each(|(yi, xi)| {
+            let mut col = vec![0f32; ckk * oh * ow];
+            im2col(xi, c, h, wd, kh, kw, &mut col);
+            for (ki, row) in yi.chunks_mut(oh * ow).enumerate() {
+                row.fill(bias[ki]);
+            }
+            gemm_acc(w, &col, k, ckk, oh * ow, yi);
+        });
+    y
+}
+
+/// Backward: given `gy[b,k,oh,ow]`, return `(gx, gw, gb)` — the input
+/// cotangent, kernel gradient and bias gradient of [`conv2d_fwd`].
+/// Parallel over the batch; `gw`/`gb` are reduced over per-image partials.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd(
+    x: &[f32],
+    w: &[f32],
+    gy: &[f32],
+    b: usize,
+    c: usize,
+    h: usize,
+    wd: usize,
+    k: usize,
+    kh: usize,
+    kw: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (oh, ow) = (h - kh + 1, wd - kw + 1);
+    let (ckk, ohw) = (c * kh * kw, oh * ow);
+    // w^T [ckk, k] so the input-cotangent GEMM reads contiguous rows.
+    let mut wt = vec![0f32; ckk * k];
+    for ki in 0..k {
+        for r in 0..ckk {
+            wt[r * k + ki] = w[ki * ckk + r];
+        }
+    }
+    let mut gx = vec![0f32; b * c * h * wd];
+    let (gw, gb) = gx
+        .par_chunks_mut(c * h * wd)
+        .zip(x.par_chunks(c * h * wd))
+        .zip(gy.par_chunks(k * ohw))
+        .map(|((gxi, xi), gyi)| {
+            let mut col = vec![0f32; ckk * ohw];
+            im2col(xi, c, h, wd, kh, kw, &mut col);
+            // gw[k,ckk] += gy_i[k,ohw] * col^T
+            let mut gwp = vec![0f32; k * ckk];
+            gemm_abt_acc(gyi, &col, k, ohw, ckk, &mut gwp);
+            let mut gbp = vec![0f32; k];
+            for (ki, gbk) in gbp.iter_mut().enumerate() {
+                *gbk = gyi[ki * ohw..(ki + 1) * ohw].iter().sum();
+            }
+            // gx: colgrad[ckk,ohw] = w^T * gy_i, folded back with col2im.
+            let mut colg = vec![0f32; ckk * ohw];
+            gemm_acc(&wt, gyi, ckk, k, ohw, &mut colg);
+            col2im(&colg, c, h, wd, kh, kw, gxi);
+            (gwp, gbp)
+        })
+        .reduce(
+            || (vec![0f32; k * ckk], vec![0f32; k]),
+            |(mut aw, mut ab), (bw, bb)| {
+                for (a, v) in aw.iter_mut().zip(&bw) {
+                    *a += v;
+                }
+                for (a, v) in ab.iter_mut().zip(&bb) {
+                    *a += v;
+                }
+                (aw, ab)
+            },
+        );
+    (gx, gw, gb)
+}
+
+// ---------------------------------------------------------------------------
+// 2x2 / stride-2 max pooling
+// ---------------------------------------------------------------------------
+
+/// `x[b,c,h,w] -> y[b,c,h/2,w/2]`; `h` and `w` must be even.
+pub fn maxpool2_fwd(x: &[f32], b: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+    let (ph, pw) = (h / 2, w / 2);
+    debug_assert_eq!(x.len(), b * c * h * w);
+    let mut y = vec![0f32; b * c * ph * pw];
+    y.par_chunks_mut(ph * pw).zip(x.par_chunks(h * w)).for_each(|(yc, xc)| {
+        for i in 0..ph {
+            for j in 0..pw {
+                let a = xc[(2 * i) * w + 2 * j];
+                let bq = xc[(2 * i) * w + 2 * j + 1];
+                let cq = xc[(2 * i + 1) * w + 2 * j];
+                let d = xc[(2 * i + 1) * w + 2 * j + 1];
+                yc[i * pw + j] = a.max(bq).max(cq).max(d);
+            }
+        }
+    });
+    y
+}
+
+/// Pooling backward: route each pooled gradient to the (first, in scan
+/// order) argmax of its 2x2 window in `x`.
+pub fn maxpool2_bwd(x: &[f32], gp: &[f32], b: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+    let (ph, pw) = (h / 2, w / 2);
+    debug_assert_eq!(gp.len(), b * c * ph * pw);
+    let mut gx = vec![0f32; b * c * h * w];
+    gx.par_chunks_mut(h * w)
+        .zip(x.par_chunks(h * w))
+        .zip(gp.par_chunks(ph * pw))
+        .for_each(|((gxc, xc), gpc)| {
+            for i in 0..ph {
+                for j in 0..pw {
+                    let idx = [
+                        (2 * i) * w + 2 * j,
+                        (2 * i) * w + 2 * j + 1,
+                        (2 * i + 1) * w + 2 * j,
+                        (2 * i + 1) * w + 2 * j + 1,
+                    ];
+                    let mut best = idx[0];
+                    for &p in &idx[1..] {
+                        if xc[p] > xc[best] {
+                            best = p;
+                        }
+                    }
+                    gxc[best] += gpc[i * pw + j];
+                }
+            }
+        });
+    gx
+}
+
+// ---------------------------------------------------------------------------
+// Local response normalization (AlexNet-style, across channels)
+// ---------------------------------------------------------------------------
+
+/// Channel window `[lo, hi]` of LRN at channel `ci` (zero padding clipped).
+#[inline]
+fn lrn_window(ci: usize, c: usize) -> (usize, usize) {
+    let half = LRN_N / 2;
+    (ci.saturating_sub(half), (ci + LRN_N - 1 - half).min(c - 1))
+}
+
+/// `y = x * (k + alpha * sum_{|j-i|<=2} x_j^2)^(-beta)`, matching
+/// `lrn_ref` in `python/compile/kernels/ref.py`.
+pub fn lrn_fwd(x: &[f32], b: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+    let hw = h * w;
+    debug_assert_eq!(x.len(), b * c * hw);
+    let mut y = vec![0f32; x.len()];
+    y.par_chunks_mut(c * hw).zip(x.par_chunks(c * hw)).for_each(|(yi, xi)| {
+        for p in 0..hw {
+            for ci in 0..c {
+                let (lo, hi) = lrn_window(ci, c);
+                let mut s = 0f32;
+                for j in lo..=hi {
+                    let v = xi[j * hw + p];
+                    s += v * v;
+                }
+                let d = LRN_K + LRN_ALPHA * s;
+                yi[ci * hw + p] = xi[ci * hw + p] * d.powf(-LRN_BETA);
+            }
+        }
+    });
+    y
+}
+
+/// LRN backward:
+/// `gx_m = gy_m * d_m^(-b) - 2*a*b * x_m * sum_{|i-m|<=2} gy_i x_i d_i^(-b-1)`
+/// with `d_i = k + a * S_i` (the same clipped channel window as forward).
+pub fn lrn_bwd(x: &[f32], gy: &[f32], b: usize, c: usize, h: usize, w: usize) -> Vec<f32> {
+    let hw = h * w;
+    debug_assert_eq!(x.len(), b * c * hw);
+    let mut gx = vec![0f32; x.len()];
+    gx.par_chunks_mut(c * hw)
+        .zip(x.par_chunks(c * hw))
+        .zip(gy.par_chunks(c * hw))
+        .for_each(|((gxi, xi), gyi)| {
+            let mut dpow = vec![0f32; c]; // d^(-beta)
+            let mut inner = vec![0f32; c]; // gy * x * d^(-beta-1)
+            for p in 0..hw {
+                for ci in 0..c {
+                    let (lo, hi) = lrn_window(ci, c);
+                    let mut s = 0f32;
+                    for j in lo..=hi {
+                        let v = xi[j * hw + p];
+                        s += v * v;
+                    }
+                    let d = LRN_K + LRN_ALPHA * s;
+                    let dp = d.powf(-LRN_BETA);
+                    dpow[ci] = dp;
+                    // d^(-beta-1) == d^(-beta) / d: one powf, not two.
+                    inner[ci] = gyi[ci * hw + p] * xi[ci * hw + p] * (dp / d);
+                }
+                for m in 0..c {
+                    let (lo, hi) = lrn_window(m, c);
+                    let mut acc = 0f32;
+                    for i in lo..=hi {
+                        acc += inner[i];
+                    }
+                    gxi[m * hw + p] = gyi[m * hw + p] * dpow[m]
+                        - 2.0 * LRN_ALPHA * LRN_BETA * xi[m * hw + p] * acc;
+                }
+            }
+        });
+    gx
+}
+
+// ---------------------------------------------------------------------------
+// Fully connected head + softmax cross-entropy
+// ---------------------------------------------------------------------------
+
+/// `logits[b,c] = p2[b,f] * wf[f,c] + bf[c]` (`p2` is the flattened pool-2
+/// output; NCHW row-major flattening matches `p2.reshape(B, -1)` in jax).
+pub fn fc_logits(p2: &[f32], wf: &[f32], bf: &[f32], b: usize, f: usize, c: usize) -> Vec<f32> {
+    let mut logits = vec![0f32; b * c];
+    for row in logits.chunks_mut(c) {
+        row.copy_from_slice(bf);
+    }
+    gemm_acc(p2, wf, b, f, c, &mut logits);
+    logits
+}
+
+/// Mean softmax cross-entropy over the batch; returns `(loss, dloss/dlogits)`.
+pub fn softmax_xent_grad(logits: &[f32], labels: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
+    let mut g = vec![0f32; b * c];
+    let mut loss = 0f64;
+    for i in 0..b {
+        let row = &logits[i * c..(i + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let grow = &mut g[i * c..(i + 1) * c];
+        let mut z = 0f32;
+        for (gj, &l) in grow.iter_mut().zip(row) {
+            let e = (l - m).exp();
+            *gj = e;
+            z += e;
+        }
+        let lab = labels[i] as usize;
+        debug_assert!(lab < c, "label {lab} out of {c} classes");
+        loss -= ((row[lab] - m) - z.ln()) as f64;
+        for gj in grow.iter_mut() {
+            *gj /= z;
+        }
+        grow[lab] -= 1.0;
+        for gj in grow.iter_mut() {
+            *gj /= b as f32;
+        }
+    }
+    ((loss / b as f64) as f32, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    /// Direct 7-loop reference convolution — the in-tree analogue of
+    /// `ref.py`'s oracle role: the im2col path must match it exactly.
+    fn conv_ref(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        b: usize,
+        c: usize,
+        h: usize,
+        wd: usize,
+        k: usize,
+        kh: usize,
+        kw: usize,
+    ) -> Vec<f32> {
+        let (oh, ow) = (h - kh + 1, wd - kw + 1);
+        let mut y = vec![0f32; b * k * oh * ow];
+        for bi in 0..b {
+            for ki in 0..k {
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        let mut acc = bias[ki];
+                        for ci in 0..c {
+                            for di in 0..kh {
+                                for dj in 0..kw {
+                                    acc += x[((bi * c + ci) * h + oi + di) * wd + oj + dj]
+                                        * w[((ki * c + ci) * kh + di) * kw + dj];
+                                }
+                            }
+                        }
+                        y[((bi * k + ki) * oh + oi) * ow + oj] = acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn conv_fwd_matches_hand_computed_case() {
+        // x = 1..9 in a 3x3, w = [[1,0],[0,1]], bias 0.5:
+        // y[i,j] = x[i,j] + x[i+1,j+1] + 0.5.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let y = conv2d_fwd(&x, &w, &[0.5], 1, 1, 3, 3, 1, 2, 2);
+        assert_eq!(y, vec![6.5, 8.5, 12.5, 14.5]);
+    }
+
+    #[test]
+    fn conv_bwd_matches_hand_computed_case() {
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let gy = vec![1.0; 4];
+        let (gx, gw, gb) = conv2d_bwd(&x, &w, &gy, 1, 1, 3, 3, 1, 2, 2);
+        assert_eq!(gx, vec![1.0, 1.0, 0.0, 1.0, 2.0, 1.0, 0.0, 1.0, 1.0]);
+        assert_eq!(gw, vec![12.0, 16.0, 24.0, 28.0]);
+        assert_eq!(gb, vec![4.0]);
+    }
+
+    #[test]
+    fn conv_fwd_matches_reference_on_random_shapes() {
+        let mut rng = Pcg32::seed(11);
+        for &(b, c, h, k, kh) in &[(2usize, 3usize, 8usize, 4usize, 3usize), (1, 1, 5, 2, 2), (3, 4, 6, 5, 5)] {
+            let x: Vec<f32> = (0..b * c * h * h).map(|_| rng.next_gaussian()).collect();
+            let w: Vec<f32> = (0..k * c * kh * kh).map(|_| rng.next_gaussian()).collect();
+            let bias: Vec<f32> = (0..k).map(|_| rng.next_gaussian()).collect();
+            let got = conv2d_fwd(&x, &w, &bias, b, c, h, h, k, kh, kh);
+            let want = conv_ref(&x, &w, &bias, b, c, h, h, k, kh, kh);
+            assert!(max_abs_diff(&got, &want) < 1e-4, "shape b{b} c{c} h{h} k{k} kh{kh}");
+        }
+    }
+
+    #[test]
+    fn conv_bwd_matches_direct_adjoint() {
+        // The adjoint of a linear map is checkable exactly:
+        // <conv(x), gy> == <x, gx> and likewise for w.
+        let mut rng = Pcg32::seed(12);
+        let (b, c, h, k, kh) = (2usize, 3usize, 7usize, 4usize, 3usize);
+        let oh = h - kh + 1;
+        let x: Vec<f32> = (0..b * c * h * h).map(|_| rng.next_gaussian()).collect();
+        let w: Vec<f32> = (0..k * c * kh * kh).map(|_| rng.next_gaussian()).collect();
+        let gy: Vec<f32> = (0..b * k * oh * oh).map(|_| rng.next_gaussian()).collect();
+        let (gx, gw, gb) = conv2d_bwd(&x, &w, &gy, b, c, h, h, k, kh, kh);
+        // <y(x,w,0), gy> = <x, gx> (linearity in x) = <w, gw> (linearity in w)
+        let zero_bias = vec![0.0f32; k];
+        let y = conv2d_fwd(&x, &w, &zero_bias, b, c, h, h, k, kh, kh);
+        let ip_y: f32 = y.iter().zip(&gy).map(|(a, b)| a * b).sum();
+        let ip_x: f32 = x.iter().zip(&gx).map(|(a, b)| a * b).sum();
+        let ip_w: f32 = w.iter().zip(&gw).map(|(a, b)| a * b).sum();
+        assert!((ip_y - ip_x).abs() < 1e-2 * ip_y.abs().max(1.0), "{ip_y} vs {ip_x}");
+        assert!((ip_y - ip_w).abs() < 1e-2 * ip_y.abs().max(1.0), "{ip_y} vs {ip_w}");
+        // gb is the plain per-kernel sum of gy.
+        for ki in 0..k {
+            let want: f32 = (0..b)
+                .map(|bi| gy[(bi * k + ki) * oh * oh..(bi * k + ki + 1) * oh * oh].iter().sum::<f32>())
+                .sum();
+            assert!((gb[ki] - want).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn zero_padded_kernels_produce_zero_maps_and_grads() {
+        // Bucket padding: rows of zero kernels must yield zero outputs (fwd)
+        // and zero kernel-gradients for zero gy rows (bwd).
+        let mut rng = Pcg32::seed(13);
+        let (b, c, h, kh) = (2usize, 2usize, 6usize, 3usize);
+        let oh = h - kh + 1;
+        let mut w: Vec<f32> = (0..4 * c * kh * kh).map(|_| rng.next_gaussian()).collect();
+        for v in &mut w[2 * c * kh * kh..] {
+            *v = 0.0; // kernels 2..4 are padding
+        }
+        let x: Vec<f32> = (0..b * c * h * h).map(|_| rng.next_gaussian()).collect();
+        let y = conv2d_fwd(&x, &w, &[0.0; 4], b, c, h, h, 4, kh, kh);
+        for bi in 0..b {
+            for ki in 2..4 {
+                let row = &y[(bi * 4 + ki) * oh * oh..(bi * 4 + ki + 1) * oh * oh];
+                assert!(row.iter().all(|&v| v == 0.0));
+            }
+        }
+        let mut gy = vec![0f32; b * 4 * oh * oh];
+        for bi in 0..b {
+            for v in &mut gy[bi * 4 * oh * oh..bi * 4 * oh * oh + 2 * oh * oh] {
+                *v = rng.next_gaussian();
+            }
+        }
+        let (_gx, gw, gb) = conv2d_bwd(&x, &w, &gy, b, c, h, h, 4, kh, kh);
+        assert!(gw[2 * c * kh * kh..].iter().all(|&v| v == 0.0));
+        assert!(gb[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn maxpool_roundtrip_and_gradient_routing() {
+        let x = vec![
+            1.0, 2.0, 5.0, 0.0, //
+            3.0, 4.0, 1.0, 1.0, //
+            0.0, 0.0, 9.0, 8.0, //
+            0.0, 7.0, 6.0, 5.0,
+        ];
+        let y = maxpool2_fwd(&x, 1, 1, 4, 4);
+        assert_eq!(y, vec![4.0, 5.0, 7.0, 9.0]);
+        let gx = maxpool2_bwd(&x, &[1.0, 2.0, 3.0, 4.0], 1, 1, 4, 4);
+        let mut want = vec![0f32; 16];
+        want[5] = 1.0; // 4.0 at (1,1)
+        want[2] = 2.0; // 5.0 at (0,2)
+        want[13] = 3.0; // 7.0 at (3,1)
+        want[10] = 4.0; // 9.0 at (2,2)
+        assert_eq!(gx, want);
+    }
+
+    /// f64 LRN forward for finite differences (f32 FD is too noisy).
+    fn lrn_fwd_f64(x: &[f64], c: usize, hw: usize) -> Vec<f64> {
+        let mut y = vec![0f64; x.len()];
+        for p in 0..hw {
+            for ci in 0..c {
+                let (lo, hi) = lrn_window(ci, c);
+                let mut s = 0f64;
+                for j in lo..=hi {
+                    s += x[j * hw + p] * x[j * hw + p];
+                }
+                let d = LRN_K as f64 + LRN_ALPHA as f64 * s;
+                y[ci * hw + p] = x[ci * hw + p] * d.powf(-(LRN_BETA as f64));
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn lrn_fwd_matches_formula_and_bwd_matches_finite_differences() {
+        let mut rng = Pcg32::seed(14);
+        let (c, h) = (7usize, 3usize);
+        let hw = h * h;
+        let x: Vec<f32> = (0..c * hw).map(|_| rng.next_gaussian()).collect();
+        let y = lrn_fwd(&x, 1, c, h, h);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y64 = lrn_fwd_f64(&x64, c, hw);
+        for (a, b) in y.iter().zip(&y64) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+        let gy: Vec<f32> = (0..c * hw).map(|_| rng.next_gaussian()).collect();
+        let gx = lrn_bwd(&x, &gy, 1, c, h, h);
+        // FD of L = <gy, lrn(x)> at a handful of coordinates.
+        let eps = 1e-4f64;
+        for probe in [0usize, 5, hw, 3 * hw + 2, c * hw - 1] {
+            let mut xp = x64.clone();
+            xp[probe] += eps;
+            let mut xm = x64.clone();
+            xm[probe] -= eps;
+            let lp: f64 =
+                lrn_fwd_f64(&xp, c, hw).iter().zip(&gy).map(|(a, &g)| a * g as f64).sum();
+            let lm: f64 =
+                lrn_fwd_f64(&xm, c, hw).iter().zip(&gy).map(|(a, &g)| a * g as f64).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (gx[probe] as f64 - fd).abs() < 1e-3,
+                "lrn grad at {probe}: analytic {} vs fd {fd}",
+                gx[probe]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_xent_loss_and_grad_consistent() {
+        let mut rng = Pcg32::seed(15);
+        let (b, c) = (4usize, 6usize);
+        let logits: Vec<f32> = (0..b * c).map(|_| rng.next_gaussian()).collect();
+        let labels: Vec<i32> = (0..b).map(|_| rng.next_below(c as u32) as i32).collect();
+        let (loss, g) = softmax_xent_grad(&logits, &labels, b, c);
+        assert!(loss > 0.0);
+        // Rows of the gradient sum to zero (softmax minus one-hot).
+        for i in 0..b {
+            let s: f32 = g[i * c..(i + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-5, "row {i} sums to {s}");
+        }
+        // FD check on two coordinates.
+        let f64_loss = |l: &[f32]| -> f64 {
+            let mut total = 0f64;
+            for i in 0..b {
+                let row: Vec<f64> = l[i * c..(i + 1) * c].iter().map(|&v| v as f64).collect();
+                let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let z: f64 = row.iter().map(|v| (v - m).exp()).sum();
+                total -= row[labels[i] as usize] - m - z.ln();
+            }
+            total / b as f64
+        };
+        for probe in [1usize, b * c - 2] {
+            let eps = 1e-3f32;
+            let mut lp = logits.clone();
+            lp[probe] += eps;
+            let mut lm = logits.clone();
+            lm[probe] -= eps;
+            let fd = (f64_loss(&lp) - f64_loss(&lm)) / (2.0 * eps as f64);
+            assert!((g[probe] as f64 - fd).abs() < 1e-3, "grad {probe}: {} vs {fd}", g[probe]);
+        }
+    }
+
+    #[test]
+    fn fc_logits_matches_manual_product() {
+        let p2 = vec![1.0, 2.0, 3.0, 4.0]; // [2,2]
+        let wf = vec![1.0, 0.0, 0.0, 1.0]; // [2,2] identity
+        let bf = vec![0.5, -0.5];
+        let l = fc_logits(&p2, &wf, &bf, 2, 2, 2);
+        assert_eq!(l, vec![1.5, 1.5, 3.5, 3.5]);
+    }
+}

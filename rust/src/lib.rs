@@ -11,16 +11,21 @@
 //!   Eq. 1 workload partitioning, wire protocol, transports (in-proc, TCP,
 //!   bandwidth-shaped), SGD, data pipeline, analytic scalability simulator,
 //!   and the data-parallel baseline.
-//! * **L2** — the CNN's segments written in JAX, AOT-lowered to HLO text
-//!   (`python/compile/`), executed here via PJRT ([`runtime`]).
-//! * **L1** — Pallas convolution kernels (fwd + both grads), the paper's
-//!   60–90 % hot spot.
+//! * **L2** — the executable contract ([`runtime`]): named segments of the
+//!   CNN (conv shards, LRN+pool mids, FC head, fused full-network grad),
+//!   validated against a manifest and served by a pluggable `Backend`.
+//! * **L1** — the convolution/pool/LRN/FC kernels, the paper's 60–90 % hot
+//!   spot.  Default: pure-rust CPU kernels ([`kernels`]), rayon-parallel
+//!   over the batch axis — a clean checkout builds and trains offline with
+//!   no artifacts.  Optional (`--features pjrt`): the original AOT-HLO
+//!   PJRT path over `python/compile/` artifacts.
 
 pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod data;
 pub mod devices;
+pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod net;
@@ -37,6 +42,12 @@ pub const ARTIFACTS_DIR: &str = "artifacts";
 /// Resolve the artifact directory: `$CONVDIST_ARTIFACTS` or ./artifacts,
 /// walking up from the current directory (so tests/benches work from any
 /// cargo working dir).
+///
+/// With the default native backend no `manifest.json` is required: if the
+/// walk finds none, the fallback `./artifacts` path is returned and
+/// `runtime::Runtime::open` synthesizes a manifest from
+/// [`runtime::ArchSpec::native_default`].  A `manifest.json`, when present,
+/// still wins — it pins the architecture (and feeds the `pjrt` backend).
 pub fn artifacts_dir() -> std::path::PathBuf {
     if let Ok(p) = std::env::var("CONVDIST_ARTIFACTS") {
         return p.into();

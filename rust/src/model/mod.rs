@@ -1,10 +1,10 @@
 //! Parameter store + optimizer.
 //!
 //! The master owns the full parameter set (the paper's master "is in charge
-//! of training the remaining network", §4.1.2); gradients come back from HLO
-//! executables and the update runs here in rust — identical code path for
-//! the distributed trainer and both baselines, so loss curves are directly
-//! comparable.
+//! of training the remaining network", §4.1.2); gradients come back from the
+//! backend executables and the update runs here in rust — identical code
+//! path for the distributed trainer and both baselines, so loss curves are
+//! directly comparable.
 
 use std::collections::BTreeMap;
 
@@ -138,22 +138,26 @@ impl Sgd {
     }
 
     /// `v = μv + g + λθ;  θ -= lr·v`
+    ///
+    /// Fused in-place update: one pass over each parameter, no per-step
+    /// tensor clones (the velocity and parameter buffers are mutated
+    /// directly; only a missing velocity entry allocates, once).
     pub fn step(&mut self, params: &mut Params, grads: &Grads) -> Result<()> {
-        for name in params.order.clone() {
-            let g = grads.get(&name)?.clone();
-            let p = params.get_mut(&name)?;
+        let (lr, mu, wd) = (self.lr, self.momentum, self.weight_decay);
+        for (name, p) in params.tensors.iter_mut() {
+            let g = grads.get(name)?;
+            ensure!(g.shape() == p.shape(), "grad/param shape mismatch for {name}");
             let v = self
                 .velocity
                 .entry(name.clone())
                 .or_insert_with(|| Tensor::zeros(p.shape()));
-            ensure!(v.shape() == g.shape(), "velocity/grad shape mismatch for {name}");
-            // v = momentum * v + g (+ wd * p)
-            v.scale(self.momentum);
-            v.axpy(1.0, &g)?;
-            if self.weight_decay != 0.0 {
-                v.axpy(self.weight_decay, p)?;
+            ensure!(v.shape() == p.shape(), "velocity/param shape mismatch for {name}");
+            for ((vv, pv), &gv) in
+                v.data_mut().iter_mut().zip(p.data_mut().iter_mut()).zip(g.data())
+            {
+                *vv = mu * *vv + gv + wd * *pv;
+                *pv -= lr * *vv;
             }
-            p.axpy(-self.lr, &v.clone())?;
         }
         Ok(())
     }

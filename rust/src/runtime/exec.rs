@@ -1,0 +1,309 @@
+//! Executable naming contract + spec synthesis for the native backend.
+//!
+//! The PJRT path learns each executable's signature from `manifest.json`;
+//! the native backend *derives* the same signatures from the [`ArchSpec`]
+//! geometry, so a clean checkout needs no artifacts at all.  Both paths meet
+//! at [`ExecutableSpec`]: `Runtime::execute` validates every call against it
+//! regardless of which backend serves it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::manifest::{ArchSpec, ArgSpec, ExecutableSpec, Manifest};
+
+/// Every executable name the trainers dispatch, parsed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecKind {
+    /// Calibration probe (paper §4.1.1).
+    Probe,
+    /// `conv{layer}_fwd_b{bucket}`: one conv layer's kernel-shard forward.
+    ConvFwd { layer: usize, bucket: usize },
+    /// `conv{layer}_bwd_b{bucket}`: shard backward -> (gx, gw, gb).
+    ConvBwd { layer: usize, bucket: usize },
+    /// `mid{layer}_fwd`: the master-resident LRN + pool block.
+    MidFwd { layer: usize },
+    /// `mid{layer}_bwd`: vjp of the mid block (recompute-in-bwd).
+    MidBwd { layer: usize },
+    /// `head_grad`: FC + softmax loss and grads wrt (p2, wf, bf).
+    HeadGrad,
+    /// `eval_full`: full-network logits for accuracy evaluation.
+    EvalFull,
+    /// `grad_full_b{batch}`: fused full-network fwd+bwd (baselines).
+    GradFull { batch: usize },
+}
+
+impl ExecKind {
+    /// Parse an executable name; `None` if it is not part of the contract.
+    pub fn parse(name: &str) -> Option<ExecKind> {
+        match name {
+            "probe" => return Some(ExecKind::Probe),
+            "head_grad" => return Some(ExecKind::HeadGrad),
+            "eval_full" => return Some(ExecKind::EvalFull),
+            _ => {}
+        }
+        if let Some(rest) = name.strip_prefix("grad_full_b") {
+            return rest.parse().ok().map(|batch| ExecKind::GradFull { batch });
+        }
+        if let Some(rest) = name.strip_prefix("conv") {
+            let (layer, rest) = rest.split_once('_')?;
+            let layer: usize = layer.parse().ok()?;
+            if !(1..=2).contains(&layer) {
+                return None;
+            }
+            if let Some(b) = rest.strip_prefix("fwd_b") {
+                return b.parse().ok().map(|bucket| ExecKind::ConvFwd { layer, bucket });
+            }
+            if let Some(b) = rest.strip_prefix("bwd_b") {
+                return b.parse().ok().map(|bucket| ExecKind::ConvBwd { layer, bucket });
+            }
+            return None;
+        }
+        if let Some(rest) = name.strip_prefix("mid") {
+            let (layer, dir) = rest.split_once('_')?;
+            let layer: usize = layer.parse().ok()?;
+            if !(1..=2).contains(&layer) {
+                return None;
+            }
+            return match dir {
+                "fwd" => Some(ExecKind::MidFwd { layer }),
+                "bwd" => Some(ExecKind::MidBwd { layer }),
+                _ => None,
+            };
+        }
+        None
+    }
+
+    /// Canonical name (inverse of [`ExecKind::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            ExecKind::Probe => "probe".into(),
+            ExecKind::ConvFwd { layer, bucket } => format!("conv{layer}_fwd_b{bucket}"),
+            ExecKind::ConvBwd { layer, bucket } => format!("conv{layer}_bwd_b{bucket}"),
+            ExecKind::MidFwd { layer } => format!("mid{layer}_fwd"),
+            ExecKind::MidBwd { layer } => format!("mid{layer}_bwd"),
+            ExecKind::HeadGrad => "head_grad".into(),
+            ExecKind::EvalFull => "eval_full".into(),
+            ExecKind::GradFull { batch } => format!("grad_full_b{batch}"),
+        }
+    }
+}
+
+fn f(name: &str, shape: Vec<usize>) -> ArgSpec {
+    ArgSpec(name.to_string(), shape, "f32".into())
+}
+
+fn i(name: &str, shape: Vec<usize>) -> ArgSpec {
+    ArgSpec(name.to_string(), shape, "i32".into())
+}
+
+/// FLOPs of one forward conv over `k` kernels of layer `layer` at batch `b`
+/// (one multiply-add = 2 FLOPs per tap per output pixel).
+fn conv_fwd_flops(arch: &ArchSpec, layer: usize, k: usize, b: usize) -> u64 {
+    let (c, _) = arch.conv_input(layer);
+    let o = arch.conv_output(layer);
+    2 * (b * o * o * c * arch.kh * arch.kw * k) as u64
+}
+
+/// Pool-output height of conv layer `layer`.
+fn pool_out(arch: &ArchSpec, layer: usize) -> usize {
+    match layer {
+        1 => arch.p1_out,
+        2 => arch.p2_out,
+        _ => panic!("conv layer {layer} out of range"),
+    }
+}
+
+fn param_args(arch: &ArchSpec) -> Vec<ArgSpec> {
+    arch.param_order
+        .iter()
+        .map(|n| f(n, arch.param_shapes[n].clone()))
+        .collect()
+}
+
+/// Synthesize the manifest signature of `kind` from the architecture.
+pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
+    let (kh, kw, b, ncls) = (arch.kh, arch.kw, arch.batch, arch.num_classes);
+    let (args, outs, flops) = match kind {
+        ExecKind::Probe => {
+            let p = &arch.probe;
+            let po = p.img - kh + 1;
+            (
+                vec![
+                    f("x", vec![p.batch, p.in_ch, p.img, p.img]),
+                    f("w", vec![p.k, p.in_ch, kh, kw]),
+                    f("b", vec![p.k]),
+                ],
+                vec![f("y", vec![p.batch, p.k, po, po])],
+                p.flops,
+            )
+        }
+        ExecKind::ConvFwd { layer, bucket } => {
+            let (c, h) = arch.conv_input(*layer);
+            let o = arch.conv_output(*layer);
+            (
+                vec![
+                    f("x", vec![b, c, h, h]),
+                    f("w", vec![*bucket, c, kh, kw]),
+                    f("b", vec![*bucket]),
+                ],
+                vec![f("y", vec![b, *bucket, o, o])],
+                conv_fwd_flops(arch, *layer, *bucket, b),
+            )
+        }
+        ExecKind::ConvBwd { layer, bucket } => {
+            let (c, h) = arch.conv_input(*layer);
+            let o = arch.conv_output(*layer);
+            (
+                vec![
+                    f("x", vec![b, c, h, h]),
+                    f("w", vec![*bucket, c, kh, kw]),
+                    f("gy", vec![b, *bucket, o, o]),
+                ],
+                vec![
+                    f("gx", vec![b, c, h, h]),
+                    f("gw", vec![*bucket, c, kh, kw]),
+                    f("gb", vec![*bucket]),
+                ],
+                // Input-grad + kernel-grad are each one more conv-sized
+                // contraction (the paper's 3x training factor, minus fwd).
+                2 * conv_fwd_flops(arch, *layer, *bucket, b),
+            )
+        }
+        ExecKind::MidFwd { layer } => {
+            let k = arch.kernels(*layer);
+            let c = arch.conv_output(*layer);
+            let p = pool_out(arch, *layer);
+            (
+                vec![f("y", vec![b, k, c, c])],
+                vec![f("p", vec![b, k, p, p])],
+                // LRN (window of 5 + powf) dominates; ~20 FLOPs/element.
+                (b * k * c * c * 20) as u64,
+            )
+        }
+        ExecKind::MidBwd { layer } => {
+            let k = arch.kernels(*layer);
+            let c = arch.conv_output(*layer);
+            let p = pool_out(arch, *layer);
+            (
+                vec![f("y", vec![b, k, c, c]), f("gp", vec![b, k, p, p])],
+                vec![f("gy", vec![b, k, c, c])],
+                (b * k * c * c * 40) as u64,
+            )
+        }
+        ExecKind::HeadGrad => {
+            let p2 = vec![b, arch.k2, arch.p2_out, arch.p2_out];
+            (
+                vec![
+                    f("p2", p2.clone()),
+                    f("wf", vec![arch.fc_in, ncls]),
+                    f("bf", vec![ncls]),
+                    i("labels", vec![b]),
+                ],
+                vec![
+                    f("loss", vec![]),
+                    f("gp2", p2),
+                    f("gwf", vec![arch.fc_in, ncls]),
+                    f("gbf", vec![ncls]),
+                ],
+                6 * (b * arch.fc_in * ncls) as u64,
+            )
+        }
+        ExecKind::EvalFull => {
+            let mut args = vec![f("x", vec![b, arch.in_ch, arch.img, arch.img])];
+            args.extend(param_args(arch));
+            (
+                args,
+                vec![f("logits", vec![b, ncls])],
+                conv_fwd_flops(arch, 1, arch.k1, b) + conv_fwd_flops(arch, 2, arch.k2, b),
+            )
+        }
+        ExecKind::GradFull { batch } => {
+            let n = *batch;
+            let mut args = vec![
+                f("x", vec![n, arch.in_ch, arch.img, arch.img]),
+                i("labels", vec![n]),
+            ];
+            args.extend(param_args(arch));
+            let mut outs = vec![f("loss", vec![])];
+            outs.extend(
+                arch.param_order
+                    .iter()
+                    .map(|p| f(&format!("g{p}"), arch.param_shapes[p].clone())),
+            );
+            (
+                args,
+                outs,
+                3 * (conv_fwd_flops(arch, 1, arch.k1, n) + conv_fwd_flops(arch, 2, arch.k2, n)),
+            )
+        }
+    };
+    ExecutableSpec { file: format!("<native:{}>", kind.name()), args, outs, flops, sha256: String::new() }
+}
+
+/// Enumerate every executable an [`ArchSpec`] supports and build a manifest
+/// for it — what `Runtime::open` uses when no `manifest.json` is present.
+pub fn native_manifest(config: ArchSpec, dir: &Path) -> Manifest {
+    let mut kinds = vec![ExecKind::Probe, ExecKind::HeadGrad, ExecKind::EvalFull];
+    for layer in 1..=2usize {
+        for &bucket in config.buckets(layer) {
+            kinds.push(ExecKind::ConvFwd { layer, bucket });
+            kinds.push(ExecKind::ConvBwd { layer, bucket });
+        }
+        kinds.push(ExecKind::MidFwd { layer });
+        kinds.push(ExecKind::MidBwd { layer });
+    }
+    for &bb in &config.batch_buckets {
+        kinds.push(ExecKind::GradFull { batch: bb });
+    }
+    let mut executables = BTreeMap::new();
+    for kind in kinds {
+        executables.insert(kind.name(), spec_for(&config, &kind));
+    }
+    Manifest { version: 1, config, executables, dir: dir.to_path_buf() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        let kinds = [
+            ExecKind::Probe,
+            ExecKind::ConvFwd { layer: 1, bucket: 8 },
+            ExecKind::ConvBwd { layer: 2, bucket: 12 },
+            ExecKind::MidFwd { layer: 1 },
+            ExecKind::MidBwd { layer: 2 },
+            ExecKind::HeadGrad,
+            ExecKind::EvalFull,
+            ExecKind::GradFull { batch: 64 },
+        ];
+        for k in kinds {
+            assert_eq!(ExecKind::parse(&k.name()), Some(k.clone()), "{}", k.name());
+        }
+        assert_eq!(ExecKind::parse("conv3_fwd_b4"), None);
+        assert_eq!(ExecKind::parse("conv1_sideways_b4"), None);
+        assert_eq!(ExecKind::parse("mid9_fwd"), None);
+        assert_eq!(ExecKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn native_manifest_enumerates_all_buckets() {
+        let arch = ArchSpec::tiny();
+        let m = native_manifest(arch, Path::new("."));
+        assert!(m.spec("probe").is_ok());
+        assert!(m.spec("conv1_fwd_b4").is_ok());
+        assert!(m.spec("conv2_bwd_b8").is_ok());
+        assert!(m.spec("mid2_bwd").is_ok());
+        assert!(m.spec("grad_full_b2").is_ok());
+        assert!(m.spec("conv1_fwd_b99").is_err(), "unlisted bucket must not appear");
+        // Shapes agree with the arch geometry.
+        let s = m.spec("conv2_fwd_b8").unwrap();
+        assert_eq!(s.args[0].shape(), &[2, 4, 14, 14]);
+        assert_eq!(s.outs[0].shape(), &[2, 8, 10, 10]);
+        assert!(s.flops > 0);
+        let h = m.spec("head_grad").unwrap();
+        assert_eq!(h.args[3].dtype(), "i32");
+        assert_eq!(h.outs[0].shape(), &[] as &[usize]);
+    }
+}

@@ -138,6 +138,82 @@ impl ArchSpec {
         })
     }
 
+    /// The architecture the native backend synthesizes when no
+    /// `manifest.json` is present: the `python/compile` default (16:32 @ 64,
+    /// CIFAR-10 geometry), including its bucket ladders.
+    pub fn native_default() -> ArchSpec {
+        ArchSpec::from_geometry(16, 32, 64)
+    }
+
+    /// A deliberately small architecture (4:8 @ batch 2) for unit and
+    /// integration tests — steps complete in milliseconds on one core.
+    pub fn tiny() -> ArchSpec {
+        ArchSpec::from_geometry(4, 8, 2)
+    }
+
+    /// Build a full spec from the paper's `k1:k2 @ batch` notation with the
+    /// fixed CIFAR-10 geometry (32x32x3, 5x5 kernels, /2 pools, 10 classes)
+    /// — the same derivation as `python/compile/model.py::ArchConfig`.
+    pub fn from_geometry(k1: usize, k2: usize, batch: usize) -> ArchSpec {
+        let (img, in_ch, num_classes, kh, kw) = (32usize, 3usize, 10usize, 5usize, 5usize);
+        let c1_out = img - kh + 1;
+        let p1_out = c1_out / 2;
+        let c2_out = p1_out - kh + 1;
+        let p2_out = c2_out / 2;
+        let fc_in = k2 * p2_out * p2_out;
+        let mut param_shapes = BTreeMap::new();
+        param_shapes.insert("w1".into(), vec![k1, in_ch, kh, kw]);
+        param_shapes.insert("b1".into(), vec![k1]);
+        param_shapes.insert("w2".into(), vec![k2, k1, kh, kw]);
+        param_shapes.insert("b2".into(), vec![k2]);
+        param_shapes.insert("wf".into(), vec![fc_in, num_classes]);
+        param_shapes.insert("bf".into(), vec![num_classes]);
+        // Batch buckets: halve down to batch/8 (model.py's ladder), so the
+        // data-parallel baseline finds a grad_full for every replica split.
+        let mut batch_buckets = vec![batch];
+        let mut bb = batch;
+        while bb % 2 == 0 && bb > std::cmp::max(2, batch / 8) {
+            bb /= 2;
+            batch_buckets.push(bb);
+        }
+        batch_buckets.sort_unstable();
+        // Probe sized so one round is ~milliseconds: big enough to time,
+        // small enough that calibration never dominates a test run.
+        let probe_img = 24usize;
+        let po = probe_img - kh + 1;
+        let probe = ProbeSpec {
+            batch: 8,
+            in_ch: 3,
+            img: probe_img,
+            k: 8,
+            flops: 2 * (8 * po * po * 3 * kh * kw * 8) as u64,
+        };
+        ArchSpec {
+            k1,
+            k2,
+            batch,
+            img,
+            in_ch,
+            num_classes,
+            kh,
+            kw,
+            c1_out,
+            p1_out,
+            c2_out,
+            p2_out,
+            fc_in,
+            buckets1: bucket_ladder(k1),
+            buckets2: bucket_ladder(k2),
+            batch_buckets,
+            param_shapes,
+            param_order: ["w1", "b1", "w2", "b2", "wf", "bf"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            probe,
+        }
+    }
+
     /// Kernel count of conv layer `l` (1-based, matching the paper's C1/C2).
     pub fn kernels(&self, layer: usize) -> usize {
         match layer {
@@ -236,39 +312,61 @@ pub enum ConvDir {
     Bwd,
 }
 
+/// Shard-size buckets for a conv layer with `k` kernels: eighths of `k`,
+/// rounded up to a multiple of 4 — bounds bucket-padding waste by ~12.5 %
+/// worst-case (DESIGN.md §3; mirrors `model.py::bucket_ladder`).
+pub fn bucket_ladder(k: usize) -> Vec<usize> {
+    let steps = 8usize;
+    let mut buckets: Vec<usize> = (1..=steps)
+        .map(|i| (k * i + steps - 1) / steps) // ceil(k*i/8)
+        .map(|r| std::cmp::min(k, (r + 3) / 4 * 4))
+        .collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    debug_assert_eq!(*buckets.last().unwrap(), k);
+    buckets
+}
+
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
 
-    /// A small hand-built ArchSpec used by unit tests across the crate.
+    /// A small ArchSpec used by unit tests across the crate.
     pub fn tiny_arch() -> ArchSpec {
-        let mut param_shapes = BTreeMap::new();
-        param_shapes.insert("w1".into(), vec![4, 3, 5, 5]);
-        param_shapes.insert("b1".into(), vec![4]);
-        param_shapes.insert("w2".into(), vec![8, 4, 5, 5]);
-        param_shapes.insert("b2".into(), vec![8]);
-        param_shapes.insert("wf".into(), vec![200, 10]);
-        param_shapes.insert("bf".into(), vec![10]);
-        ArchSpec {
-            k1: 4,
-            k2: 8,
-            batch: 2,
-            img: 32,
-            in_ch: 3,
-            num_classes: 10,
-            kh: 5,
-            kw: 5,
-            c1_out: 28,
-            p1_out: 14,
-            c2_out: 10,
-            p2_out: 5,
-            fc_in: 200,
-            buckets1: vec![4],
-            buckets2: vec![4, 8],
-            batch_buckets: vec![2],
-            param_shapes,
-            param_order: ["w1", "b1", "w2", "b2", "wf", "bf"].iter().map(|s| s.to_string()).collect(),
-            probe: ProbeSpec { batch: 1, in_ch: 1, img: 8, k: 1, flops: 100 },
+        ArchSpec::tiny()
+    }
+
+    #[test]
+    fn derived_geometry_matches_hand_computed_tiny() {
+        let a = ArchSpec::tiny();
+        assert_eq!((a.k1, a.k2, a.batch), (4, 8, 2));
+        assert_eq!((a.c1_out, a.p1_out, a.c2_out, a.p2_out), (28, 14, 10, 5));
+        assert_eq!(a.fc_in, 200);
+        assert_eq!(a.buckets1, vec![4]);
+        assert_eq!(a.buckets2, vec![4, 8]);
+        assert_eq!(a.batch_buckets, vec![2]);
+        assert_eq!(a.param_shapes["w2"], vec![8, 4, 5, 5]);
+        assert_eq!(a.param_shapes["wf"], vec![200, 10]);
+    }
+
+    #[test]
+    fn native_default_matches_python_archconfig() {
+        let a = ArchSpec::native_default();
+        assert_eq!((a.k1, a.k2, a.batch), (16, 32, 64));
+        assert_eq!(a.fc_in, 32 * 5 * 5);
+        assert_eq!(a.buckets1, vec![4, 8, 12, 16]);
+        assert_eq!(a.buckets2, vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        assert_eq!(a.batch_buckets, vec![8, 16, 32, 64]);
+        assert!(a.probe.flops > 0);
+    }
+
+    #[test]
+    fn bucket_ladder_covers_and_caps() {
+        for k in [4usize, 16, 32, 50, 500, 1500] {
+            let l = bucket_ladder(k);
+            assert_eq!(*l.last().unwrap(), k, "ladder for {k} must end at {k}");
+            assert!(l.windows(2).all(|w| w[0] < w[1]), "sorted/deduped for {k}");
+            assert!(l.iter().all(|&b| b <= k));
         }
     }
 

@@ -1,14 +1,36 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the CPU
-//! client from the rust hot path.  Python never runs at request time.
+//! Execution runtime: a manifest-validated executable cache over a pluggable
+//! [`Backend`].
 //!
-//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Executables are compiled lazily on first use and cached; the manifest
-//! drives all shape/dtype validation.
+//! Two backends implement the same executable contract (see DESIGN.md §4):
+//!
+//! * [`native::NativeBackend`] (default) — pure-rust CPU kernels
+//!   ([`crate::kernels`]): im2col + blocked-GEMM convolutions, max-pool, LRN,
+//!   FC and softmax-cross-entropy, rayon-parallel over the batch axis.
+//!   Needs no artifacts: when `manifest.json` is absent the manifest is
+//!   synthesized from [`ArchSpec::native_default`].
+//! * `pjrt` (cargo feature `pjrt`, off by default) — the original AOT-HLO
+//!   path: Python lowers the JAX segments to HLO text (`python/compile/`)
+//!   and an external PJRT client executes them.  The `xla` crate is not
+//!   vendored offline, so the in-tree build is a stub that fails at
+//!   preparation time with an actionable error (DESIGN.md §4).
+//!
+//! Executables are prepared lazily on first use under a **per-name once
+//! cell**: two threads first-touching the same name block on that name only
+//! (one prepares, both get the same handle), while different names prepare
+//! in parallel.  A failed preparation is not cached — the next caller
+//! retries.
 
+mod exec;
 mod manifest;
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-pub use manifest::{ArchSpec, ArgSpec, ConvDir, ExecutableSpec, Manifest, ProbeSpec};
+pub use exec::{native_manifest, spec_for, ExecKind};
+pub use manifest::{bucket_ladder, ArchSpec, ArgSpec, ConvDir, ExecutableSpec, Manifest, ProbeSpec};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
 
 #[cfg(test)]
 pub(crate) use manifest::tests::tiny_arch;
@@ -17,19 +39,22 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use crate::tensor::{ITensor, Tensor, Value};
+use crate::tensor::Value;
 
-/// Converts the `xla` crate's error type (which is not `Sync`) into eyre.
-fn xerr(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
+/// An execution engine: turns a manifest entry into something runnable.
+pub trait Backend: Send + Sync {
+    /// Human-readable platform tag (shown by the CLI at start-up).
+    fn platform(&self) -> String;
+    /// Prepare (parse/compile) one executable.  Called at most once per name
+    /// per [`Runtime`] — the runtime serializes first-touch per name.
+    fn prepare(&self, name: &str, spec: &ExecutableSpec) -> Result<Box<dyn PreparedExec>>;
 }
 
-/// A compiled-executable handle plus its manifest signature.
-struct CachedExec {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ExecutableSpec,
+/// A compiled/parsed executable, ready to run.  `run` must be reentrant.
+pub trait PreparedExec: Send + Sync {
+    fn run(&self, args: &[Value]) -> Result<Vec<Value>>;
 }
 
 /// Cumulative execution statistics, per executable (feeds §Perf and the
@@ -40,28 +65,88 @@ pub struct ExecStats {
     pub total: Duration,
 }
 
-/// The L3-side runtime: one PJRT CPU client + a lazy executable cache.
+/// Per-name once cell: the `Option` is filled exactly once, under the
+/// per-name mutex, so concurrent first-touches of one executable prepare it
+/// a single time (the duplicate-compile race the old cache had).
+#[derive(Default)]
+struct ExecCell {
+    slot: Mutex<Option<Arc<Prepared>>>,
+}
+
+struct Prepared {
+    exe: Box<dyn PreparedExec>,
+    spec: ExecutableSpec,
+}
+
+/// The L3-side runtime: one backend + a lazy executable cache.
 ///
-/// `Runtime` is shared behind `Arc`: compilation and stats are mutex-guarded,
+/// `Runtime` is shared behind `Arc`: preparation and stats are mutex-guarded,
 /// execution itself is reentrant.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<CachedExec>>>,
+    cache: Mutex<HashMap<String, Arc<ExecCell>>>,
     stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (must contain `manifest.json`).
+    /// Open an artifact directory.  If it contains a `manifest.json` the
+    /// manifest drives validation (and the PJRT backend, when selected);
+    /// otherwise a manifest is synthesized from [`ArchSpec::native_default`]
+    /// — a clean offline checkout needs no artifacts at all.
     pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Arc<Self>> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(xerr).context("creating PJRT CPU client")?;
-        Ok(Arc::new(Self {
-            client,
+        let dir = dir.as_ref();
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(dir)?
+        } else {
+            // An *explicitly requested* artifact dir with no manifest is a
+            // user error (typo'd path, artifacts not built) — silently
+            // training the synthesized default arch instead would be a trap.
+            if let Ok(p) = std::env::var("CONVDIST_ARTIFACTS") {
+                ensure!(
+                    std::path::Path::new(&p) != dir,
+                    "CONVDIST_ARTIFACTS={p} is set but contains no manifest.json — \
+                     generate artifacts there first, or unset it to use the \
+                     synthesized native-default architecture"
+                );
+            }
+            exec::native_manifest(ArchSpec::native_default(), dir)
+        };
+        let backend = Self::select_backend(&manifest)?;
+        Ok(Self::with_backend(backend, manifest))
+    }
+
+    /// A runtime over the native backend for an explicit architecture — no
+    /// directory involved.  Tests and benches use this with
+    /// [`ArchSpec::tiny`].
+    pub fn for_arch(arch: ArchSpec) -> Arc<Self> {
+        let manifest = exec::native_manifest(arch, std::path::Path::new("."));
+        Self::with_backend(Box::new(NativeBackend), manifest)
+    }
+
+    /// Assemble a runtime from an explicit backend + manifest.
+    pub fn with_backend(backend: Box<dyn Backend>, manifest: Manifest) -> Arc<Self> {
+        Arc::new(Self {
+            backend,
             manifest,
             cache: Mutex::new(HashMap::new()),
             stats: Mutex::new(HashMap::new()),
-        }))
+        })
+    }
+
+    /// Native by default; `CONVDIST_BACKEND=pjrt` selects the PJRT path
+    /// (requires building with `--features pjrt`).
+    fn select_backend(manifest: &Manifest) -> Result<Box<dyn Backend>> {
+        if std::env::var("CONVDIST_BACKEND").as_deref() == Ok("pjrt") {
+            #[cfg(feature = "pjrt")]
+            {
+                return Ok(Box::new(pjrt::PjrtBackend::new(manifest.dir.clone())));
+            }
+            #[cfg(not(feature = "pjrt"))]
+            anyhow::bail!("CONVDIST_BACKEND=pjrt requires building with --features pjrt");
+        }
+        let _ = manifest;
+        Ok(Box::new(NativeBackend))
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -73,39 +158,32 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Compile (or fetch from cache) the named executable.
-    fn get(&self, name: &str) -> Result<Arc<CachedExec>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    /// Prepare (or fetch from cache) the named executable.
+    fn get(&self, name: &str) -> Result<Arc<Prepared>> {
+        let cell = {
+            let mut cache = self.cache.lock().unwrap();
+            cache.entry(name.to_string()).or_default().clone()
+        };
+        // Per-name lock: first-touches of *different* executables proceed in
+        // parallel; first-touches of the same one prepare exactly once.
+        let mut slot = cell.slot.lock().unwrap();
+        if let Some(p) = slot.as_ref() {
+            return Ok(p.clone());
         }
-        // Compile outside the lock: first-touch compiles of different
-        // executables can proceed in parallel across worker threads.
         let spec = self.manifest.spec(name)?.clone();
-        let path = self.manifest.hlo_path(name)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
-        )
-        .map_err(xerr)
-        .with_context(|| format!("parsing HLO text for {name}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
-            .client
-            .compile(&comp)
-            .map_err(xerr)
-            .with_context(|| format!("compiling {name}"))?;
-        let cached = Arc::new(CachedExec { exe, spec });
-        self.cache
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert_with(|| cached.clone());
-        Ok(cached)
+            .backend
+            .prepare(name, &spec)
+            .with_context(|| format!("preparing executable {name}"))?;
+        let prepared = Arc::new(Prepared { exe, spec });
+        *slot = Some(prepared.clone());
+        Ok(prepared)
     }
 
-    /// Pre-compile a set of executables (used at cluster start-up so the
+    /// Pre-prepare a set of executables (used at cluster start-up so the
     /// first training batch is not billed the compile time).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
@@ -117,15 +195,14 @@ impl Runtime {
     /// Execute `name` with `args`, validating the call against the manifest.
     /// Returns the output tensors in manifest order.
     pub fn execute(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
-        let cached = self.get(name)?;
-        let spec = &cached.spec;
+        let prepared = self.get(name)?;
+        let spec = &prepared.spec;
         ensure!(
             args.len() == spec.args.len(),
             "{name}: expected {} args, got {}",
             spec.args.len(),
             args.len()
         );
-        let mut literals = Vec::with_capacity(args.len());
         for (v, a) in args.iter().zip(&spec.args) {
             ensure!(
                 v.shape() == a.shape(),
@@ -141,13 +218,10 @@ impl Runtime {
                 v.dtype(),
                 a.dtype()
             );
-            literals.push(to_literal(v)?);
         }
 
         let t0 = Instant::now();
-        let bufs = cached.exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
-        // return_tuple=True in aot.py: one output buffer holding a tuple.
-        let tuple = bufs[0][0].to_literal_sync().map_err(xerr)?;
+        let outs = prepared.exe.run(args)?;
         let elapsed = t0.elapsed();
         {
             let mut stats = self.stats.lock().unwrap();
@@ -156,18 +230,24 @@ impl Runtime {
             s.total += elapsed;
         }
 
-        let parts = tuple.to_tuple().map_err(xerr)?;
         ensure!(
-            parts.len() == spec.outs.len(),
-            "{name}: executable returned {} outputs, manifest says {}",
-            parts.len(),
+            outs.len() == spec.outs.len(),
+            "{name}: backend returned {} outputs, manifest says {}",
+            outs.len(),
             spec.outs.len()
         );
-        parts
-            .into_iter()
-            .zip(&spec.outs)
-            .map(|(lit, o)| from_literal(&lit, o))
-            .collect()
+        for (v, o) in outs.iter().zip(&spec.outs) {
+            ensure!(
+                v.shape() == o.shape() && v.dtype() == o.dtype(),
+                "{name}: output {:?} is {:?}/{} but manifest says {:?}/{}",
+                o.name(),
+                v.shape(),
+                v.dtype(),
+                o.shape(),
+                o.dtype()
+            );
+        }
+        Ok(outs)
     }
 
     /// Execute and also report the wall-clock compute time (the Throttle
@@ -197,19 +277,95 @@ impl Runtime {
     }
 }
 
-fn to_literal(v: &Value) -> Result<xla::Literal> {
-    let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
-    match v {
-        Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims).map_err(xerr),
-        Value::I32(t) => xla::Literal::vec1(t.data()).reshape(&dims).map_err(xerr),
-    }
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ITensor, Pcg32, Tensor};
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
-fn from_literal(lit: &xla::Literal, spec: &ArgSpec) -> Result<Value> {
-    let shape = spec.shape().to_vec();
-    match spec.dtype() {
-        "f32" => Ok(Value::F32(Tensor::new(shape, lit.to_vec::<f32>().map_err(xerr)?)?)),
-        "i32" => Ok(Value::I32(ITensor::new(shape, lit.to_vec::<i32>().map_err(xerr)?)?)),
-        d => Err(anyhow!("unsupported dtype {d} in manifest")),
+    /// Backend that counts prepare() calls — proves the once-cell semantics.
+    struct CountingBackend {
+        prepares: Arc<AtomicUsize>,
+    }
+
+    struct Nop;
+    impl PreparedExec for Nop {
+        fn run(&self, _args: &[Value]) -> Result<Vec<Value>> {
+            Ok(vec![])
+        }
+    }
+
+    impl Backend for CountingBackend {
+        fn platform(&self) -> String {
+            "counting".into()
+        }
+        fn prepare(&self, _name: &str, _spec: &ExecutableSpec) -> Result<Box<dyn PreparedExec>> {
+            self.prepares.fetch_add(1, Ordering::SeqCst);
+            // Make the race window wide enough to actually collide.
+            std::thread::sleep(Duration::from_millis(20));
+            Ok(Box::new(Nop))
+        }
+    }
+
+    #[test]
+    fn concurrent_first_touch_prepares_exactly_once() {
+        let prepares = Arc::new(AtomicUsize::new(0));
+        let manifest = native_manifest(tiny_arch(), std::path::Path::new("."));
+        let rt = Runtime::with_backend(
+            Box::new(CountingBackend { prepares: prepares.clone() }),
+            manifest,
+        );
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let rt = rt.clone();
+                s.spawn(move || rt.warmup(&["probe"]).unwrap());
+            }
+        });
+        assert_eq!(prepares.load(Ordering::SeqCst), 1, "probe must compile exactly once");
+        // A different name prepares separately.
+        rt.warmup(&["mid1_fwd"]).unwrap();
+        assert_eq!(prepares.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn native_probe_and_validation() {
+        let rt = Runtime::for_arch(tiny_arch());
+        let p = rt.arch().probe.clone();
+        let mut rng = Pcg32::seed(1);
+        let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
+        let w = Tensor::randn(&[p.k, p.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+        let b = Tensor::zeros(&[p.k]);
+        let outs = rt
+            .execute("probe", &[x.clone().into(), w.clone().into(), b.clone().into()])
+            .unwrap();
+        let po = p.img - rt.arch().kh + 1;
+        assert_eq!(outs[0].shape(), &[p.batch, p.k, po, po]);
+        // Shape mismatch is rejected before the backend runs.
+        let bad = Tensor::zeros(&[1, 1, 2, 2]);
+        assert!(rt.execute("probe", &[bad.into(), w.into(), b.into()]).is_err());
+        // Unknown names are rejected via the manifest.
+        assert!(rt.execute("conv9_fwd_b4", &[]).is_err());
+        assert!(rt.flops("probe") > 0);
+        assert_eq!(rt.platform(), "native-cpu");
+    }
+
+    #[test]
+    fn native_head_grad_runs_end_to_end() {
+        let rt = Runtime::for_arch(tiny_arch());
+        let a = rt.arch().clone();
+        let mut rng = Pcg32::seed(2);
+        let p2 = Tensor::randn(&[a.batch, a.k2, a.p2_out, a.p2_out], &mut rng);
+        let wf = Tensor::randn(&[a.fc_in, a.num_classes], &mut rng);
+        let bf = Tensor::zeros(&[a.num_classes]);
+        let labels = ITensor::new(vec![a.batch], vec![0; a.batch]).unwrap();
+        let outs = rt
+            .execute(
+                "head_grad",
+                &[p2.into(), wf.into(), bf.into(), labels.into()],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 4);
+        let loss = outs[0].as_f32().unwrap().item().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
     }
 }

@@ -1,0 +1,231 @@
+//! The default backend: pure-rust CPU execution of every executable in the
+//! contract, composed from the [`crate::kernels`] primitives.  Needs no
+//! artifacts, no Python, no network — `Runtime::open` on a clean checkout
+//! lands here.
+//!
+//! All shapes are read from the (already manifest-validated) arguments, so a
+//! prepared executable is just its parsed [`ExecKind`]; "compilation" is
+//! name parsing.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::exec::ExecKind;
+use super::{Backend, PreparedExec};
+use crate::kernels as k;
+use crate::runtime::ExecutableSpec;
+use crate::tensor::{ITensor, Tensor, Value};
+
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".into()
+    }
+
+    fn prepare(&self, name: &str, _spec: &ExecutableSpec) -> Result<Box<dyn PreparedExec>> {
+        let kind = ExecKind::parse(name)
+            .ok_or_else(|| anyhow!("no native implementation for executable {name:?}"))?;
+        Ok(Box::new(NativeExec { kind }))
+    }
+}
+
+struct NativeExec {
+    kind: ExecKind,
+}
+
+/// Borrow a 4-d f32 argument and its dims.
+fn t4(v: &Value) -> Result<(&Tensor, usize, usize, usize, usize)> {
+    let t = v.as_f32()?;
+    let s = t.shape();
+    anyhow::ensure!(s.len() == 4, "expected rank-4 tensor, got {s:?}");
+    Ok((t, s[0], s[1], s[2], s[3]))
+}
+
+fn labels_of(v: &Value) -> Result<&ITensor> {
+    match v {
+        Value::I32(t) => Ok(t),
+        Value::F32(_) => bail!("expected i32 labels tensor"),
+    }
+}
+
+/// One conv-layer forward: `(y, bias, w) -> y` as raw data + dims.
+fn conv_fwd(x: &Tensor, w: &Tensor, bias: &Tensor) -> Result<Tensor> {
+    let (b, c, h, wd) = {
+        let s = x.shape();
+        (s[0], s[1], s[2], s[3])
+    };
+    let (kk, kh, kw) = {
+        let s = w.shape();
+        (s[0], s[2], s[3])
+    };
+    let y = k::conv2d_fwd(x.data(), w.data(), bias.data(), b, c, h, wd, kk, kh, kw);
+    Tensor::new(vec![b, kk, h - kh + 1, wd - kw + 1], y)
+}
+
+/// `mid` forward pieces: returns (lrn(y), pool(lrn(y))) so backward can
+/// reuse the LRN output for pooling argmax recomputation.
+fn mid_fwd_parts(y: &Tensor) -> (Vec<f32>, Vec<f32>, [usize; 4]) {
+    let s = y.shape();
+    let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let z = k::lrn_fwd(y.data(), b, c, h, w);
+    let p = k::maxpool2_fwd(&z, b, c, h, w);
+    (z, p, [b, c, h, w])
+}
+
+/// vjp of the mid block: `gp -> gy` (recomputes the LRN output for pooling
+/// argmax; the pooled output itself is not needed, so no pool forward).
+fn mid_bwd(y: &Tensor, gp: &Tensor) -> Vec<f32> {
+    let s = y.shape();
+    let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
+    let z = k::lrn_fwd(y.data(), b, c, h, w);
+    let gz = k::maxpool2_bwd(&z, gp.data(), b, c, h, w);
+    k::lrn_bwd(y.data(), &gz, b, c, h, w)
+}
+
+/// FC head gradients: `(p2_flat, wf, bf, labels) -> (loss, gp2, gwf, gbf)`.
+fn head_grad(
+    p2: &[f32],
+    wf: &Tensor,
+    bf: &Tensor,
+    labels: &[i32],
+    b: usize,
+) -> (f32, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (fin, ncls) = (wf.shape()[0], wf.shape()[1]);
+    let logits = k::fc_logits(p2, wf.data(), bf.data(), b, fin, ncls);
+    let (loss, gl) = k::softmax_xent_grad(&logits, labels, b, ncls);
+    let mut gp2 = vec![0f32; b * fin];
+    k::gemm_abt_acc(&gl, wf.data(), b, ncls, fin, &mut gp2);
+    let mut gwf = vec![0f32; fin * ncls];
+    k::gemm_atb_acc(p2, &gl, b, fin, ncls, &mut gwf);
+    let mut gbf = vec![0f32; ncls];
+    for row in gl.chunks(ncls) {
+        for (g, &v) in gbf.iter_mut().zip(row) {
+            *g += v;
+        }
+    }
+    (loss, gp2, gwf, gbf)
+}
+
+impl PreparedExec for NativeExec {
+    fn run(&self, args: &[Value]) -> Result<Vec<Value>> {
+        match &self.kind {
+            ExecKind::Probe | ExecKind::ConvFwd { .. } => {
+                let y = conv_fwd(args[0].as_f32()?, args[1].as_f32()?, args[2].as_f32()?)?;
+                Ok(vec![Value::F32(y)])
+            }
+            ExecKind::ConvBwd { .. } => {
+                let (x, b, c, h, wd) = t4(&args[0])?;
+                let (w, kk, _, kh, kw) = t4(&args[1])?;
+                let gy = args[2].as_f32()?;
+                let (gx, gw, gb) =
+                    k::conv2d_bwd(x.data(), w.data(), gy.data(), b, c, h, wd, kk, kh, kw);
+                Ok(vec![
+                    Value::F32(Tensor::new(vec![b, c, h, wd], gx)?),
+                    Value::F32(Tensor::new(vec![kk, c, kh, kw], gw)?),
+                    Value::F32(Tensor::new(vec![kk], gb)?),
+                ])
+            }
+            ExecKind::MidFwd { .. } => {
+                let y = args[0].as_f32()?;
+                let (_z, p, [b, c, h, w]) = mid_fwd_parts(y);
+                Ok(vec![Value::F32(Tensor::new(vec![b, c, h / 2, w / 2], p)?)])
+            }
+            ExecKind::MidBwd { .. } => {
+                let y = args[0].as_f32()?;
+                let gy = mid_bwd(y, args[1].as_f32()?);
+                Ok(vec![Value::F32(Tensor::new(y.shape().to_vec(), gy)?)])
+            }
+            ExecKind::HeadGrad => {
+                let (p2, b, kc, ph, pw) = t4(&args[0])?;
+                let wf = args[1].as_f32()?;
+                let bf = args[2].as_f32()?;
+                let labels = labels_of(&args[3])?;
+                let (loss, gp2, gwf, gbf) = head_grad(p2.data(), wf, bf, labels.data(), b);
+                Ok(vec![
+                    Value::F32(Tensor::scalar(loss)),
+                    Value::F32(Tensor::new(vec![b, kc, ph, pw], gp2)?),
+                    Value::F32(Tensor::new(wf.shape().to_vec(), gwf)?),
+                    Value::F32(Tensor::new(bf.shape().to_vec(), gbf)?),
+                ])
+            }
+            ExecKind::EvalFull => {
+                let x = args[0].as_f32()?;
+                let (w1, b1, w2, b2) =
+                    (args[1].as_f32()?, args[2].as_f32()?, args[3].as_f32()?, args[4].as_f32()?);
+                let (wf, bf) = (args[5].as_f32()?, args[6].as_f32()?);
+                let y1 = conv_fwd(x, w1, b1)?;
+                let (_z1, p1, [b, k1, h1, _]) = mid_fwd_parts(&y1);
+                let p1 = Tensor::new(vec![b, k1, h1 / 2, h1 / 2], p1)?;
+                let y2 = conv_fwd(&p1, w2, b2)?;
+                let (_z2, p2, _) = mid_fwd_parts(&y2);
+                let (fin, ncls) = (wf.shape()[0], wf.shape()[1]);
+                let logits = k::fc_logits(&p2, wf.data(), bf.data(), b, fin, ncls);
+                Ok(vec![Value::F32(Tensor::new(vec![b, ncls], logits)?)])
+            }
+            ExecKind::GradFull { .. } => {
+                let x = args[0].as_f32()?;
+                let labels = labels_of(&args[1])?;
+                let (w1, b1, w2, b2) =
+                    (args[2].as_f32()?, args[3].as_f32()?, args[4].as_f32()?, args[5].as_f32()?);
+                let (wf, bf) = (args[6].as_f32()?, args[7].as_f32()?);
+                let b = x.shape()[0];
+
+                // ---- forward, keeping what backward needs --------------------
+                let y1 = conv_fwd(x, w1, b1)?;
+                let (z1, p1v, [_, k1, h1, _]) = mid_fwd_parts(&y1);
+                let p1 = Tensor::new(vec![b, k1, h1 / 2, h1 / 2], p1v)?;
+                let y2 = conv_fwd(&p1, w2, b2)?;
+                let (z2, p2v, [_, k2, h2, _]) = mid_fwd_parts(&y2);
+
+                // ---- head ----------------------------------------------------
+                let (loss, gp2, gwf, gbf) = head_grad(&p2v, wf, bf, labels.data(), b);
+
+                // ---- backward through mid2 + conv2 ---------------------------
+                let gz2 = k::maxpool2_bwd(&z2, &gp2, b, k2, h2, h2);
+                let gy2 = k::lrn_bwd(y2.data(), &gz2, b, k2, h2, h2);
+                let (c2in, h2in) = (p1.shape()[1], p1.shape()[2]);
+                let (kh, kw) = (w2.shape()[2], w2.shape()[3]);
+                let (gp1, gw2, gb2) = k::conv2d_bwd(
+                    p1.data(),
+                    w2.data(),
+                    &gy2,
+                    b,
+                    c2in,
+                    h2in,
+                    h2in,
+                    k2,
+                    kh,
+                    kw,
+                );
+
+                // ---- backward through mid1 + conv1 ---------------------------
+                let gz1 = k::maxpool2_bwd(&z1, &gp1, b, k1, h1, h1);
+                let gy1 = k::lrn_bwd(y1.data(), &gz1, b, k1, h1, h1);
+                let (c1in, h1in) = (x.shape()[1], x.shape()[2]);
+                let (kh1, kw1) = (w1.shape()[2], w1.shape()[3]);
+                let (_gx, gw1, gb1) = k::conv2d_bwd(
+                    x.data(),
+                    w1.data(),
+                    &gy1,
+                    b,
+                    c1in,
+                    h1in,
+                    h1in,
+                    k1,
+                    kh1,
+                    kw1,
+                );
+
+                Ok(vec![
+                    Value::F32(Tensor::scalar(loss)),
+                    Value::F32(Tensor::new(w1.shape().to_vec(), gw1)?),
+                    Value::F32(Tensor::new(vec![k1], gb1)?),
+                    Value::F32(Tensor::new(w2.shape().to_vec(), gw2)?),
+                    Value::F32(Tensor::new(vec![k2], gb2)?),
+                    Value::F32(Tensor::new(wf.shape().to_vec(), gwf)?),
+                    Value::F32(Tensor::new(bf.shape().to_vec(), gbf)?),
+                ])
+            }
+        }
+    }
+}

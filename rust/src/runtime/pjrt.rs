@@ -1,0 +1,52 @@
+//! The original AOT-HLO / PJRT execution path, behind the off-by-default
+//! `pjrt` cargo feature.
+//!
+//! Flow (when linked against a real PJRT client): Python lowers the JAX
+//! segments to HLO text (`python/compile/aot.py`), `manifest.json` records
+//! every executable's signature, and the backend compiles
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute` lazily
+//! per name (the runtime's per-name once cell already serializes that).
+//!
+//! The external `xla` crate is **not vendored** in this offline tree, so
+//! this build is a stub: it still exercises the manifest/artifact plumbing
+//! (paths, existence checks, signatures) and fails at `prepare` time with an
+//! actionable error instead of failing the whole build.  Swapping the body
+//! of [`PjrtBackend::prepare`] for the real compile call is the only change
+//! needed once an `xla`/PJRT dependency is available (DESIGN.md §4).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Result};
+
+use super::{Backend, ExecutableSpec, PreparedExec};
+
+pub struct PjrtBackend {
+    dir: PathBuf,
+}
+
+impl PjrtBackend {
+    pub fn new(dir: PathBuf) -> Self {
+        Self { dir }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        "pjrt-cpu (offline stub)".into()
+    }
+
+    fn prepare(&self, name: &str, spec: &ExecutableSpec) -> Result<Box<dyn PreparedExec>> {
+        let path = self.dir.join(&spec.file);
+        ensure!(
+            path.exists(),
+            "HLO artifact {} for {name} is missing — run `make artifacts` (python/compile/aot.py)",
+            path.display()
+        );
+        bail!(
+            "pjrt backend: this build carries the offline stub; compiling {} requires linking \
+             the external `xla`/PJRT crate (see DESIGN.md §4). Use the default native backend \
+             (unset CONVDIST_BACKEND) to run without artifacts.",
+            path.display()
+        )
+    }
+}

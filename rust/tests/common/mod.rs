@@ -1,16 +1,17 @@
-//! Shared helpers for integration tests (require `make artifacts`).
+//! Shared helpers for integration tests.  With the default native backend
+//! no artifacts are needed: `Runtime::open` synthesizes the manifest from
+//! `ArchSpec::native_default` when `manifest.json` is absent.
 
 use std::sync::Arc;
 
 use convdist::runtime::Runtime;
 
-/// Open the repo's artifact directory; panics with a actionable message if
-/// `make artifacts` has not been run.
+/// Open the repo's artifact directory (native backend needs no artifacts;
+/// a checked-in `manifest.json`, if present, pins the architecture).
 pub fn runtime() -> Arc<Runtime> {
     let dir = convdist::artifacts_dir();
-    Runtime::open(&dir).unwrap_or_else(|e| {
-        panic!("integration tests need artifacts (run `make artifacts`): {e:#}")
-    })
+    Runtime::open(&dir)
+        .unwrap_or_else(|e| panic!("opening runtime over {dir:?} failed: {e:#}"))
 }
 
 /// Default trainer config for fast tests.
