@@ -7,5 +7,12 @@ cargo fmt --all --check
 cargo clippy --all-targets -- -D warnings
 cargo build --release
 cargo test -q
+# Adaptive-scheduler suite under the throttled in-proc cluster (also part
+# of `cargo test` above; named here so a renamed/deleted target fails loud).
+cargo test -q --test adaptive_sched
+# Static-vs-adaptive step-time trajectory from the scheduler simulator;
+# uploaded as a workflow artifact for trend tracking.
+cargo run --release --example bench_sched
+test -s BENCH_sched.json
 # The PJRT path must keep compiling even though it is an offline stub.
 cargo check --features pjrt

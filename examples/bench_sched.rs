@@ -1,0 +1,63 @@
+//! `cargo run --release --example bench_sched`
+//!
+//! Emits `BENCH_sched.json`: the static-vs-adaptive-vs-oracle step-time
+//! trajectory of the scheduler simulator's CI scenario (an equal 4-device
+//! fleet, one device degrading 8x mid-run — `sim::trajectory`).  CI uploads
+//! the file as a workflow artifact so re-shard payoff and re-partition
+//! latency are tracked over time.
+
+use std::fmt::Write as _;
+
+use convdist::sim::trajectory::{simulate_adaptive, tail_means, TrajectorySpec};
+
+fn main() -> anyhow::Result<()> {
+    let spec = TrajectorySpec::ci_default();
+    let points = simulate_adaptive(&spec)?;
+    let (s_tail, a_tail, o_tail) = tail_means(&points, 10);
+    let recovered = ((s_tail - a_tail) / (s_tail - o_tail).max(1e-12)).clamp(0.0, 1.0);
+    let repartitions = points.iter().filter(|p| p.repartitioned).count();
+
+    let mut json = String::new();
+    writeln!(json, "{{")?;
+    writeln!(json, "  \"name\": \"sched_adaptive_trajectory\",")?;
+    writeln!(json, "  \"arch\": \"{}@{}\",", spec.arch.label(), spec.arch.batch)?;
+    writeln!(
+        json,
+        "  \"devices\": [{}],",
+        spec.gflops.iter().map(|g| format!("{g}")).collect::<Vec<_>>().join(", ")
+    )?;
+    writeln!(
+        json,
+        "  \"degrade\": {{\"device\": {}, \"at_step\": {}, \"factor\": {}}},",
+        spec.degrade_device, spec.degrade_at_step, spec.degrade_factor
+    )?;
+    writeln!(json, "  \"trajectory\": [")?;
+    for (i, p) in points.iter().enumerate() {
+        let comma = if i + 1 < points.len() { "," } else { "" };
+        writeln!(
+            json,
+            "    {{\"step\": {}, \"static\": {:.6}, \"adaptive\": {:.6}, \"oracle\": {:.6}, \"repartitioned\": {}}}{comma}",
+            p.step, p.static_secs, p.adaptive_secs, p.oracle_secs, p.repartitioned
+        )?;
+    }
+    writeln!(json, "  ],")?;
+    writeln!(json, "  \"summary\": {{")?;
+    writeln!(json, "    \"static_tail_mean_s\": {s_tail:.6},")?;
+    writeln!(json, "    \"adaptive_tail_mean_s\": {a_tail:.6},")?;
+    writeln!(json, "    \"oracle_tail_mean_s\": {o_tail:.6},")?;
+    writeln!(json, "    \"repartitions\": {repartitions},")?;
+    writeln!(json, "    \"recovered_fraction\": {recovered:.4}")?;
+    writeln!(json, "  }}")?;
+    writeln!(json, "}}")?;
+
+    std::fs::write("BENCH_sched.json", &json)?;
+    println!(
+        "BENCH_sched.json written: static tail {s_tail:.4}s, adaptive tail {a_tail:.4}s, \
+         oracle tail {o_tail:.4}s ({} re-shards, {:.0}% of oracle speedup recovered)",
+        repartitions,
+        100.0 * recovered
+    );
+    anyhow::ensure!(repartitions >= 1, "the CI scenario must trigger a re-shard");
+    anyhow::ensure!(a_tail <= s_tail, "adaptive must not lose to static after degradation");
+    Ok(())
+}

@@ -8,15 +8,27 @@
 //! laptop convolve as many kernels as the fastest.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example heterogeneous_cluster
+//! cargo run --release --example heterogeneous_cluster
+//! ```
+//!
+//! With `--adaptive`, runs the adaptive-scheduler demo instead: an equal
+//! 4-device fleet where one worker thermally throttles 8x mid-training.
+//! The static Eq. 1 partition (calibrated once) is held hostage by the
+//! straggler; the adaptive scheduler detects the drift from its EWMA
+//! telemetry, re-runs Eq. 1 over the observed rates and recovers most of
+//! the speedup a statically re-calibrated oracle would get (DESIGN.md §5).
+//!
+//! ```sh
+//! cargo run --release --example heterogeneous_cluster -- --adaptive
 //! ```
 
-use convdist::cluster::{spawn_inproc, DistTrainer};
+use convdist::cluster::{spawn_inproc, spawn_inproc_planned, DistTrainer};
 use convdist::config::TrainerConfig;
 use convdist::data::{Dataset, SyntheticCifar};
-use convdist::devices::{paper_cpus, Throttle};
+use convdist::devices::{paper_cpus, Throttle, ThrottlePlan};
 use convdist::metrics::Breakdown;
 use convdist::runtime::Runtime;
+use convdist::sched::{AdaptiveConfig, ShardTable};
 
 fn avg_steps(
     trainer: &mut DistTrainer,
@@ -32,16 +44,18 @@ fn avg_steps(
     Ok(cum.scale(1.0 / steps as f64))
 }
 
-fn shard_desc(trainer: &DistTrainer, layer: usize) -> String {
-    trainer
-        .shards(layer)
-        .iter()
-        .map(|s| format!("dev{}={}", s.device, s.len()))
-        .collect::<Vec<_>>()
-        .join(" ")
+fn main() -> anyhow::Result<()> {
+    if std::env::args().any(|a| a == "--adaptive") {
+        return adaptive_demo();
+    }
+    static_demo()
 }
 
-fn main() -> anyhow::Result<()> {
+// ---------------------------------------------------------------------------
+// Default mode: Eq. 1 balanced vs equal split on the paper's Table 2 fleet
+// ---------------------------------------------------------------------------
+
+fn static_demo() -> anyhow::Result<()> {
     let steps = 3;
     let artifacts = convdist::artifacts_dir();
     let rt = Runtime::open(&artifacts)?;
@@ -68,13 +82,13 @@ fn main() -> anyhow::Result<()> {
     let _ = balanced.step(&ds.batch(arch.batch, 999)?)?;
     let bal_avg = avg_steps(&mut balanced, &mut ds, arch.batch, steps)?;
     println!("4 devices, Eq.1       {bal_avg}");
-    println!("   conv2 shards: {}", shard_desc(&balanced, 2));
+    println!("   conv2 shards: {}", ShardTable(balanced.shards(2)));
 
     // --- same 4 devices, naive equal split (ablation) ------------------------
     balanced.partition_equal()?;
     let eq_avg = avg_steps(&mut balanced, &mut ds, arch.batch, steps)?;
     println!("4 devices, equal      {eq_avg}");
-    println!("   conv2 shards: {}", shard_desc(&balanced, 2));
+    println!("   conv2 shards: {}", ShardTable(balanced.shards(2)));
     balanced.shutdown()?;
     cluster.join()?;
 
@@ -85,5 +99,101 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(s_bal > 1.0, "balanced cluster must beat a single device");
     anyhow::ensure!(s_bal > s_eq * 0.98, "Eq.1 must not lose to the equal split");
     println!("heterogeneous_cluster OK");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// --adaptive: recover from a mid-training 8x degradation
+// ---------------------------------------------------------------------------
+
+fn adaptive_demo() -> anyhow::Result<()> {
+    let artifacts = convdist::artifacts_dir();
+    let rt = Runtime::open(&artifacts)?;
+    let arch = rt.arch().clone();
+    let steps = 12usize;
+    let degrade_at_step = 3usize;
+    let cfg = TrainerConfig { steps, calib_rounds: 1, ..Default::default() };
+
+    let fast = Throttle::virtual_gflops(2.0);
+    let slow = Throttle::virtual_gflops(0.25); // 8x thermal throttle
+    let degrading = ThrottlePlan::degrade_after(fast, 4 * degrade_at_step as u64, slow);
+    let plans = [degrading, ThrottlePlan::fixed(fast), ThrottlePlan::fixed(fast)];
+    println!(
+        "fleet: 4 equal virtual devices; worker 1 throttles 8x at step {degrade_at_step}\n"
+    );
+
+    let run = |label: &str, adaptive: Option<AdaptiveConfig>| -> anyhow::Result<Vec<f64>> {
+        let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 5);
+        let mut cluster = spawn_inproc_planned(artifacts.clone(), &plans, None);
+        let mut trainer = match adaptive {
+            Some(a) => {
+                DistTrainer::with_adaptive(rt.clone(), cluster.take_links(), &cfg, fast, a)?
+            }
+            None => DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, fast)?,
+        };
+        println!("[{label}] initial conv2 shards: {}", ShardTable(trainer.shards(2)));
+        let mut secs = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let t0 = std::time::Instant::now();
+            let r = trainer.step(&ds.batch(arch.batch, step)?)?;
+            secs.push(t0.elapsed().as_secs_f64());
+            if r.repartitioned {
+                println!(
+                    "[{label}] step {step}: re-sharded -> {}",
+                    ShardTable(trainer.shards(2))
+                );
+            }
+        }
+        println!("[{label}] {}", trainer.sched_stats());
+        trainer.shutdown()?;
+        cluster.join()?;
+        Ok(secs)
+    };
+
+    let adaptive_cfg = AdaptiveConfig {
+        alpha: 0.5,
+        warmup_steps: 1,
+        imbalance_threshold: 0.2,
+        cooldown_steps: 2,
+        heartbeat_every: 0,
+        ..Default::default()
+    };
+    let static_secs = run("static  ", None)?;
+    let adaptive_secs = run("adaptive", Some(adaptive_cfg))?;
+
+    // Oracle: a fleet whose calibration already saw the degraded speed.
+    let oracle_secs = {
+        let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 5);
+        let oplans =
+            [ThrottlePlan::fixed(slow), ThrottlePlan::fixed(fast), ThrottlePlan::fixed(fast)];
+        let mut cluster = spawn_inproc_planned(artifacts.clone(), &oplans, None);
+        let mut oracle = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, fast)?;
+        let mut secs = Vec::new();
+        for step in 0..6 {
+            let t0 = std::time::Instant::now();
+            oracle.step(&ds.batch(arch.batch, step)?)?;
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        oracle.shutdown()?;
+        cluster.join()?;
+        secs
+    };
+
+    println!("\nstep   static(s)  adaptive(s)");
+    for step in 0..steps {
+        println!("{step:>4}   {:>8.3}   {:>10.3}", static_secs[step], adaptive_secs[step]);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let s_tail = mean(&static_secs[steps - 4..]);
+    let a_tail = mean(&adaptive_secs[steps - 4..]);
+    let o_tail = mean(&oracle_secs[1..]);
+    let recovered = ((s_tail - a_tail) / (s_tail - o_tail).max(1e-9)).clamp(0.0, 1.0);
+    println!("\nsteady-state step time: static {s_tail:.3}s  adaptive {a_tail:.3}s  oracle {o_tail:.3}s");
+    println!("adaptive recovers {:.0}% of the static-oracle speedup", 100.0 * recovered);
+    anyhow::ensure!(
+        a_tail <= s_tail * 1.02,
+        "adaptive steady state must not lose to the degraded static partition"
+    );
+    println!("heterogeneous_cluster --adaptive OK");
     Ok(())
 }

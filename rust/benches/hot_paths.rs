@@ -12,8 +12,10 @@ use convdist::config::TrainerConfig;
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
 use convdist::proto::{read_frame, write_frame, Message, WireTensor};
-use convdist::runtime::Runtime;
-use convdist::sched::partition_layer;
+use convdist::runtime::{bucket_ladder, Runtime};
+use convdist::sched::{
+    partition_layer, AdaptiveConfig, AdaptivePolicy, FleetTelemetry, LayerPlan,
+};
 use convdist::tensor::{Pcg32, Tensor, Value};
 use convdist::util::bench::Bencher;
 
@@ -63,6 +65,34 @@ fn main() -> anyhow::Result<()> {
     let buckets: Vec<usize> = (1..=32).map(|i| i * 48).collect();
     b.run("sched::partition_layer (1500 kernels, 16 devices)", || {
         partition_layer(1500, &times, &buckets).unwrap()
+    });
+
+    // --- adaptive scheduler: telemetry feed + re-partition decision ----------
+    // The per-step overhead adaptation adds to the master's loop: one
+    // telemetry record per gathered shard, then a policy consult that
+    // builds candidate Eq. 1 tables for both layers and prices them.
+    let mut telem = FleetTelemetry::new(16, 0.4);
+    for d in 0..16 {
+        telem.record(d, 0.01 * (1.0 + (d % 5) as f64), 1e9);
+    }
+    b.run("sched::telemetry record (1 shard observation)", || {
+        telem.record(3, 0.021, 1e9);
+        telem.rate(3)
+    });
+    let (b1500, b500) = (bucket_ladder(1500), bucket_ladder(500));
+    let t1500 = partition_layer(1500, &times, &b1500).unwrap();
+    let t500 = partition_layer(500, &times, &b500).unwrap();
+    let active: Vec<usize> = (0..16).collect();
+    let rates = telem.rates_for(&active, 1).unwrap();
+    let mut policy = AdaptivePolicy::new(AdaptiveConfig { warmup_steps: 0, ..Default::default() });
+    let mut step = 0u64;
+    b.run("sched::policy decide + candidate re-partition (2 layers, 16 devices)", || {
+        let plans = [
+            LayerPlan { k: 1500, buckets: &b1500, current: &t1500, flops_per_kernel: 5.1e6 },
+            LayerPlan { k: 500, buckets: &b500, current: &t500, flops_per_kernel: 7.5e6 },
+        ];
+        step += 1;
+        policy.decide(step, &plans, &active, &rates).unwrap()
     });
 
     // --- PJRT dispatch + full distributed step ------------------------------

@@ -8,10 +8,19 @@
 //! loop drives the native CPU backend and (with `--features pjrt`) the
 //! AOT-HLO path.
 //!
-//! Extension beyond the paper: if a worker dies mid-training the master
-//! drops it, re-runs the Eq. 1 partition over the survivors and retries the
-//! batch — the paper's protocol has no recovery story, but a production
-//! coordinator needs one.
+//! Extensions beyond the paper:
+//!
+//! * **Failure recovery** — if a worker dies mid-training the master drops
+//!   it, re-runs the Eq. 1 partition over the survivors and retries the
+//!   batch; the paper's protocol has no recovery story.
+//! * **Adaptive scheduling** (opt-in, [`DistTrainer::with_adaptive`]) — the
+//!   gather loop feeds per-device EWMA timing telemetry, an
+//!   [`AdaptivePolicy`] re-runs Eq. 1 over the *smoothed observed* rates
+//!   when the predicted payoff clears a threshold, heartbeats detect silent
+//!   workers, a gather deadline drops stragglers, and a `Leave` message
+//!   lets a worker depart gracefully — elastic membership (DESIGN.md §5).
+//!   With adaptation disabled (the `new` default) shard tables and
+//!   numerics are identical to the static path.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -21,12 +30,15 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::config::TrainerConfig;
 use crate::data::Batch;
 use crate::devices::Throttle;
-use crate::metrics::{Breakdown, Phase, PhaseTimer};
+use crate::metrics::{Breakdown, Phase, PhaseTimer, SchedStats};
 use crate::model::{Grads, Params, Sgd};
 use crate::net::Link;
 use crate::proto::{Message, WireTensor};
-use crate::runtime::{ConvDir, Manifest, Runtime};
-use crate::sched::{partition_layer, Shard};
+use crate::runtime::{ArchSpec, ConvDir, Manifest, Runtime};
+use crate::sched::{
+    partition_layer, utilization, AdaptiveConfig, AdaptivePolicy, Decision, FleetTelemetry,
+    LayerPlan, Shard,
+};
 use crate::tensor::{Tensor, Value};
 
 /// Outcome of one distributed training step.
@@ -38,6 +50,8 @@ pub struct StepResult {
     pub bytes_moved: u64,
     /// Devices that participated (master included).
     pub devices: usize,
+    /// The adaptive policy re-sharded the fleet after this step.
+    pub repartitioned: bool,
 }
 
 struct WorkerSlot {
@@ -45,8 +59,17 @@ struct WorkerSlot {
     alive: bool,
 }
 
-/// The master node: Algorithm 1 plus calibration, Eq. 1 partitioning and
-/// parameter updates.
+/// FLOPs of one kernel of conv layer `layer`, forward pass — the layer
+/// weight the adaptive policy uses (training factors scale both layers
+/// equally and cancel in the gain ratio).
+fn flops_per_kernel(arch: &ArchSpec, layer: usize) -> f64 {
+    let (in_ch, _) = arch.conv_input(layer);
+    let out = arch.conv_output(layer);
+    2.0 * arch.batch as f64 * (out * out) as f64 * in_ch as f64 * (arch.kh * arch.kw) as f64
+}
+
+/// The master node: Algorithm 1 plus calibration, Eq. 1 partitioning,
+/// parameter updates and (opt-in) the adaptive scheduling loop.
 pub struct DistTrainer {
     rt: Arc<Runtime>,
     workers: Vec<WorkerSlot>,
@@ -59,15 +82,36 @@ pub struct DistTrainer {
     master_throttle: Throttle,
     /// Scatter-round sequence number (stale-reply filtering after retries).
     seq: u32,
+    // ---- adaptive scheduling state (inert when `adaptive.enabled` is off)
+    adaptive: AdaptiveConfig,
+    policy: AdaptivePolicy,
+    telemetry: FleetTelemetry,
+    stats: SchedStats,
+    steps_done: u64,
+    hb_nonce: u32,
 }
 
 impl DistTrainer {
-    /// Handshake, calibrate (paper §4.1.1) and partition (Eq. 1).
+    /// Handshake, calibrate (paper §4.1.1) and partition (Eq. 1) — the
+    /// paper's static scheduler.
     pub fn new(
         rt: Arc<Runtime>,
         links: Vec<Box<dyn Link>>,
         cfg: &TrainerConfig,
         master_throttle: Throttle,
+    ) -> Result<Self> {
+        Self::with_adaptive(rt, links, cfg, master_throttle, AdaptiveConfig::disabled())
+    }
+
+    /// Like [`DistTrainer::new`], with the adaptive scheduling subsystem
+    /// configured.  `AdaptiveConfig::disabled()` reproduces the static
+    /// behavior exactly.
+    pub fn with_adaptive(
+        rt: Arc<Runtime>,
+        links: Vec<Box<dyn Link>>,
+        cfg: &TrainerConfig,
+        master_throttle: Throttle,
+        adaptive: AdaptiveConfig,
     ) -> Result<Self> {
         let mut workers: Vec<WorkerSlot> =
             links.into_iter().map(|link| WorkerSlot { link, alive: true }).collect();
@@ -81,6 +125,7 @@ impl DistTrainer {
             }
         }
         let params = Params::init(rt.arch(), cfg.seed)?;
+        let n_devices = workers.len() + 1;
         let mut trainer = Self {
             rt,
             workers,
@@ -91,8 +136,23 @@ impl DistTrainer {
             opt: Sgd::new(cfg.lr, cfg.momentum, cfg.weight_decay),
             master_throttle,
             seq: 0,
+            adaptive,
+            policy: AdaptivePolicy::new(adaptive),
+            telemetry: FleetTelemetry::new(n_devices, adaptive.alpha),
+            stats: SchedStats::default(),
+            steps_done: 0,
+            hb_nonce: 0,
         };
         trainer.calibrate(cfg.calib_rounds)?;
+        // Seed the telemetry from the calibration probe so every device has
+        // a rate estimate even before (or without ever) receiving a shard —
+        // the probe is the same seconds-over-FLOPs quantity the gather loop
+        // measures.
+        let probe_flops = trainer.rt.arch().probe.flops as f64;
+        for d in 0..n_devices {
+            let secs = trainer.probe_times[d];
+            trainer.telemetry.record(d, secs, probe_flops);
+        }
         trainer.partition()?;
         Ok(trainer)
     }
@@ -135,14 +195,27 @@ impl DistTrainer {
         Ok(())
     }
 
-    /// Eq. 1 partition of both conv layers over the alive devices.
-    fn partition(&mut self) -> Result<()> {
-        let arch = self.rt.arch().clone();
-        // Device ids that are alive: master (0) plus live workers.
-        let active: Vec<usize> = std::iter::once(0)
+    /// Alive device ids: master (0) plus live workers (i + 1).
+    fn active_devices(&self) -> Vec<usize> {
+        std::iter::once(0)
             .chain(self.workers.iter().enumerate().filter(|(_, w)| w.alive).map(|(i, _)| i + 1))
-            .collect();
-        let times: Vec<f64> = active.iter().map(|&d| self.probe_times[d]).collect();
+            .collect()
+    }
+
+    /// Eq. 1 partition of both conv layers over the alive devices, using
+    /// the calibration probe times (the paper's static scheduler).
+    fn partition(&mut self) -> Result<()> {
+        let times = self.probe_times.clone();
+        self.partition_with(&times)
+    }
+
+    /// Eq. 1 partition over the alive devices with per-device times indexed
+    /// by device id (probe seconds or telemetry rates — Eq. 1 is scale
+    /// free, only ratios matter).
+    fn partition_with(&mut self, times_by_dev: &[f64]) -> Result<()> {
+        let arch = self.rt.arch().clone();
+        let active = self.active_devices();
+        let times: Vec<f64> = active.iter().map(|&d| times_by_dev[d]).collect();
         let remap = |mut shards: Vec<Shard>| -> Vec<Shard> {
             for s in &mut shards {
                 s.device = active[s.device];
@@ -162,11 +235,8 @@ impl DistTrainer {
     /// data-parallel assumption the paper argues against (§4.1.1).  Used by
     /// ablations to measure what Eq. 1 buys on a heterogeneous cluster.
     pub fn partition_equal(&mut self) -> Result<()> {
-        let saved = std::mem::take(&mut self.probe_times);
-        self.probe_times = vec![1.0; saved.len()];
-        let r = self.partition();
-        self.probe_times = saved;
-        r
+        let n = self.probe_times.len();
+        self.partition_with(&vec![1.0; n])
     }
 
     pub fn shards(&self, layer: usize) -> &[Shard] {
@@ -181,24 +251,220 @@ impl DistTrainer {
         self.workers.iter().filter(|w| w.alive).count()
     }
 
+    /// Adaptive-scheduler counters and utilization (see `metrics`).
+    pub fn sched_stats(&self) -> &SchedStats {
+        &self.stats
+    }
+
+    /// The per-device EWMA timing telemetry (seconds per GFLOP).
+    pub fn telemetry(&self) -> &FleetTelemetry {
+        &self.telemetry
+    }
+
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
     fn total_bytes(&self) -> u64 {
         self.workers.iter().map(|w| w.link.bytes_moved()).sum()
     }
 
-    /// One training step with single-retry recovery: if a worker dies, drop
-    /// it, re-partition, and rerun the batch on the survivors.
+    /// One training step with recovery and (opt-in) adaptation: if a worker
+    /// dies, leaves or times out, drop it, re-absorb its kernel range into
+    /// the survivors and rerun the batch; after a successful step, consult
+    /// the adaptive policy.
     pub fn step(&mut self, batch: &Batch) -> Result<StepResult> {
+        if self.adaptive.enabled
+            && self.adaptive.heartbeat_every > 0
+            && self.steps_done > 0
+            && self.steps_done % self.adaptive.heartbeat_every == 0
+        {
+            let dropped = self.heartbeat();
+            if dropped > 0 {
+                self.stats.departures += dropped;
+                self.repartition_surviving()?;
+            }
+        }
         loop {
+            // A worker can also die *outside* try_step — a failed AllOk
+            // broadcast or ShardUpdate send marks it dead without going
+            // through the retry path.  If the tables still reference a dead
+            // device, re-absorb its range before scattering; otherwise
+            // send_to would fail every step with no recovery.
+            if self.tables_reference_dead() {
+                self.repartition_surviving()?;
+            }
             let alive_before = self.alive_workers();
             match self.try_step(batch) {
-                Ok(r) => return Ok(r),
+                Ok(mut r) => {
+                    self.steps_done += 1;
+                    if self.adaptive.enabled {
+                        r.repartitioned = self.consider_repartition()?;
+                    }
+                    return Ok(r);
+                }
                 Err(e) => {
-                    if self.alive_workers() < alive_before {
-                        // A worker died; Eq. 1 re-partition and retry.
-                        self.partition()?;
+                    let alive_now = self.alive_workers();
+                    if alive_now < alive_before {
+                        // A worker left the fleet mid-batch: re-absorb its
+                        // kernel range and retry on the survivors.
+                        self.stats.departures += (alive_before - alive_now) as u64;
+                        self.repartition_surviving()?;
                         continue;
                     }
                     return Err(e);
+                }
+            }
+        }
+    }
+
+    /// True when a shard table still names a dead worker (its departure was
+    /// detected on a one-way send, outside the step retry loop).
+    fn tables_reference_dead(&self) -> bool {
+        self.shards1
+            .iter()
+            .chain(self.shards2.iter())
+            .any(|s| s.device != 0 && !self.workers[s.device - 1].alive)
+    }
+
+    /// Ping every alive worker and wait for its `Pong`; drop the silent
+    /// ones.  Returns how many workers were dropped.
+    fn heartbeat(&mut self) -> u64 {
+        self.hb_nonce = self.hb_nonce.wrapping_add(1);
+        let nonce = self.hb_nonce;
+        let timeout = self.adaptive.heartbeat_timeout;
+        let mut dropped = 0u64;
+        let to_check: Vec<usize> =
+            (0..self.workers.len()).filter(|&i| self.workers[i].alive).collect();
+        for &i in &to_check {
+            if self.workers[i].link.send(&Message::Ping { nonce }).is_err() {
+                self.workers[i].alive = false;
+                dropped += 1;
+            }
+        }
+        for &i in &to_check {
+            if !self.workers[i].alive {
+                continue;
+            }
+            loop {
+                match self.workers[i].link.recv_timeout(timeout) {
+                    Ok(Some(Message::Pong { nonce: got })) if got == nonce => break,
+                    // Stale replies from an aborted round or an older ping.
+                    Ok(Some(Message::Pong { .. })) | Ok(Some(Message::ConvResult { .. })) => {
+                        continue;
+                    }
+                    // Silent, departing or confused: drop from the fleet.
+                    Ok(Some(_)) | Ok(None) | Err(_) => {
+                        self.workers[i].alive = false;
+                        dropped += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        dropped
+    }
+
+    /// Re-partition over the survivors: the smoothed observed rates when
+    /// adaptive telemetry has them, the calibration probe times otherwise.
+    fn repartition_surviving(&mut self) -> Result<()> {
+        let active = self.active_devices();
+        if self.adaptive.enabled {
+            if let Some(rates) = self.telemetry.rates_for(&active, 1) {
+                let mut by_dev = vec![1.0f64; self.probe_times.len()];
+                for (&d, &r) in active.iter().zip(&rates) {
+                    by_dev[d] = r;
+                }
+                self.partition_with(&by_dev)?;
+                self.warm_own_shards();
+                self.notify_shard_updates();
+                return Ok(());
+            }
+        }
+        self.partition()
+    }
+
+    /// After a successful step, feed the policy and apply its decision.
+    /// Returns whether the fleet was re-sharded.
+    fn consider_repartition(&mut self) -> Result<bool> {
+        let active = self.active_devices();
+        let Some(rates) = self.telemetry.rates_for(&active, 1) else {
+            return Ok(false);
+        };
+        let flagged = self.telemetry.stragglers(
+            &active,
+            self.adaptive.straggler_k,
+            self.adaptive.straggler_min_ratio,
+        );
+        self.stats.straggler_flags += flagged.len() as u64;
+
+        let arch = self.rt.arch().clone();
+        let (decision, util) = {
+            let plans = [
+                LayerPlan {
+                    k: arch.k1,
+                    buckets: &arch.buckets1,
+                    current: &self.shards1,
+                    flops_per_kernel: flops_per_kernel(&arch, 1),
+                },
+                LayerPlan {
+                    k: arch.k2,
+                    buckets: &arch.buckets2,
+                    current: &self.shards2,
+                    flops_per_kernel: flops_per_kernel(&arch, 2),
+                },
+            ];
+            let util = utilization(&plans, &active, &rates);
+            let decision = self.policy.decide(self.steps_done, &plans, &active, &rates)?;
+            (decision, util)
+        };
+        self.stats.utilization = active.iter().copied().zip(util).collect();
+        match decision {
+            Decision::Keep => Ok(false),
+            Decision::Repartition(mut tables) => {
+                ensure!(tables.len() == 2, "policy returned {} tables", tables.len());
+                self.shards2 = tables.pop().unwrap();
+                self.shards1 = tables.pop().unwrap();
+                self.stats.repartitions += 1;
+                self.warm_own_shards();
+                self.notify_shard_updates();
+                Ok(true)
+            }
+        }
+    }
+
+    /// Prepare the master's own bucket executables for the current tables
+    /// (best effort — a miss only costs compile time on the next step).
+    fn warm_own_shards(&self) {
+        for (layer, shards) in [(1usize, &self.shards1), (2usize, &self.shards2)] {
+            if let Some(s) = shards.iter().find(|s| s.device == 0) {
+                let fwd = Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket);
+                let bwd = Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket);
+                let _ = self.rt.warmup(&[fwd.as_str(), bwd.as_str()]);
+            }
+        }
+    }
+
+    /// Tell every alive worker its new shard of both layers so it can
+    /// pre-warm the bucket executables (bucket 0 = idle for that layer).
+    fn notify_shard_updates(&mut self) {
+        for layer in [1usize, 2usize] {
+            let shards = if layer == 1 { self.shards1.clone() } else { self.shards2.clone() };
+            for wi in 0..self.workers.len() {
+                if !self.workers[wi].alive {
+                    continue;
+                }
+                let msg = match shards.iter().find(|s| s.device == wi + 1) {
+                    Some(s) => Message::ShardUpdate {
+                        layer: layer as u8,
+                        lo: s.lo as u32,
+                        hi: s.hi as u32,
+                        bucket: s.bucket as u32,
+                    },
+                    None => Message::ShardUpdate { layer: layer as u8, lo: 0, hi: 0, bucket: 0 },
+                };
+                if self.workers[wi].link.send(&msg).is_err() {
+                    self.workers[wi].alive = false;
                 }
             }
         }
@@ -285,6 +551,7 @@ impl DistTrainer {
             breakdown: timer.breakdown,
             bytes_moved: self.total_bytes() - bytes0,
             devices: 1 + self.alive_workers(),
+            repartitioned: false,
         })
     }
 
@@ -323,6 +590,8 @@ impl DistTrainer {
         let mut slowest = Duration::ZERO;
         if let Some(s) = shards.iter().find(|s| s.device == 0) {
             let (y, secs) = self.local_conv_fwd(layer, s, x, w, b)?;
+            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket));
+            self.telemetry.record(0, secs.as_secs_f64(), flops as f64);
             slowest = slowest.max(secs);
             parts.push((s.lo, y));
         }
@@ -330,6 +599,8 @@ impl DistTrainer {
         for s in shards.iter().filter(|s| s.device != 0) {
             let (mut outputs, seconds) = self.recv_result(s.device - 1, seq)?;
             ensure!(outputs.len() == 1, "fwd ConvResult must carry 1 tensor");
+            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket));
+            self.telemetry.record(s.device, seconds, flops as f64);
             slowest = slowest.max(Duration::from_secs_f64(seconds));
             parts.push((s.lo, outputs.remove(0).into_tensor()?));
         }
@@ -377,6 +648,8 @@ impl DistTrainer {
         let mut slowest = Duration::ZERO;
         if let Some(s) = shards.iter().find(|s| s.device == 0) {
             let (gxp, gw, gb, secs) = self.local_conv_bwd(layer, s, x, w, gy)?;
+            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket));
+            self.telemetry.record(0, secs.as_secs_f64(), flops as f64);
             slowest = slowest.max(secs);
             gx.add_assign(&gxp)?;
             gw_parts.push((s.lo, gw));
@@ -385,6 +658,8 @@ impl DistTrainer {
         for s in shards.iter().filter(|s| s.device != 0) {
             let (outputs, seconds) = self.recv_result(s.device - 1, seq)?;
             ensure!(outputs.len() == 3, "bwd ConvResult must carry 3 tensors");
+            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket));
+            self.telemetry.record(s.device, seconds, flops as f64);
             slowest = slowest.max(Duration::from_secs_f64(seconds));
             let mut it = outputs.into_iter();
             // Partial input-cotangents sum (conv is linear in K).
@@ -476,10 +751,33 @@ impl DistTrainer {
     /// Receive the ConvResult for scatter round `seq` from `worker`,
     /// discarding stale replies left over from an aborted round (a worker
     /// death triggers re-partition + retry; survivors may still flush
-    /// results for the old round).
+    /// results for the old round).  In adaptive mode a `gather_timeout`
+    /// bounds the wait: a worker past the deadline is dropped from the
+    /// fleet (elastic membership) and the step retried without it.
     fn recv_result(&mut self, worker: usize, seq: u32) -> Result<(Vec<WireTensor>, f64)> {
+        let timeout = if self.adaptive.enabled { self.adaptive.gather_timeout } else { None };
         loop {
-            match self.recv_from(worker)? {
+            let msg = match timeout {
+                Some(d) => {
+                    let slot = &mut self.workers[worker];
+                    if !slot.alive {
+                        bail!("worker {worker} is dead");
+                    }
+                    match slot.link.recv_timeout(d) {
+                        Ok(Some(m)) => m,
+                        Ok(None) => {
+                            slot.alive = false;
+                            bail!("worker {worker} exceeded the {d:?} gather deadline; dropped");
+                        }
+                        Err(e) => {
+                            slot.alive = false;
+                            bail!("worker {worker} died on recv: {e:#}");
+                        }
+                    }
+                }
+                None => self.recv_from(worker)?,
+            };
+            match msg {
                 Message::ConvResult { seq: got, outputs, seconds } => {
                     if got == seq {
                         return Ok((outputs, seconds));
@@ -487,6 +785,11 @@ impl DistTrainer {
                     ensure!(got < seq, "worker {worker} replied from the future: {got} > {seq}");
                     // Stale reply from an aborted round: drop and re-read.
                 }
+                Message::Leave { reason, .. } => {
+                    self.workers[worker].alive = false;
+                    bail!("worker {worker} left the fleet: {reason}");
+                }
+                Message::Pong { .. } => { /* stale heartbeat reply: ignore */ }
                 Message::Error { reason } => bail!("worker failed: {reason}"),
                 other => bail!("expected ConvResult, got {}", other.tag()),
             }

@@ -21,7 +21,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use crate::devices::Throttle;
+use crate::devices::{Throttle, ThrottlePlan};
 use crate::net::{inproc_pair, Link, LinkModel, ShapedLink};
 use crate::runtime::Runtime;
 
@@ -45,12 +45,25 @@ pub fn spawn_inproc(
     throttles: &[Throttle],
     shape: Option<LinkModel>,
 ) -> InprocCluster {
+    let plans: Vec<ThrottlePlan> = throttles.iter().map(|&t| ThrottlePlan::fixed(t)).collect();
+    spawn_inproc_planned(artifacts, &plans, shape)
+}
+
+/// [`spawn_inproc`] with full throttle *plans*: a worker's emulated speed
+/// may change mid-run (`ThrottlePlan::degrade_after`), which is how the
+/// adaptive-scheduler tests and the `--adaptive` example make a calibrated
+/// fleet go out of balance on cue.
+pub fn spawn_inproc_planned(
+    artifacts: PathBuf,
+    plans: &[ThrottlePlan],
+    shape: Option<LinkModel>,
+) -> InprocCluster {
     let mut links: Vec<Box<dyn Link>> = Vec::new();
     let mut handles = Vec::new();
-    for (i, &throttle) in throttles.iter().enumerate() {
+    for (i, &plan) in plans.iter().enumerate() {
         let (master_end, worker_end) = inproc_pair();
         let dir = artifacts.clone();
-        let opts = WorkerOptions { worker_id: i as u32 + 1, throttle };
+        let opts = WorkerOptions::with_plan(i as u32 + 1, plan);
         let handle = std::thread::Builder::new()
             .name(format!("convdist-worker-{}", i + 1))
             .spawn(move || {

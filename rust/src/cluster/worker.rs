@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::devices::Throttle;
+use crate::devices::{Throttle, ThrottlePlan};
 use crate::net::Link;
 use crate::proto::{Message, WireTensor};
 use crate::runtime::{ConvDir, Manifest, Runtime};
@@ -30,8 +30,23 @@ use crate::tensor::{Tensor, Value};
 #[derive(Clone, Copy, Debug)]
 pub struct WorkerOptions {
     pub worker_id: u32,
-    /// Emulated device slowdown (see `devices::Throttle`).
-    pub throttle: Throttle,
+    /// Emulated device speed over time (see `devices::ThrottlePlan`); a
+    /// fixed `Throttle` converts with `.into()` or [`WorkerOptions::new`].
+    pub throttle: ThrottlePlan,
+    /// Scripted graceful departure: after serving this many ConvWork
+    /// frames, announce [`Message::Leave`] and exit — exercises the
+    /// master's elastic-membership path in tests and demos.
+    pub leave_after: Option<u64>,
+}
+
+impl WorkerOptions {
+    pub fn new(worker_id: u32, throttle: Throttle) -> Self {
+        Self { worker_id, throttle: ThrottlePlan::fixed(throttle), leave_after: None }
+    }
+
+    pub fn with_plan(worker_id: u32, plan: ThrottlePlan) -> Self {
+        Self { worker_id, throttle: plan, leave_after: None }
+    }
 }
 
 pub const PROTO_VERSION: u32 = 1;
@@ -39,6 +54,9 @@ pub const PROTO_VERSION: u32 = 1;
 /// Run the slave loop until `TrainOver` (or a protocol error).
 pub fn worker_loop(mut link: impl Link, rt: Arc<Runtime>, opts: WorkerOptions) -> Result<()> {
     link.send(&Message::Hello { worker_id: opts.worker_id, version: PROTO_VERSION })?;
+    // ConvWork frames served so far — drives the throttle plan (mid-run
+    // degradation) and the scripted departure.
+    let mut served: u64 = 0;
     loop {
         match link.recv()? {
             Message::Calibrate { rounds } => {
@@ -46,8 +64,17 @@ pub fn worker_loop(mut link: impl Link, rt: Arc<Runtime>, opts: WorkerOptions) -
                 link.send(&Message::CalibrateResult { seconds })?;
             }
             Message::ConvWork { seq, layer, dir, bucket, inputs, kernels, extra } => {
+                if matches!(opts.leave_after, Some(n) if served >= n) {
+                    link.send(&Message::Leave {
+                        worker_id: opts.worker_id,
+                        reason: "scheduled departure".into(),
+                    })?;
+                    return Ok(());
+                }
+                let throttle = opts.throttle.current(served);
+                served += 1;
                 let reply = compute_conv_work(
-                    &rt, opts.throttle, seq, layer, dir, bucket as usize, inputs, kernels, extra,
+                    &rt, throttle, seq, layer, dir, bucket as usize, inputs, kernels, extra,
                 );
                 match reply {
                     Ok(msg) => link.send(&msg)?,
@@ -55,6 +82,18 @@ pub fn worker_loop(mut link: impl Link, rt: Arc<Runtime>, opts: WorkerOptions) -
                         link.send(&Message::Error { reason: format!("worker {}: {e:#}", opts.worker_id) })?;
                         bail!("worker {} failed conv work: {e:#}", opts.worker_id);
                     }
+                }
+            }
+            Message::Ping { nonce } => link.send(&Message::Pong { nonce })?,
+            Message::ShardUpdate { layer, bucket, .. } => {
+                // Advisory: pre-warm the executables for the re-partitioned
+                // bucket so the next scatter is not billed preparation time
+                // (bucket recompiles stay off the hot path).  Best-effort —
+                // a bad layer/bucket only loses the prefetch.
+                if bucket > 0 && (layer == 1 || layer == 2) {
+                    let fwd = Manifest::conv_exec(layer as usize, ConvDir::Fwd, bucket as usize);
+                    let bwd = Manifest::conv_exec(layer as usize, ConvDir::Bwd, bucket as usize);
+                    let _ = rt.warmup(&[fwd.as_str(), bwd.as_str()]);
                 }
             }
             Message::AllOk => { /* batch acknowledged (Algorithm 2 line 18) */ }
@@ -78,10 +117,11 @@ fn run_probe(rt: &Runtime, opts: &WorkerOptions, rounds: u32) -> Result<f64> {
     rt.warmup(&["probe"])?;
     let _ = rt.execute("probe", &args)?; // absorb first-call effects
     let flops = rt.flops("probe");
+    let throttle = opts.throttle.current(0);
     let mut best = f64::MAX;
     for _ in 0..rounds.max(1) {
         let (_, real) = rt.execute_timed("probe", &args)?;
-        let padded = opts.throttle.pad(real, flops);
+        let padded = throttle.pad(real, flops);
         best = best.min(padded.as_secs_f64());
     }
     Ok(best)

@@ -261,4 +261,68 @@ mod tests {
         assert!((b.images.data()[0] - 1.0).abs() < 1e-6);
         std::fs::remove_dir_all(&dir).unwrap();
     }
+
+    /// Synthesize one CIFAR-10 binary record: label byte + 3072 pixel bytes
+    /// derived deterministically from `label` so round-trips are checkable.
+    fn forge_record(label: u8) -> Vec<u8> {
+        let mut rec = Vec::with_capacity(CifarBin::REC);
+        rec.push(label);
+        rec.extend((0..CifarBin::PX).map(|p| (p as u8).wrapping_mul(label.wrapping_add(1))));
+        rec
+    }
+
+    #[test]
+    fn cifar_bin_roundtrips_images_and_labels_across_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("convdist_cifar_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Two batch files, two records each, distinct labels — the loader
+        // must concatenate them in file order.
+        let labels: [[u8; 2]; 2] = [[0, 1], [7, 9]];
+        for (i, pair) in labels.iter().enumerate() {
+            let mut raw = Vec::new();
+            for &l in pair {
+                raw.extend(forge_record(l));
+            }
+            std::fs::write(dir.join(format!("data_batch_{}.bin", i + 1)), &raw).unwrap();
+        }
+        let mut ds = CifarBin::load_dir(&dir).unwrap();
+        assert_eq!(ds.len(), 4);
+        assert!(!ds.is_empty());
+        assert_eq!(ds.num_classes(), 10);
+        let b = ds.batch(4, 0).unwrap();
+        assert_eq!(b.images.shape(), &[4, 3, 32, 32]);
+        assert_eq!(b.labels.data(), &[0, 1, 7, 9]);
+        // Pixel round-trip: byte v maps to v/127.5 - 1 in NCHW plane order
+        // (the binary layout is already R, G, B planes).
+        for (rec_idx, &label) in [0u8, 1, 7, 9].iter().enumerate() {
+            let rec = forge_record(label);
+            let img = &b.images.data()[rec_idx * CifarBin::PX..(rec_idx + 1) * CifarBin::PX];
+            for (p, &v) in img.iter().enumerate() {
+                let expect = rec[1 + p] as f32 / 127.5 - 1.0;
+                assert!((v - expect).abs() < 1e-6, "record {rec_idx} pixel {p}");
+            }
+        }
+        // Wrap-around indexing is stable over steps.
+        let b2 = ds.batch(3, 1).unwrap();
+        assert_eq!(b2.labels.data(), &[9, 0, 1]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cifar_bin_rejects_truncated_and_missing_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("convdist_cifar_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Empty dir: no batches at all.
+        assert!(CifarBin::load_dir(&dir).is_err());
+        assert!(!CifarBin::available(&dir));
+        // A record cut short must be rejected, not silently zero-padded.
+        let mut raw = forge_record(5);
+        raw.extend_from_slice(&forge_record(6)[..CifarBin::REC - 100]);
+        std::fs::write(dir.join("data_batch_1.bin"), &raw).unwrap();
+        let err = CifarBin::load_dir(&dir).unwrap_err();
+        assert!(err.to_string().contains("not a CIFAR-10 binary"), "{err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 }

@@ -199,6 +199,50 @@ impl Throttle {
     }
 }
 
+/// A throttle *schedule*: the emulated device speed changes mid-run after a
+/// number of throttled conv calls — models thermal throttling, a co-tenant
+/// stealing the device, or recovery.  This is what exercises the adaptive
+/// scheduler: a fleet calibrated once goes out of balance when a plan
+/// switches, and the telemetry/policy loop has to win the time back.
+///
+/// Bookkeeping note: one distributed training step issues 4 conv calls per
+/// participating device (fwd + bwd for each of the two layers), so
+/// "degrade after N steps" is `switch_after = 4 * N`.
+#[derive(Clone, Copy, Debug)]
+pub struct ThrottlePlan {
+    pub initial: Throttle,
+    /// Conv calls served before `then` takes over.
+    pub switch_after: u64,
+    /// The throttle in force from call `switch_after` on (`None` = fixed).
+    pub then: Option<Throttle>,
+}
+
+impl ThrottlePlan {
+    /// A constant-speed device (the pre-adaptive behavior).
+    pub fn fixed(t: Throttle) -> Self {
+        Self { initial: t, switch_after: 0, then: None }
+    }
+
+    /// Run at `initial` for `calls` conv calls, then switch to `then`.
+    pub fn degrade_after(initial: Throttle, calls: u64, then: Throttle) -> Self {
+        Self { initial, switch_after: calls, then: Some(then) }
+    }
+
+    /// The throttle in force for the `calls`-th conv call (0-based).
+    pub fn current(&self, calls: u64) -> Throttle {
+        match self.then {
+            Some(t) if calls >= self.switch_after => t,
+            _ => self.initial,
+        }
+    }
+}
+
+impl From<Throttle> for ThrottlePlan {
+    fn from(t: Throttle) -> Self {
+        Self::fixed(t)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +310,31 @@ mod tests {
         assert_eq!(reported, Duration::from_millis(50));
         // None mode is a no-op.
         assert_eq!(Throttle::none().pad(Duration::from_millis(3), 1 << 40), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn throttle_plan_switches_at_the_scheduled_call() {
+        let fast = Throttle::virtual_gflops(2.0);
+        let slow = Throttle::virtual_gflops(0.25);
+        let plan = ThrottlePlan::degrade_after(fast, 12, slow);
+        for calls in [0u64, 5, 11] {
+            match plan.current(calls) {
+                Throttle::Virtual { gflops } => assert_eq!(gflops, 2.0),
+                other => panic!("expected fast Virtual, got {other:?}"),
+            }
+        }
+        for calls in [12u64, 13, 1000] {
+            match plan.current(calls) {
+                Throttle::Virtual { gflops } => assert_eq!(gflops, 0.25),
+                other => panic!("expected slow Virtual, got {other:?}"),
+            }
+        }
+        // A fixed plan never switches; `From<Throttle>` builds one.
+        let fixed: ThrottlePlan = Throttle::new(3.0).into();
+        match fixed.current(u64::MAX) {
+            Throttle::Relative(s) => assert_eq!(s, 3.0),
+            other => panic!("expected Relative, got {other:?}"),
+        }
     }
 
     #[test]

@@ -173,7 +173,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let listener = std::net::TcpListener::bind(listen)?;
     eprintln!("worker {id} listening on {listen} (slowdown {slowdown}x)");
     let link = TcpLink::accept_one(&listener)?;
-    let opts = WorkerOptions { worker_id: id, throttle: Throttle::new(slowdown.max(1.0)) };
+    let opts = WorkerOptions::new(id, Throttle::new(slowdown.max(1.0)));
     worker_loop(link, rt, opts)?;
     eprintln!("worker {id}: TrainOver received, shutting down");
     Ok(())

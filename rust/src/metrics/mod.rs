@@ -119,6 +119,40 @@ impl PhaseTimer {
     }
 }
 
+/// Adaptive-scheduler observability: re-partition events, membership churn
+/// and the latest per-device utilization — what a production operator
+/// watches to see the feedback loop working (ROADMAP north-star).  Filled
+/// by `cluster::master`, printed by examples and the CLI.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedStats {
+    /// Telemetry-driven Eq. 1 re-shards ordered by the policy.
+    pub repartitions: u64,
+    /// Workers dropped (error, timeout or graceful `Leave`).
+    pub departures: u64,
+    /// Straggler-detector hits (a device beyond k·σ of the fleet).
+    pub straggler_flags: u64,
+    /// `(device id, utilization in [0,1])` of the last examined step,
+    /// master first.  Utilization = busy time / step bottleneck.
+    pub utilization: Vec<(usize, f64)>,
+}
+
+impl fmt::Display for SchedStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "repartitions {}  departures {}  straggler flags {}  util",
+            self.repartitions, self.departures, self.straggler_flags
+        )?;
+        if self.utilization.is_empty() {
+            return write!(f, " n/a");
+        }
+        for (d, u) in &self.utilization {
+            write!(f, " dev{d}={:.0}%", 100.0 * u)?;
+        }
+        Ok(())
+    }
+}
+
 /// One figure/table row as emitted by the harness: label + series of
 /// (x, value) points; rendered as aligned text or CSV.
 #[derive(Clone, Debug)]
@@ -181,6 +215,20 @@ mod tests {
         assert!(t.breakdown.conv >= Duration::from_millis(5));
         assert_eq!(t.breakdown.comm, Duration::from_millis(7));
         assert_eq!(t.breakdown.comp, Duration::ZERO);
+    }
+
+    #[test]
+    fn sched_stats_display() {
+        let mut s = SchedStats::default();
+        assert_eq!(s.to_string(), "repartitions 0  departures 0  straggler flags 0  util n/a");
+        s.repartitions = 2;
+        s.departures = 1;
+        s.straggler_flags = 3;
+        s.utilization = vec![(0, 0.93), (2, 0.505)];
+        let out = s.to_string();
+        assert!(out.contains("repartitions 2"), "{out}");
+        assert!(out.contains("dev0=93%"), "{out}");
+        assert!(out.contains("dev2=50%"), "{out}");
     }
 
     #[test]

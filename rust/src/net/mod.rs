@@ -24,6 +24,15 @@ use crate::proto::{frame_len, read_frame, write_frame, Message};
 pub trait Link: Send {
     fn send(&mut self, msg: &Message) -> Result<()>;
     fn recv(&mut self) -> Result<Message>;
+    /// Receive with a deadline: `Ok(None)` means nothing arrived in time
+    /// (the link is still healthy).  The default implementation blocks —
+    /// transports that can wait a bounded time (in-proc) override it.  TCP
+    /// deliberately keeps blocking semantics: a frame read is not
+    /// restartable mid-stream, so a socket deadline would corrupt the link;
+    /// worker death there surfaces as a connection error instead.
+    fn recv_timeout(&mut self, _timeout: Duration) -> Result<Option<Message>> {
+        self.recv().map(Some)
+    }
     /// Cumulative bytes sent + received (Eq. 2 accounting).
     fn bytes_moved(&self) -> u64;
 }
@@ -62,6 +71,18 @@ impl Link for InProcLink {
         let buf = self.rx.recv().map_err(|_| anyhow::anyhow!("in-proc peer hung up"))?;
         self.bytes += buf.len() as u64;
         read_frame(&mut std::io::Cursor::new(buf))
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(timeout) {
+            Ok(buf) => {
+                self.bytes += buf.len() as u64;
+                read_frame(&mut std::io::Cursor::new(buf)).map(Some)
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!("in-proc peer hung up")),
+        }
     }
 
     fn bytes_moved(&self) -> u64 {
@@ -176,6 +197,10 @@ impl<L: Link> Link for ShapedLink<L> {
         self.inner.recv()
     }
 
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        self.inner.recv_timeout(timeout)
+    }
+
     fn bytes_moved(&self) -> u64 {
         self.inner.bytes_moved()
     }
@@ -193,6 +218,20 @@ mod tests {
         b.send(&Message::AllOk).unwrap();
         assert_eq!(a.recv().unwrap(), Message::AllOk);
         assert!(a.bytes_moved() > 0);
+    }
+
+    #[test]
+    fn inproc_recv_timeout_expires_and_still_delivers() {
+        let (mut a, mut b) = inproc_pair();
+        // Nothing queued: times out cleanly, link stays healthy.
+        let got = a.recv_timeout(Duration::from_millis(20)).unwrap();
+        assert!(got.is_none());
+        b.send(&Message::AllOk).unwrap();
+        let got = a.recv_timeout(Duration::from_millis(200)).unwrap();
+        assert_eq!(got, Some(Message::AllOk));
+        // Peer gone: error, not a silent timeout.
+        drop(b);
+        assert!(a.recv_timeout(Duration::from_millis(20)).is_err());
     }
 
     #[test]

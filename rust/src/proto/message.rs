@@ -107,6 +107,21 @@ pub enum Message {
     TrainOver,
     /// Either direction: fatal error with reason.
     Error { reason: String },
+    /// Master -> slave: liveness heartbeat; the slave echoes `nonce` in
+    /// [`Message::Pong`].  An unresponsive slave is dropped from the fleet
+    /// (elastic membership — beyond the paper's protocol).
+    Ping { nonce: u32 },
+    /// Slave -> master: heartbeat reply.
+    Pong { nonce: u32 },
+    /// Slave -> master: graceful departure.  The master re-absorbs the
+    /// slave's kernel range into the survivors and retries the batch.
+    Leave { worker_id: u32, reason: String },
+    /// Master -> slave after a re-partition: the slave's new shard of
+    /// `layer` (`[lo, hi)`, compiled bucket `bucket`; `bucket == 0` means
+    /// no shard — the slave idles for that layer).  Purely advisory: the
+    /// slave pre-warms the bucket executables so the re-sharded fleet does
+    /// not pay preparation time on the next scatter.
+    ShardUpdate { layer: u8, lo: u32, hi: u32, bucket: u32 },
 }
 
 const ID_HELLO: u8 = 0x01;
@@ -117,6 +132,10 @@ const ID_CONV_RESULT: u8 = 0x05;
 const ID_ALL_OK: u8 = 0x06;
 const ID_TRAIN_OVER: u8 = 0x07;
 const ID_ERROR: u8 = 0x08;
+const ID_PING: u8 = 0x09;
+const ID_PONG: u8 = 0x0A;
+const ID_LEAVE: u8 = 0x0B;
+const ID_SHARD_UPDATE: u8 = 0x0C;
 
 impl Message {
     /// -> (message id, payload bytes)
@@ -164,6 +183,26 @@ impl Message {
                 out.extend_from_slice(reason.as_bytes());
                 (ID_ERROR, out)
             }
+            Message::Ping { nonce } => {
+                out.extend_from_slice(&nonce.to_le_bytes());
+                (ID_PING, out)
+            }
+            Message::Pong { nonce } => {
+                out.extend_from_slice(&nonce.to_le_bytes());
+                (ID_PONG, out)
+            }
+            Message::Leave { worker_id, reason } => {
+                out.extend_from_slice(&worker_id.to_le_bytes());
+                out.extend_from_slice(reason.as_bytes());
+                (ID_LEAVE, out)
+            }
+            Message::ShardUpdate { layer, lo, hi, bucket } => {
+                out.push(*layer);
+                out.extend_from_slice(&lo.to_le_bytes());
+                out.extend_from_slice(&hi.to_le_bytes());
+                out.extend_from_slice(&bucket.to_le_bytes());
+                (ID_SHARD_UPDATE, out)
+            }
         }
     }
 
@@ -210,6 +249,24 @@ impl Message {
             ID_ALL_OK => Message::AllOk,
             ID_TRAIN_OVER => Message::TrainOver,
             ID_ERROR => Message::Error { reason: String::from_utf8_lossy(buf).into_owned() },
+            ID_PING => Message::Ping { nonce: take_u32(buf, &mut pos)? },
+            ID_PONG => Message::Pong { nonce: take_u32(buf, &mut pos)? },
+            ID_LEAVE => {
+                let worker_id = take_u32(buf, &mut pos)?;
+                let reason = String::from_utf8_lossy(&buf[pos..]).into_owned();
+                Message::Leave { worker_id, reason }
+            }
+            ID_SHARD_UPDATE => {
+                ensure!(!buf.is_empty(), "ShardUpdate missing layer");
+                let layer = buf[pos];
+                pos += 1;
+                Message::ShardUpdate {
+                    layer,
+                    lo: take_u32(buf, &mut pos)?,
+                    hi: take_u32(buf, &mut pos)?,
+                    bucket: take_u32(buf, &mut pos)?,
+                }
+            }
             other => bail!("unknown message id {other:#x}"),
         };
         Ok(msg)
@@ -226,6 +283,10 @@ impl Message {
             Message::AllOk => "AllOk",
             Message::TrainOver => "TrainOver",
             Message::Error { .. } => "Error",
+            Message::Ping { .. } => "Ping",
+            Message::Pong { .. } => "Pong",
+            Message::Leave { .. } => "Leave",
+            Message::ShardUpdate { .. } => "ShardUpdate",
         }
     }
 }

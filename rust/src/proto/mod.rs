@@ -56,6 +56,10 @@ mod tests {
             Message::AllOk,
             Message::TrainOver,
             Message::Error { reason: "boom".into() },
+            Message::Ping { nonce: 77 },
+            Message::Pong { nonce: 77 },
+            Message::Leave { worker_id: 2, reason: "preempted".into() },
+            Message::ShardUpdate { layer: 2, lo: 6, hi: 16, bucket: 12 },
         ];
         for m in msgs {
             assert_eq!(roundtrip(&m), m);

@@ -1,0 +1,381 @@
+//! Feedback-driven re-partitioning policy — the adaptive half of the
+//! scheduler.
+//!
+//! The paper computes the Eq. 1 partition **once**, from a static
+//! calibration probe, and assumes device speeds never change.  This module
+//! closes the loop: given the *smoothed observed* per-device rates from
+//! [`super::telemetry`], [`AdaptivePolicy`] predicts what a fresh Eq. 1
+//! partition would cost (the simulator's bottleneck model, applied to the
+//! live tables) and orders a re-shard only when the predicted payoff
+//! clears a configurable threshold — with hysteresis and a cooldown so
+//! bucket changes (and the executable warmups they trigger) stay rare.
+//!
+//! The policy is deliberately side-effect free: it returns a [`Decision`]
+//! and the master (or the simulator in `sim::trajectory`) applies it.
+//! That separation is what lets `sim` predict the payoff of adaptation
+//! offline with the *same* decision logic the live cluster runs.
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use super::partition::{partition_layer, Shard};
+
+/// Knobs of the adaptive scheduler.  `Default` is the enabled configuration
+/// used by `--adaptive` runs; [`AdaptiveConfig::disabled`] is the static
+/// paper behavior (and the `DistTrainer::new` default).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Master switch: when false the scheduler is the paper's static Eq. 1
+    /// partition — no telemetry-driven re-shards, no heartbeats, no gather
+    /// deadlines (shard tables and numerics identical to the static path).
+    pub enabled: bool,
+    /// EWMA weight of the newest timing sample (0 < alpha <= 1).
+    pub alpha: f64,
+    /// Steps to observe before the policy may order its first re-shard.
+    pub warmup_steps: u64,
+    /// Re-partition when predicted step-time gain exceeds `1 + threshold`.
+    pub imbalance_threshold: f64,
+    /// After a trigger, the predicted gain must first fall back below
+    /// `1 + threshold - hysteresis` before the policy re-arms — keeps a
+    /// gain hovering at the threshold from re-triggering every cooldown.
+    pub hysteresis: f64,
+    /// Minimum steps between re-partitions.
+    pub cooldown_steps: u64,
+    /// Straggler flag: EWMA rate beyond `k`·σ above the fleet mean…
+    pub straggler_k: f64,
+    /// …and beyond this multiple of the fleet median (σ-noise guard).
+    pub straggler_min_ratio: f64,
+    /// Ping workers every this many steps (0 = no heartbeats).
+    pub heartbeat_every: u64,
+    /// A worker that does not `Pong` within this window is dropped.
+    ///
+    /// Deadline caveat (applies to `gather_timeout` too): the window is
+    /// enforced only on transports whose `Link::recv_timeout` supports
+    /// bounded waits — in-proc links do; `TcpLink` deliberately keeps
+    /// blocking reads (a frame read is not restartable mid-stream), so
+    /// over TCP a wedged-but-connected worker is only detected when the
+    /// socket errors.
+    pub heartbeat_timeout: Duration,
+    /// Optional per-result deadline during gather: a worker that exceeds it
+    /// is dropped and the step retried on the survivors (elastic
+    /// membership).  `None` = wait forever, as the static path does.  See
+    /// the transport caveat on [`AdaptiveConfig::heartbeat_timeout`].
+    pub gather_timeout: Option<Duration>,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            alpha: 0.4,
+            warmup_steps: 2,
+            imbalance_threshold: 0.25,
+            hysteresis: 0.10,
+            cooldown_steps: 3,
+            straggler_k: 1.0,
+            straggler_min_ratio: 2.0,
+            heartbeat_every: 8,
+            heartbeat_timeout: Duration::from_secs(5),
+            gather_timeout: None,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// The static paper behavior (the `DistTrainer::new` default).
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// One conv layer as the policy sees it: geometry plus the current table.
+pub struct LayerPlan<'a> {
+    /// Kernels in the layer's K axis.
+    pub k: usize,
+    /// Compiled shard buckets.
+    pub buckets: &'a [usize],
+    /// The shard table currently in force.
+    pub current: &'a [Shard],
+    /// FLOPs of one kernel (forward is fine — constant training factors
+    /// scale every layer equally and cancel in the gain ratio's spirit;
+    /// what matters is the relative layer weight).
+    pub flops_per_kernel: f64,
+}
+
+/// What the policy wants done after a step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    Keep,
+    /// New shard tables, one per [`LayerPlan`] in call order, with `device`
+    /// already remapped to fleet device ids.
+    Repartition(Vec<Vec<Shard>>),
+}
+
+/// Predicted cost of a set of shard tables under per-device rates
+/// (seconds per FLOP, indexable by `Shard::device`): each layer finishes
+/// with its slowest bucketed shard, layers run back to back.
+pub fn predicted_cost(tables: &[&[Shard]], plans: &[LayerPlan], rate_of: &[f64]) -> f64 {
+    tables
+        .iter()
+        .zip(plans)
+        .map(|(t, p)| {
+            t.iter()
+                .map(|s| {
+                    let r = rate_of.get(s.device).copied().unwrap_or(f64::INFINITY);
+                    s.bucket as f64 * p.flops_per_kernel * r
+                })
+                .fold(0.0, f64::max)
+        })
+        .sum()
+}
+
+/// Per-device utilization of the current tables: the fraction of the
+/// predicted step bottleneck each device spends busy.  Aligned with
+/// `active`; 1.0 = the device is the bottleneck everywhere, 0.0 = idle.
+pub fn utilization(plans: &[LayerPlan], active: &[usize], rates: &[f64]) -> Vec<f64> {
+    let mut busy = vec![0.0f64; active.len()];
+    let mut denom = 0.0f64;
+    for p in plans {
+        let mut layer_max = 0.0f64;
+        for s in p.current {
+            if let Some(pos) = active.iter().position(|&d| d == s.device) {
+                let t = s.bucket as f64 * p.flops_per_kernel * rates[pos];
+                busy[pos] += t;
+                layer_max = layer_max.max(t);
+            }
+        }
+        denom += layer_max;
+    }
+    if denom <= 0.0 || !denom.is_finite() {
+        return vec![0.0; active.len()];
+    }
+    busy.into_iter().map(|b| (b / denom).clamp(0.0, 1.0)).collect()
+}
+
+/// The re-partitioning state machine (threshold + hysteresis + cooldown).
+#[derive(Clone, Debug)]
+pub struct AdaptivePolicy {
+    cfg: AdaptiveConfig,
+    last_repartition: Option<u64>,
+    armed: bool,
+}
+
+impl AdaptivePolicy {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        Self { cfg, last_repartition: None, armed: true }
+    }
+
+    pub fn config(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    pub fn last_repartition(&self) -> Option<u64> {
+        self.last_repartition
+    }
+
+    /// Consult the policy after step `step`.  `active` lists the alive
+    /// device ids, `rates` their smoothed seconds-per-GFLOP (same order).
+    /// Returns `Keep`, or `Repartition` with fresh Eq. 1 tables computed
+    /// over the observed rates, when all of the following hold: the warmup
+    /// is over, the cooldown since the last re-shard has elapsed, the
+    /// policy is armed (hysteresis) and the predicted gain of the candidate
+    /// tables exceeds `1 + imbalance_threshold`.
+    pub fn decide(
+        &mut self,
+        step: u64,
+        plans: &[LayerPlan],
+        active: &[usize],
+        rates: &[f64],
+    ) -> Result<Decision> {
+        ensure!(active.len() == rates.len(), "active/rates length mismatch");
+        if !self.cfg.enabled || active.len() < 2 || step < self.cfg.warmup_steps {
+            return Ok(Decision::Keep);
+        }
+        // Rates indexable by device id (the current tables name devices by
+        // fleet id, not by position in `active`).
+        let max_dev = active.iter().copied().max().unwrap_or(0);
+        let mut by_dev = vec![f64::INFINITY; max_dev + 1];
+        for (&d, &r) in active.iter().zip(rates) {
+            by_dev[d] = r;
+        }
+        // Candidate tables: Eq. 1 over the smoothed observed rates.
+        let mut candidate: Vec<Vec<Shard>> = Vec::with_capacity(plans.len());
+        for p in plans {
+            let mut shards = partition_layer(p.k, rates, p.buckets)?;
+            for s in &mut shards {
+                s.device = active[s.device];
+            }
+            candidate.push(shards);
+        }
+        let now: Vec<&[Shard]> = plans.iter().map(|p| p.current).collect();
+        let cand: Vec<&[Shard]> = candidate.iter().map(|c| c.as_slice()).collect();
+        let cost_now = predicted_cost(&now, plans, &by_dev);
+        let cost_new = predicted_cost(&cand, plans, &by_dev);
+        if !cost_new.is_finite() || cost_new <= 0.0 {
+            return Ok(Decision::Keep);
+        }
+        // `cost_now` may be +inf (a dead device still in the table): the
+        // gain is then +inf and the re-shard fires unconditionally.
+        let gain = cost_now / cost_new;
+        if gain <= 1.0 + (self.cfg.imbalance_threshold - self.cfg.hysteresis).max(0.0) {
+            self.armed = true;
+        }
+        let cooled = match self.last_repartition {
+            None => true,
+            Some(at) => step.saturating_sub(at) >= self.cfg.cooldown_steps,
+        };
+        if self.armed && cooled && gain > 1.0 + self.cfg.imbalance_threshold {
+            self.armed = false;
+            self.last_repartition = Some(step);
+            return Ok(Decision::Repartition(candidate));
+        }
+        Ok(Decision::Keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FPK1: f64 = 7.5e6;
+    const FPK2: f64 = 5.1e6;
+
+    fn table(k: usize, buckets: &[usize], rates: &[f64]) -> Vec<Shard> {
+        partition_layer(k, rates, buckets).unwrap()
+    }
+
+    fn plans<'a>(
+        b1: &'a [usize],
+        b2: &'a [usize],
+        t1: &'a [Shard],
+        t2: &'a [Shard],
+    ) -> [LayerPlan<'a>; 2] {
+        [
+            LayerPlan { k: 16, buckets: b1, current: t1, flops_per_kernel: FPK1 },
+            LayerPlan { k: 32, buckets: b2, current: t2, flops_per_kernel: FPK2 },
+        ]
+    }
+
+    #[test]
+    fn keeps_when_balanced() {
+        let (b1, b2) = (vec![4, 8, 12, 16], vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let rates = [1.0, 1.0, 1.0, 1.0];
+        let (t1, t2) = (table(16, &b1, &rates), table(32, &b2, &rates));
+        let mut p = AdaptivePolicy::new(AdaptiveConfig { warmup_steps: 0, ..Default::default() });
+        let d = p.decide(5, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &rates).unwrap();
+        assert_eq!(d, Decision::Keep);
+    }
+
+    #[test]
+    fn repartitions_on_8x_degradation_then_cools_down() {
+        let (b1, b2) = (vec![4, 8, 12, 16], vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let even = [1.0, 1.0, 1.0, 1.0];
+        let (t1, t2) = (table(16, &b1, &even), table(32, &b2, &even));
+        let degraded = [1.0, 8.0, 1.0, 1.0];
+        let cfg = AdaptiveConfig { warmup_steps: 0, cooldown_steps: 3, ..Default::default() };
+        let mut p = AdaptivePolicy::new(cfg);
+        let d = p.decide(4, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &degraded).unwrap();
+        let Decision::Repartition(tables) = d else { panic!("must repartition, got {d:?}") };
+        assert_eq!(tables.len(), 2);
+        // The slow device's layer-2 shard shrank.
+        let old = t2.iter().find(|s| s.device == 1).unwrap().len();
+        let new = tables[1].iter().find(|s| s.device == 1).map_or(0, |s| s.len());
+        assert!(new < old, "slow device shard must shrink: {old} -> {new}");
+        // Applying the candidate leaves nothing to gain: Keep…
+        let d2 = p
+            .decide(5, &plans(&b1, &b2, &tables[0], &tables[1]), &[0, 1, 2, 3], &degraded)
+            .unwrap();
+        assert_eq!(d2, Decision::Keep);
+        // …and even a *new* imbalance stays parked until the cooldown ends.
+        let degraded2 = [1.0, 8.0, 8.0, 1.0];
+        let d3 = p
+            .decide(6, &plans(&b1, &b2, &tables[0], &tables[1]), &[0, 1, 2, 3], &degraded2)
+            .unwrap();
+        assert_eq!(d3, Decision::Keep, "cooldown must hold");
+        let d4 = p
+            .decide(7, &plans(&b1, &b2, &tables[0], &tables[1]), &[0, 1, 2, 3], &degraded2)
+            .unwrap();
+        assert!(matches!(d4, Decision::Repartition(_)), "cooldown elapsed");
+    }
+
+    #[test]
+    fn hysteresis_requires_rearm_before_second_trigger() {
+        let (b1, b2) = (vec![4, 8, 12, 16], vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let even = [1.0, 1.0, 1.0, 1.0];
+        let (t1, t2) = (table(16, &b1, &even), table(32, &b2, &even));
+        let degraded = [1.0, 8.0, 1.0, 1.0];
+        let cfg = AdaptiveConfig { warmup_steps: 0, cooldown_steps: 0, ..Default::default() };
+        let mut p = AdaptivePolicy::new(cfg);
+        let d = p.decide(0, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &degraded).unwrap();
+        assert!(matches!(d, Decision::Repartition(_)));
+        // The master ignores the decision (tables unchanged), so the gain
+        // stays above the threshold: disarmed, no second trigger even with
+        // a zero cooldown.
+        let d2 = p.decide(1, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &degraded).unwrap();
+        assert_eq!(d2, Decision::Keep, "must stay disarmed while gain is high");
+        // Gain returns to ~1 (balance restored): re-arms…
+        let d3 = p.decide(2, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &even).unwrap();
+        assert_eq!(d3, Decision::Keep);
+        // …so the next imbalance triggers again.
+        let d4 = p.decide(3, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &degraded).unwrap();
+        assert!(matches!(d4, Decision::Repartition(_)));
+    }
+
+    #[test]
+    fn dead_device_in_table_forces_repartition() {
+        let (b1, b2) = (vec![4, 8, 12, 16], vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let even = [1.0, 1.0, 1.0, 1.0];
+        let (t1, t2) = (table(16, &b1, &even), table(32, &b2, &even));
+        // Device 3 vanished from `active`: its shard cost is +inf.
+        let mut p = AdaptivePolicy::new(AdaptiveConfig { warmup_steps: 0, ..Default::default() });
+        let d = p.decide(9, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2], &[1.0, 1.0, 1.0]).unwrap();
+        let Decision::Repartition(tables) = d else { panic!("must evict the dead device") };
+        assert!(tables.iter().flatten().all(|s| s.device != 3));
+        assert_eq!(tables[0].iter().map(|s| s.len()).sum::<usize>(), 16);
+        assert_eq!(tables[1].iter().map(|s| s.len()).sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn warmup_blocks_early_decisions() {
+        let (b1, b2) = (vec![4, 8, 12, 16], vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let even = [1.0, 1.0, 1.0, 1.0];
+        let (t1, t2) = (table(16, &b1, &even), table(32, &b2, &even));
+        let degraded = [1.0, 8.0, 1.0, 1.0];
+        let mut p = AdaptivePolicy::new(AdaptiveConfig { warmup_steps: 3, ..Default::default() });
+        for step in 0..3 {
+            let d = p.decide(step, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &degraded).unwrap();
+            assert_eq!(d, Decision::Keep, "step {step} is inside the warmup");
+        }
+        let d = p.decide(3, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &degraded).unwrap();
+        assert!(matches!(d, Decision::Repartition(_)));
+    }
+
+    #[test]
+    fn disabled_policy_always_keeps() {
+        let (b1, b2) = (vec![4, 8, 12, 16], vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let even = [1.0, 1.0, 1.0, 1.0];
+        let (t1, t2) = (table(16, &b1, &even), table(32, &b2, &even));
+        let mut p = AdaptivePolicy::new(AdaptiveConfig::disabled());
+        let d = p
+            .decide(100, &plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &[1.0, 50.0, 1.0, 1.0])
+            .unwrap();
+        assert_eq!(d, Decision::Keep);
+    }
+
+    #[test]
+    fn utilization_balanced_fleet_is_high_everywhere() {
+        let (b1, b2) = (vec![4, 8, 12, 16], vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let even = [1.0, 1.0, 1.0, 1.0];
+        let (t1, t2) = (table(16, &b1, &even), table(32, &b2, &even));
+        let u = utilization(&plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &even);
+        assert_eq!(u.len(), 4);
+        assert!(u.iter().all(|&x| (0.99..=1.0).contains(&x)), "balanced util {u:?}");
+        // Degrade a device without re-sharding: it becomes the bottleneck
+        // (util 1.0) while everyone else idles at the barrier.
+        let degraded = [1.0, 8.0, 1.0, 1.0];
+        let u2 = utilization(&plans(&b1, &b2, &t1, &t2), &[0, 1, 2, 3], &degraded);
+        assert!(u2[1] > 0.99, "straggler busy the whole step: {u2:?}");
+        assert!(u2[0] < 0.2, "healthy devices stall at the barrier: {u2:?}");
+    }
+}

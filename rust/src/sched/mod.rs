@@ -1,221 +1,29 @@
-//! Workload partitioner — Eq. 1 of the paper.
+//! Scheduling: Eq. 1 workload partitioning plus the adaptive feedback loop
+//! built on top of it.
 //!
-//! Given per-device probe times `t_i`, the share of the conv workload for
-//! device `i` is
+//! * [`partition`] — the paper's static partitioner: Eq. 1 shares from
+//!   probe times, largest-remainder apportionment into contiguous kernel
+//!   shards, bucket fitting (DESIGN.md §3).
+//! * [`telemetry`] — per-device EWMA timing telemetry fed by the master's
+//!   gather loop: seconds-per-GFLOP rates, EW variance, straggler flags.
+//! * [`adaptive`] — the re-partitioning policy: predicts the payoff of a
+//!   fresh Eq. 1 split over the *smoothed observed* rates and orders a
+//!   re-shard behind threshold + hysteresis + cooldown (DESIGN.md §5).
 //!
-//! ```text
-//!          max(t)/t_i
-//! w_i = ----------------          (Eq. 1)
-//!        Σ_j max(t)/t_j
-//! ```
-//!
-//! i.e. proportional to relative speed.  The partitioner turns those shares
-//! into integer *kernel shard* ranges `[lo, hi)` over a conv layer's K axis,
-//! then rounds each shard up to the nearest compiled bucket (HLO shapes are
-//! static — DESIGN.md §3) with zero-padding.
+//! The split keeps policy and mechanism separate: `partition` is pure
+//! math, `telemetry` pure measurement, `adaptive` a side-effect-free state
+//! machine.  `cluster::master` wires them to the live fleet and
+//! `sim::trajectory` runs the identical policy offline for what-if
+//! payoff prediction.
 
-use anyhow::{ensure, Result};
+mod adaptive;
+mod partition;
+mod telemetry;
 
-/// Eq. 1: normalized workload shares from probe times (seconds).
-pub fn workload_shares(probe_times: &[f64]) -> Result<Vec<f64>> {
-    ensure!(!probe_times.is_empty(), "no devices");
-    ensure!(
-        probe_times.iter().all(|&t| t.is_finite() && t > 0.0),
-        "probe times must be positive and finite: {probe_times:?}"
-    );
-    let tmax = probe_times.iter().cloned().fold(f64::MIN, f64::max);
-    let inv: Vec<f64> = probe_times.iter().map(|&t| tmax / t).collect();
-    let total: f64 = inv.iter().sum();
-    Ok(inv.iter().map(|&v| v / total).collect())
-}
-
-/// A contiguous kernel shard assigned to one device.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Shard {
-    /// Device index (0 = master itself — Algorithm 1 convolves on the
-    /// master too, lines 15–17).
-    pub device: usize,
-    /// Kernel range `[lo, hi)` in the layer's K axis.
-    pub lo: usize,
-    pub hi: usize,
-    /// Compiled bucket the shard executes under (`hi - lo <= bucket`);
-    /// kernels are zero-padded up to this and outputs sliced back down.
-    pub bucket: usize,
-}
-
-impl Shard {
-    pub fn len(&self) -> usize {
-        self.hi - self.lo
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.hi == self.lo
-    }
-
-    /// Fraction of the executed bucket that is padding waste.
-    pub fn waste(&self) -> f64 {
-        if self.bucket == 0 {
-            0.0
-        } else {
-            1.0 - self.len() as f64 / self.bucket as f64
-        }
-    }
-}
-
-/// Largest-remainder apportionment of `k` kernels by `shares` — exact sum,
-/// no device starved unless its share rounds to zero kernels and `k` is
-/// smaller than the device count.
-pub fn apportion(k: usize, shares: &[f64]) -> Result<Vec<usize>> {
-    ensure!(!shares.is_empty(), "no shares");
-    let sum: f64 = shares.iter().sum();
-    ensure!((sum - 1.0).abs() < 1e-6, "shares must sum to 1, got {sum}");
-    let raw: Vec<f64> = shares.iter().map(|s| s * k as f64).collect();
-    let mut counts: Vec<usize> = raw.iter().map(|r| r.floor() as usize).collect();
-    let mut rem: usize = k - counts.iter().sum::<usize>();
-    // Hand out the remainder by descending fractional part (stable order on
-    // ties so the split is deterministic).
-    let mut idx: Vec<usize> = (0..shares.len()).collect();
-    idx.sort_by(|&a, &b| {
-        let fa = raw[a] - raw[a].floor();
-        let fb = raw[b] - raw[b].floor();
-        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
-    });
-    let mut pos = 0usize;
-    while rem > 0 {
-        counts[idx[pos % idx.len()]] += 1;
-        rem -= 1;
-        pos += 1;
-    }
-    debug_assert_eq!(counts.iter().sum::<usize>(), k);
-    Ok(counts)
-}
-
-/// Round `n` up to the smallest bucket that fits; error if none does.
-pub fn fit_bucket(n: usize, buckets: &[usize]) -> Result<usize> {
-    buckets
-        .iter()
-        .copied()
-        .filter(|&b| b >= n)
-        .min()
-        .ok_or_else(|| anyhow::anyhow!("no bucket fits shard of {n} (buckets {buckets:?})"))
-}
-
-/// Full partition of one conv layer: Eq. 1 shares -> contiguous shard ranges
-/// -> bucket assignment.  Devices whose share rounds to zero kernels get no
-/// shard (they simply idle for that layer).
-pub fn partition_layer(k: usize, probe_times: &[f64], buckets: &[usize]) -> Result<Vec<Shard>> {
-    let shares = workload_shares(probe_times)?;
-    let counts = apportion(k, &shares)?;
-    let mut shards = Vec::new();
-    let mut lo = 0usize;
-    for (device, &n) in counts.iter().enumerate() {
-        if n == 0 {
-            continue;
-        }
-        let bucket = fit_bucket(n, buckets)?;
-        shards.push(Shard { device, lo, hi: lo + n, bucket });
-        lo += n;
-    }
-    ensure!(lo == k, "partition covers {lo} of {k} kernels");
-    Ok(shards)
-}
-
-/// Predicted *relative* conv time of a partition: every device runs in
-/// parallel, each takes `bucket_i * t_i` (bucketed work at that device's
-/// speed); the layer finishes when the slowest shard does.  Used by tests to
-/// assert Eq. 1 actually balances and by the simulator for what-if splits.
-pub fn bottleneck_cost(shards: &[Shard], probe_times: &[f64]) -> f64 {
-    shards
-        .iter()
-        .map(|s| s.bucket as f64 * probe_times[s.device])
-        .fold(0.0, f64::max)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn eq1_matches_paper_example() {
-        // Paper §4.1.1: devices finishing in 10s and 20s get performance
-        // values [2, 1] -> shares [2/3, 1/3].
-        let shares = workload_shares(&[10.0, 20.0]).unwrap();
-        assert!((shares[0] - 2.0 / 3.0).abs() < 1e-12);
-        assert!((shares[1] - 1.0 / 3.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn equal_devices_split_equally() {
-        let shares = workload_shares(&[5.0; 4]).unwrap();
-        for s in shares {
-            assert!((s - 0.25).abs() < 1e-12);
-        }
-        let counts = apportion(100, &[0.25; 4]).unwrap();
-        assert_eq!(counts, vec![25; 4]);
-    }
-
-    #[test]
-    fn apportion_exact_sum_with_awkward_shares() {
-        let shares = workload_shares(&[1.0, 2.0, 3.0, 7.0]).unwrap();
-        let counts = apportion(50, &shares).unwrap();
-        assert_eq!(counts.iter().sum::<usize>(), 50);
-        // Fastest device (t=1) must get the most kernels.
-        assert!(counts[0] > counts[3]);
-    }
-
-    #[test]
-    fn partition_covers_layer_without_overlap() {
-        let buckets = [4, 8, 12, 16, 20, 24, 28, 32];
-        let shards = partition_layer(32, &[1.0, 2.0, 4.0], &buckets).unwrap();
-        let mut covered = 0;
-        let mut prev_hi = 0;
-        for s in &shards {
-            assert_eq!(s.lo, prev_hi, "shards must tile contiguously");
-            assert!(s.len() <= s.bucket);
-            prev_hi = s.hi;
-            covered += s.len();
-        }
-        assert_eq!(covered, 32);
-    }
-
-    #[test]
-    fn tiny_layer_fewer_kernels_than_devices() {
-        let buckets = [1, 2, 3];
-        let shards = partition_layer(2, &[1.0, 1.0, 1.0], &buckets).unwrap();
-        let total: usize = shards.iter().map(|s| s.len()).sum();
-        assert_eq!(total, 2);
-        assert!(shards.len() <= 2, "at most 2 non-empty shards for 2 kernels");
-    }
-
-    #[test]
-    fn balanced_beats_naive_on_heterogeneous_devices() {
-        // Paper §4.1.1's argument: equal split on a 2x-speed pair is slower
-        // than the Eq. 1 split.
-        let times = [10.0, 20.0];
-        let buckets: Vec<usize> = (1..=30).collect();
-        let balanced = partition_layer(30, &times, &buckets).unwrap();
-        let naive = vec![
-            Shard { device: 0, lo: 0, hi: 15, bucket: 15 },
-            Shard { device: 1, lo: 15, hi: 30, bucket: 15 },
-        ];
-        assert!(
-            bottleneck_cost(&balanced, &times) < bottleneck_cost(&naive, &times),
-            "Eq.1 split must beat equal split"
-        );
-    }
-
-    #[test]
-    fn rejects_bad_probe_times() {
-        assert!(workload_shares(&[]).is_err());
-        assert!(workload_shares(&[1.0, 0.0]).is_err());
-        assert!(workload_shares(&[1.0, f64::NAN]).is_err());
-        assert!(workload_shares(&[1.0, -2.0]).is_err());
-    }
-
-    #[test]
-    fn fit_bucket_picks_smallest_sufficient() {
-        assert_eq!(fit_bucket(5, &[4, 8, 16]).unwrap(), 8);
-        assert_eq!(fit_bucket(8, &[4, 8, 16]).unwrap(), 8);
-        assert!(fit_bucket(17, &[4, 8, 16]).is_err());
-    }
-}
+pub use adaptive::{
+    predicted_cost, utilization, AdaptiveConfig, AdaptivePolicy, Decision, LayerPlan,
+};
+pub use partition::{
+    apportion, bottleneck_cost, fit_bucket, partition_layer, workload_shares, Shard, ShardTable,
+};
+pub use telemetry::{Ewma, FleetTelemetry};

@@ -1,0 +1,227 @@
+//! Per-device timing telemetry for the adaptive scheduler.
+//!
+//! The master's gather loop sees, for every conv shard it hands out, the
+//! pure compute seconds the device reported and the nominal FLOPs of the
+//! bucket executable that ran.  Normalizing seconds by FLOPs gives a
+//! shard-size-independent *rate* (seconds per GFLOP — the exact analog of
+//! the paper's §4.1.1 calibration probe, but measured continuously on the
+//! real workload).  [`FleetTelemetry`] keeps an exponentially weighted
+//! moving average of that rate per device, plus an EW variance, so the
+//! policy in [`super::adaptive`] can re-run Eq. 1 over *smoothed observed*
+//! speeds and flag stragglers whose rate drifts away from the fleet.
+
+/// Exponentially weighted mean + variance of a scalar observation stream
+/// (West's recurrence: `var <- (1-a)(var + a d^2)` with `d = x - mean`).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha must be in (0, 1], got {alpha}");
+        Self { alpha, mean: 0.0, var: 0.0, n: 0 }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.n += 1;
+        if self.n == 1 {
+            self.mean = x;
+            self.var = 0.0;
+            return;
+        }
+        let d = x - self.mean;
+        let incr = self.alpha * d;
+        self.mean += incr;
+        self.var = (1.0 - self.alpha) * (self.var + d * incr);
+    }
+
+    /// Smoothed value; `None` before the first observation.
+    pub fn value(&self) -> Option<f64> {
+        (self.n > 0).then_some(self.mean)
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var.max(0.0).sqrt()
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+}
+
+/// EWMA rate (seconds per GFLOP) per device; index = device id
+/// (0 = master, i+1 = worker i), matching `cluster::master`.
+#[derive(Clone, Debug)]
+pub struct FleetTelemetry {
+    devices: Vec<Ewma>,
+}
+
+impl FleetTelemetry {
+    pub fn new(n_devices: usize, alpha: f64) -> Self {
+        Self { devices: vec![Ewma::new(alpha); n_devices] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Record one observed execution: `seconds` of pure compute over a
+    /// nominal `flops` of work.  Non-positive work or non-finite timings are
+    /// ignored (e.g. a dead device's `INFINITY` calibration slot).
+    pub fn record(&mut self, device: usize, seconds: f64, flops: f64) {
+        let bad = !flops.is_finite() || flops <= 0.0 || !seconds.is_finite() || seconds <= 0.0;
+        if device >= self.devices.len() || bad {
+            return;
+        }
+        self.devices[device].observe(seconds / (flops / 1e9));
+    }
+
+    /// Smoothed rate of one device in seconds per GFLOP.
+    pub fn rate(&self, device: usize) -> Option<f64> {
+        self.devices.get(device).and_then(|e| e.value())
+    }
+
+    pub fn samples(&self, device: usize) -> u64 {
+        self.devices.get(device).map_or(0, |e| e.samples())
+    }
+
+    /// Smoothed rates for `devices`, provided every one of them has at
+    /// least `min_samples` observations — otherwise `None` (the policy must
+    /// not act on speeds it has never measured).
+    pub fn rates_for(&self, devices: &[usize], min_samples: u64) -> Option<Vec<f64>> {
+        devices
+            .iter()
+            .map(|&d| {
+                let e = self.devices.get(d)?;
+                if e.samples() < min_samples || !e.mean.is_finite() {
+                    return None;
+                }
+                Some(e.mean)
+            })
+            .collect()
+    }
+
+    /// Straggler detection: among `devices`, flag those whose EWMA rate
+    /// drifts beyond `k`·σ above the fleet mean.  The `min_ratio` guard
+    /// (rate must also exceed `min_ratio` × the fleet median) keeps a
+    /// homogeneous fleet — where σ is numerically tiny and *everything*
+    /// sits within noise of the mean — from flagging healthy devices.
+    pub fn stragglers(&self, devices: &[usize], k: f64, min_ratio: f64) -> Vec<usize> {
+        let rates: Vec<(usize, f64)> = devices
+            .iter()
+            .filter_map(|&d| self.rate(d).map(|r| (d, r)))
+            .collect();
+        if rates.len() < 2 {
+            return vec![];
+        }
+        let n = rates.len() as f64;
+        let mean = rates.iter().map(|(_, r)| r).sum::<f64>() / n;
+        let var = rates.iter().map(|(_, r)| (r - mean) * (r - mean)).sum::<f64>() / n;
+        let sigma = var.sqrt();
+        let mut sorted: Vec<f64> = rates.iter().map(|&(_, r)| r).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        rates
+            .into_iter()
+            .filter(|&(_, r)| r > mean + k * sigma && r > min_ratio * median)
+            .map(|(d, _)| d)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_sample_initializes() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        e.observe(4.0);
+        assert_eq!(e.value(), Some(4.0));
+        assert_eq!(e.std(), 0.0);
+        assert_eq!(e.samples(), 1);
+    }
+
+    #[test]
+    fn ewma_tracks_a_level_shift() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..10 {
+            e.observe(1.0);
+        }
+        assert!((e.value().unwrap() - 1.0).abs() < 1e-12);
+        // An 8x jump: the EWMA must cover most of the distance in 3 samples.
+        for _ in 0..3 {
+            e.observe(8.0);
+        }
+        let v = e.value().unwrap();
+        assert!(v > 6.0 && v < 8.0, "EWMA after shift: {v}");
+        assert!(e.std() > 0.0, "variance must register the shift");
+    }
+
+    #[test]
+    fn ewma_ignores_non_finite() {
+        let mut e = Ewma::new(0.3);
+        e.observe(2.0);
+        e.observe(f64::INFINITY);
+        e.observe(f64::NAN);
+        assert_eq!(e.samples(), 1);
+        assert_eq!(e.value(), Some(2.0));
+    }
+
+    #[test]
+    fn record_normalizes_by_flops() {
+        let mut t = FleetTelemetry::new(2, 1.0);
+        // 0.02 s over 2 GFLOP and 0.01 s over 1 GFLOP are the same rate.
+        t.record(0, 0.02, 2e9);
+        t.record(1, 0.01, 1e9);
+        assert!((t.rate(0).unwrap() - 0.01).abs() < 1e-12);
+        assert!((t.rate(0).unwrap() - t.rate(1).unwrap()).abs() < 1e-12);
+        // Bad observations are dropped, out-of-range devices ignored.
+        t.record(0, f64::INFINITY, 1e9);
+        t.record(0, 0.01, 0.0);
+        t.record(99, 0.01, 1e9);
+        assert_eq!(t.samples(0), 1);
+    }
+
+    #[test]
+    fn rates_for_requires_samples_on_every_device() {
+        let mut t = FleetTelemetry::new(3, 0.5);
+        t.record(0, 0.01, 1e9);
+        t.record(1, 0.02, 1e9);
+        assert!(t.rates_for(&[0, 1, 2], 1).is_none(), "device 2 never measured");
+        t.record(2, 0.04, 1e9);
+        let r = t.rates_for(&[0, 1, 2], 1).unwrap();
+        assert_eq!(r.len(), 3);
+        assert!(r[2] > r[0]);
+        assert!(t.rates_for(&[0, 1, 2], 2).is_none(), "min_samples not reached");
+    }
+
+    #[test]
+    fn straggler_flagged_homogeneous_fleet_quiet() {
+        let mut t = FleetTelemetry::new(4, 0.5);
+        for d in 0..4 {
+            // Near-identical rates with tiny jitter: nobody is a straggler
+            // even though sigma is almost zero (min_ratio guard).
+            t.record(d, 0.0100 + d as f64 * 1e-6, 1e9);
+        }
+        let devs = [0, 1, 2, 3];
+        assert!(t.stragglers(&devs, 1.0, 2.0).is_empty());
+        // Device 3 degrades 8x: flagged.
+        for _ in 0..4 {
+            t.record(3, 0.08, 1e9);
+        }
+        assert_eq!(t.stragglers(&devs, 1.0, 2.0), vec![3]);
+    }
+}

@@ -20,6 +20,7 @@
 //! (`rust/tests/sim_validation.rs`).
 
 pub mod figures;
+pub mod trajectory;
 
 use std::time::Duration;
 

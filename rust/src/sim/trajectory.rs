@@ -1,0 +1,242 @@
+//! What-if simulation of the adaptive scheduler.
+//!
+//! Runs the *same* [`AdaptivePolicy`] the live master runs — telemetry fed
+//! from the analytic device model instead of wall clocks — over a scripted
+//! mid-run degradation, and reports three step-time trajectories:
+//!
+//! * **static**   — the paper's behavior: the partition computed at
+//!   calibration time is kept forever;
+//! * **adaptive** — the policy re-shards when the predicted payoff clears
+//!   its threshold (telemetry EWMA, hysteresis, cooldown — all live code);
+//! * **oracle**   — a fresh Eq. 1 partition from the *true* instantaneous
+//!   rates every step: the best any re-partitioner could do.
+//!
+//! This is how the system predicts the payoff of adaptation before doing it
+//! live, how `BENCH_sched.json` is produced in CI, and how the policy's
+//! convergence is regression-tested without spending wall-clock sleeps.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::bucket_ladder;
+use crate::sched::{
+    partition_layer, predicted_cost, AdaptiveConfig, AdaptivePolicy, Decision, FleetTelemetry,
+    LayerPlan, Shard,
+};
+
+use super::ArchShape;
+
+/// A scripted degradation scenario.
+#[derive(Clone, Debug)]
+pub struct TrajectorySpec {
+    pub arch: ArchShape,
+    /// Device GFLOPS, master first (index 0).
+    pub gflops: Vec<f64>,
+    /// Which device degrades…
+    pub degrade_device: usize,
+    /// …at which step…
+    pub degrade_at_step: usize,
+    /// …dividing its speed by this factor (8.0 = the ISSUE scenario).
+    pub degrade_factor: f64,
+    pub steps: usize,
+    pub policy: AdaptiveConfig,
+}
+
+impl TrajectorySpec {
+    /// The CI benchmark scenario: an equal 4-device fleet, device 1
+    /// degrading 8x a quarter of the way in.
+    pub fn ci_default() -> Self {
+        Self {
+            arch: ArchShape::new(300, 1000, 256),
+            gflops: vec![30.0, 30.0, 30.0, 30.0],
+            degrade_device: 1,
+            degrade_at_step: 10,
+            degrade_factor: 8.0,
+            steps: 60,
+            policy: AdaptiveConfig::default(),
+        }
+    }
+}
+
+/// One simulated step of all three schedulers.
+#[derive(Clone, Copy, Debug)]
+pub struct TrajectoryPoint {
+    pub step: usize,
+    pub static_secs: f64,
+    pub adaptive_secs: f64,
+    pub oracle_secs: f64,
+    /// The adaptive policy re-sharded *after* this step.
+    pub repartitioned: bool,
+}
+
+/// Simulate the scenario; returns one point per step.
+pub fn simulate_adaptive(spec: &TrajectorySpec) -> Result<Vec<TrajectoryPoint>> {
+    let n = spec.gflops.len();
+    ensure!(n >= 2, "need at least 2 devices");
+    ensure!(spec.degrade_device < n, "degrade_device out of range");
+    ensure!(spec.degrade_factor >= 1.0, "degrade_factor must be >= 1");
+    let arch = spec.arch;
+    let buckets1 = bucket_ladder(arch.k1);
+    let buckets2 = bucket_ladder(arch.k2);
+    // Per-kernel training FLOPs of each layer (fwd + both grads).
+    let fpk = [
+        arch.flops_per_kernel_fwd(1) * ArchShape::TRAIN_CONV_FACTOR,
+        arch.flops_per_kernel_fwd(2) * ArchShape::TRAIN_CONV_FACTOR,
+    ];
+
+    // True seconds-per-FLOP of every device at a given step.
+    let rates_at = |step: usize| -> Vec<f64> {
+        spec.gflops
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| {
+                let g = if i == spec.degrade_device && step >= spec.degrade_at_step {
+                    g / spec.degrade_factor
+                } else {
+                    g
+                };
+                1.0 / (g * 1e9)
+            })
+            .collect()
+    };
+    let table = |rates: &[f64]| -> Result<[Vec<Shard>; 2]> {
+        Ok([
+            partition_layer(arch.k1, rates, &buckets1)?,
+            partition_layer(arch.k2, rates, &buckets2)?,
+        ])
+    };
+    // Step conv time of a table pair — priced by the SAME model the live
+    // policy uses (`sched::predicted_cost`), so the simulated trajectories
+    // cannot drift from what the master would actually decide on.
+    let cost = |t: &[Vec<Shard>; 2], rates: &[f64]| -> f64 {
+        let plans = [
+            LayerPlan {
+                k: arch.k1,
+                buckets: &buckets1,
+                current: &t[0],
+                flops_per_kernel: fpk[0],
+            },
+            LayerPlan {
+                k: arch.k2,
+                buckets: &buckets2,
+                current: &t[1],
+                flops_per_kernel: fpk[1],
+            },
+        ];
+        predicted_cost(&[t[0].as_slice(), t[1].as_slice()], &plans, rates)
+    };
+
+    let r0 = rates_at(0);
+    let static_table = table(&r0)?;
+    let mut adaptive_table = static_table.clone();
+    let mut policy = AdaptivePolicy::new(spec.policy);
+    let mut telem = FleetTelemetry::new(n, spec.policy.alpha);
+    // Calibration analog: seed every device's rate from the initial probe.
+    for (d, &r) in r0.iter().enumerate() {
+        telem.record(d, r * 1e9, 1e9);
+    }
+    let active: Vec<usize> = (0..n).collect();
+
+    let mut out = Vec::with_capacity(spec.steps);
+    for step in 0..spec.steps {
+        let rates = rates_at(step);
+        let static_secs = cost(&static_table, &rates);
+        let adaptive_secs = cost(&adaptive_table, &rates);
+        let oracle_secs = cost(&table(&rates)?, &rates);
+        // The master's gather loop, analytically: every device that ran a
+        // shard reports its bucketed seconds over the bucket's FLOPs.
+        for (li, shards) in adaptive_table.iter().enumerate() {
+            for s in shards {
+                let flops = s.bucket as f64 * fpk[li];
+                telem.record(s.device, flops * rates[s.device], flops);
+            }
+        }
+        let mut repartitioned = false;
+        if let Some(obs) = telem.rates_for(&active, 1) {
+            let decision = {
+                let plans = [
+                    LayerPlan {
+                        k: arch.k1,
+                        buckets: &buckets1,
+                        current: &adaptive_table[0],
+                        flops_per_kernel: fpk[0],
+                    },
+                    LayerPlan {
+                        k: arch.k2,
+                        buckets: &buckets2,
+                        current: &adaptive_table[1],
+                        flops_per_kernel: fpk[1],
+                    },
+                ];
+                policy.decide(step as u64, &plans, &active, &obs)?
+            };
+            if let Decision::Repartition(mut tables) = decision {
+                adaptive_table[1] = tables.pop().unwrap();
+                adaptive_table[0] = tables.pop().unwrap();
+                repartitioned = true;
+            }
+        }
+        out.push(TrajectoryPoint { step, static_secs, adaptive_secs, oracle_secs, repartitioned });
+    }
+    Ok(out)
+}
+
+/// Tail means over the last `k` points: `(static, adaptive, oracle)`.
+pub fn tail_means(points: &[TrajectoryPoint], k: usize) -> (f64, f64, f64) {
+    let tail = &points[points.len().saturating_sub(k)..];
+    let n = tail.len().max(1) as f64;
+    (
+        tail.iter().map(|p| p.static_secs).sum::<f64>() / n,
+        tail.iter().map(|p| p.adaptive_secs).sum::<f64>() / n,
+        tail.iter().map(|p| p.oracle_secs).sum::<f64>() / n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_degradation_means_no_repartition() {
+        let spec = TrajectorySpec {
+            degrade_factor: 1.0,
+            steps: 20,
+            ..TrajectorySpec::ci_default()
+        };
+        let pts = simulate_adaptive(&spec).unwrap();
+        assert_eq!(pts.len(), 20);
+        for p in &pts {
+            assert!(!p.repartitioned, "step {}: spurious re-shard", p.step);
+            assert!((p.adaptive_secs - p.static_secs).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn adaptive_recovers_most_of_oracle_speedup_after_8x_degradation() {
+        let spec = TrajectorySpec::ci_default();
+        let pts = simulate_adaptive(&spec).unwrap();
+        // Before the event all three schedulers agree.
+        let p0 = &pts[0];
+        assert!((p0.adaptive_secs - p0.oracle_secs).abs() < 1e-12);
+        // The re-shard happens within warmup + cooldown of the event.
+        let window = spec.policy.warmup_steps + spec.policy.cooldown_steps + 1;
+        let when = pts.iter().find(|p| p.repartitioned).expect("policy never re-sharded").step;
+        assert!(
+            when >= spec.degrade_at_step && (when - spec.degrade_at_step) as u64 <= window,
+            "re-shard at {when}, degradation at {}",
+            spec.degrade_at_step
+        );
+        // Steady state: adaptive within 10% of the oracle, static far worse.
+        let (s, a, o) = tail_means(&pts, 10);
+        assert!(a <= o * 1.10, "adaptive tail {a} vs oracle {o}");
+        assert!(s >= a * 1.3, "static tail {s} should trail adaptive {a} by >= 1.3x");
+    }
+
+    #[test]
+    fn oracle_lower_bounds_both() {
+        let pts = simulate_adaptive(&TrajectorySpec::ci_default()).unwrap();
+        for p in &pts {
+            assert!(p.oracle_secs <= p.static_secs + 1e-12, "step {}", p.step);
+            assert!(p.oracle_secs <= p.adaptive_secs + 1e-12, "step {}", p.step);
+        }
+    }
+}

@@ -63,7 +63,7 @@ fn spawn_healthy_worker(id: u32) -> Box<dyn Link> {
     let (master_end, worker_end) = inproc_pair();
     std::thread::spawn(move || {
         let rt = Runtime::open(convdist::artifacts_dir()).unwrap();
-        let _ = worker_loop(worker_end, rt, WorkerOptions { worker_id: id, throttle: Throttle::none() });
+        let _ = worker_loop(worker_end, rt, WorkerOptions::new(id, Throttle::none()));
     });
     Box::new(master_end)
 }

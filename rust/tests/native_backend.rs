@@ -45,7 +45,7 @@ fn spawn_tiny_worker(id: u32, throttle: Throttle) -> Box<dyn Link> {
         .name(format!("tiny-worker-{id}"))
         .spawn(move || {
             let rt = Runtime::for_arch(ArchSpec::tiny());
-            let _ = worker_loop(worker_end, rt, WorkerOptions { worker_id: id, throttle });
+            let _ = worker_loop(worker_end, rt, WorkerOptions::new(id, throttle));
         })
         .expect("spawning tiny worker");
     Box::new(master_end)

@@ -144,7 +144,7 @@ fn rand_tensor(rng: &mut Pcg32) -> WireTensor {
 }
 
 fn rand_message(rng: &mut Pcg32) -> Message {
-    match rng.next_below(8) {
+    match rng.next_below(12) {
         0 => Message::Hello { worker_id: rng.next_u32(), version: rng.next_u32() },
         1 => Message::Calibrate { rounds: rng.next_u32() },
         2 => Message::CalibrateResult { seconds: rng.next_f32() as f64 },
@@ -164,6 +164,18 @@ fn rand_message(rng: &mut Pcg32) -> Message {
         },
         5 => Message::AllOk,
         6 => Message::TrainOver,
+        7 => Message::Ping { nonce: rng.next_u32() },
+        8 => Message::Pong { nonce: rng.next_u32() },
+        9 => Message::Leave {
+            worker_id: rng.next_u32(),
+            reason: format!("l{}", rng.next_u32()),
+        },
+        10 => Message::ShardUpdate {
+            layer: (1 + rng.next_below(2)) as u8,
+            lo: rng.next_below(64),
+            hi: rng.next_below(64),
+            bucket: rng.next_below(64),
+        },
         _ => Message::Error { reason: format!("e{}", rng.next_u32()) },
     }
 }

@@ -18,7 +18,7 @@ fn spawn_tcp_worker(id: u32, slowdown: f64) -> (std::net::SocketAddr, std::threa
     let handle = std::thread::spawn(move || {
         let rt = Runtime::open(convdist::artifacts_dir())?;
         let link = TcpLink::accept_one(&listener)?;
-        worker_loop(link, rt, WorkerOptions { worker_id: id, throttle: Throttle::new(slowdown) })
+        worker_loop(link, rt, WorkerOptions::new(id, Throttle::new(slowdown)))
     });
     (addr, handle)
 }
