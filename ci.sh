@@ -14,5 +14,9 @@ cargo test -q --test adaptive_sched
 # uploaded as a workflow artifact for trend tracking.
 cargo run --release --example bench_sched
 test -s BENCH_sched.json
+# Naive vs blocked GEMM GFLOP/s on the paper's conv shapes; enforces the
+# >= 3x engine speedup gate and is uploaded as a workflow artifact.
+cargo run --release --example bench_gemm
+test -s BENCH_gemm.json
 # The PJRT path must keep compiling even though it is an offline stub.
 cargo check --features pjrt

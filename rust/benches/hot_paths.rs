@@ -60,6 +60,33 @@ fn main() -> anyhow::Result<()> {
     let w = Tensor::randn(&[21, 32, 5, 5], &mut rng);
     b.run("tensor::pad_axis0 (21 -> 24 kernels)", || w.pad_axis0(24).unwrap());
 
+    // --- linalg: the blocked GEMM engine on a conv-shaped product ----------
+    // conv1 of the paper's 500-kernel layer per image: 500 x 75 x 784.
+    println!(
+        "linalg: isa {}  blocks {:?}",
+        convdist::linalg::isa().label(),
+        convdist::linalg::blocks()
+    );
+    let (gm, gk, gn) = (500usize, 75usize, 784usize);
+    let ga = Tensor::randn(&[gm, gk], &mut rng);
+    let gb = Tensor::randn(&[gk, gn], &mut rng);
+    let mut gout = vec![0f32; gm * gn];
+    let flops = convdist::linalg::gemm_flops(gm, gk, gn);
+    // Serial, like the conv hot path runs it inside the batch-parallel pool.
+    let serial_pool = rayon::ThreadPoolBuilder::new().num_threads(1).build()?;
+    let r = b.run("linalg::gemm conv1-shape (500x75x784, serial)", || {
+        serial_pool.install(|| {
+            gout.fill(0.0);
+            convdist::linalg::gemm(ga.data(), gb.data(), gm, gk, gn, &mut gout);
+        })
+    });
+    println!("  engine best: {:.2} GFLOP/s", flops / 1e9 / r.min.as_secs_f64());
+    let r = b.run("linalg::reference::gemm conv1-shape (naive)", || {
+        gout.fill(0.0);
+        convdist::linalg::reference::gemm(ga.data(), gb.data(), gm, gk, gn, &mut gout);
+    });
+    println!("  naive best:  {:.2} GFLOP/s", flops / 1e9 / r.min.as_secs_f64());
+
     // --- Eq. 1 partitioning --------------------------------------------------
     let times: Vec<f64> = (0..16).map(|i| 0.01 * (1.0 + (i % 5) as f64)).collect();
     let buckets: Vec<usize> = (1..=32).map(|i| i * 48).collect();

@@ -59,6 +59,17 @@ struct WorkerSlot {
     alive: bool,
 }
 
+/// Bucket-independent op key for [`SchedStats::observe_gflops`]: re-shards
+/// change bucket sizes, and keying by the full executable name would
+/// accumulate dead per-bucket entries over a long elastic run.
+fn op_key(layer: usize, dir: ConvDir) -> String {
+    let d = match dir {
+        ConvDir::Fwd => "fwd",
+        ConvDir::Bwd => "bwd",
+    };
+    format!("conv{layer}_{d}")
+}
+
 /// FLOPs of one kernel of conv layer `layer`, forward pass — the layer
 /// weight the adaptive policy uses (training factors scale both layers
 /// equally and cancel in the gain ratio).
@@ -251,7 +262,9 @@ impl DistTrainer {
         self.workers.iter().filter(|w| w.alive).count()
     }
 
-    /// Adaptive-scheduler counters and utilization (see `metrics`).
+    /// Adaptive-scheduler counters, utilization and per-op achieved
+    /// GFLOP/s (see `metrics`).  The GFLOP/s entries are recorded on every
+    /// step, adaptation on or off.
     pub fn sched_stats(&self) -> &SchedStats {
         &self.stats
     }
@@ -590,8 +603,10 @@ impl DistTrainer {
         let mut slowest = Duration::ZERO;
         if let Some(s) = shards.iter().find(|s| s.device == 0) {
             let (y, secs) = self.local_conv_fwd(layer, s, x, w, b)?;
-            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket));
-            self.telemetry.record(0, secs.as_secs_f64(), flops as f64);
+            let exec = Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket);
+            let flops = self.rt.flops(&exec) as f64;
+            self.telemetry.record(0, secs.as_secs_f64(), flops);
+            self.stats.observe_gflops(&op_key(layer, ConvDir::Fwd), secs.as_secs_f64(), flops);
             slowest = slowest.max(secs);
             parts.push((s.lo, y));
         }
@@ -599,8 +614,10 @@ impl DistTrainer {
         for s in shards.iter().filter(|s| s.device != 0) {
             let (mut outputs, seconds) = self.recv_result(s.device - 1, seq)?;
             ensure!(outputs.len() == 1, "fwd ConvResult must carry 1 tensor");
-            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket));
-            self.telemetry.record(s.device, seconds, flops as f64);
+            let exec = Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket);
+            let flops = self.rt.flops(&exec) as f64;
+            self.telemetry.record(s.device, seconds, flops);
+            self.stats.observe_gflops(&op_key(layer, ConvDir::Fwd), seconds, flops);
             slowest = slowest.max(Duration::from_secs_f64(seconds));
             parts.push((s.lo, outputs.remove(0).into_tensor()?));
         }
@@ -648,8 +665,10 @@ impl DistTrainer {
         let mut slowest = Duration::ZERO;
         if let Some(s) = shards.iter().find(|s| s.device == 0) {
             let (gxp, gw, gb, secs) = self.local_conv_bwd(layer, s, x, w, gy)?;
-            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket));
-            self.telemetry.record(0, secs.as_secs_f64(), flops as f64);
+            let exec = Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket);
+            let flops = self.rt.flops(&exec) as f64;
+            self.telemetry.record(0, secs.as_secs_f64(), flops);
+            self.stats.observe_gflops(&op_key(layer, ConvDir::Bwd), secs.as_secs_f64(), flops);
             slowest = slowest.max(secs);
             gx.add_assign(&gxp)?;
             gw_parts.push((s.lo, gw));
@@ -658,8 +677,10 @@ impl DistTrainer {
         for s in shards.iter().filter(|s| s.device != 0) {
             let (outputs, seconds) = self.recv_result(s.device - 1, seq)?;
             ensure!(outputs.len() == 3, "bwd ConvResult must carry 3 tensors");
-            let flops = self.rt.flops(&Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket));
-            self.telemetry.record(s.device, seconds, flops as f64);
+            let exec = Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket);
+            let flops = self.rt.flops(&exec) as f64;
+            self.telemetry.record(s.device, seconds, flops);
+            self.stats.observe_gflops(&op_key(layer, ConvDir::Bwd), seconds, flops);
             slowest = slowest.max(Duration::from_secs_f64(seconds));
             let mut it = outputs.into_iter();
             // Partial input-cotangents sum (conv is linear in K).

@@ -3,12 +3,19 @@
 //!
 //! Conventions match `python/compile/kernels/ref.py` exactly: activations are
 //! NCHW, kernels OIHW, convolutions are valid-padding stride-1
-//! cross-correlations.  Convolutions are im2col + a blocked row-major GEMM,
-//! rayon-parallel over the batch axis (bwd reduces the kernel-gradient over
-//! per-image partials).  All math is f32, the compute dtype the AOT pipeline
-//! used, so wire payloads and parameter stores are unchanged.
+//! cross-correlations.  Convolutions are im2col + GEMM, rayon-parallel over
+//! the batch axis (bwd reduces the kernel-gradient over per-image partials),
+//! with every GEMM served by the blocked/packed/SIMD engine in
+//! [`crate::linalg`] and the im2col scratch reused from thread-local
+//! buffers (no per-call allocation on the hot path).  All math is f32, the
+//! compute dtype the AOT pipeline used, so wire payloads and parameter
+//! stores are unchanged.
+
+use std::cell::RefCell;
 
 use rayon::prelude::*;
+
+use crate::linalg;
 
 /// LRN hyper-parameters — fixed by the model definition
 /// (`python/compile/model.py::lrn`), not tunable at run time.
@@ -18,69 +25,27 @@ pub const LRN_ALPHA: f32 = 1e-4;
 pub const LRN_BETA: f32 = 0.75;
 
 // ---------------------------------------------------------------------------
-// GEMM primitives (row-major, accumulate-into-out)
+// Per-thread conv scratch
 // ---------------------------------------------------------------------------
 
-/// `out[m,n] += a[m,kd] * b[kd,n]`.  Saxpy inner loop over contiguous rows of
-/// `b`/`out` so the autovectorizer gets stride-1 access; zero `a` entries are
-/// skipped, which makes zero-padded kernel buckets nearly free.
-pub fn gemm_acc(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * kd);
-    debug_assert_eq!(b.len(), kd * n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * kd..(i + 1) * kd];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+thread_local! {
+    /// Per-thread `(im2col, column-gradient)` scratch, reused across batch
+    /// items and training steps: the conv hot path — the paper's 60–90 % of
+    /// step time — allocates nothing per call.  One pair per rayon worker;
+    /// the GEMMs these buffers feed run serial inside the batch loop
+    /// (`linalg`'s nested-parallelism guard), so a borrow is never held
+    /// across a blocking join.
+    static CONV_SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
 }
 
-/// `out[m,n] += a[m,kd] * b[n,kd]^T` — both operands read along contiguous
-/// rows (dot products), the layout the kernel-gradient contraction wants.
-pub fn gemm_abt_acc(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * kd);
-    debug_assert_eq!(b.len(), n * kd);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * kd..(i + 1) * kd];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * kd..(j + 1) * kd];
-            let mut acc = 0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            *o += acc;
-        }
+/// Grow-only resize: returns `buf[..len]` without zeroing previously used
+/// capacity (callers fully overwrite or explicitly clear what they read).
+fn scratch_slice(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
     }
-}
-
-/// `out[m,n] += a[rows,m]^T * b[rows,n]` (both stored row-major).
-pub fn gemm_atb_acc(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), rows * m);
-    debug_assert_eq!(b.len(), rows * n);
-    debug_assert_eq!(out.len(), m * n);
-    for r in 0..rows {
-        let arow = &a[r * m..(r + 1) * m];
-        let brow = &b[r * n..(r + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    &mut buf[..len]
 }
 
 // ---------------------------------------------------------------------------
@@ -148,24 +113,29 @@ pub fn conv2d_fwd(
     kw: usize,
 ) -> Vec<f32> {
     let (oh, ow) = (h - kh + 1, wd - kw + 1);
-    let ckk = c * kh * kw;
-    let mut y = vec![0f32; b * k * oh * ow];
-    y.par_chunks_mut(k * oh * ow)
+    let (ckk, ohw) = (c * kh * kw, oh * ow);
+    let mut y = vec![0f32; b * k * ohw];
+    y.par_chunks_mut(k * ohw)
         .zip(x.par_chunks(c * h * wd))
         .for_each(|(yi, xi)| {
-            let mut col = vec![0f32; ckk * oh * ow];
-            im2col(xi, c, h, wd, kh, kw, &mut col);
-            for (ki, row) in yi.chunks_mut(oh * ow).enumerate() {
-                row.fill(bias[ki]);
-            }
-            gemm_acc(w, &col, k, ckk, oh * ow, yi);
+            CONV_SCRATCH.with(|s| {
+                let mut guard = s.borrow_mut();
+                let (colbuf, _) = &mut *guard;
+                let col = scratch_slice(colbuf, ckk * ohw);
+                im2col(xi, c, h, wd, kh, kw, col);
+                for (ki, row) in yi.chunks_mut(ohw).enumerate() {
+                    row.fill(bias[ki]);
+                }
+                linalg::gemm(w, col, k, ckk, ohw, yi);
+            });
         });
     y
 }
 
 /// Backward: given `gy[b,k,oh,ow]`, return `(gx, gw, gb)` — the input
 /// cotangent, kernel gradient and bias gradient of [`conv2d_fwd`].
-/// Parallel over the batch; `gw`/`gb` are reduced over per-image partials.
+/// Parallel over the batch; `gw`/`gb` accumulate into one buffer pair per
+/// rayon split (fold), merged at the end (reduce) — no per-image partials.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_bwd(
     x: &[f32],
@@ -193,22 +163,31 @@ pub fn conv2d_bwd(
         .par_chunks_mut(c * h * wd)
         .zip(x.par_chunks(c * h * wd))
         .zip(gy.par_chunks(k * ohw))
-        .map(|((gxi, xi), gyi)| {
-            let mut col = vec![0f32; ckk * ohw];
-            im2col(xi, c, h, wd, kh, kw, &mut col);
-            // gw[k,ckk] += gy_i[k,ohw] * col^T
-            let mut gwp = vec![0f32; k * ckk];
-            gemm_abt_acc(gyi, &col, k, ohw, ckk, &mut gwp);
-            let mut gbp = vec![0f32; k];
-            for (ki, gbk) in gbp.iter_mut().enumerate() {
-                *gbk = gyi[ki * ohw..(ki + 1) * ohw].iter().sum();
-            }
-            // gx: colgrad[ckk,ohw] = w^T * gy_i, folded back with col2im.
-            let mut colg = vec![0f32; ckk * ohw];
-            gemm_acc(&wt, gyi, ckk, k, ohw, &mut colg);
-            col2im(&colg, c, h, wd, kh, kw, gxi);
-            (gwp, gbp)
-        })
+        .fold(
+            // One (gw, gb) accumulator pair per rayon split, reused across
+            // the batch items it processes — the kernel-gradient GEMM
+            // accumulates straight into it (no per-image partial Vecs).
+            || (vec![0f32; k * ckk], vec![0f32; k]),
+            |(mut aw, mut ab), ((gxi, xi), gyi)| {
+                CONV_SCRATCH.with(|s| {
+                    let mut guard = s.borrow_mut();
+                    let (colbuf, colgbuf) = &mut *guard;
+                    let col = scratch_slice(colbuf, ckk * ohw);
+                    im2col(xi, c, h, wd, kh, kw, col);
+                    // gw[k,ckk] += gy_i[k,ohw] * col^T
+                    linalg::gemm_abt(gyi, col, k, ohw, ckk, &mut aw);
+                    for (ki, gbk) in ab.iter_mut().enumerate() {
+                        *gbk += gyi[ki * ohw..(ki + 1) * ohw].iter().sum::<f32>();
+                    }
+                    // gx: colgrad[ckk,ohw] = w^T * gy_i, back via col2im.
+                    let colg = scratch_slice(colgbuf, ckk * ohw);
+                    colg.fill(0.0);
+                    linalg::gemm(&wt, gyi, ckk, k, ohw, colg);
+                    col2im(colg, c, h, wd, kh, kw, gxi);
+                });
+                (aw, ab)
+            },
+        )
         .reduce(
             || (vec![0f32; k * ckk], vec![0f32; k]),
             |(mut aw, mut ab), (bw, bb)| {
@@ -364,7 +343,7 @@ pub fn fc_logits(p2: &[f32], wf: &[f32], bf: &[f32], b: usize, f: usize, c: usiz
     for row in logits.chunks_mut(c) {
         row.copy_from_slice(bf);
     }
-    gemm_acc(p2, wf, b, f, c, &mut logits);
+    linalg::gemm(p2, wf, b, f, c, &mut logits);
     logits
 }
 

@@ -16,9 +16,10 @@
 //!   validated against a manifest and served by a pluggable `Backend`.
 //! * **L1** — the convolution/pool/LRN/FC kernels, the paper's 60–90 % hot
 //!   spot.  Default: pure-rust CPU kernels ([`kernels`]), rayon-parallel
-//!   over the batch axis — a clean checkout builds and trains offline with
-//!   no artifacts.  Optional (`--features pjrt`): the original AOT-HLO
-//!   PJRT path over `python/compile/` artifacts.
+//!   over the batch axis, with every GEMM served by the blocked, packed,
+//!   SIMD-dispatched engine in [`linalg`] — a clean checkout builds and
+//!   trains offline with no artifacts.  Optional (`--features pjrt`): the
+//!   original AOT-HLO PJRT path over `python/compile/` artifacts.
 
 pub mod baselines;
 pub mod cluster;
@@ -26,6 +27,7 @@ pub mod config;
 pub mod data;
 pub mod devices;
 pub mod kernels;
+pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod net;

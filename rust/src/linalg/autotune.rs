@@ -1,0 +1,124 @@
+//! One-shot startup autotune of the cache-blocking parameters.
+//!
+//! The right MC/KC/NC depend on the host's cache hierarchy, which the engine
+//! cannot know statically (the fleet is heterogeneous by design).  Instead
+//! of shipping one guess, the first non-trivial GEMM call times a small
+//! probe (~77 MFLOP per run, best of 3, a few ms with SIMD) under each
+//! candidate block set and caches the winner in a `OnceLock` for the life
+//! of the process —
+//! the same shape of one-shot calibration the paper's §4.1.1 probe does
+//! across devices, applied inside one device.
+//!
+//! Override for reproducible runs: `CONVDIST_GEMM_BLOCKS="mc,kc,nc"`.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::micro::{MR, NR};
+
+/// Cache-blocking parameters: the packed A block is `mc x kc` (sized for
+/// L2), the packed B panel is `kc x nc` (streamed, L3-ish), and the
+/// microkernel sweeps `kc`-deep strips of both from L1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blocks {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl Blocks {
+    /// Round to friendly values: MC to a multiple of MR, NC to a multiple
+    /// of NR, KC at least 4.  Any `>= 1` values are *correct* (the packers
+    /// pad remainder panels); this only keeps the autotune candidates and
+    /// env overrides on fast shapes.
+    pub fn sanitized(self) -> Blocks {
+        Blocks {
+            mc: self.mc.div_ceil(MR).max(1) * MR,
+            kc: self.kc.max(4),
+            nc: self.nc.div_ceil(NR).max(1) * NR,
+        }
+    }
+}
+
+/// Candidate grid: small-cache to large-cache block sets.  A-block bytes
+/// (`mc*kc*4`) range 8 KiB – 256 KiB, bracketing common L2 sizes; NC trades
+/// B-pack reuse against L3 footprint.  Every `mc` is <= the probe's M so
+/// the probe actually exercises each candidate's full A block (a candidate
+/// taller than the probe would be timed as if clamped and win blind).
+const CANDIDATES: [Blocks; 6] = [
+    Blocks { mc: 32, kc: 64, nc: 128 },
+    Blocks { mc: 64, kc: 128, nc: 256 },
+    Blocks { mc: 128, kc: 256, nc: 512 },
+    Blocks { mc: 96, kc: 384, nc: 784 },
+    Blocks { mc: 64, kc: 256, nc: 784 },
+    Blocks { mc: 128, kc: 384, nc: 256 },
+];
+
+/// The process-wide block sizes: env override if set, else the autotune
+/// probe, computed once and cached.
+pub fn blocks() -> Blocks {
+    static BLOCKS: OnceLock<Blocks> = OnceLock::new();
+    *BLOCKS.get_or_init(|| env_override().unwrap_or_else(autotune).sanitized())
+}
+
+fn env_override() -> Option<Blocks> {
+    let v = std::env::var("CONVDIST_GEMM_BLOCKS").ok()?;
+    let parts: Option<Vec<usize>> = v.split(',').map(|p| p.trim().parse().ok()).collect();
+    let parts = parts?;
+    if parts.len() != 3 || parts.iter().any(|&p| p == 0) {
+        return None;
+    }
+    Some(Blocks { mc: parts[0], kc: parts[1], nc: parts[2] })
+}
+
+/// Time a conv-shaped probe GEMM (tall-ish A, wide B — the im2col product
+/// profile) under every candidate; best-of-3 per candidate (the first run
+/// doubles as warmup, `min` filters scheduler noise).  M covers the tallest
+/// candidate `mc`, K the deepest `kc`, so no candidate is silently clamped.
+fn autotune() -> Blocks {
+    const M: usize = 128;
+    const K: usize = 384;
+    const N: usize = 784;
+    let mut rng = crate::tensor::Pcg32::seed(0x6e44);
+    let a: Vec<f32> = (0..M * K).map(|_| rng.next_f32() - 0.5).collect();
+    let b: Vec<f32> = (0..K * N).map(|_| rng.next_f32() - 0.5).collect();
+    let mut out = vec![0f32; M * N];
+    let mut best_t = f64::MAX;
+    let mut best = CANDIDATES[0].sanitized();
+    for &cand in &CANDIDATES {
+        let cand = cand.sanitized();
+        let mut t = f64::MAX;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            super::gemm_with_blocks(&a, &b, M, K, N, &mut out, cand);
+            t = t.min(t0.elapsed().as_secs_f64());
+        }
+        if t < best_t {
+            best_t = t;
+            best = cand;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_rounds_to_microkernel_multiples() {
+        let b = Blocks { mc: 1, kc: 1, nc: 9 }.sanitized();
+        assert_eq!(b, Blocks { mc: MR, kc: 4, nc: 2 * NR });
+        let b = Blocks { mc: 128, kc: 256, nc: 512 }.sanitized();
+        assert_eq!(b, Blocks { mc: 128, kc: 256, nc: 512 });
+    }
+
+    #[test]
+    fn blocks_is_cached_and_legal() {
+        let b = blocks();
+        assert_eq!(b, blocks());
+        assert!(b.mc >= MR && b.mc % MR == 0, "{b:?}");
+        assert!(b.nc >= NR && b.nc % NR == 0, "{b:?}");
+        assert!(b.kc >= 4, "{b:?}");
+    }
+}

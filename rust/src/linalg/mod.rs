@@ -1,0 +1,477 @@
+//! The native backend's GEMM engine — blocked, packed, SIMD-dispatched.
+//!
+//! Every convolution (fwd, input-grad, kernel-grad) and the FC layer bottom
+//! out in one of three accumulating f32 products, which used to be naive
+//! triple loops in `kernels` (now preserved as [`reference`], the
+//! conformance oracle).  This module replaces them with a classic
+//! GotoBLAS/BLIS structure:
+//!
+//! * **Blocking** — `NC`-wide column panels of B, `KC`-deep slices, `MC`-row
+//!   blocks of A, so the microkernel streams from cache instead of RAM
+//!   ([`blocks`] autotunes MC/KC/NC once per process, `OnceLock`-cached;
+//!   `CONVDIST_GEMM_BLOCKS="mc,kc,nc"` overrides).
+//! * **Packing** — A blocks and B panels are repacked into contiguous
+//!   `MR`/`NR`-strips (zero-padded at the edges), which also makes the
+//!   transposed variants ([`gemm_abt`], [`gemm_atb`]) free: they differ only
+//!   in the strides the packers read through.
+//! * **Microkernel** — an 8x8 register tile ([`micro`]): AVX2+FMA where
+//!   `is_x86_feature_detected!` says so, a portable unrolled scalar loop
+//!   otherwise (`CONVDIST_NO_SIMD=1` forces the fallback).
+//! * **Macro-parallelism** — rayon over `MC`-row panels of the output, but
+//!   only from non-pool threads: the conv kernels already parallelize over
+//!   the batch axis, and their per-image GEMMs must stay serial inside the
+//!   pool (no nested blocking joins while thread-local scratch is live).
+//!
+//! Numerics: for a given (kd, blocks) the f32 summation order of every
+//! output element is fixed — independent of row count, column count and
+//! thread count, and the naive-fallback cutoff likewise depends only on
+//! `kd * n`, never on rows — so within one process (one autotuned block
+//! set, shared through the `OnceLock`) kernel-sharded runs reproduce
+//! single-device results exactly as the naive loops did.  Across *separate* processes the
+//! autotune may pick different KC and therefore a different (tolerance-level)
+//! summation order; pin `CONVDIST_GEMM_BLOCKS` on every node when bit-level
+//! cross-process reproducibility matters.  Trailing all-zero rows of A are
+//! trimmed before blocking (`trailing_nonzero_rows`), so zero-padded
+//! kernel buckets stay nearly free and still yield exactly-zero outputs.
+
+use std::cell::RefCell;
+
+use rayon::prelude::*;
+
+mod autotune;
+mod micro;
+pub mod reference;
+
+pub use autotune::{blocks, Blocks};
+pub use micro::{isa, Isa, MR, NR};
+
+/// Below this `kd*n` panel area the packing overhead outweighs the
+/// microkernel win and the naive reference loops are used directly.
+/// Deliberately independent of the row count `m`: a kernel-sharded slice of
+/// a matrix (fewer rows, same `kd` and `n`) must take the same code path as
+/// the full matrix, or shard-vs-single results would differ at the ULP
+/// level even with pinned blocks.
+const SMALL_PANEL: usize = 4 * 1024;
+
+/// Nominal FLOPs of one `m x kd x n` GEMM (multiply + add).
+pub fn gemm_flops(m: usize, kd: usize, n: usize) -> f64 {
+    2.0 * (m * kd * n) as f64
+}
+
+/// Strided read-only view of an operand: element `(i, j)` lives at
+/// `data[i * rs + j * cs]`.  The three public entry points differ only in
+/// the strides they hand the packers — transposition is free.
+#[derive(Clone, Copy)]
+struct View<'a> {
+    data: &'a [f32],
+    rs: usize,
+    cs: usize,
+}
+
+impl View<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+thread_local! {
+    /// Per-thread packed-A scratch: each row-panel job packs its own A
+    /// block (B panels are packed once per slice and shared read-only).
+    static A_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Rows of the row-major `[m, stride]` matrix `a` up to (excluding) the
+/// trailing run of all-zero rows.  Zero-padded kernel buckets put their
+/// padding in trailing rows (`Tensor::pad_axis0`), and a zero row
+/// contributes exactly 0 to its outputs — trimming keeps padded shards
+/// nearly free, the invariant the naive loops' zero-skip provided.  Costs
+/// one short scan: it stops at the first non-zero element it meets.
+fn trailing_nonzero_rows(a: &[f32], m: usize, stride: usize) -> usize {
+    let mut mt = m;
+    while mt > 0 && a[(mt - 1) * stride..mt * stride].iter().all(|&v| v == 0.0) {
+        mt -= 1;
+    }
+    mt
+}
+
+/// `out[m,n] += a[m,kd] * b[kd,n]` (row-major, accumulating) — drop-in for
+/// the former `kernels::gemm_acc`.
+pub fn gemm(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), kd * n);
+    debug_assert_eq!(out.len(), m * n);
+    let m = trailing_nonzero_rows(a, m, kd);
+    let (a, out) = (&a[..m * kd], &mut out[..m * n]);
+    if kd * n <= SMALL_PANEL {
+        return reference::gemm(a, b, m, kd, n, out);
+    }
+    let av = View { data: a, rs: kd, cs: 1 };
+    let bv = View { data: b, rs: n, cs: 1 };
+    gemm_view(av, bv, m, kd, n, out, blocks(), true);
+}
+
+/// `out[m,n] += a[m,kd] * b[n,kd]^T` — the kernel-gradient contraction
+/// (drop-in for the former `kernels::gemm_abt_acc`).
+pub fn gemm_abt(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), n * kd);
+    debug_assert_eq!(out.len(), m * n);
+    let m = trailing_nonzero_rows(a, m, kd);
+    let (a, out) = (&a[..m * kd], &mut out[..m * n]);
+    if kd * n <= SMALL_PANEL {
+        return reference::gemm_abt(a, b, m, kd, n, out);
+    }
+    let av = View { data: a, rs: kd, cs: 1 };
+    let bv = View { data: b, rs: 1, cs: kd };
+    gemm_view(av, bv, m, kd, n, out, blocks(), true);
+}
+
+/// `out[m,n] += a[rows,m]^T * b[rows,n]` (both stored row-major) — drop-in
+/// for the former `kernels::gemm_atb_acc`.
+pub fn gemm_atb(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), m * n);
+    // Trailing zero rows of `a` span the shared dimension here: dropping
+    // them drops their (all-zero) contribution to every output.
+    let rows = trailing_nonzero_rows(a, rows, m);
+    let (a, b) = (&a[..rows * m], &b[..rows * n]);
+    // `rows` is the shared dimension here; like above, the path choice must
+    // not depend on the output row count `m`.
+    if rows * n <= SMALL_PANEL {
+        return reference::gemm_atb(a, b, rows, m, n, out);
+    }
+    let av = View { data: a, rs: 1, cs: m };
+    let bv = View { data: b, rs: n, cs: 1 };
+    gemm_view(av, bv, m, rows, n, out, blocks(), true);
+}
+
+/// [`gemm`] with explicit block sizes, serial, no small-case fallback — the
+/// conformance tests force tiny/odd blocks through this to exercise every
+/// remainder-tile path, and the autotune probe times candidates with it.
+/// Any `mc, kc, nc >= 1` are valid.
+pub fn gemm_with_blocks(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    out: &mut [f32],
+    bl: Blocks,
+) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), kd * n);
+    debug_assert_eq!(out.len(), m * n);
+    let av = View { data: a, rs: kd, cs: 1 };
+    let bv = View { data: b, rs: n, cs: 1 };
+    gemm_view(av, bv, m, kd, n, out, bl, false);
+}
+
+/// [`gemm_abt`] with explicit block sizes (see [`gemm_with_blocks`]).
+pub fn gemm_abt_with_blocks(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    out: &mut [f32],
+    bl: Blocks,
+) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), n * kd);
+    debug_assert_eq!(out.len(), m * n);
+    let av = View { data: a, rs: kd, cs: 1 };
+    let bv = View { data: b, rs: 1, cs: kd };
+    gemm_view(av, bv, m, kd, n, out, bl, false);
+}
+
+/// [`gemm_atb`] with explicit block sizes (see [`gemm_with_blocks`]).
+pub fn gemm_atb_with_blocks(
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+    bl: Blocks,
+) {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), m * n);
+    let av = View { data: a, rs: 1, cs: m };
+    let bv = View { data: b, rs: n, cs: 1 };
+    gemm_view(av, bv, m, rows, n, out, bl, false);
+}
+
+/// The blocked driver: `out[m,n] += A[m,kd] * B[kd,n]` through strided
+/// views.  Loop nest (outer to inner): NC column panels of B, KC slices of
+/// the shared dimension (B panel packed once per slice), MC row blocks of A
+/// (packed per thread, rayon-parallel from non-pool threads), then the
+/// NR x MR micro-tile sweep.
+#[allow(clippy::too_many_arguments)]
+fn gemm_view(
+    a: View<'_>,
+    b: View<'_>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    out: &mut [f32],
+    bl: Blocks,
+    parallel: bool,
+) {
+    if m == 0 || n == 0 || kd == 0 {
+        return;
+    }
+    // Nested-parallelism guard: inside a rayon pool thread (the kernels'
+    // batch loop) the per-image GEMM runs serial — the pool is already
+    // saturated, and a blocking inner join could steal another batch item
+    // onto this thread while its scratch borrow is live.
+    let parallel = parallel && m > bl.mc && rayon::current_thread_index().is_none();
+    let mut bbuf: Vec<f32> = Vec::new();
+    let mut jc = 0usize;
+    while jc < n {
+        let ncb = bl.nc.min(n - jc);
+        let mut pc = 0usize;
+        while pc < kd {
+            let kcb = bl.kc.min(kd - pc);
+            let bpack = pack_b(b, pc, kcb, jc, ncb, &mut bbuf);
+            let do_panel = |pi: usize, oblock: &mut [f32]| {
+                let i0 = pi * bl.mc;
+                let mcb = bl.mc.min(m - i0);
+                A_SCRATCH.with(|s| {
+                    let mut abuf = s.borrow_mut();
+                    let apack = pack_a(a, i0, mcb, pc, kcb, &mut abuf);
+                    macro_panel(apack, bpack, mcb, kcb, jc, ncb, n, oblock);
+                });
+            };
+            if parallel {
+                out.par_chunks_mut(bl.mc * n).enumerate().for_each(|(pi, ob)| do_panel(pi, ob));
+            } else {
+                for (pi, ob) in out.chunks_mut(bl.mc * n).enumerate() {
+                    do_panel(pi, ob);
+                }
+            }
+            pc += kcb;
+        }
+        jc += ncb;
+    }
+}
+
+/// Pack the `mcb x kcb` block of A at `(i0, p0)` into MR-row micro-panels:
+/// panel `p` stores, k-major, the strip `A[i0 + p*MR + r, p0 + k]`,
+/// zero-padded past the last row, so the microkernel reads one contiguous
+/// MR-strip per k step.
+/// Returns the packed block (`buf[..panels * MR * kcb]`); the scratch vec
+/// grows but is never shrunk or redundantly zeroed — every element of the
+/// returned slice is written here (values, or explicit zeros in the last
+/// panel's pad rows).
+fn pack_a<'b>(
+    a: View<'_>,
+    i0: usize,
+    mcb: usize,
+    p0: usize,
+    kcb: usize,
+    buf: &'b mut Vec<f32>,
+) -> &'b [f32] {
+    let panels = mcb.div_ceil(MR);
+    let need = panels * MR * kcb;
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+    let out = &mut buf[..need];
+    for (p, dst) in out.chunks_exact_mut(MR * kcb).enumerate() {
+        let r0 = p * MR;
+        let rows = MR.min(mcb - r0);
+        for k in 0..kcb {
+            let strip = &mut dst[k * MR..(k + 1) * MR];
+            for (r, slot) in strip[..rows].iter_mut().enumerate() {
+                *slot = a.at(i0 + r0 + r, p0 + k);
+            }
+            for slot in &mut strip[rows..] {
+                *slot = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Pack the `kcb x ncb` panel of B at `(p0, j0)` into NR-column
+/// micro-panels, k-major, zero-padded past the last column.  The common
+/// row-major case (`cs == 1`) is a straight `copy_from_slice` per k.
+fn pack_b<'b>(
+    b: View<'_>,
+    p0: usize,
+    kcb: usize,
+    j0: usize,
+    ncb: usize,
+    buf: &'b mut Vec<f32>,
+) -> &'b [f32] {
+    let panels = ncb.div_ceil(NR);
+    let need = panels * NR * kcb;
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+    let out = &mut buf[..need];
+    for (p, dst) in out.chunks_exact_mut(NR * kcb).enumerate() {
+        let c0 = p * NR;
+        let cols = NR.min(ncb - c0);
+        for k in 0..kcb {
+            let strip = &mut dst[k * NR..(k + 1) * NR];
+            if b.cs == 1 {
+                let src = &b.data[(p0 + k) * b.rs + j0 + c0..][..cols];
+                strip[..cols].copy_from_slice(src);
+            } else {
+                for (c, slot) in strip[..cols].iter_mut().enumerate() {
+                    *slot = b.at(p0 + k, j0 + c0 + c);
+                }
+            }
+            for slot in &mut strip[cols..] {
+                *slot = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Sweep one packed A block against the packed B panel, accumulating into
+/// the output row block (`oblock` holds full `n`-wide rows starting at row
+/// `i0` of `out`; this panel touches columns `jc .. jc + ncb`).
+#[allow(clippy::too_many_arguments)]
+fn macro_panel(
+    abuf: &[f32],
+    bbuf: &[f32],
+    mcb: usize,
+    kcb: usize,
+    jc: usize,
+    ncb: usize,
+    n: usize,
+    oblock: &mut [f32],
+) {
+    let kern = micro::kernel();
+    let mut tile = [0f32; MR * NR];
+    for (pj, bpanel) in bbuf.chunks_exact(NR * kcb).enumerate() {
+        let j0 = pj * NR;
+        let cols = NR.min(ncb - j0);
+        for (pi, apanel) in abuf.chunks_exact(MR * kcb).enumerate() {
+            let i0 = pi * MR;
+            let rows = MR.min(mcb - i0);
+            kern(kcb, apanel, bpanel, &mut tile);
+            for r in 0..rows {
+                let orow = &mut oblock[(i0 + r) * n + jc + j0..][..cols];
+                let trow = &tile[r * NR..r * NR + cols];
+                for (o, &t) in orow.iter_mut().zip(trow) {
+                    *o += t;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn gemm_matches_reference_above_and_below_small_cutoff() {
+        let mut rng = Pcg32::seed(51);
+        for &(m, kd, n) in &[(3usize, 4usize, 5usize), (40, 60, 70), (17, 130, 33)] {
+            let a = randn(&mut rng, m * kd);
+            let b = randn(&mut rng, kd * n);
+            let mut got = randn(&mut rng, m * n);
+            let mut want = got.clone();
+            gemm(&a, &b, m, kd, n, &mut got);
+            reference::gemm(&a, &b, m, kd, n, &mut want);
+            assert!(max_abs_diff(&got, &want) <= 1e-4, "gemm {m}x{kd}x{n}");
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match_reference() {
+        let mut rng = Pcg32::seed(52);
+        // kd*n (resp. rows*n) above SMALL_PANEL so the blocked path runs.
+        let (m, kd, n) = (33usize, 80usize, 60usize);
+        let a = randn(&mut rng, m * kd);
+        let bt = randn(&mut rng, n * kd);
+        let mut got = vec![0f32; m * n];
+        let mut want = vec![0f32; m * n];
+        gemm_abt(&a, &bt, m, kd, n, &mut got);
+        reference::gemm_abt(&a, &bt, m, kd, n, &mut want);
+        assert!(max_abs_diff(&got, &want) <= 1e-4, "gemm_abt");
+
+        let (rows, m2, n2) = (140usize, 26usize, 31usize);
+        let at = randn(&mut rng, rows * m2);
+        let b = randn(&mut rng, rows * n2);
+        let mut got = vec![0f32; m2 * n2];
+        let mut want = vec![0f32; m2 * n2];
+        gemm_atb(&at, &b, rows, m2, n2, &mut got);
+        reference::gemm_atb(&at, &b, rows, m2, n2, &mut want);
+        assert!(max_abs_diff(&got, &want) <= 1e-4, "gemm_atb");
+    }
+
+    #[test]
+    fn odd_blocks_and_remainder_tiles_are_exact() {
+        let mut rng = Pcg32::seed(53);
+        let (m, kd, n) = (19usize, 23usize, 21usize);
+        let a = randn(&mut rng, m * kd);
+        let b = randn(&mut rng, kd * n);
+        for bl in [
+            Blocks { mc: 5, kc: 3, nc: 13 },
+            Blocks { mc: 8, kc: 23, nc: 8 },
+            Blocks { mc: 19, kc: 1, nc: 21 },
+        ] {
+            let mut got = vec![0f32; m * n];
+            let mut want = vec![0f32; m * n];
+            gemm_with_blocks(&a, &b, m, kd, n, &mut got, bl);
+            reference::gemm(&a, &b, m, kd, n, &mut want);
+            assert!(max_abs_diff(&got, &want) <= 1e-4, "blocks {bl:?}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_of_a_stay_exactly_zero() {
+        // Padded kernel buckets rely on 0-rows producing bit-exact zeros.
+        let mut rng = Pcg32::seed(54);
+        // kd*n above SMALL_PANEL: the blocked path, not the naive fallback.
+        let (m, kd, n) = (16usize, 50usize, 96usize);
+        let mut a = randn(&mut rng, m * kd);
+        for v in &mut a[8 * kd..] {
+            *v = 0.0;
+        }
+        let b = randn(&mut rng, kd * n);
+        let mut out = vec![0f32; m * n];
+        gemm(&a, &b, m, kd, n, &mut out);
+        assert!(out[8 * n..].iter().all(|&v| v == 0.0), "zero rows must stay zero");
+        assert!(out[..8 * n].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn accumulates_into_out_instead_of_overwriting() {
+        let mut rng = Pcg32::seed(55);
+        // kd*n above SMALL_PANEL: exercises blocked-path accumulation.
+        let (m, kd, n) = (24usize, 64usize, 80usize);
+        let a = randn(&mut rng, m * kd);
+        let b = randn(&mut rng, kd * n);
+        let mut once = vec![0f32; m * n];
+        gemm(&a, &b, m, kd, n, &mut once);
+        let mut twice = vec![0f32; m * n];
+        gemm(&a, &b, m, kd, n, &mut twice);
+        gemm(&a, &b, m, kd, n, &mut twice);
+        let scaled: Vec<f32> = once.iter().map(|v| 2.0 * v).collect();
+        assert!(max_abs_diff(&twice, &scaled) <= 1e-3);
+    }
+
+    #[test]
+    fn gemm_flops_counts_multiply_and_add() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+}

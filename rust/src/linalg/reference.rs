@@ -1,0 +1,70 @@
+//! The naive triple-loop GEMMs — the pre-engine kernels, kept verbatim as
+//! the conformance oracle for the blocked path (`tests/linalg_conformance`)
+//! and as the "naive" side of `examples/bench_gemm.rs`.
+//!
+//! Semantics are identical to the blocked engine up to f32 summation order:
+//! row-major operands, accumulate-into-out.  The zero-skip in [`gemm`] and
+//! [`gemm_atb`] makes zero-padded kernel buckets nearly free, which the
+//! blocked path preserves arithmetically (0 · x contributes exactly 0.0).
+
+/// `out[m,n] += a[m,kd] * b[kd,n]`.  Saxpy inner loop over contiguous rows
+/// of `b`/`out` so the autovectorizer gets stride-1 access; zero `a`
+/// entries are skipped.
+pub fn gemm(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), kd * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * kd..(i + 1) * kd];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] += a[m,kd] * b[n,kd]^T` — both operands read along contiguous
+/// rows (dot products), the layout the kernel-gradient contraction wants.
+pub fn gemm_abt(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kd);
+    debug_assert_eq!(b.len(), n * kd);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * kd..(i + 1) * kd];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * kd..(j + 1) * kd];
+            let mut acc = 0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o += acc;
+        }
+    }
+}
+
+/// `out[m,n] += a[rows,m]^T * b[rows,n]` (both stored row-major).
+pub fn gemm_atb(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * m);
+    debug_assert_eq!(b.len(), rows * n);
+    debug_assert_eq!(out.len(), m * n);
+    for r in 0..rows {
+        let arow = &a[r * m..(r + 1) * m];
+        let brow = &b[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}

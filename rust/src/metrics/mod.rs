@@ -134,6 +134,33 @@ pub struct SchedStats {
     /// `(device id, utilization in [0,1])` of the last examined step,
     /// master first.  Utilization = busy time / step bottleneck.
     pub utilization: Vec<(usize, f64)>,
+    /// Achieved GFLOP/s of the most recent execution of each conv op
+    /// (keyed by layer + direction, e.g. `conv1_fwd` — deliberately not by
+    /// bucket, so adaptive re-shards don't accumulate dead entries) as seen
+    /// by the master's gather loop — the raw, per-op counterpart of the
+    /// telemetry's smoothed seconds-per-GFLOP, kept so the EWMA rates can
+    /// be sanity-checked against the measured `linalg` engine peak (an op
+    /// rate far below the GEMM peak means framing, not arithmetic, is the
+    /// bottleneck).
+    pub op_gflops: Vec<(String, f64)>,
+}
+
+impl SchedStats {
+    /// Record one executed op: `flops` of nominal work in `seconds` of pure
+    /// compute.  Keeps the *latest* achieved GFLOP/s per op — smoothing
+    /// lives in `sched::telemetry`; this is the raw observable.  Non-finite
+    /// or non-positive observations are dropped, like the telemetry's.
+    pub fn observe_gflops(&mut self, op: &str, seconds: f64, flops: f64) {
+        let bad = !seconds.is_finite() || seconds <= 0.0 || !flops.is_finite() || flops <= 0.0;
+        if bad {
+            return;
+        }
+        let rate = flops / 1e9 / seconds;
+        match self.op_gflops.iter_mut().find(|(o, _)| o == op) {
+            Some((_, r)) => *r = rate,
+            None => self.op_gflops.push((op.to_string(), rate)),
+        }
+    }
 }
 
 impl fmt::Display for SchedStats {
@@ -144,10 +171,16 @@ impl fmt::Display for SchedStats {
             self.repartitions, self.departures, self.straggler_flags
         )?;
         if self.utilization.is_empty() {
-            return write!(f, " n/a");
+            write!(f, " n/a")?;
         }
         for (d, u) in &self.utilization {
             write!(f, " dev{d}={:.0}%", 100.0 * u)?;
+        }
+        if !self.op_gflops.is_empty() {
+            write!(f, "  gflops")?;
+            for (op, r) in &self.op_gflops {
+                write!(f, " {op}={r:.2}")?;
+            }
         }
         Ok(())
     }
@@ -229,6 +262,39 @@ mod tests {
         assert!(out.contains("repartitions 2"), "{out}");
         assert!(out.contains("dev0=93%"), "{out}");
         assert!(out.contains("dev2=50%"), "{out}");
+        s.observe_gflops("conv1_fwd", 0.5, 4e9);
+        let out = s.to_string();
+        assert!(out.contains("gflops conv1_fwd=8.00"), "{out}");
+    }
+
+    #[test]
+    fn observe_gflops_keeps_latest_per_op_and_drops_bad_samples() {
+        let mut s = SchedStats::default();
+        s.observe_gflops("conv1_fwd", 1.0, 2e9);
+        s.observe_gflops("conv2_bwd", 0.5, 3e9);
+        assert_eq!(s.op_gflops.len(), 2);
+        assert!((s.op_gflops[0].1 - 2.0).abs() < 1e-12);
+        assert!((s.op_gflops[1].1 - 6.0).abs() < 1e-12);
+        // Latest observation wins (no averaging here).
+        s.observe_gflops("conv1_fwd", 1.0, 4e9);
+        assert_eq!(s.op_gflops.len(), 2);
+        assert!((s.op_gflops[0].1 - 4.0).abs() < 1e-12);
+        // Bad samples are dropped, like FleetTelemetry::record's.
+        s.observe_gflops("conv1_fwd", 0.0, 1e9);
+        s.observe_gflops("conv1_fwd", f64::INFINITY, 1e9);
+        s.observe_gflops("conv1_fwd", 1.0, -1.0);
+        assert!((s.op_gflops[0].1 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observed_gflops_is_the_reciprocal_of_the_telemetry_rate() {
+        // The sanity-check link: telemetry smooths seconds-per-GFLOP, this
+        // records GFLOP-per-second of the same observation.
+        let mut s = SchedStats::default();
+        let (secs, flops) = (0.02, 5e9);
+        s.observe_gflops("probe", secs, flops);
+        let sec_per_gflop = secs / (flops / 1e9);
+        assert!((s.op_gflops[0].1 - 1.0 / sec_per_gflop).abs() < 1e-9);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Result};
 use super::exec::ExecKind;
 use super::{Backend, PreparedExec};
 use crate::kernels as k;
+use crate::linalg;
 use crate::runtime::ExecutableSpec;
 use crate::tensor::{ITensor, Tensor, Value};
 
@@ -94,9 +95,9 @@ fn head_grad(
     let logits = k::fc_logits(p2, wf.data(), bf.data(), b, fin, ncls);
     let (loss, gl) = k::softmax_xent_grad(&logits, labels, b, ncls);
     let mut gp2 = vec![0f32; b * fin];
-    k::gemm_abt_acc(&gl, wf.data(), b, ncls, fin, &mut gp2);
+    linalg::gemm_abt(&gl, wf.data(), b, ncls, fin, &mut gp2);
     let mut gwf = vec![0f32; fin * ncls];
-    k::gemm_atb_acc(p2, &gl, b, fin, ncls, &mut gwf);
+    linalg::gemm_atb(p2, &gl, b, fin, ncls, &mut gwf);
     let mut gbf = vec![0f32; ncls];
     for row in gl.chunks(ncls) {
         for (g, &v) in gbf.iter_mut().zip(row) {

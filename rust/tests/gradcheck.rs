@@ -1,0 +1,151 @@
+//! Finite-difference gradient checks for the native backward kernels —
+//! `conv2d_bwd`, `maxpool2_bwd` and `lrn_bwd` against central differences
+//! of the scalar loss `L = <gy, fwd(x)>`.  These close the loop the
+//! adjoint/inner-product identities in the unit tests leave open: a bug
+//! that preserves linear structure (e.g. a transposed index that is its own
+//! adjoint) still shifts individual FD probes.
+
+use convdist::kernels as k;
+use convdist::tensor::Pcg32;
+
+fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+/// f64 inner product of f32 slices (FD noise floor control).
+fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[test]
+fn conv2d_bwd_input_and_kernel_grads_match_finite_differences() {
+    let mut rng = Pcg32::seed(3001);
+    let (b, c, h, kk, kh) = (2usize, 3usize, 8usize, 5usize, 3usize);
+    let oh = h - kh + 1;
+    let x = randn(&mut rng, b * c * h * h);
+    let w = randn(&mut rng, kk * c * kh * kh);
+    let bias = randn(&mut rng, kk);
+    let gy = randn(&mut rng, b * kk * oh * oh);
+    let (gx, gw, gb) = k::conv2d_bwd(&x, &w, &gy, b, c, h, h, kk, kh, kh);
+
+    let loss = |xs: &[f32], ws: &[f32]| -> f64 {
+        let y = k::conv2d_fwd(xs, ws, &bias, b, c, h, h, kk, kh, kh);
+        dot64(&y, &gy)
+    };
+    let eps = 1e-2f32;
+    // Conv is linear in x and w, so central differences are exact up to
+    // f32 rounding of the forward pass itself.
+    for &p in &[0usize, 17, 101, b * c * h * h - 1] {
+        let mut xp = x.clone();
+        xp[p] += eps;
+        let mut xm = x.clone();
+        xm[p] -= eps;
+        let fd = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps as f64);
+        let got = gx[p] as f64;
+        assert!(
+            (got - fd).abs() <= 1e-2 * fd.abs().max(1.0),
+            "gx[{p}]: analytic {got} vs fd {fd}"
+        );
+    }
+    for &p in &[0usize, 7, 50, kk * c * kh * kh - 1] {
+        let mut wp = w.clone();
+        wp[p] += eps;
+        let mut wm = w.clone();
+        wm[p] -= eps;
+        let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+        let got = gw[p] as f64;
+        assert!(
+            (got - fd).abs() <= 1e-2 * fd.abs().max(1.0),
+            "gw[{p}]: analytic {got} vs fd {fd}"
+        );
+    }
+    // Bias gradient: d<gy, y>/d bias[ki] = sum of gy over kernel ki.
+    for ki in 0..kk {
+        let want: f64 = (0..b)
+            .map(|bi| {
+                gy[(bi * kk + ki) * oh * oh..(bi * kk + ki + 1) * oh * oh]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!((gb[ki] as f64 - want).abs() < 1e-3, "gb[{ki}]");
+    }
+}
+
+#[test]
+fn maxpool2_bwd_matches_finite_differences() {
+    // Deterministic well-separated values (multiples of 0.05, all distinct
+    // per image thanks to gcd(53, 191) = 1): no window ever has a tie
+    // within the FD epsilon, so the subgradient is the gradient.
+    let (b, c, h) = (2usize, 2usize, 6usize);
+    let n = b * c * h * h;
+    let x: Vec<f32> = (0..n).map(|i| ((i * 53) % 191) as f32 * 0.05 - 4.0).collect();
+    let mut rng = Pcg32::seed(3002);
+    let gp = randn(&mut rng, b * c * (h / 2) * (h / 2));
+    let gx = k::maxpool2_bwd(&x, &gp, b, c, h, h);
+
+    let loss = |xs: &[f32]| -> f64 { dot64(&k::maxpool2_fwd(xs, b, c, h, h), &gp) };
+    let eps = 1e-3f32;
+    for &p in &[0usize, 5, 36, 77, n - 1] {
+        let mut xp = x.clone();
+        xp[p] += eps;
+        let mut xm = x.clone();
+        xm[p] -= eps;
+        let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+        let got = gx[p] as f64;
+        assert!(
+            (got - fd).abs() <= 1e-2 * fd.abs().max(1.0),
+            "pool gx[{p}]: analytic {got} vs fd {fd}"
+        );
+    }
+    // Every pooled gradient lands somewhere: mass is conserved.
+    let routed: f64 = gx.iter().map(|&v| v as f64).sum();
+    let injected: f64 = gp.iter().map(|&v| v as f64).sum();
+    assert!((routed - injected).abs() < 1e-4);
+}
+
+/// f64 LRN forward (the clipped-window formula from `kernels`), for FD that
+/// is not drowned by f32 noise.
+fn lrn_fwd_f64(x: &[f64], c: usize, hw: usize) -> Vec<f64> {
+    let half = k::LRN_N / 2;
+    let mut y = vec![0f64; x.len()];
+    for p in 0..hw {
+        for ci in 0..c {
+            let (lo, hi) = (ci.saturating_sub(half), (ci + k::LRN_N - 1 - half).min(c - 1));
+            let mut s = 0f64;
+            for j in lo..=hi {
+                s += x[j * hw + p] * x[j * hw + p];
+            }
+            let d = k::LRN_K as f64 + k::LRN_ALPHA as f64 * s;
+            y[ci * hw + p] = x[ci * hw + p] * d.powf(-(k::LRN_BETA as f64));
+        }
+    }
+    y
+}
+
+#[test]
+fn lrn_bwd_matches_finite_differences() {
+    let mut rng = Pcg32::seed(3003);
+    let (c, h) = (7usize, 4usize);
+    let hw = h * h;
+    let x = randn(&mut rng, c * hw);
+    let gy = randn(&mut rng, c * hw);
+    let gx = k::lrn_bwd(&x, &gy, 1, c, h, h);
+    let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let eps = 1e-4f64;
+    for &p in &[0usize, 3, hw, 2 * hw + 5, 5 * hw + 1, c * hw - 1] {
+        let mut xp = x64.clone();
+        xp[p] += eps;
+        let mut xm = x64.clone();
+        xm[p] -= eps;
+        let lp: f64 = lrn_fwd_f64(&xp, c, hw).iter().zip(&gy).map(|(a, &g)| a * g as f64).sum();
+        let lm: f64 = lrn_fwd_f64(&xm, c, hw).iter().zip(&gy).map(|(a, &g)| a * g as f64).sum();
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (gx[p] as f64 - fd).abs() < 1e-3,
+            "lrn gx[{p}]: analytic {} vs fd {fd}",
+            gx[p]
+        );
+    }
+}

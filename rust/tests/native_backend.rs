@@ -236,6 +236,15 @@ fn tiny_arch_distributed_heterogeneous_matches_single_within_1e4() {
         "distributed vs single-device params diverged: {diff}"
     );
 
+    // Achieved-GFLOP/s observability rides along even with adaptation off:
+    // the master saw fwd+bwd conv executions, so per-op rates exist and are
+    // positive/finite.
+    let stats = dist.sched_stats();
+    assert!(!stats.op_gflops.is_empty(), "per-op GFLOP/s must be recorded");
+    for (op, rate) in &stats.op_gflops {
+        assert!(rate.is_finite() && *rate > 0.0, "op {op} rate {rate}");
+    }
+
     // The eval path (eval_full) composes too.
     let held_out = ds.batch(arch.batch, 999).unwrap();
     let acc = dist.eval_accuracy(&held_out).unwrap();
