@@ -10,6 +10,9 @@ cargo test -q
 # Adaptive-scheduler suite under the throttled in-proc cluster (also part
 # of `cargo test` above; named here so a renamed/deleted target fails loud).
 cargo test -q --test adaptive_sched
+# Layer-graph API gate: 3-conv distributed-vs-single equivalence + e2e
+# gradcheck (also part of `cargo test`; named so the target stays alive).
+cargo test -q --test layer_graph
 # Static-vs-adaptive step-time trajectory from the scheduler simulator;
 # uploaded as a workflow artifact for trend tracking.
 cargo run --release --example bench_sched

@@ -19,10 +19,9 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::open(&artifacts)?;
     let arch = rt.arch().clone();
     println!(
-        "loaded {} AOT executables  (arch {}:{}, batch {}, platform {})",
+        "loaded {} AOT executables  (arch {}, batch {}, platform {})",
         rt.manifest().executables.len(),
-        arch.k1,
-        arch.k2,
+        arch.label(),
         arch.batch,
         rt.platform()
     );
@@ -36,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::virtual_gflops(2.0))?;
 
     println!("\ncalibration probe times (s): {:?}", trainer.probe_times());
-    for layer in [1usize, 2] {
+    for layer in 1..=arch.num_convs() {
         let desc: Vec<String> = trainer
             .shards(layer)
             .iter()

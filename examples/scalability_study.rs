@@ -21,7 +21,7 @@ fn measured_scale() -> anyhow::Result<f64> {
     let p = rt.arch().probe.clone();
     let mut rng = Pcg32::seed(3);
     let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
-    let w = Tensor::randn(&[p.k, p.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+    let w = Tensor::randn(&[p.k, p.in_ch, p.kh, p.kw], &mut rng);
     let b = Tensor::zeros(&[p.k]);
     let args = [x.into(), w.into(), b.into()];
     let _ = rt.execute("probe", &args)?;

@@ -16,35 +16,63 @@
 //! (substitution documented in DESIGN.md §2).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example train_cifar_e2e [steps]
+//! cargo run --release --example train_cifar_e2e [steps] [arch]
+//! # e.g. the 3-conv preset the layer-graph API opened up:
+//! cargo run --release --example train_cifar_e2e 50 deep_cifar
 //! ```
+//!
+//! `arch` names an `ArchSpec` preset (default | tiny | deep_cifar |
+//! tiny_deep); when given, the whole cluster runs that synthesized graph on
+//! the native backend (bypassing any `artifacts/manifest.json`).
 
 use std::time::Instant;
 
 use convdist::baselines::SingleDeviceTrainer;
-use convdist::cluster::{spawn_inproc, DistTrainer};
+use convdist::cluster::{spawn_inproc, spawn_inproc_arch, DistTrainer};
 use convdist::config::TrainerConfig;
 use convdist::data::default_dataset;
 use convdist::devices::Throttle;
 use convdist::metrics::Breakdown;
-use convdist::runtime::Runtime;
+use convdist::runtime::{ArchSpec, Runtime};
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let preset = match std::env::args().nth(2) {
+        Some(name) => Some(ArchSpec::preset(&name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown arch preset {name:?} (try: default, tiny, deep_cifar, tiny_deep)"
+            )
+        })?),
+        None => None,
+    };
     let artifacts = convdist::artifacts_dir();
-    let rt = Runtime::open(&artifacts)?;
+    let rt = match &preset {
+        Some(arch) => Runtime::for_arch(arch.clone()),
+        None => Runtime::open(&artifacts)?,
+    };
     let arch = rt.arch().clone();
     let cfg = TrainerConfig { steps, lr: 0.03, momentum: 0.9, weight_decay: 1e-4, ..Default::default() };
     println!(
-        "e2e: arch {}:{} batch {} — {} steps, lr {}, momentum {}",
-        arch.k1, arch.k2, arch.batch, cfg.steps, cfg.lr, cfg.momentum
+        "e2e: arch {} ({} conv layers) batch {} — {} steps, lr {}, momentum {}",
+        arch.label(),
+        arch.num_convs(),
+        arch.batch,
+        cfg.steps,
+        cfg.lr,
+        cfg.momentum
     );
 
     let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, cfg.seed);
 
+    // Workers must resolve the same graph as the master: a preset travels
+    // by argument, the artifact path otherwise.
+    let spawn = |throttles: &[Throttle]| match &preset {
+        Some(a) => spawn_inproc_arch(a.clone(), throttles, None),
+        None => spawn_inproc(artifacts.clone(), throttles, None),
+    };
+
     // --- distributed run: master + 2 workers --------------------------------
-    let mut cluster =
-        spawn_inproc(artifacts.clone(), &[Throttle::none(), Throttle::none()], None);
+    let mut cluster = spawn(&[Throttle::none(), Throttle::none()]);
     let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none())?;
     println!("calibration: {:?}", dist.probe_times());
 
@@ -81,7 +109,7 @@ fn main() -> anyhow::Result<()> {
     let check_steps = steps.min(5);
     let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none())?;
     let mut ds2 = default_dataset(arch.img, arch.in_ch, arch.num_classes, cfg.seed);
-    let mut cluster2 = spawn_inproc(artifacts, &[Throttle::none(); 2], None);
+    let mut cluster2 = spawn(&[Throttle::none(); 2]);
     let mut dist2 = DistTrainer::new(rt.clone(), cluster2.take_links(), &cfg, Throttle::none())?;
     let mut worst = 0f32;
     for step in 0..check_steps {

@@ -126,10 +126,13 @@ fn main() -> anyhow::Result<()> {
     let artifacts = convdist::artifacts_dir();
     let rt = Runtime::open(&artifacts)?;
     let arch = rt.arch().clone();
-    let x = Tensor::randn(&[arch.batch, arch.k1, arch.p1_out, arch.p1_out], &mut rng);
-    let wk = Tensor::randn(&[arch.k2, arch.k1, arch.kh, arch.kw], &mut rng);
-    let bk = Tensor::zeros(&[arch.k2]);
-    let exec = format!("conv2_fwd_b{}", arch.k2);
+    let (c2_in, c2_hw) = arch.conv_input(2);
+    let (kh2, kw2) = arch.conv_kernel(2);
+    let k2 = arch.kernels(2);
+    let x = Tensor::randn(&[arch.batch, c2_in, c2_hw, c2_hw], &mut rng);
+    let wk = Tensor::randn(&[k2, c2_in, kh2, kw2], &mut rng);
+    let bk = Tensor::zeros(&[k2]);
+    let exec = format!("conv2_fwd_b{k2}");
     let args = [Value::F32(x), Value::F32(wk), Value::F32(bk)];
     rt.execute(&exec, &args)?; // compile outside the timing loop
     b.run(&format!("runtime::execute {exec}"), || rt.execute(&exec, &args).unwrap());

@@ -75,17 +75,12 @@ impl SingleDeviceTrainer {
         let padded = self.throttle.pad(t0.elapsed(), self.rt.flops(&format!("grad_full_b{b}")));
         // grad_full fuses conv and non-conv; attribute by the arch's conv
         // FLOP share so breakdowns remain comparable with the cluster's.
+        // The share is priced straight off the layer graph's conv FLOPs, so
+        // an N-conv ArchSpec needs no two-conv shoehorning.
         let arch = self.rt.arch();
-        let shape = ArchShape {
-            k1: arch.k1,
-            k2: arch.k2,
-            batch: b,
-            img: arch.img,
-            in_ch: arch.in_ch,
-            kh: arch.kh,
-            kw: arch.kw,
-        };
-        let share = crate::sim::comp_share(&shape);
+        let share = crate::sim::comp_share_for_train_flops(
+            arch.conv_flops_fwd_at(1024) * ArchShape::TRAIN_CONV_FACTOR,
+        );
         timer.record(Phase::Conv, padded.mul_f64(1.0 - share));
         timer.record(Phase::Comp, padded.mul_f64(share));
         timer.time(Phase::Comp, || self.opt.step(&mut self.params, &grads))?;

@@ -8,6 +8,12 @@
 //! loop drives the native CPU backend and (with `--features pjrt`) the
 //! AOT-HLO path.
 //!
+//! The forward/backward passes are a *loop over the architecture graph's
+//! conv layers* (`1..=arch.num_convs()`): each layer is Eq. 1-partitioned
+//! from the same calibration, distributed, gathered, and followed by its
+//! master-resident `mid{L}` segment — a 3- or N-conv [`ArchSpec`] trains
+//! through the identical code path as the paper's two-conv network.
+//!
 //! Extensions beyond the paper:
 //!
 //! * **Failure recovery** — if a worker dies mid-training the master drops
@@ -36,7 +42,7 @@ use crate::net::Link;
 use crate::proto::{Message, WireTensor};
 use crate::runtime::{ArchSpec, ConvDir, Manifest, Runtime};
 use crate::sched::{
-    partition_layer, utilization, AdaptiveConfig, AdaptivePolicy, Decision, FleetTelemetry,
+    partition_network, utilization, AdaptiveConfig, AdaptivePolicy, Decision, FleetTelemetry,
     LayerPlan, Shard,
 };
 use crate::tensor::{Tensor, Value};
@@ -71,12 +77,10 @@ fn op_key(layer: usize, dir: ConvDir) -> String {
 }
 
 /// FLOPs of one kernel of conv layer `layer`, forward pass — the layer
-/// weight the adaptive policy uses (training factors scale both layers
+/// weight the adaptive policy uses (training factors scale every layer
 /// equally and cancel in the gain ratio).
 fn flops_per_kernel(arch: &ArchSpec, layer: usize) -> f64 {
-    let (in_ch, _) = arch.conv_input(layer);
-    let out = arch.conv_output(layer);
-    2.0 * arch.batch as f64 * (out * out) as f64 * in_ch as f64 * (arch.kh * arch.kw) as f64
+    arch.conv_layer_flops(layer, 1, arch.batch)
 }
 
 /// The master node: Algorithm 1 plus calibration, Eq. 1 partitioning,
@@ -86,8 +90,8 @@ pub struct DistTrainer {
     workers: Vec<WorkerSlot>,
     /// Probe seconds per device; index 0 = master, i+1 = worker i.
     probe_times: Vec<f64>,
-    shards1: Vec<Shard>,
-    shards2: Vec<Shard>,
+    /// Per-conv-layer shard tables; index l-1 = conv layer l.
+    shards: Vec<Vec<Shard>>,
     pub params: Params,
     opt: Sgd,
     master_throttle: Throttle,
@@ -141,8 +145,7 @@ impl DistTrainer {
             rt,
             workers,
             probe_times: vec![],
-            shards1: vec![],
-            shards2: vec![],
+            shards: vec![],
             params,
             opt: Sgd::new(cfg.lr, cfg.momentum, cfg.weight_decay),
             master_throttle,
@@ -175,10 +178,10 @@ impl DistTrainer {
         }
         // Master probes itself while the slaves probe.
         let my_secs = {
-            let p = &self.rt.arch().probe;
+            let p = self.rt.arch().probe.clone();
             let mut rng = crate::tensor::Pcg32::seed_stream(0xCA11B, 0);
             let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
-            let w = Tensor::randn(&[p.k, p.in_ch, self.rt.arch().kh, self.rt.arch().kw], &mut rng);
+            let w = Tensor::randn(&[p.k, p.in_ch, p.kh, p.kw], &mut rng);
             let b = Tensor::zeros(&[p.k]);
             let args = [Value::F32(x), Value::F32(w), Value::F32(b)];
             let _ = self.rt.execute("probe", &args)?; // absorb compile
@@ -213,7 +216,7 @@ impl DistTrainer {
             .collect()
     }
 
-    /// Eq. 1 partition of both conv layers over the alive devices, using
+    /// Eq. 1 partition of every conv layer over the alive devices, using
     /// the calibration probe times (the paper's static scheduler).
     fn partition(&mut self) -> Result<()> {
         let times = self.probe_times.clone();
@@ -227,14 +230,15 @@ impl DistTrainer {
         let arch = self.rt.arch().clone();
         let active = self.active_devices();
         let times: Vec<f64> = active.iter().map(|&d| times_by_dev[d]).collect();
-        let remap = |mut shards: Vec<Shard>| -> Vec<Shard> {
-            for s in &mut shards {
+        let layers: Vec<(usize, &[usize])> =
+            (1..=arch.num_convs()).map(|l| (arch.kernels(l), arch.buckets(l))).collect();
+        let mut tables = partition_network(&layers, &times)?;
+        for shards in &mut tables {
+            for s in shards.iter_mut() {
                 s.device = active[s.device];
             }
-            shards
-        };
-        self.shards1 = remap(partition_layer(arch.k1, &times, &arch.buckets1)?);
-        self.shards2 = remap(partition_layer(arch.k2, &times, &arch.buckets2)?);
+        }
+        self.shards = tables;
         Ok(())
     }
 
@@ -250,12 +254,14 @@ impl DistTrainer {
         self.partition_with(&vec![1.0; n])
     }
 
+    /// Shard table of conv layer `layer` (1-based).
     pub fn shards(&self, layer: usize) -> &[Shard] {
-        match layer {
-            1 => &self.shards1,
-            2 => &self.shards2,
-            _ => panic!("layer {layer} out of range"),
-        }
+        assert!(
+            (1..=self.shards.len()).contains(&layer),
+            "conv layer {layer} out of range 1..={}",
+            self.shards.len()
+        );
+        &self.shards[layer - 1]
     }
 
     pub fn alive_workers(&self) -> usize {
@@ -334,9 +340,9 @@ impl DistTrainer {
     /// True when a shard table still names a dead worker (its departure was
     /// detected on a one-way send, outside the step retry loop).
     fn tables_reference_dead(&self) -> bool {
-        self.shards1
+        self.shards
             .iter()
-            .chain(self.shards2.iter())
+            .flatten()
             .any(|s| s.device != 0 && !self.workers[s.device - 1].alive)
     }
 
@@ -412,21 +418,16 @@ impl DistTrainer {
         self.stats.straggler_flags += flagged.len() as u64;
 
         let arch = self.rt.arch().clone();
+        let nconv = arch.num_convs();
         let (decision, util) = {
-            let plans = [
-                LayerPlan {
-                    k: arch.k1,
-                    buckets: &arch.buckets1,
-                    current: &self.shards1,
-                    flops_per_kernel: flops_per_kernel(&arch, 1),
-                },
-                LayerPlan {
-                    k: arch.k2,
-                    buckets: &arch.buckets2,
-                    current: &self.shards2,
-                    flops_per_kernel: flops_per_kernel(&arch, 2),
-                },
-            ];
+            let plans: Vec<LayerPlan> = (1..=nconv)
+                .map(|l| LayerPlan {
+                    k: arch.kernels(l),
+                    buckets: arch.buckets(l),
+                    current: &self.shards[l - 1],
+                    flops_per_kernel: flops_per_kernel(&arch, l),
+                })
+                .collect();
             let util = utilization(&plans, &active, &rates);
             let decision = self.policy.decide(self.steps_done, &plans, &active, &rates)?;
             (decision, util)
@@ -434,10 +435,13 @@ impl DistTrainer {
         self.stats.utilization = active.iter().copied().zip(util).collect();
         match decision {
             Decision::Keep => Ok(false),
-            Decision::Repartition(mut tables) => {
-                ensure!(tables.len() == 2, "policy returned {} tables", tables.len());
-                self.shards2 = tables.pop().unwrap();
-                self.shards1 = tables.pop().unwrap();
+            Decision::Repartition(tables) => {
+                ensure!(
+                    tables.len() == nconv,
+                    "policy returned {} tables for {nconv} conv layers",
+                    tables.len()
+                );
+                self.shards = tables;
                 self.stats.repartitions += 1;
                 self.warm_own_shards();
                 self.notify_shard_updates();
@@ -449,32 +453,34 @@ impl DistTrainer {
     /// Prepare the master's own bucket executables for the current tables
     /// (best effort — a miss only costs compile time on the next step).
     fn warm_own_shards(&self) {
-        for (layer, shards) in [(1usize, &self.shards1), (2usize, &self.shards2)] {
+        for (li, shards) in self.shards.iter().enumerate() {
             if let Some(s) = shards.iter().find(|s| s.device == 0) {
-                let fwd = Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket);
-                let bwd = Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket);
+                let fwd = Manifest::conv_exec(li + 1, ConvDir::Fwd, s.bucket);
+                let bwd = Manifest::conv_exec(li + 1, ConvDir::Bwd, s.bucket);
                 let _ = self.rt.warmup(&[fwd.as_str(), bwd.as_str()]);
             }
         }
     }
 
-    /// Tell every alive worker its new shard of both layers so it can
+    /// Tell every alive worker its new shard of every layer so it can
     /// pre-warm the bucket executables (bucket 0 = idle for that layer).
     fn notify_shard_updates(&mut self) {
-        for layer in [1usize, 2usize] {
-            let shards = if layer == 1 { self.shards1.clone() } else { self.shards2.clone() };
+        let tables = self.shards.clone();
+        for (li, shards) in tables.iter().enumerate() {
             for wi in 0..self.workers.len() {
                 if !self.workers[wi].alive {
                     continue;
                 }
                 let msg = match shards.iter().find(|s| s.device == wi + 1) {
                     Some(s) => Message::ShardUpdate {
-                        layer: layer as u8,
+                        layer: (li + 1) as u8,
                         lo: s.lo as u32,
                         hi: s.hi as u32,
                         bucket: s.bucket as u32,
                     },
-                    None => Message::ShardUpdate { layer: layer as u8, lo: 0, hi: 0, bucket: 0 },
+                    None => {
+                        Message::ShardUpdate { layer: (li + 1) as u8, lo: 0, hi: 0, bucket: 0 }
+                    }
                 };
                 if self.workers[wi].link.send(&msg).is_err() {
                     self.workers[wi].alive = false;
@@ -492,28 +498,38 @@ impl DistTrainer {
             "batch shape {:?} does not match compiled arch",
             batch.images.shape()
         );
+        let nconv = arch.num_convs();
+        let tables = self.shards.clone();
 
-        // ---------------- forward ----------------
-        let shards1 = self.shards1.clone();
-        let shards2 = self.shards2.clone();
-        let w1 = self.params.get("w1")?.clone();
-        let b1 = self.params.get("b1")?.clone();
-        let y1 = self.dist_conv_fwd(1, &batch.images, &w1, &b1, &shards1, &mut timer)?;
-        let p1 = self.master_exec1("mid1_fwd", Value::F32(y1.clone()), &mut timer)?;
+        // ---------------- forward: loop over the conv layers ----------------
+        let mut ws = Vec::with_capacity(nconv);
+        let mut bs = Vec::with_capacity(nconv);
+        for l in 1..=nconv {
+            ws.push(self.params.get(&ArchSpec::conv_weight(l))?.clone());
+            bs.push(self.params.get(&ArchSpec::conv_bias(l))?.clone());
+        }
+        // Per-layer activations backward needs: the conv inputs and the
+        // (pre-mid) conv outputs.
+        let mut xs: Vec<Tensor> = Vec::with_capacity(nconv);
+        let mut ys: Vec<Tensor> = Vec::with_capacity(nconv);
+        let mut p = batch.images.clone();
+        for l in 1..=nconv {
+            let y =
+                self.dist_conv_fwd(l, &p, &ws[l - 1], &bs[l - 1], &tables[l - 1], &mut timer)?;
+            let name = format!("mid{l}_fwd");
+            let next = self.master_exec1(&name, Value::F32(y.clone()), &mut timer)?;
+            xs.push(std::mem::replace(&mut p, next));
+            ys.push(y);
+        }
 
-        let w2 = self.params.get("w2")?.clone();
-        let b2 = self.params.get("b2")?.clone();
-        let y2 = self.dist_conv_fwd(2, &p1, &w2, &b2, &shards2, &mut timer)?;
-        let p2 = self.master_exec1("mid2_fwd", Value::F32(y2.clone()), &mut timer)?;
-
-        // head: loss + gradients wrt (p2, wf, bf)
-        let wf = self.params.get("wf")?.clone();
-        let bf = self.params.get("bf")?.clone();
+        // head: loss + gradients wrt (p, fc.w, fc.b)
+        let wf = self.params.get(ArchSpec::FC_W)?.clone();
+        let bf = self.params.get(ArchSpec::FC_B)?.clone();
         let outs = timer.time(Phase::Comp, || {
             self.rt.execute(
                 "head_grad",
                 &[
-                    Value::F32(p2),
+                    Value::F32(p),
                     Value::F32(wf),
                     Value::F32(bf),
                     Value::I32(batch.labels.clone()),
@@ -522,39 +538,35 @@ impl DistTrainer {
         })?;
         let mut it = outs.into_iter();
         let loss = it.next().unwrap().as_f32()?.item()?;
-        let gp2 = it.next().unwrap();
+        let mut gp = it.next().unwrap();
         let gwf = it.next().unwrap().as_f32()?.clone();
         let gbf = it.next().unwrap().as_f32()?.clone();
 
-        // ---------------- backward ----------------
-        let gy2 = {
-            let outs = timer.time(Phase::Comp, || {
-                self.rt.execute("mid2_bwd", &[Value::F32(y2), gp2])
-            })?;
-            outs.into_iter().next().unwrap().as_f32()?.clone()
-        };
-        let (gp1, gw2, gb2) = self.dist_conv_bwd(2, &p1, &w2, &gy2, &shards2, &mut timer)?;
-        let gy1 = {
-            let outs = timer.time(Phase::Comp, || {
-                self.rt.execute("mid1_bwd", &[Value::F32(y1), Value::F32(gp1)])
-            })?;
-            outs.into_iter().next().unwrap().as_f32()?.clone()
-        };
-        // Input-layer gx is discarded (no layer below), but the executable
-        // computes it anyway — same cost structure as the paper's convn.
-        let (_gx, gw1, gb1) = self.dist_conv_bwd(1, &batch.images, &w1, &gy1, &shards1, &mut timer)?;
+        // ---------------- backward: deepest conv first ----------------------
+        let mut grads = Grads::zeros_like(&self.params);
+        grads.set(ArchSpec::FC_W, gwf);
+        grads.set(ArchSpec::FC_B, gbf);
+        for l in (1..=nconv).rev() {
+            let gy = {
+                let name = format!("mid{l}_bwd");
+                // Backward consumes the stored conv outputs deepest-first,
+                // so each y moves out of `ys` instead of being cloned.
+                let y = Value::F32(ys.pop().unwrap());
+                let outs = timer.time(Phase::Comp, || self.rt.execute(&name, &[y, gp]))?;
+                outs.into_iter().next().unwrap().as_f32()?.clone()
+            };
+            // The input-layer gx is discarded (no layer below), but the
+            // executable computes it anyway — same cost structure as the
+            // paper's convn.
+            let (gx, gw, gb) =
+                self.dist_conv_bwd(l, &xs[l - 1], &ws[l - 1], &gy, &tables[l - 1], &mut timer)?;
+            grads.set(&ArchSpec::conv_weight(l), gw);
+            grads.set(&ArchSpec::conv_bias(l), gb);
+            gp = Value::F32(gx);
+        }
 
         // ---------------- update ----------------
-        timer.time(Phase::Comp, || -> Result<()> {
-            let mut grads = Grads::zeros_like(&self.params);
-            grads.set("w1", gw1);
-            grads.set("b1", gb1);
-            grads.set("w2", gw2);
-            grads.set("b2", gb2);
-            grads.set("wf", gwf);
-            grads.set("bf", gbf);
-            self.opt.step(&mut self.params, &grads)
-        })?;
+        timer.time(Phase::Comp, || self.opt.step(&mut self.params, &grads))?;
 
         // Batch acknowledged (Algorithm 1 line 21).
         self.broadcast(&Message::AllOk);

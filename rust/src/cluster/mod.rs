@@ -58,16 +58,56 @@ pub fn spawn_inproc_planned(
     plans: &[ThrottlePlan],
     shape: Option<LinkModel>,
 ) -> InprocCluster {
+    spawn_inproc_impl(WorkerRuntime::Artifacts(artifacts), plans, shape)
+}
+
+/// [`spawn_inproc`] for an explicit (synthesized) architecture: every
+/// worker opens a native runtime over its own clone of `arch` instead of an
+/// artifact directory.  This is how a preset selected on the master (the
+/// CLI's `--arch`, the e2e example's `[arch]` argument) reaches in-process
+/// workers — as an argument, not ambient env state.
+pub fn spawn_inproc_arch(
+    arch: crate::runtime::ArchSpec,
+    throttles: &[Throttle],
+    shape: Option<LinkModel>,
+) -> InprocCluster {
+    let plans: Vec<ThrottlePlan> = throttles.iter().map(|&t| ThrottlePlan::fixed(t)).collect();
+    spawn_inproc_impl(WorkerRuntime::Arch(arch), &plans, shape)
+}
+
+/// How each spawned worker obtains its [`Runtime`].
+enum WorkerRuntime {
+    /// `Runtime::open` over this directory (manifest-pinned or default).
+    Artifacts(PathBuf),
+    /// `Runtime::for_arch` over a clone of this architecture.
+    Arch(crate::runtime::ArchSpec),
+}
+
+impl WorkerRuntime {
+    fn open(&self) -> Result<std::sync::Arc<Runtime>> {
+        match self {
+            WorkerRuntime::Artifacts(dir) => Runtime::open(dir),
+            WorkerRuntime::Arch(arch) => Ok(Runtime::for_arch(arch.clone())),
+        }
+    }
+}
+
+fn spawn_inproc_impl(
+    source: WorkerRuntime,
+    plans: &[ThrottlePlan],
+    shape: Option<LinkModel>,
+) -> InprocCluster {
     let mut links: Vec<Box<dyn Link>> = Vec::new();
     let mut handles = Vec::new();
+    let source = std::sync::Arc::new(source);
     for (i, &plan) in plans.iter().enumerate() {
         let (master_end, worker_end) = inproc_pair();
-        let dir = artifacts.clone();
         let opts = WorkerOptions::with_plan(i as u32 + 1, plan);
+        let src = source.clone();
         let handle = std::thread::Builder::new()
             .name(format!("convdist-worker-{}", i + 1))
             .spawn(move || {
-                let rt = Runtime::open(&dir)?;
+                let rt = src.open()?;
                 // Shaping is applied on the worker side for its sends;
                 // master-side sends are shaped on the master's link.
                 match shape {

@@ -90,7 +90,7 @@ pub fn worker_loop(mut link: impl Link, rt: Arc<Runtime>, opts: WorkerOptions) -
                 // bucket so the next scatter is not billed preparation time
                 // (bucket recompiles stay off the hot path).  Best-effort —
                 // a bad layer/bucket only loses the prefetch.
-                if bucket > 0 && (layer == 1 || layer == 2) {
+                if bucket > 0 && (1..=rt.arch().num_convs()).contains(&(layer as usize)) {
                     let fwd = Manifest::conv_exec(layer as usize, ConvDir::Fwd, bucket as usize);
                     let bwd = Manifest::conv_exec(layer as usize, ConvDir::Bwd, bucket as usize);
                     let _ = rt.warmup(&[fwd.as_str(), bwd.as_str()]);
@@ -111,7 +111,7 @@ fn run_probe(rt: &Runtime, opts: &WorkerOptions, rounds: u32) -> Result<f64> {
     let p = &rt.arch().probe;
     let mut rng = crate::tensor::Pcg32::seed_stream(0xCA11B, opts.worker_id as u64);
     let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
-    let w = Tensor::randn(&[p.k, p.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+    let w = Tensor::randn(&[p.k, p.in_ch, p.kh, p.kw], &mut rng);
     let b = Tensor::zeros(&[p.k]);
     let args = [Value::F32(x), Value::F32(w), Value::F32(b)];
     rt.warmup(&["probe"])?;

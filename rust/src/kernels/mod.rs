@@ -258,6 +258,21 @@ pub fn maxpool2_bwd(x: &[f32], gp: &[f32], b: usize, c: usize, h: usize, w: usiz
 }
 
 // ---------------------------------------------------------------------------
+// Elementwise rectifier
+// ---------------------------------------------------------------------------
+
+/// `y = max(x, 0)` — shape-free elementwise forward.
+pub fn relu_fwd(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// ReLU backward: pass the gradient where the *input* was positive.
+pub fn relu_bwd(x: &[f32], gy: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), gy.len());
+    x.iter().zip(gy).map(|(&v, &g)| if v > 0.0 { g } else { 0.0 }).collect()
+}
+
+// ---------------------------------------------------------------------------
 // Local response normalization (AlexNet-style, across channels)
 // ---------------------------------------------------------------------------
 
@@ -530,6 +545,15 @@ mod tests {
         want[13] = 3.0; // 7.0 at (3,1)
         want[10] = 4.0; // 9.0 at (2,2)
         assert_eq!(gx, want);
+    }
+
+    #[test]
+    fn relu_fwd_and_bwd_gate_on_input_sign() {
+        let x = vec![-1.5f32, 0.0, 2.0, -0.1, 3.5];
+        assert_eq!(relu_fwd(&x), vec![0.0, 0.0, 2.0, 0.0, 3.5]);
+        let gy = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        // Gradient flows only where x > 0 (the x == 0 subgradient is 0).
+        assert_eq!(relu_bwd(&x, &gy), vec![0.0, 0.0, 3.0, 0.0, 5.0]);
     }
 
     /// f64 LRN forward for finite differences (f32 FD is too noisy).

@@ -11,9 +11,12 @@
 //!   Eq. 1 workload partitioning, wire protocol, transports (in-proc, TCP,
 //!   bandwidth-shaped), SGD, data pipeline, analytic scalability simulator,
 //!   and the data-parallel baseline.
-//! * **L2** — the executable contract ([`runtime`]): named segments of the
-//!   CNN (conv shards, LRN+pool mids, FC head, fused full-network grad),
-//!   validated against a manifest and served by a pluggable `Backend`.
+//! * **L2** — the executable contract ([`runtime`]): a typed layer graph
+//!   ([`runtime::ArchSpec`], DESIGN.md §8) from which shape inference
+//!   derives the named segments of the CNN (per-conv kernel shards, the
+//!   master-resident mid segments, a generic FC head, fused full-network
+//!   grad), validated against a manifest and served by a pluggable
+//!   `Backend`.
 //! * **L1** — the convolution/pool/LRN/FC kernels, the paper's 60–90 % hot
 //!   spot.  Default: pure-rust CPU kernels ([`kernels`]), rayon-parallel
 //!   over the batch axis, with every GEMM served by the blocked, packed,

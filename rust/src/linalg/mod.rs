@@ -81,6 +81,29 @@ thread_local! {
     static A_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
+/// How many k-steps ahead the packers prefetch their source stream.  The
+/// packers walk strided memory (row stride `rs` per k for B panels, per-row
+/// gathers for A blocks); issuing the next strips' loads this far ahead
+/// hides the stride-miss latency behind the current strip's copy.
+const PACK_PREFETCH: usize = 4;
+
+/// Best-effort prefetch of the cache line holding `p` into all levels.
+/// Architecturally a hint: no memory is read or written, so a reference to
+/// any in-bounds element is sufficient.  No-op off x86_64.
+#[inline(always)]
+fn prefetch_read(p: &f32) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: _mm_prefetch has no observable effects and needs no CPU
+    // feature beyond baseline x86_64 SSE; `p` is a valid reference.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+            (p as *const f32).cast::<i8>(),
+        );
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
 /// Rows of the row-major `[m, stride]` matrix `a` up to (excluding) the
 /// trailing run of all-zero rows.  Zero-padded kernel buckets put their
 /// padding in trailing rows (`Tensor::pad_axis0`), and a zero row
@@ -284,6 +307,20 @@ fn pack_a<'b>(
         let r0 = p * MR;
         let rows = MR.min(mcb - r0);
         for k in 0..kcb {
+            // Prefetch the strip PACK_PREFETCH k-steps ahead (first and
+            // last row only, like pack_b — a full per-row sweep would cost
+            // more checked address arithmetic than the hint buys back).
+            if k + PACK_PREFETCH < kcb {
+                let col = (p0 + k + PACK_PREFETCH) * a.cs;
+                if let Some(v) = a.data.get((i0 + r0) * a.rs + col) {
+                    prefetch_read(v);
+                }
+                if rows > 1 {
+                    if let Some(v) = a.data.get((i0 + r0 + rows - 1) * a.rs + col) {
+                        prefetch_read(v);
+                    }
+                }
+            }
             let strip = &mut dst[k * MR..(k + 1) * MR];
             for (r, slot) in strip[..rows].iter_mut().enumerate() {
                 *slot = a.at(i0 + r0 + r, p0 + k);
@@ -317,6 +354,18 @@ fn pack_b<'b>(
         let c0 = p * NR;
         let cols = NR.min(ncb - c0);
         for k in 0..kcb {
+            // Prefetch the strip PACK_PREFETCH k-rows ahead (start and end
+            // of the strip — an NR strip spans at most two cache lines in
+            // the contiguous case; the strided case gets its first line).
+            if k + PACK_PREFETCH < kcb {
+                let base = (p0 + k + PACK_PREFETCH) * b.rs + (j0 + c0) * b.cs;
+                if let Some(v) = b.data.get(base) {
+                    prefetch_read(v);
+                }
+                if let Some(v) = b.data.get(base + (cols - 1) * b.cs) {
+                    prefetch_read(v);
+                }
+            }
             let strip = &mut dst[k * NR..(k + 1) * NR];
             if b.cs == 1 {
                 let src = &b.data[(p0 + k) * b.rs + j0 + c0..][..cols];

@@ -16,12 +16,12 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use convdist::baselines::{DataParallelTrainer, SingleDeviceTrainer};
-use convdist::cluster::{spawn_inproc, worker_loop, DistTrainer, WorkerOptions};
+use convdist::cluster::{spawn_inproc, spawn_inproc_arch, worker_loop, DistTrainer, WorkerOptions};
 use convdist::config::{ExperimentConfig, TrainerConfig};
 use convdist::data::default_dataset;
 use convdist::devices::Throttle;
 use convdist::net::{LinkModel, TcpLink};
-use convdist::runtime::Runtime;
+use convdist::runtime::{ArchSpec, Runtime};
 use convdist::sim::figures;
 use convdist::util::cli::Args;
 
@@ -33,7 +33,9 @@ const USAGE: &str = "usage: convdist <train|worker|master|calibrate|figures|base
   figures    --id ID --csv          (IDs: table1 fig5 fig6 fig7 fig8 table4 table5
                                           fig9 fig10 fig11 fig12 fig13 amdahl)
   baseline   --kind single|dp --replicas N --steps N
-common: --artifacts DIR";
+common: --artifacts DIR --arch NAME   (NAME: default|tiny|deep_cifar|tiny_deep;
+                                       only without a manifest.json — a manifest
+                                       pins the architecture)";
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
@@ -59,15 +61,39 @@ fn artifacts_path(args: &Args) -> std::path::PathBuf {
     }
 }
 
+fn arch_preset(args: &Args) -> Result<Option<ArchSpec>> {
+    match args.opt("arch") {
+        None => Ok(None),
+        Some(name) => Ok(Some(ArchSpec::preset(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --arch preset {name:?} (try: default, tiny, deep_cifar, tiny_deep)"
+            )
+        })?)),
+    }
+}
+
 fn open_runtime(args: &Args) -> Result<Arc<Runtime>> {
     let dir = artifacts_path(args);
-    let rt = Runtime::open(&dir)?;
+    // `--arch NAME` selects a synthesized preset (e.g. the 3-conv
+    // `deep_cifar`) — only meaningful without a pinned manifest.
+    let rt = match arch_preset(args)? {
+        Some(arch) => {
+            if dir.join("manifest.json").exists() {
+                bail!(
+                    "--arch conflicts with {}/manifest.json, which pins the architecture",
+                    dir.display()
+                );
+            }
+            Runtime::for_arch(arch)
+        }
+        None => Runtime::open(&dir)?,
+    };
     eprintln!(
-        "runtime: platform={} arch={}:{} batch={} ({} executables)",
+        "runtime: platform={} arch={} batch={} ({} conv layers, {} executables)",
         rt.platform(),
-        rt.arch().k1,
-        rt.arch().k2,
+        rt.arch().label(),
         rt.arch().batch,
+        rt.arch().num_convs(),
         rt.manifest().executables.len()
     );
     Ok(rt)
@@ -97,7 +123,8 @@ fn run_training(rt: Arc<Runtime>, mut trainer: DistTrainer, tcfg: &TrainerConfig
     let arch = rt.arch().clone();
     let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, tcfg.seed);
     eprintln!("calibration (probe seconds): {:?}", trainer.probe_times());
-    for (layer, k) in [(1usize, arch.k1), (2usize, arch.k2)] {
+    for layer in 1..=arch.num_convs() {
+        let k = arch.kernels(layer);
         let shards: Vec<String> = trainer
             .shards(layer)
             .iter()
@@ -158,7 +185,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         bandwidth_bps: cfg.network.bandwidth_mbps * 1e6,
         latency: std::time::Duration::from_secs_f64(cfg.network.latency_ms / 1e3),
     });
-    let mut cluster = spawn_inproc(artifacts_path(args), &throttles[1..], shape);
+    // With `--arch` the workers must resolve the same synthesized graph as
+    // the master — pass it explicitly instead of re-opening the artifacts.
+    let mut cluster = if args.opt("arch").is_some() {
+        spawn_inproc_arch(rt.arch().clone(), &throttles[1..], shape)
+    } else {
+        spawn_inproc(artifacts_path(args), &throttles[1..], shape)
+    };
     let trainer = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg.trainer, throttles[0])?;
     run_training(rt, trainer, &cfg.trainer)?;
     cluster.handles.into_iter().try_for_each(|h| h.join().unwrap())?;
@@ -202,7 +235,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let mut rng = convdist::tensor::Pcg32::seed(1);
     let x =
         convdist::tensor::Tensor::randn(&[probe.batch, probe.in_ch, probe.img, probe.img], &mut rng);
-    let w = convdist::tensor::Tensor::randn(&[probe.k, probe.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+    let w = convdist::tensor::Tensor::randn(&[probe.k, probe.in_ch, probe.kh, probe.kw], &mut rng);
     let b = convdist::tensor::Tensor::zeros(&[probe.k]);
     let args_v = [x.into(), w.into(), b.into()];
     let _ = rt.execute("probe", &args_v)?;

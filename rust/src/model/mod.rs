@@ -13,7 +13,8 @@ use anyhow::{anyhow, ensure, Result};
 use crate::runtime::ArchSpec;
 use crate::tensor::{Pcg32, Tensor};
 
-/// Named parameter tensors in manifest order (`w1 b1 w2 b2 wf bf`).
+/// Named parameter tensors in manifest order
+/// (`conv1.w conv1.b … convN.w convN.b fc.w fc.b`).
 #[derive(Clone, Debug)]
 pub struct Params {
     order: Vec<String>,
@@ -31,7 +32,8 @@ impl Params {
                 .ok_or_else(|| anyhow!("param {name} missing from manifest"))?
                 .clone();
             let mut rng = Pcg32::seed_stream(seed, i as u64);
-            let t = if name.starts_with('b') {
+            // Rank-1 params are biases (zero-init); weights get Kaiming.
+            let t = if shape.len() == 1 {
                 Tensor::zeros(&shape)
             } else {
                 // fan_in: conv OIHW -> C*KH*KW; fc [in, out] -> in.
@@ -176,25 +178,25 @@ mod tests {
         assert_eq!(a.max_abs_diff(&b).unwrap(), 0.0);
         let c = Params::init(&arch, 43).unwrap();
         assert!(a.max_abs_diff(&c).unwrap() > 0.0);
-        // Kaiming bound for w1: sqrt(6/75) ≈ 0.283.
-        let w1 = a.get("w1").unwrap();
+        // Kaiming bound for conv1.w: sqrt(6/75) ≈ 0.283.
+        let w1 = a.get("conv1.w").unwrap();
         let bound = (6.0f32 / 75.0).sqrt();
         assert!(w1.data().iter().all(|v| v.abs() <= bound));
-        assert!(a.get("b1").unwrap().data().iter().all(|&v| v == 0.0));
+        assert!(a.get("conv1.b").unwrap().data().iter().all(|&v| v == 0.0));
     }
 
     #[test]
     fn sgd_moves_against_gradient() {
         let arch = tiny_arch();
         let mut p = Params::init(&arch, 1).unwrap();
-        let before = p.get("wf").unwrap().data()[0];
+        let before = p.get("fc.w").unwrap().data()[0];
         let mut g = Grads::zeros_like(&p);
         let mut gwf = Tensor::zeros(&[200, 10]);
         gwf.data_mut()[0] = 2.0;
-        g.set("wf", gwf);
+        g.set("fc.w", gwf);
         let mut opt = Sgd::new(0.1, 0.0, 0.0);
         opt.step(&mut p, &g).unwrap();
-        let after = p.get("wf").unwrap().data()[0];
+        let after = p.get("fc.w").unwrap().data()[0];
         assert!((after - (before - 0.2)).abs() < 1e-6);
     }
 
@@ -205,12 +207,12 @@ mod tests {
         let mut g = Grads::zeros_like(&p);
         let mut gwf = Tensor::zeros(&[200, 10]);
         gwf.data_mut()[0] = 1.0;
-        g.set("wf", gwf);
-        let start = p.get("wf").unwrap().data()[0];
+        g.set("fc.w", gwf);
+        let start = p.get("fc.w").unwrap().data()[0];
         let mut opt = Sgd::new(0.1, 0.9, 0.0);
         opt.step(&mut p, &g).unwrap(); // v=1,   Δ=-0.1
         opt.step(&mut p, &g).unwrap(); // v=1.9, Δ=-0.19
-        let got = p.get("wf").unwrap().data()[0];
+        let got = p.get("fc.w").unwrap().data()[0];
         assert!((got - (start - 0.29)).abs() < 1e-6, "{got} vs {}", start - 0.29);
     }
 
@@ -222,9 +224,9 @@ mod tests {
         let mut g1 = Grads::zeros_like(&p);
         let mut t = Tensor::zeros(&[10]);
         t.data_mut()[3] = 4.0;
-        g1.set("bf", t);
+        g1.set("fc.b", t);
         acc.axpy(0.5, &g1).unwrap();
         acc.axpy(0.5, &g1).unwrap();
-        assert_eq!(acc.get("bf").unwrap().data()[3], 4.0);
+        assert_eq!(acc.get("fc.b").unwrap().data()[3], 4.0);
     }
 }

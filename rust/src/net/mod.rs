@@ -26,10 +26,11 @@ pub trait Link: Send {
     fn recv(&mut self) -> Result<Message>;
     /// Receive with a deadline: `Ok(None)` means nothing arrived in time
     /// (the link is still healthy).  The default implementation blocks —
-    /// transports that can wait a bounded time (in-proc) override it.  TCP
-    /// deliberately keeps blocking semantics: a frame read is not
-    /// restartable mid-stream, so a socket deadline would corrupt the link;
-    /// worker death there surfaces as a connection error instead.
+    /// transports that can wait a bounded time override it.  In-proc links
+    /// bound the whole receive; TCP bounds the wait for the *first byte* of
+    /// a frame (a frame is never abandoned mid-read, so the stream cannot
+    /// desynchronize) — enough for heartbeats and gather deadlines, where a
+    /// wedged worker sends nothing at all.
     fn recv_timeout(&mut self, _timeout: Duration) -> Result<Option<Message>> {
         self.recv().map(Some)
     }
@@ -144,6 +145,60 @@ impl Link for TcpLink {
         Ok(msg)
     }
 
+    /// Bounded wait for the *start* of a frame: the socket read timeout is
+    /// armed only while no frame bytes are buffered, and cleared before the
+    /// full (blocking) frame read.  A timeout therefore always lands on a
+    /// frame boundary — the stream never desynchronizes — and `Ok(None)`
+    /// means the link is still healthy, exactly like the in-proc link.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        use std::io::BufRead;
+        if self.reader.buffer().is_empty() {
+            // set_read_timeout rejects a zero Duration; clamp up.
+            let t = if timeout.is_zero() { Duration::from_millis(1) } else { timeout };
+            self.reader
+                .get_ref()
+                .set_read_timeout(Some(t))
+                .context("arming socket read timeout")?;
+            // Retry EINTR inline: a benign signal (SIGCHLD, SIGPROF, …) must
+            // not read as a dead link, and surfacing it as a timeout would
+            // make heartbeat callers drop a healthy worker.  Each retry
+            // re-arms only the *remaining* budget, so a stream of signals
+            // cannot extend the deadline indefinitely.
+            let deadline = Instant::now() + t;
+            let waited = loop {
+                match self.reader.fill_buf() {
+                    Ok(buf) => break Ok(!buf.is_empty()),
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+                        }
+                        if let Err(e) = self.reader.get_ref().set_read_timeout(Some(left)) {
+                            break Err(e);
+                        }
+                    }
+                    Err(e) => break Err(e),
+                }
+            };
+            self.reader
+                .get_ref()
+                .set_read_timeout(None)
+                .context("clearing socket read timeout")?;
+            match waited {
+                Ok(true) => {}
+                Ok(false) => anyhow::bail!("peer closed the connection"),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None);
+                }
+                Err(e) => return Err(e).context("polling socket for a frame"),
+            }
+        }
+        self.recv().map(Some)
+    }
+
     fn bytes_moved(&self) -> u64 {
         self.bytes
     }
@@ -248,6 +303,48 @@ mod tests {
         master.send(&sent).unwrap();
         assert_eq!(master.recv().unwrap(), sent);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_recv_timeout_expires_and_still_delivers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let h = std::thread::spawn(move || {
+            let mut worker = TcpLink::accept_one(&listener).unwrap();
+            // Hold the connection open but silent until signalled — the
+            // wedged-but-connected case the old blocking reads could not
+            // detect.
+            rx.recv().unwrap();
+            worker.send(&Message::AllOk).unwrap();
+            // Keep the socket alive until the master has read the frame.
+            rx.recv().unwrap();
+        });
+        let mut master = TcpLink::connect(addr).unwrap();
+        // Nothing queued: the deadline expires cleanly, link stays healthy.
+        let got = master.recv_timeout(Duration::from_millis(30)).unwrap();
+        assert!(got.is_none(), "silent peer must time out, not error");
+        // A later frame is still delivered intact over the same link.
+        tx.send(()).unwrap();
+        let got = master.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, Some(Message::AllOk));
+        // And the link still serves plain blocking sends/recvs.
+        tx.send(()).unwrap();
+        h.join().unwrap();
+        // Peer gone: an error, not a silent timeout (poll until the FIN
+        // lands — delivery is asynchronous even on loopback).
+        let mut saw_error = false;
+        for _ in 0..200 {
+            match master.recv_timeout(Duration::from_millis(20)) {
+                Ok(None) => continue,
+                Ok(Some(m)) => panic!("unexpected frame after close: {m:?}"),
+                Err(_) => {
+                    saw_error = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_error, "closed peer must surface as an error");
     }
 
     #[test]

@@ -2,14 +2,23 @@
 //!
 //! The PJRT path learns each executable's signature from `manifest.json`;
 //! the native backend *derives* the same signatures from the [`ArchSpec`]
-//! geometry, so a clean checkout needs no artifacts at all.  Both paths meet
-//! at [`ExecutableSpec`]: `Runtime::execute` validates every call against it
-//! regardless of which backend serves it.
+//! layer graph, so a clean checkout needs no artifacts at all.  Both paths
+//! meet at [`ExecutableSpec`]: `Runtime::execute` validates every call
+//! against it regardless of which backend serves it.
+//!
+//! Names are generated per conv layer of the graph — `conv{L}_fwd_b{K}` /
+//! `conv{L}_bwd_b{K}` for every bucket of layer `L`, `mid{L}_fwd` /
+//! `mid{L}_bwd` for its master-resident mid segment — plus the generic
+//! head (`head_grad`), `eval_full`, `probe` and the fused
+//! `grad_full_b{B}` family.  A 3- or N-conv graph therefore enumerates to
+//! a larger executable set with zero new code.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use super::manifest::{ArchSpec, ArgSpec, ExecutableSpec, Manifest};
+use super::graph::MidOp;
+use super::manifest::{ArgSpec, ExecutableSpec, Manifest};
+use super::ArchSpec;
 
 /// Every executable name the trainers dispatch, parsed.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -20,11 +29,11 @@ pub enum ExecKind {
     ConvFwd { layer: usize, bucket: usize },
     /// `conv{layer}_bwd_b{bucket}`: shard backward -> (gx, gw, gb).
     ConvBwd { layer: usize, bucket: usize },
-    /// `mid{layer}_fwd`: the master-resident LRN + pool block.
+    /// `mid{layer}_fwd`: the master-resident mid segment after conv `layer`.
     MidFwd { layer: usize },
-    /// `mid{layer}_bwd`: vjp of the mid block (recompute-in-bwd).
+    /// `mid{layer}_bwd`: vjp of the mid segment (recompute-in-bwd).
     MidBwd { layer: usize },
-    /// `head_grad`: FC + softmax loss and grads wrt (p2, wf, bf).
+    /// `head_grad`: FC + softmax loss and grads wrt (p, fc.w, fc.b).
     HeadGrad,
     /// `eval_full`: full-network logits for accuracy evaluation.
     EvalFull,
@@ -34,6 +43,8 @@ pub enum ExecKind {
 
 impl ExecKind {
     /// Parse an executable name; `None` if it is not part of the contract.
+    /// Layer indices are only syntax here — whether `conv7_fwd_b4` exists
+    /// for a given architecture is the manifest's call, not the parser's.
     pub fn parse(name: &str) -> Option<ExecKind> {
         match name {
             "probe" => return Some(ExecKind::Probe),
@@ -47,7 +58,7 @@ impl ExecKind {
         if let Some(rest) = name.strip_prefix("conv") {
             let (layer, rest) = rest.split_once('_')?;
             let layer: usize = layer.parse().ok()?;
-            if !(1..=2).contains(&layer) {
+            if layer == 0 {
                 return None;
             }
             if let Some(b) = rest.strip_prefix("fwd_b") {
@@ -61,7 +72,7 @@ impl ExecKind {
         if let Some(rest) = name.strip_prefix("mid") {
             let (layer, dir) = rest.split_once('_')?;
             let layer: usize = layer.parse().ok()?;
-            if !(1..=2).contains(&layer) {
+            if layer == 0 {
                 return None;
             }
             return match dir {
@@ -97,20 +108,35 @@ fn i(name: &str, shape: Vec<usize>) -> ArgSpec {
 }
 
 /// FLOPs of one forward conv over `k` kernels of layer `layer` at batch `b`
-/// (one multiply-add = 2 FLOPs per tap per output pixel).
+/// — [`ArchSpec::conv_layer_flops`], truncated to the spec's u64 (exact:
+/// conv FLOP counts sit far below 2^53).
 fn conv_fwd_flops(arch: &ArchSpec, layer: usize, k: usize, b: usize) -> u64 {
-    let (c, _) = arch.conv_input(layer);
-    let o = arch.conv_output(layer);
-    2 * (b * o * o * c * arch.kh * arch.kw * k) as u64
+    arch.conv_layer_flops(layer, k, b) as u64
 }
 
-/// Pool-output height of conv layer `layer`.
-fn pool_out(arch: &ArchSpec, layer: usize) -> usize {
-    match layer {
-        1 => arch.p1_out,
-        2 => arch.p2_out,
-        _ => panic!("conv layer {layer} out of range"),
+/// Rough FLOP estimate of one mid-segment forward at batch `b`: each op is
+/// priced per input element (LRN's window-of-5 + powf dominates).
+fn mid_fwd_flops(arch: &ArchSpec, layer: usize, b: usize) -> u64 {
+    let k = arch.kernels(layer);
+    let mut hw = arch.conv_output(layer);
+    let mut flops = 0u64;
+    for op in arch.mid_ops(layer) {
+        let elems = (b * k * hw * hw) as u64;
+        match op {
+            MidOp::Lrn => flops += 20 * elems,
+            MidOp::MaxPool2 => {
+                flops += 4 * elems;
+                hw /= 2;
+            }
+            MidOp::Relu => flops += elems,
+        }
     }
+    flops
+}
+
+/// Forward conv FLOPs of the whole network at batch `b`.
+fn net_conv_flops(arch: &ArchSpec, b: usize) -> u64 {
+    arch.conv_flops_fwd_at(b) as u64
 }
 
 fn param_args(arch: &ArchSpec) -> Vec<ArgSpec> {
@@ -122,24 +148,25 @@ fn param_args(arch: &ArchSpec) -> Vec<ArgSpec> {
 
 /// Synthesize the manifest signature of `kind` from the architecture.
 pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
-    let (kh, kw, b, ncls) = (arch.kh, arch.kw, arch.batch, arch.num_classes);
+    let (b, ncls) = (arch.batch, arch.num_classes);
     let (args, outs, flops) = match kind {
         ExecKind::Probe => {
             let p = &arch.probe;
-            let po = p.img - kh + 1;
+            let (po_h, po_w) = (p.img - p.kh + 1, p.img - p.kw + 1);
             (
                 vec![
                     f("x", vec![p.batch, p.in_ch, p.img, p.img]),
-                    f("w", vec![p.k, p.in_ch, kh, kw]),
+                    f("w", vec![p.k, p.in_ch, p.kh, p.kw]),
                     f("b", vec![p.k]),
                 ],
-                vec![f("y", vec![p.batch, p.k, po, po])],
+                vec![f("y", vec![p.batch, p.k, po_h, po_w])],
                 p.flops,
             )
         }
         ExecKind::ConvFwd { layer, bucket } => {
             let (c, h) = arch.conv_input(*layer);
             let o = arch.conv_output(*layer);
+            let (kh, kw) = arch.conv_kernel(*layer);
             (
                 vec![
                     f("x", vec![b, c, h, h]),
@@ -153,6 +180,7 @@ pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
         ExecKind::ConvBwd { layer, bucket } => {
             let (c, h) = arch.conv_input(*layer);
             let o = arch.conv_output(*layer);
+            let (kh, kw) = arch.conv_kernel(*layer);
             (
                 vec![
                     f("x", vec![b, c, h, h]),
@@ -172,36 +200,36 @@ pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
         ExecKind::MidFwd { layer } => {
             let k = arch.kernels(*layer);
             let c = arch.conv_output(*layer);
-            let p = pool_out(arch, *layer);
+            let p = arch.mid_output(*layer);
             (
                 vec![f("y", vec![b, k, c, c])],
                 vec![f("p", vec![b, k, p, p])],
-                // LRN (window of 5 + powf) dominates; ~20 FLOPs/element.
-                (b * k * c * c * 20) as u64,
+                mid_fwd_flops(arch, *layer, b),
             )
         }
         ExecKind::MidBwd { layer } => {
             let k = arch.kernels(*layer);
             let c = arch.conv_output(*layer);
-            let p = pool_out(arch, *layer);
+            let p = arch.mid_output(*layer);
             (
                 vec![f("y", vec![b, k, c, c]), f("gp", vec![b, k, p, p])],
                 vec![f("gy", vec![b, k, c, c])],
-                (b * k * c * c * 40) as u64,
+                2 * mid_fwd_flops(arch, *layer, b),
             )
         }
         ExecKind::HeadGrad => {
-            let p2 = vec![b, arch.k2, arch.p2_out, arch.p2_out];
+            let n = arch.num_convs();
+            let pn = vec![b, arch.kernels(n), arch.mid_output(n), arch.mid_output(n)];
             (
                 vec![
-                    f("p2", p2.clone()),
+                    f("p", pn.clone()),
                     f("wf", vec![arch.fc_in, ncls]),
                     f("bf", vec![ncls]),
                     i("labels", vec![b]),
                 ],
                 vec![
                     f("loss", vec![]),
-                    f("gp2", p2),
+                    f("gp", pn),
                     f("gwf", vec![arch.fc_in, ncls]),
                     f("gbf", vec![ncls]),
                 ],
@@ -211,11 +239,7 @@ pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
         ExecKind::EvalFull => {
             let mut args = vec![f("x", vec![b, arch.in_ch, arch.img, arch.img])];
             args.extend(param_args(arch));
-            (
-                args,
-                vec![f("logits", vec![b, ncls])],
-                conv_fwd_flops(arch, 1, arch.k1, b) + conv_fwd_flops(arch, 2, arch.k2, b),
-            )
+            (args, vec![f("logits", vec![b, ncls])], net_conv_flops(arch, b))
         }
         ExecKind::GradFull { batch } => {
             let n = *batch;
@@ -230,11 +254,7 @@ pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
                     .iter()
                     .map(|p| f(&format!("g{p}"), arch.param_shapes[p].clone())),
             );
-            (
-                args,
-                outs,
-                3 * (conv_fwd_flops(arch, 1, arch.k1, n) + conv_fwd_flops(arch, 2, arch.k2, n)),
-            )
+            (args, outs, 3 * net_conv_flops(arch, n))
         }
     };
     ExecutableSpec { file: format!("<native:{}>", kind.name()), args, outs, flops, sha256: String::new() }
@@ -244,7 +264,7 @@ pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
 /// for it — what `Runtime::open` uses when no `manifest.json` is present.
 pub fn native_manifest(config: ArchSpec, dir: &Path) -> Manifest {
     let mut kinds = vec![ExecKind::Probe, ExecKind::HeadGrad, ExecKind::EvalFull];
-    for layer in 1..=2usize {
+    for layer in 1..=config.num_convs() {
         for &bucket in config.buckets(layer) {
             kinds.push(ExecKind::ConvFwd { layer, bucket });
             kinds.push(ExecKind::ConvBwd { layer, bucket });
@@ -265,6 +285,7 @@ pub fn native_manifest(config: ArchSpec, dir: &Path) -> Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn parse_roundtrips_every_kind() {
@@ -272,8 +293,9 @@ mod tests {
             ExecKind::Probe,
             ExecKind::ConvFwd { layer: 1, bucket: 8 },
             ExecKind::ConvBwd { layer: 2, bucket: 12 },
+            ExecKind::ConvFwd { layer: 3, bucket: 4 },
             ExecKind::MidFwd { layer: 1 },
-            ExecKind::MidBwd { layer: 2 },
+            ExecKind::MidBwd { layer: 7 },
             ExecKind::HeadGrad,
             ExecKind::EvalFull,
             ExecKind::GradFull { batch: 64 },
@@ -281,9 +303,9 @@ mod tests {
         for k in kinds {
             assert_eq!(ExecKind::parse(&k.name()), Some(k.clone()), "{}", k.name());
         }
-        assert_eq!(ExecKind::parse("conv3_fwd_b4"), None);
+        assert_eq!(ExecKind::parse("conv0_fwd_b4"), None);
         assert_eq!(ExecKind::parse("conv1_sideways_b4"), None);
-        assert_eq!(ExecKind::parse("mid9_fwd"), None);
+        assert_eq!(ExecKind::parse("mid0_fwd"), None);
         assert_eq!(ExecKind::parse("nonsense"), None);
     }
 
@@ -297,6 +319,7 @@ mod tests {
         assert!(m.spec("mid2_bwd").is_ok());
         assert!(m.spec("grad_full_b2").is_ok());
         assert!(m.spec("conv1_fwd_b99").is_err(), "unlisted bucket must not appear");
+        assert!(m.spec("conv3_fwd_b4").is_err(), "a 2-conv arch has no layer 3");
         // Shapes agree with the arch geometry.
         let s = m.spec("conv2_fwd_b8").unwrap();
         assert_eq!(s.args[0].shape(), &[2, 4, 14, 14]);
@@ -305,5 +328,55 @@ mod tests {
         let h = m.spec("head_grad").unwrap();
         assert_eq!(h.args[3].dtype(), "i32");
         assert_eq!(h.outs[0].shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn three_conv_arch_enumerates_layer3_executables() {
+        let arch = ArchSpec::tiny_deep();
+        let m = native_manifest(arch, Path::new("."));
+        assert!(m.spec("conv3_fwd_b8").is_ok());
+        assert!(m.spec("conv3_bwd_b4").is_ok());
+        assert!(m.spec("mid3_fwd").is_ok());
+        assert!(m.spec("conv4_fwd_b4").is_err());
+        // conv3 of tiny_deep reads the 6-channel 6x6 mid2 output.
+        let s = m.spec("conv3_fwd_b8").unwrap();
+        assert_eq!(s.args[0].shape(), &[2, 6, 6, 6]);
+        assert_eq!(s.outs[0].shape(), &[2, 8, 4, 4]);
+        // head reads the pooled conv3 output.
+        let h = m.spec("head_grad").unwrap();
+        assert_eq!(h.args[0].shape(), &[2, 8, 2, 2]);
+        // grad_full signature follows the 3-conv param order.
+        let g = m.spec("grad_full_b2").unwrap();
+        assert_eq!(g.args.len(), 2 + 3 * 2 + 2);
+        assert_eq!(g.outs.len(), 1 + 3 * 2 + 2);
+        assert_eq!(g.outs[1].name(), "gconv1.w");
+    }
+
+    #[test]
+    fn legacy_config_resolves_to_the_identical_executable_set() {
+        // The acceptance gate of the layer-IR refactor: an old k1/k2
+        // manifest, converted, must enumerate exactly the executables the
+        // pre-refactor code produced for the same architecture.
+        let v = Json::parse(super::super::manifest::tests::LEGACY_TINY_CONFIG).unwrap();
+        let config = ArchSpec::from_json(&v).unwrap();
+        let m = native_manifest(config, Path::new("."));
+        let got: Vec<&str> = m.executables.keys().map(|s| s.as_str()).collect();
+        let want = [
+            "conv1_bwd_b4",
+            "conv1_fwd_b4",
+            "conv2_bwd_b4",
+            "conv2_bwd_b8",
+            "conv2_fwd_b4",
+            "conv2_fwd_b8",
+            "eval_full",
+            "grad_full_b2",
+            "head_grad",
+            "mid1_bwd",
+            "mid1_fwd",
+            "mid2_bwd",
+            "mid2_fwd",
+            "probe",
+        ];
+        assert_eq!(got, want);
     }
 }

@@ -1,0 +1,825 @@
+//! The layer-graph architecture IR — the typed description every other
+//! subsystem derives its shapes, names and work estimates from.
+//!
+//! The paper's instance is one fixed network (`conv -> lrn -> pool -> conv
+//! -> lrn -> pool -> fc`), but its method distributes *every* conv layer, so
+//! the architecture contract is a graph, not a pair of kernel counts:
+//! [`ArchSpec`] holds an ordered [`LayerSpec`] list plus input geometry, and
+//! shape inference ([`ArchSpec::build`]) walks it once to derive
+//!
+//! * per-conv geometry ([`ConvInfo`]): input channels/extent, output extent,
+//!   the master-resident *mid* segment (LRN / pool / ReLU ops between this
+//!   conv and the next distributable layer) and its output extent;
+//! * parameter names, shapes and order (`conv{N}.w`, `conv{N}.b`, …,
+//!   `fc.w`, `fc.b`);
+//! * the per-conv shard-bucket ladders and the batch-bucket ladder;
+//! * the calibration probe geometry.
+//!
+//! `runtime::exec` turns the graph into the executable set
+//! (`conv{N}_{fwd,bwd}_b{K}`, `mid{N}_{fwd,bwd}`, `head_grad`, `eval_full`,
+//! `grad_full_b{B}`), `runtime::native` interprets it, and
+//! `cluster::master` loops over `1..=num_convs()` — a 3-, 4- or N-conv
+//! network trains with zero new code (DESIGN.md §8).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::Json;
+
+/// One layer of the architecture graph, in network order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Distributable convolution: `k` kernels of `kh x kw` (valid padding,
+    /// stride 1).  The runtime's activations are square, so `kh == kw`.
+    Conv { k: usize, kh: usize, kw: usize },
+    /// AlexNet-style cross-channel local response normalization.
+    Lrn,
+    /// 2x2 / stride-2 max pooling (requires an even extent).
+    MaxPool2,
+    /// Elementwise rectifier.
+    Relu,
+    /// Fully connected head over the flattened activations.
+    Fc { out: usize },
+    /// Mean softmax cross-entropy loss; must terminate the graph.
+    SoftmaxXent,
+}
+
+/// A master-resident element op inside a conv layer's mid segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MidOp {
+    Lrn,
+    MaxPool2,
+    Relu,
+}
+
+/// Derived geometry of one conv layer and its trailing mid segment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvInfo {
+    /// Kernel count (the distributed K axis).
+    pub k: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Input channels and (square) input extent.
+    pub in_ch: usize,
+    pub in_hw: usize,
+    /// Conv output extent (`in_hw - kh + 1`).
+    pub out_hw: usize,
+    /// Extent after the mid segment (pooling halves it; LRN/ReLU keep it).
+    pub mid_out_hw: usize,
+    /// The ops between this conv and the next conv (or the FC head), in
+    /// network order.  May be empty — the mid executable is then identity.
+    pub mid_ops: Vec<MidOp>,
+    /// Compiled shard buckets for this layer's K axis.
+    pub buckets: Vec<usize>,
+}
+
+/// Calibration-probe geometry (paper §4.1.1): a fixed small convolution
+/// every device times to produce its performance value.
+#[derive(Clone, Debug)]
+pub struct ProbeSpec {
+    pub batch: usize,
+    pub in_ch: usize,
+    pub img: usize,
+    pub k: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// FLOPs of one probe execution; measured time -> GFLOPS value.
+    pub flops: u64,
+}
+
+impl ProbeSpec {
+    /// Parse from manifest JSON; `kh`/`kw` default to the first conv's
+    /// kernel when absent (the legacy schema had no per-probe kernel size).
+    pub(crate) fn from_json(v: &Json, default_kh: usize, default_kw: usize) -> Result<Self> {
+        Ok(Self {
+            batch: v.get("batch")?.as_usize()?,
+            in_ch: v.get("in_ch")?.as_usize()?,
+            img: v.get("img")?.as_usize()?,
+            k: v.get("k")?.as_usize()?,
+            kh: v.opt("kh").map(|x| x.as_usize()).transpose()?.unwrap_or(default_kh),
+            kw: v.opt("kw").map(|x| x.as_usize()).transpose()?.unwrap_or(default_kw),
+            flops: v.get("flops")?.as_u64()?,
+        })
+    }
+}
+
+/// The compiled architecture: the layer graph plus everything shape
+/// inference derives from it.  The derived fields are data, not methods,
+/// so a manifest can pin them and the runtime can validate against them.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    /// The network, in order.  Invariants (enforced by [`ArchSpec::build`]):
+    /// starts with a `Conv`, ends with `Fc` + `SoftmaxXent`, convs are
+    /// separated only by mid ops.
+    pub layers: Vec<LayerSpec>,
+    pub batch: usize,
+    /// Square input extent (CIFAR-10: 32).
+    pub img: usize,
+    pub in_ch: usize,
+    /// FC output width == class count (derived from `Fc`).
+    pub num_classes: usize,
+    /// Batch buckets for the fused `grad_full` executables.
+    pub batch_buckets: Vec<usize>,
+    pub probe: ProbeSpec,
+    /// Derived per-conv geometry, in conv order (index 0 = conv1).
+    pub convs: Vec<ConvInfo>,
+    /// Flattened FC input width (`last_k * last_mid_out^2`).
+    pub fc_in: usize,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub param_order: Vec<String>,
+}
+
+impl ArchSpec {
+    /// Canonical FC parameter names.
+    pub const FC_W: &'static str = "fc.w";
+    pub const FC_B: &'static str = "fc.b";
+
+    /// Canonical weight name of conv layer `l` (1-based).
+    pub fn conv_weight(layer: usize) -> String {
+        format!("conv{layer}.w")
+    }
+
+    /// Canonical bias name of conv layer `l` (1-based).
+    pub fn conv_bias(layer: usize) -> String {
+        format!("conv{layer}.b")
+    }
+
+    /// Shape inference: walk `layers` over a `batch x in_ch x img x img`
+    /// input, validating the graph and deriving every downstream contract
+    /// (conv geometry, mid segments, param names/shapes/order, bucket
+    /// ladders, probe).
+    pub fn build(
+        batch: usize,
+        img: usize,
+        in_ch: usize,
+        layers: Vec<LayerSpec>,
+    ) -> Result<ArchSpec> {
+        ensure!(batch > 0 && img > 0 && in_ch > 0, "degenerate input geometry");
+        let mut convs: Vec<ConvInfo> = Vec::new();
+        let mut c = in_ch;
+        let mut hw = img;
+        let mut fc: Option<(usize, usize)> = None;
+        let mut saw_loss = false;
+        for (i, l) in layers.iter().enumerate() {
+            ensure!(
+                fc.is_none() || matches!(l, LayerSpec::SoftmaxXent),
+                "layer {i}: only SoftmaxXent may follow Fc"
+            );
+            match *l {
+                LayerSpec::Conv { k, kh, kw } => {
+                    ensure!(k > 0 && kh > 0 && kw > 0, "layer {i}: degenerate conv");
+                    ensure!(
+                        kh == kw,
+                        "layer {i}: non-square {kh}x{kw} kernel (activations are square)"
+                    );
+                    ensure!(
+                        hw >= kh,
+                        "layer {i}: {kh}x{kw} conv does not fit a {hw}x{hw} input"
+                    );
+                    let out = hw - kh + 1;
+                    convs.push(ConvInfo {
+                        k,
+                        kh,
+                        kw,
+                        in_ch: c,
+                        in_hw: hw,
+                        out_hw: out,
+                        mid_out_hw: out,
+                        mid_ops: Vec::new(),
+                        buckets: bucket_ladder(k),
+                    });
+                    c = k;
+                    hw = out;
+                }
+                LayerSpec::Lrn | LayerSpec::Relu => {
+                    let Some(last) = convs.last_mut() else {
+                        bail!("layer {i}: {l:?} before the first conv");
+                    };
+                    last.mid_ops.push(if matches!(l, LayerSpec::Lrn) {
+                        MidOp::Lrn
+                    } else {
+                        MidOp::Relu
+                    });
+                }
+                LayerSpec::MaxPool2 => {
+                    let Some(last) = convs.last_mut() else {
+                        bail!("layer {i}: MaxPool2 before the first conv");
+                    };
+                    ensure!(hw % 2 == 0, "layer {i}: maxpool2 needs an even extent, got {hw}");
+                    hw /= 2;
+                    last.mid_ops.push(MidOp::MaxPool2);
+                    last.mid_out_hw = hw;
+                }
+                LayerSpec::Fc { out } => {
+                    ensure!(!convs.is_empty(), "graph needs at least one conv before Fc");
+                    ensure!(out > 0, "layer {i}: zero-width Fc");
+                    fc = Some((c * hw * hw, out));
+                }
+                LayerSpec::SoftmaxXent => {
+                    ensure!(fc.is_some(), "layer {i}: SoftmaxXent must follow Fc");
+                    ensure!(!saw_loss, "layer {i}: duplicate SoftmaxXent");
+                    saw_loss = true;
+                }
+            }
+        }
+        let Some((fc_in, num_classes)) = fc else {
+            bail!("graph has no Fc head");
+        };
+        ensure!(saw_loss, "graph must end in SoftmaxXent");
+
+        let mut param_shapes = BTreeMap::new();
+        let mut param_order = Vec::new();
+        for (li, cv) in convs.iter().enumerate() {
+            let (wn, bn) = (Self::conv_weight(li + 1), Self::conv_bias(li + 1));
+            param_shapes.insert(wn.clone(), vec![cv.k, cv.in_ch, cv.kh, cv.kw]);
+            param_shapes.insert(bn.clone(), vec![cv.k]);
+            param_order.push(wn);
+            param_order.push(bn);
+        }
+        param_shapes.insert(Self::FC_W.to_string(), vec![fc_in, num_classes]);
+        param_shapes.insert(Self::FC_B.to_string(), vec![num_classes]);
+        param_order.push(Self::FC_W.to_string());
+        param_order.push(Self::FC_B.to_string());
+
+        // Batch buckets: halve down to batch/8 (model.py's ladder), so the
+        // data-parallel baseline finds a grad_full for every replica split.
+        let mut batch_buckets = vec![batch];
+        let mut bb = batch;
+        while bb % 2 == 0 && bb > std::cmp::max(2, batch / 8) {
+            bb /= 2;
+            batch_buckets.push(bb);
+        }
+        batch_buckets.sort_unstable();
+
+        // Probe sized so one round is ~milliseconds: big enough to time,
+        // small enough that calibration never dominates a test run.  The
+        // probe convolves with the first conv layer's kernel geometry.
+        let (pkh, pkw) = (convs[0].kh, convs[0].kw);
+        let probe_img = 24usize.max(pkh);
+        let (po_h, po_w) = (probe_img - pkh + 1, probe_img - pkw + 1);
+        let probe = ProbeSpec {
+            batch: 8,
+            in_ch: 3,
+            img: probe_img,
+            k: 8,
+            kh: pkh,
+            kw: pkw,
+            flops: 2 * (8 * po_h * po_w * 3 * pkh * pkw * 8) as u64,
+        };
+
+        Ok(ArchSpec {
+            layers,
+            batch,
+            img,
+            in_ch,
+            num_classes,
+            batch_buckets,
+            probe,
+            convs,
+            fc_in,
+            param_shapes,
+            param_order,
+        })
+    }
+
+    /// Build a full spec from the paper's `k1:k2 @ batch` notation with the
+    /// fixed CIFAR-10 geometry (32x32x3, 5x5 kernels, /2 pools, 10 classes)
+    /// — the same derivation as `python/compile/model.py::ArchConfig`.
+    pub fn from_geometry(k1: usize, k2: usize, batch: usize) -> ArchSpec {
+        Self::build(
+            batch,
+            32,
+            3,
+            vec![
+                LayerSpec::Conv { k: k1, kh: 5, kw: 5 },
+                LayerSpec::Lrn,
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { k: k2, kh: 5, kw: 5 },
+                LayerSpec::Lrn,
+                LayerSpec::MaxPool2,
+                LayerSpec::Fc { out: 10 },
+                LayerSpec::SoftmaxXent,
+            ],
+        )
+        .expect("paper geometry is a valid graph")
+    }
+
+    /// The architecture the native backend synthesizes when no
+    /// `manifest.json` is present: the `python/compile` default (16:32 @ 64,
+    /// CIFAR-10 geometry), including its bucket ladders.
+    pub fn native_default() -> ArchSpec {
+        ArchSpec::from_geometry(16, 32, 64)
+    }
+
+    /// A deliberately small architecture (4:8 @ batch 2) for unit and
+    /// integration tests — steps complete in milliseconds on one core.
+    pub fn tiny() -> ArchSpec {
+        ArchSpec::from_geometry(4, 8, 2)
+    }
+
+    /// A 3-conv CIFAR network the old two-conv API could not express:
+    /// `32@5x5 -> lrn -> pool -> 48@3x3 -> relu -> pool -> 64@3x3 -> relu
+    /// -> pool -> fc(10)` (spatial chain 32 -> 28 -> 14 -> 12 -> 6 -> 4 ->
+    /// 2, so `fc_in = 64*2*2 = 256`).
+    pub fn deep_cifar() -> ArchSpec {
+        Self::build(
+            64,
+            32,
+            3,
+            vec![
+                LayerSpec::Conv { k: 32, kh: 5, kw: 5 },
+                LayerSpec::Lrn,
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { k: 48, kh: 3, kw: 3 },
+                LayerSpec::Relu,
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { k: 64, kh: 3, kw: 3 },
+                LayerSpec::Relu,
+                LayerSpec::MaxPool2,
+                LayerSpec::Fc { out: 10 },
+                LayerSpec::SoftmaxXent,
+            ],
+        )
+        .expect("deep_cifar is a valid graph")
+    }
+
+    /// The test-scale counterpart of [`ArchSpec::deep_cifar`]: three conv
+    /// layers (4:6:8) at batch 2, with a bare-pool mid segment on conv3 to
+    /// exercise the non-LRN path.
+    pub fn tiny_deep() -> ArchSpec {
+        Self::build(
+            2,
+            32,
+            3,
+            vec![
+                LayerSpec::Conv { k: 4, kh: 5, kw: 5 },
+                LayerSpec::Lrn,
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { k: 6, kh: 3, kw: 3 },
+                LayerSpec::Relu,
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { k: 8, kh: 3, kw: 3 },
+                LayerSpec::MaxPool2,
+                LayerSpec::Fc { out: 10 },
+                LayerSpec::SoftmaxXent,
+            ],
+        )
+        .expect("tiny_deep is a valid graph")
+    }
+
+    /// Named presets selectable from the CLI's `--arch` (and the e2e
+    /// example's `[arch]` argument).
+    pub fn preset(name: &str) -> Option<ArchSpec> {
+        match name {
+            "default" | "paper" => Some(Self::native_default()),
+            "tiny" => Some(Self::tiny()),
+            "deep_cifar" => Some(Self::deep_cifar()),
+            "tiny_deep" => Some(Self::tiny_deep()),
+            _ => None,
+        }
+    }
+
+    /// Number of (distributable) conv layers.
+    pub fn num_convs(&self) -> usize {
+        self.convs.len()
+    }
+
+    /// Geometry of conv layer `l` (1-based, matching the executable names).
+    pub fn conv(&self, layer: usize) -> &ConvInfo {
+        assert!(
+            (1..=self.convs.len()).contains(&layer),
+            "conv layer {layer} out of range 1..={}",
+            self.convs.len()
+        );
+        &self.convs[layer - 1]
+    }
+
+    /// Kernel count of conv layer `l` (1-based, matching the paper's C1/C2).
+    pub fn kernels(&self, layer: usize) -> usize {
+        self.conv(layer).k
+    }
+
+    pub fn buckets(&self, layer: usize) -> &[usize] {
+        &self.conv(layer).buckets
+    }
+
+    /// Input (channels, extent) of conv layer `l`.
+    pub fn conv_input(&self, layer: usize) -> (usize, usize) {
+        let cv = self.conv(layer);
+        (cv.in_ch, cv.in_hw)
+    }
+
+    /// Output extent of conv layer `l`.
+    pub fn conv_output(&self, layer: usize) -> usize {
+        self.conv(layer).out_hw
+    }
+
+    /// Kernel (kh, kw) of conv layer `l`.
+    pub fn conv_kernel(&self, layer: usize) -> (usize, usize) {
+        let cv = self.conv(layer);
+        (cv.kh, cv.kw)
+    }
+
+    /// Mid-segment ops of conv layer `l` (between it and the next conv/FC).
+    pub fn mid_ops(&self, layer: usize) -> &[MidOp] {
+        &self.conv(layer).mid_ops
+    }
+
+    /// Extent after conv layer `l`'s mid segment.
+    pub fn mid_output(&self, layer: usize) -> usize {
+        self.conv(layer).mid_out_hw
+    }
+
+    /// `k1:k2:...:kN` — the paper's notation, extended to N convs.
+    pub fn label(&self) -> String {
+        self.convs.iter().map(|c| c.k.to_string()).collect::<Vec<_>>().join(":")
+    }
+
+    /// Forward FLOPs of `k` kernels of conv layer `layer` at batch `batch`
+    /// (one multiply-add = 2 FLOPs per tap per output pixel).  The single
+    /// source of conv FLOP arithmetic — executable specs, telemetry layer
+    /// weights and the comp-share pricing all derive from it, so a future
+    /// stride/padding variant changes the accounting in exactly one place.
+    pub fn conv_layer_flops(&self, layer: usize, k: usize, batch: usize) -> f64 {
+        let cv = self.conv(layer);
+        2.0 * batch as f64
+            * (cv.out_hw * cv.out_hw) as f64
+            * cv.in_ch as f64
+            * (cv.kh * cv.kw) as f64
+            * k as f64
+    }
+
+    /// Forward conv FLOPs of the whole network at batch size `batch`.
+    pub fn conv_flops_fwd_at(&self, batch: usize) -> f64 {
+        (1..=self.num_convs())
+            .map(|l| self.conv_layer_flops(l, self.kernels(l), batch))
+            .sum()
+    }
+
+    // -- JSON (manifest `config` block) -------------------------------------
+
+    /// Parse either manifest-config schema: the layer-graph form (a
+    /// `"layers"` array) or the legacy two-conv `k1`/`k2` form, which is
+    /// converted into the equivalent graph (same executables, same shapes —
+    /// only the parameter names move to the canonical `convN.w` scheme).
+    pub(crate) fn from_json(v: &Json) -> Result<Self> {
+        if v.opt("layers").is_some() {
+            Self::from_json_graph(v)
+        } else {
+            Self::from_json_legacy(v)
+        }
+    }
+
+    fn from_json_graph(v: &Json) -> Result<Self> {
+        let mut layers = Vec::new();
+        for (i, lv) in v.get("layers")?.as_arr()?.iter().enumerate() {
+            let op = lv.get("op")?.as_str()?;
+            layers.push(match op {
+                "conv" => LayerSpec::Conv {
+                    k: lv.get("k")?.as_usize()?,
+                    kh: lv.get("kh")?.as_usize()?,
+                    kw: lv.get("kw")?.as_usize()?,
+                },
+                "lrn" => LayerSpec::Lrn,
+                "maxpool2" => LayerSpec::MaxPool2,
+                "relu" => LayerSpec::Relu,
+                "fc" => LayerSpec::Fc { out: lv.get("out")?.as_usize()? },
+                "softmax_xent" => LayerSpec::SoftmaxXent,
+                other => bail!("layer {i}: unknown op {other:?}"),
+            });
+        }
+        let mut arch = Self::build(
+            v.get("batch")?.as_usize()?,
+            v.get("img")?.as_usize()?,
+            v.get("in_ch")?.as_usize()?,
+            layers,
+        )?;
+        if let Some(bb) = v.opt("batch_buckets") {
+            arch.batch_buckets = bb.as_usize_vec()?;
+        }
+        if let Some(bk) = v.opt("buckets") {
+            let lists = bk.as_arr()?;
+            ensure!(
+                lists.len() == arch.convs.len(),
+                "buckets has {} ladders for {} conv layers",
+                lists.len(),
+                arch.convs.len()
+            );
+            for (cv, lv) in arch.convs.iter_mut().zip(lists) {
+                let ladder = lv.as_usize_vec()?;
+                ensure!(
+                    ladder.last() == Some(&cv.k),
+                    "bucket ladder {ladder:?} must end at k={}",
+                    cv.k
+                );
+                cv.buckets = ladder;
+            }
+        }
+        if let Some(p) = v.opt("probe") {
+            arch.probe = ProbeSpec::from_json(p, arch.convs[0].kh, arch.convs[0].kw)?;
+        }
+        Ok(arch)
+    }
+
+    /// The pre-graph schema: explicit `k1`/`k2` fields plus spelled-out
+    /// derived geometry.  Converted to the equivalent two-conv graph; every
+    /// derived quantity the file pins is cross-checked against inference so
+    /// a stale or inconsistent manifest fails loudly instead of silently
+    /// training a different network.
+    fn from_json_legacy(v: &Json) -> Result<Self> {
+        let (k1, k2) = (v.get("k1")?.as_usize()?, v.get("k2")?.as_usize()?);
+        let num_classes = v.get("num_classes")?.as_usize()?;
+        let (kh, kw) = (v.get("kh")?.as_usize()?, v.get("kw")?.as_usize()?);
+        let layers = vec![
+            LayerSpec::Conv { k: k1, kh, kw },
+            LayerSpec::Lrn,
+            LayerSpec::MaxPool2,
+            LayerSpec::Conv { k: k2, kh, kw },
+            LayerSpec::Lrn,
+            LayerSpec::MaxPool2,
+            LayerSpec::Fc { out: num_classes },
+            LayerSpec::SoftmaxXent,
+        ];
+        let mut arch = Self::build(
+            v.get("batch")?.as_usize()?,
+            v.get("img")?.as_usize()?,
+            v.get("in_ch")?.as_usize()?,
+            layers,
+        )?;
+        for (key, got) in [
+            ("c1_out", arch.convs[0].out_hw),
+            ("p1_out", arch.convs[0].mid_out_hw),
+            ("c2_out", arch.convs[1].out_hw),
+            ("p2_out", arch.convs[1].mid_out_hw),
+            ("fc_in", arch.fc_in),
+        ] {
+            let want = v.get(key)?.as_usize()?;
+            ensure!(got == want, "legacy manifest says {key}={want} but the graph derives {got}");
+        }
+        arch.convs[0].buckets = v.get("buckets1")?.as_usize_vec()?;
+        arch.convs[1].buckets = v.get("buckets2")?.as_usize_vec()?;
+        arch.batch_buckets = v.get("batch_buckets")?.as_usize_vec()?;
+        arch.probe = ProbeSpec::from_json(v.get("probe")?, kh, kw)?;
+        if let Some(shapes) = v.opt("param_shapes") {
+            for (old, new) in [
+                ("w1", Self::conv_weight(1)),
+                ("b1", Self::conv_bias(1)),
+                ("w2", Self::conv_weight(2)),
+                ("b2", Self::conv_bias(2)),
+                ("wf", Self::FC_W.to_string()),
+                ("bf", Self::FC_B.to_string()),
+            ] {
+                if let Some(s) = shapes.opt(old) {
+                    let got = s.as_usize_vec()?;
+                    ensure!(
+                        got == arch.param_shapes[&new],
+                        "legacy param {old} shape {got:?} != derived {new} {:?}",
+                        arch.param_shapes[&new]
+                    );
+                }
+            }
+        }
+        Ok(arch)
+    }
+
+    /// Serialize as the layer-graph manifest-config schema (the inverse of
+    /// [`ArchSpec::from_json`] on the graph form; derived fields are
+    /// recomputed on parse, overrides carry the ladders and probe).
+    pub fn to_json(&self) -> String {
+        let layers: Vec<String> = self
+            .layers
+            .iter()
+            .map(|l| match *l {
+                LayerSpec::Conv { k, kh, kw } => {
+                    format!("{{\"op\": \"conv\", \"k\": {k}, \"kh\": {kh}, \"kw\": {kw}}}")
+                }
+                LayerSpec::Lrn => "{\"op\": \"lrn\"}".to_string(),
+                LayerSpec::MaxPool2 => "{\"op\": \"maxpool2\"}".to_string(),
+                LayerSpec::Relu => "{\"op\": \"relu\"}".to_string(),
+                LayerSpec::Fc { out } => format!("{{\"op\": \"fc\", \"out\": {out}}}"),
+                LayerSpec::SoftmaxXent => "{\"op\": \"softmax_xent\"}".to_string(),
+            })
+            .collect();
+        let buckets: Vec<String> =
+            self.convs.iter().map(|c| json_usize_arr(&c.buckets)).collect();
+        let p = &self.probe;
+        format!(
+            "{{\"layers\": [{}], \"batch\": {}, \"img\": {}, \"in_ch\": {}, \
+             \"batch_buckets\": {}, \"buckets\": [{}], \
+             \"probe\": {{\"batch\": {}, \"in_ch\": {}, \"img\": {}, \"k\": {}, \
+             \"kh\": {}, \"kw\": {}, \"flops\": {}}}}}",
+            layers.join(", "),
+            self.batch,
+            self.img,
+            self.in_ch,
+            json_usize_arr(&self.batch_buckets),
+            buckets.join(", "),
+            p.batch,
+            p.in_ch,
+            p.img,
+            p.k,
+            p.kh,
+            p.kw,
+            p.flops
+        )
+    }
+}
+
+/// `[1, 2, 3]` — JSON array of usizes.
+pub(crate) fn json_usize_arr(v: &[usize]) -> String {
+    let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Shard-size buckets for a conv layer with `k` kernels: eighths of `k`,
+/// rounded up to a multiple of 4 — bounds bucket-padding waste by ~12.5 %
+/// worst-case (DESIGN.md §3; mirrors `model.py::bucket_ladder`).
+pub fn bucket_ladder(k: usize) -> Vec<usize> {
+    let steps = 8usize;
+    let mut buckets: Vec<usize> = (1..=steps)
+        .map(|i| (k * i + steps - 1) / steps) // ceil(k*i/8)
+        .map(|r| std::cmp::min(k, (r + 3) / 4 * 4))
+        .collect();
+    buckets.sort_unstable();
+    buckets.dedup();
+    debug_assert_eq!(*buckets.last().unwrap(), k);
+    buckets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_geometry_matches_hand_computed_tiny() {
+        let a = ArchSpec::tiny();
+        assert_eq!(a.num_convs(), 2);
+        assert_eq!((a.kernels(1), a.kernels(2), a.batch), (4, 8, 2));
+        assert_eq!(
+            (a.conv_output(1), a.mid_output(1), a.conv_output(2), a.mid_output(2)),
+            (28, 14, 10, 5)
+        );
+        assert_eq!(a.conv_input(2), (4, 14));
+        assert_eq!(a.fc_in, 200);
+        assert_eq!(a.buckets(1), &[4]);
+        assert_eq!(a.buckets(2), &[4, 8]);
+        assert_eq!(a.batch_buckets, vec![2]);
+        assert_eq!(a.param_shapes["conv2.w"], vec![8, 4, 5, 5]);
+        assert_eq!(a.param_shapes[ArchSpec::FC_W], vec![200, 10]);
+        assert_eq!(
+            a.param_order,
+            vec!["conv1.w", "conv1.b", "conv2.w", "conv2.b", "fc.w", "fc.b"]
+        );
+        assert_eq!(a.mid_ops(1), &[MidOp::Lrn, MidOp::MaxPool2]);
+        assert_eq!(a.label(), "4:8");
+    }
+
+    #[test]
+    fn native_default_matches_python_archconfig() {
+        let a = ArchSpec::native_default();
+        assert_eq!((a.kernels(1), a.kernels(2), a.batch), (16, 32, 64));
+        assert_eq!(a.fc_in, 32 * 5 * 5);
+        assert_eq!(a.buckets(1), &[4, 8, 12, 16]);
+        assert_eq!(a.buckets(2), &[4, 8, 12, 16, 20, 24, 28, 32]);
+        assert_eq!(a.batch_buckets, vec![8, 16, 32, 64]);
+        assert!(a.probe.flops > 0);
+        assert_eq!((a.probe.kh, a.probe.kw), (5, 5));
+    }
+
+    #[test]
+    fn deep_cifar_expresses_three_convs() {
+        let a = ArchSpec::deep_cifar();
+        assert_eq!(a.num_convs(), 3);
+        assert_eq!((a.kernels(1), a.kernels(2), a.kernels(3)), (32, 48, 64));
+        // Spatial chain 32 -> 28 -> 14 -> 12 -> 6 -> 4 -> 2.
+        assert_eq!((a.conv_output(1), a.mid_output(1)), (28, 14));
+        assert_eq!((a.conv_output(2), a.mid_output(2)), (12, 6));
+        assert_eq!((a.conv_output(3), a.mid_output(3)), (4, 2));
+        assert_eq!(a.fc_in, 64 * 2 * 2);
+        assert_eq!(a.conv_kernel(2), (3, 3));
+        assert_eq!(a.mid_ops(2), &[MidOp::Relu, MidOp::MaxPool2]);
+        assert_eq!(a.label(), "32:48:64");
+        assert_eq!(a.param_order.len(), 3 * 2 + 2);
+    }
+
+    #[test]
+    fn tiny_deep_has_bare_pool_mid() {
+        let a = ArchSpec::tiny_deep();
+        assert_eq!(a.num_convs(), 3);
+        assert_eq!(a.mid_ops(3), &[MidOp::MaxPool2]);
+        assert_eq!(a.fc_in, 8 * 2 * 2);
+        assert_eq!(a.batch, 2);
+    }
+
+    #[test]
+    fn build_rejects_malformed_graphs() {
+        // No conv at all.
+        assert!(ArchSpec::build(
+            2,
+            32,
+            3,
+            vec![LayerSpec::Fc { out: 10 }, LayerSpec::SoftmaxXent]
+        )
+        .is_err());
+        // Mid op before the first conv.
+        assert!(ArchSpec::build(
+            2,
+            32,
+            3,
+            vec![
+                LayerSpec::Lrn,
+                LayerSpec::Conv { k: 4, kh: 5, kw: 5 },
+                LayerSpec::Fc { out: 10 },
+                LayerSpec::SoftmaxXent
+            ]
+        )
+        .is_err());
+        // Missing loss.
+        assert!(ArchSpec::build(
+            2,
+            32,
+            3,
+            vec![LayerSpec::Conv { k: 4, kh: 5, kw: 5 }, LayerSpec::Fc { out: 10 }]
+        )
+        .is_err());
+        // Conv after Fc.
+        assert!(ArchSpec::build(
+            2,
+            32,
+            3,
+            vec![
+                LayerSpec::Conv { k: 4, kh: 5, kw: 5 },
+                LayerSpec::Fc { out: 10 },
+                LayerSpec::Conv { k: 4, kh: 5, kw: 5 },
+                LayerSpec::SoftmaxXent
+            ]
+        )
+        .is_err());
+        // Odd extent into a pool: 32 - 5 + 1 = 28 pools fine, but 28/2 = 14,
+        // 14 - 4 + 1 = 11 is odd.
+        assert!(ArchSpec::build(
+            2,
+            32,
+            3,
+            vec![
+                LayerSpec::Conv { k: 4, kh: 5, kw: 5 },
+                LayerSpec::MaxPool2,
+                LayerSpec::Conv { k: 4, kh: 4, kw: 4 },
+                LayerSpec::MaxPool2,
+                LayerSpec::Fc { out: 10 },
+                LayerSpec::SoftmaxXent
+            ]
+        )
+        .is_err());
+        // Conv bigger than its input.
+        assert!(ArchSpec::build(
+            2,
+            4,
+            3,
+            vec![
+                LayerSpec::Conv { k: 4, kh: 5, kw: 5 },
+                LayerSpec::Fc { out: 10 },
+                LayerSpec::SoftmaxXent
+            ]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bucket_ladder_covers_and_caps() {
+        for k in [4usize, 16, 32, 50, 500, 1500] {
+            let l = bucket_ladder(k);
+            assert_eq!(*l.last().unwrap(), k, "ladder for {k} must end at {k}");
+            assert!(l.windows(2).all(|w| w[0] < w[1]), "sorted/deduped for {k}");
+            assert!(l.iter().all(|&b| b <= k));
+        }
+    }
+
+    #[test]
+    fn graph_json_roundtrips() {
+        for arch in [ArchSpec::tiny(), ArchSpec::native_default(), ArchSpec::deep_cifar()] {
+            let doc = arch.to_json();
+            let v = Json::parse(&doc).unwrap();
+            let back = ArchSpec::from_json(&v).unwrap();
+            assert_eq!(back.layers, arch.layers);
+            assert_eq!(back.batch, arch.batch);
+            assert_eq!(back.convs, arch.convs);
+            assert_eq!(back.fc_in, arch.fc_in);
+            assert_eq!(back.param_shapes, arch.param_shapes);
+            assert_eq!(back.param_order, arch.param_order);
+            assert_eq!(back.batch_buckets, arch.batch_buckets);
+            assert_eq!(back.probe.flops, arch.probe.flops);
+        }
+    }
+
+    #[test]
+    fn conv_flops_scale_with_batch_and_depth() {
+        let a = ArchSpec::tiny();
+        assert!(a.conv_flops_fwd_at(4) > a.conv_flops_fwd_at(2));
+        // Hand count, conv1 of tiny: 2*B*28^2*3*25*4.
+        let l1 = 2.0 * 2.0 * 784.0 * 3.0 * 25.0 * 4.0;
+        let l2 = 2.0 * 2.0 * 100.0 * 4.0 * 25.0 * 8.0;
+        assert!((a.conv_flops_fwd_at(2) - (l1 + l2)).abs() < 1.0);
+    }
+}

@@ -1,14 +1,20 @@
 //! `artifacts/manifest.json` — the contract between the python AOT pipeline
 //! and the rust runtime.  The runtime never hard-codes a shape: every
 //! executable's argument/output signature comes from here, and every call is
-//! validated against it before touching PJRT.  Parsed with the in-tree
+//! validated against it before touching a backend.  Parsed with the in-tree
 //! [`crate::util::json`] parser (offline build — no serde).
+//!
+//! The `config` block is an [`ArchSpec`] in either schema: the layer-graph
+//! form (a `"layers"` array — see `runtime::graph`) or the legacy two-conv
+//! `k1`/`k2` form, which loads by conversion into the equivalent graph and
+//! resolves to the identical executable set.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Context, Result};
 
+use super::graph::{json_usize_arr, ArchSpec};
 use crate::util::json::Json;
 
 /// `(name, shape, dtype)` triple, serialized as a JSON array.
@@ -37,6 +43,10 @@ impl ArgSpec {
         ensure!(a.len() == 3, "arg spec must be [name, shape, dtype]");
         Ok(ArgSpec(a[0].as_str()?.to_string(), a[1].as_usize_vec()?, a[2].as_str()?.to_string()))
     }
+
+    fn to_json(&self) -> String {
+        format!("[\"{}\", {}, \"{}\"]", esc(&self.0), json_usize_arr(&self.1), esc(&self.2))
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -59,195 +69,29 @@ impl ExecutableSpec {
             sha256: v.opt("sha256").and_then(|s| s.as_str().ok()).unwrap_or("").to_string(),
         })
     }
+
+    fn to_json(&self) -> String {
+        let args: Vec<String> = self.args.iter().map(ArgSpec::to_json).collect();
+        let outs: Vec<String> = self.outs.iter().map(ArgSpec::to_json).collect();
+        format!(
+            "{{\"file\": \"{}\", \"args\": [{}], \"outs\": [{}], \"flops\": {}, \"sha256\": \"{}\"}}",
+            esc(&self.file),
+            args.join(", "),
+            outs.join(", "),
+            self.flops,
+            esc(&self.sha256)
+        )
+    }
+
+    /// Synthetic (native-backend) entries have no artifact file on disk.
+    pub fn is_synthetic(&self) -> bool {
+        self.file.starts_with("<native:")
+    }
 }
 
-#[derive(Clone, Debug)]
-pub struct ProbeSpec {
-    pub batch: usize,
-    pub in_ch: usize,
-    pub img: usize,
-    pub k: usize,
-    /// FLOPs of one probe execution; measured time -> GFLOPS performance value.
-    pub flops: u64,
-}
-
-/// Shapes of the compiled architecture (paper notation `k1:k2`).
-#[derive(Clone, Debug)]
-pub struct ArchSpec {
-    pub k1: usize,
-    pub k2: usize,
-    pub batch: usize,
-    pub img: usize,
-    pub in_ch: usize,
-    pub num_classes: usize,
-    pub kh: usize,
-    pub kw: usize,
-    pub c1_out: usize,
-    pub p1_out: usize,
-    pub c2_out: usize,
-    pub p2_out: usize,
-    pub fc_in: usize,
-    pub buckets1: Vec<usize>,
-    pub buckets2: Vec<usize>,
-    pub batch_buckets: Vec<usize>,
-    pub param_shapes: BTreeMap<String, Vec<usize>>,
-    pub param_order: Vec<String>,
-    pub probe: ProbeSpec,
-}
-
-impl ArchSpec {
-    fn from_json(v: &Json) -> Result<Self> {
-        let p = v.get("probe")?;
-        let probe = ProbeSpec {
-            batch: p.get("batch")?.as_usize()?,
-            in_ch: p.get("in_ch")?.as_usize()?,
-            img: p.get("img")?.as_usize()?,
-            k: p.get("k")?.as_usize()?,
-            flops: p.get("flops")?.as_u64()?,
-        };
-        let mut param_shapes = BTreeMap::new();
-        for (name, shape) in v.get("param_shapes")?.as_obj()? {
-            param_shapes.insert(name.clone(), shape.as_usize_vec()?);
-        }
-        let param_order = v
-            .get("param_order")?
-            .as_arr()?
-            .iter()
-            .map(|s| Ok(s.as_str()?.to_string()))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Self {
-            k1: v.get("k1")?.as_usize()?,
-            k2: v.get("k2")?.as_usize()?,
-            batch: v.get("batch")?.as_usize()?,
-            img: v.get("img")?.as_usize()?,
-            in_ch: v.get("in_ch")?.as_usize()?,
-            num_classes: v.get("num_classes")?.as_usize()?,
-            kh: v.get("kh")?.as_usize()?,
-            kw: v.get("kw")?.as_usize()?,
-            c1_out: v.get("c1_out")?.as_usize()?,
-            p1_out: v.get("p1_out")?.as_usize()?,
-            c2_out: v.get("c2_out")?.as_usize()?,
-            p2_out: v.get("p2_out")?.as_usize()?,
-            fc_in: v.get("fc_in")?.as_usize()?,
-            buckets1: v.get("buckets1")?.as_usize_vec()?,
-            buckets2: v.get("buckets2")?.as_usize_vec()?,
-            batch_buckets: v.get("batch_buckets")?.as_usize_vec()?,
-            param_shapes,
-            param_order,
-            probe,
-        })
-    }
-
-    /// The architecture the native backend synthesizes when no
-    /// `manifest.json` is present: the `python/compile` default (16:32 @ 64,
-    /// CIFAR-10 geometry), including its bucket ladders.
-    pub fn native_default() -> ArchSpec {
-        ArchSpec::from_geometry(16, 32, 64)
-    }
-
-    /// A deliberately small architecture (4:8 @ batch 2) for unit and
-    /// integration tests — steps complete in milliseconds on one core.
-    pub fn tiny() -> ArchSpec {
-        ArchSpec::from_geometry(4, 8, 2)
-    }
-
-    /// Build a full spec from the paper's `k1:k2 @ batch` notation with the
-    /// fixed CIFAR-10 geometry (32x32x3, 5x5 kernels, /2 pools, 10 classes)
-    /// — the same derivation as `python/compile/model.py::ArchConfig`.
-    pub fn from_geometry(k1: usize, k2: usize, batch: usize) -> ArchSpec {
-        let (img, in_ch, num_classes, kh, kw) = (32usize, 3usize, 10usize, 5usize, 5usize);
-        let c1_out = img - kh + 1;
-        let p1_out = c1_out / 2;
-        let c2_out = p1_out - kh + 1;
-        let p2_out = c2_out / 2;
-        let fc_in = k2 * p2_out * p2_out;
-        let mut param_shapes = BTreeMap::new();
-        param_shapes.insert("w1".into(), vec![k1, in_ch, kh, kw]);
-        param_shapes.insert("b1".into(), vec![k1]);
-        param_shapes.insert("w2".into(), vec![k2, k1, kh, kw]);
-        param_shapes.insert("b2".into(), vec![k2]);
-        param_shapes.insert("wf".into(), vec![fc_in, num_classes]);
-        param_shapes.insert("bf".into(), vec![num_classes]);
-        // Batch buckets: halve down to batch/8 (model.py's ladder), so the
-        // data-parallel baseline finds a grad_full for every replica split.
-        let mut batch_buckets = vec![batch];
-        let mut bb = batch;
-        while bb % 2 == 0 && bb > std::cmp::max(2, batch / 8) {
-            bb /= 2;
-            batch_buckets.push(bb);
-        }
-        batch_buckets.sort_unstable();
-        // Probe sized so one round is ~milliseconds: big enough to time,
-        // small enough that calibration never dominates a test run.
-        let probe_img = 24usize;
-        let po = probe_img - kh + 1;
-        let probe = ProbeSpec {
-            batch: 8,
-            in_ch: 3,
-            img: probe_img,
-            k: 8,
-            flops: 2 * (8 * po * po * 3 * kh * kw * 8) as u64,
-        };
-        ArchSpec {
-            k1,
-            k2,
-            batch,
-            img,
-            in_ch,
-            num_classes,
-            kh,
-            kw,
-            c1_out,
-            p1_out,
-            c2_out,
-            p2_out,
-            fc_in,
-            buckets1: bucket_ladder(k1),
-            buckets2: bucket_ladder(k2),
-            batch_buckets,
-            param_shapes,
-            param_order: ["w1", "b1", "w2", "b2", "wf", "bf"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect(),
-            probe,
-        }
-    }
-
-    /// Kernel count of conv layer `l` (1-based, matching the paper's C1/C2).
-    pub fn kernels(&self, layer: usize) -> usize {
-        match layer {
-            1 => self.k1,
-            2 => self.k2,
-            _ => panic!("conv layer {layer} out of range"),
-        }
-    }
-
-    pub fn buckets(&self, layer: usize) -> &[usize] {
-        match layer {
-            1 => &self.buckets1,
-            2 => &self.buckets2,
-            _ => panic!("conv layer {layer} out of range"),
-        }
-    }
-
-    /// Input (channels, height) of conv layer `l`.
-    pub fn conv_input(&self, layer: usize) -> (usize, usize) {
-        match layer {
-            1 => (self.in_ch, self.img),
-            2 => (self.k1, self.p1_out),
-            _ => panic!("conv layer {layer} out of range"),
-        }
-    }
-
-    /// Output height of conv layer `l`.
-    pub fn conv_output(&self, layer: usize) -> usize {
-        match layer {
-            1 => self.c1_out,
-            2 => self.c2_out,
-            _ => panic!("conv layer {layer} out of range"),
-        }
-    }
+/// Minimal JSON string escape (manifest names never need more).
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 #[derive(Clone, Debug)]
@@ -271,19 +115,35 @@ impl Manifest {
         let v = Json::parse(raw).context("parsing manifest.json")?;
         let version = v.get("version")?.as_usize()? as u32;
         ensure!(version == 1, "unsupported manifest version {version}");
-        let config = ArchSpec::from_json(v.get("config")?)?;
+        let config = ArchSpec::from_json(v.get("config")?).context("parsing manifest config")?;
         let mut executables = BTreeMap::new();
         for (name, spec) in v.get("executables")?.as_obj()? {
             let spec = ExecutableSpec::from_json(spec)
                 .with_context(|| format!("executable {name:?}"))?;
             ensure!(
-                dir.join(&spec.file).exists(),
+                spec.is_synthetic() || dir.join(&spec.file).exists(),
                 "manifest lists {name} but {} is missing",
                 spec.file
             );
             executables.insert(name.clone(), spec);
         }
         Ok(Manifest { version, config, executables, dir: dir.to_path_buf() })
+    }
+
+    /// Serialize (graph config schema) — the inverse of
+    /// [`Manifest::from_json_str`] up to derived-field recomputation.
+    pub fn to_json_string(&self) -> String {
+        let execs: Vec<String> = self
+            .executables
+            .iter()
+            .map(|(name, s)| format!("\"{}\": {}", esc(name), s.to_json()))
+            .collect();
+        format!(
+            "{{\"version\": {}, \"config\": {}, \"executables\": {{{}}}}}",
+            self.version,
+            self.config.to_json(),
+            execs.join(", ")
+        )
     }
 
     pub fn spec(&self, name: &str) -> Result<&ExecutableSpec> {
@@ -312,21 +172,6 @@ pub enum ConvDir {
     Bwd,
 }
 
-/// Shard-size buckets for a conv layer with `k` kernels: eighths of `k`,
-/// rounded up to a multiple of 4 — bounds bucket-padding waste by ~12.5 %
-/// worst-case (DESIGN.md §3; mirrors `model.py::bucket_ladder`).
-pub fn bucket_ladder(k: usize) -> Vec<usize> {
-    let steps = 8usize;
-    let mut buckets: Vec<usize> = (1..=steps)
-        .map(|i| (k * i + steps - 1) / steps) // ceil(k*i/8)
-        .map(|r| std::cmp::min(k, (r + 3) / 4 * 4))
-        .collect();
-    buckets.sort_unstable();
-    buckets.dedup();
-    debug_assert_eq!(*buckets.last().unwrap(), k);
-    buckets
-}
-
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
@@ -336,69 +181,94 @@ pub(crate) mod tests {
         ArchSpec::tiny()
     }
 
-    #[test]
-    fn derived_geometry_matches_hand_computed_tiny() {
-        let a = ArchSpec::tiny();
-        assert_eq!((a.k1, a.k2, a.batch), (4, 8, 2));
-        assert_eq!((a.c1_out, a.p1_out, a.c2_out, a.p2_out), (28, 14, 10, 5));
-        assert_eq!(a.fc_in, 200);
-        assert_eq!(a.buckets1, vec![4]);
-        assert_eq!(a.buckets2, vec![4, 8]);
-        assert_eq!(a.batch_buckets, vec![2]);
-        assert_eq!(a.param_shapes["w2"], vec![8, 4, 5, 5]);
-        assert_eq!(a.param_shapes["wf"], vec![200, 10]);
-    }
+    /// The legacy (pre-graph) manifest config for the tiny arch, verbatim
+    /// from an old `artifacts/manifest.json`.
+    pub const LEGACY_TINY_CONFIG: &str = r#"{
+       "k1": 4, "k2": 8, "batch": 2, "img": 32, "in_ch": 3,
+       "num_classes": 10, "kh": 5, "kw": 5,
+       "c1_out": 28, "p1_out": 14, "c2_out": 10, "p2_out": 5,
+       "fc_in": 200, "buckets1": [4], "buckets2": [4, 8],
+       "batch_buckets": [2],
+       "param_shapes": {"w1": [4,3,5,5], "b1": [4], "w2": [8,4,5,5],
+                        "b2": [8], "wf": [200,10], "bf": [10]},
+       "param_order": ["w1","b1","w2","b2","wf","bf"],
+       "probe": {"batch": 1, "in_ch": 1, "img": 8, "k": 1, "flops": 100}
+     }"#;
 
     #[test]
-    fn native_default_matches_python_archconfig() {
-        let a = ArchSpec::native_default();
-        assert_eq!((a.k1, a.k2, a.batch), (16, 32, 64));
-        assert_eq!(a.fc_in, 32 * 5 * 5);
-        assert_eq!(a.buckets1, vec![4, 8, 12, 16]);
-        assert_eq!(a.buckets2, vec![4, 8, 12, 16, 20, 24, 28, 32]);
-        assert_eq!(a.batch_buckets, vec![8, 16, 32, 64]);
-        assert!(a.probe.flops > 0);
-    }
-
-    #[test]
-    fn bucket_ladder_covers_and_caps() {
-        for k in [4usize, 16, 32, 50, 500, 1500] {
-            let l = bucket_ladder(k);
-            assert_eq!(*l.last().unwrap(), k, "ladder for {k} must end at {k}");
-            assert!(l.windows(2).all(|w| w[0] < w[1]), "sorted/deduped for {k}");
-            assert!(l.iter().all(|&b| b <= k));
-        }
-    }
-
-    #[test]
-    fn parses_minimal_manifest() {
-        let doc = r#"{
-         "version": 1,
-         "config": {
-           "k1": 4, "k2": 8, "batch": 2, "img": 32, "in_ch": 3,
-           "num_classes": 10, "kh": 5, "kw": 5,
-           "c1_out": 28, "p1_out": 14, "c2_out": 10, "p2_out": 5,
-           "fc_in": 200, "buckets1": [4], "buckets2": [4, 8],
-           "batch_buckets": [2],
-           "param_shapes": {"w1": [4,3,5,5], "b1": [4], "w2": [8,4,5,5],
-                            "b2": [8], "wf": [200,10], "bf": [10]},
-           "param_order": ["w1","b1","w2","b2","wf","bf"],
-           "probe": {"batch": 1, "in_ch": 1, "img": 8, "k": 1, "flops": 100}
-         },
-         "executables": {}
-        }"#;
-        let m = Manifest::from_json_str(doc, Path::new("/tmp")).unwrap();
-        assert_eq!(m.config.k1, 4);
+    fn parses_minimal_legacy_manifest() {
+        let doc = format!(
+            "{{\"version\": 1, \"config\": {LEGACY_TINY_CONFIG}, \"executables\": {{}}}}"
+        );
+        let m = Manifest::from_json_str(&doc, Path::new("/tmp")).unwrap();
+        assert_eq!(m.config.kernels(1), 4);
         assert_eq!(m.config.buckets(2), &[4, 8]);
         assert_eq!(m.config.conv_input(2), (4, 14));
+        assert_eq!(m.config.probe.batch, 1);
+        // Legacy probes carry no kernel geometry: inherited from conv1.
+        assert_eq!((m.config.probe.kh, m.config.probe.kw), (5, 5));
         assert!(m.spec("nope").is_err());
         assert_eq!(Manifest::conv_exec(1, ConvDir::Fwd, 8), "conv1_fwd_b8");
         assert_eq!(Manifest::conv_exec(2, ConvDir::Bwd, 12), "conv2_bwd_b12");
     }
 
     #[test]
+    fn legacy_conversion_builds_the_equivalent_two_conv_graph() {
+        let v = Json::parse(LEGACY_TINY_CONFIG).unwrap();
+        let converted = ArchSpec::from_json(&v).unwrap();
+        let derived = ArchSpec::tiny();
+        assert_eq!(converted.layers, derived.layers);
+        assert_eq!(converted.convs, derived.convs);
+        assert_eq!(converted.param_shapes, derived.param_shapes);
+        assert_eq!(converted.param_order, derived.param_order);
+        assert_eq!(converted.fc_in, 200);
+    }
+
+    #[test]
+    fn legacy_conversion_rejects_inconsistent_geometry() {
+        // p2_out disagrees with what the graph derives -> loud failure.
+        let doc = LEGACY_TINY_CONFIG.replace("\"p2_out\": 5", "\"p2_out\": 6");
+        let v = Json::parse(&doc).unwrap();
+        assert!(ArchSpec::from_json(&v).is_err());
+        // So does a param shape that moved.
+        let doc = LEGACY_TINY_CONFIG.replace("\"w2\": [8,4,5,5]", "\"w2\": [8,4,3,3]");
+        let v = Json::parse(&doc).unwrap();
+        assert!(ArchSpec::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_serialization() {
+        // A graph-built native manifest must survive serialize -> parse with
+        // the executable set, signatures and config intact.
+        for arch in [ArchSpec::tiny(), ArchSpec::tiny_deep()] {
+            let m = super::super::exec::native_manifest(arch, Path::new("/tmp"));
+            let doc = m.to_json_string();
+            let back = Manifest::from_json_str(&doc, Path::new("/tmp")).unwrap();
+            assert_eq!(back.version, m.version);
+            assert_eq!(back.config.layers, m.config.layers);
+            assert_eq!(back.config.convs, m.config.convs);
+            assert_eq!(back.config.param_order, m.config.param_order);
+            let names: Vec<&String> = back.executables.keys().collect();
+            let want: Vec<&String> = m.executables.keys().collect();
+            assert_eq!(names, want, "executable set must round-trip");
+            for (name, spec) in &m.executables {
+                let b = back.spec(name).unwrap();
+                assert_eq!(b.args, spec.args, "{name} args");
+                assert_eq!(b.outs, spec.outs, "{name} outs");
+                assert_eq!(b.flops, spec.flops, "{name} flops");
+            }
+        }
+    }
+
+    #[test]
     fn rejects_wrong_version_and_missing_file() {
         let doc = r#"{"version": 2, "config": {}, "executables": {}}"#;
         assert!(Manifest::from_json_str(doc, Path::new("/tmp")).is_err());
+        // A non-synthetic executable whose artifact file is absent fails.
+        let doc = format!(
+            "{{\"version\": 1, \"config\": {LEGACY_TINY_CONFIG}, \"executables\": {{\
+             \"probe\": {{\"file\": \"missing.hlo.txt\", \"args\": [], \"outs\": []}}}}}}"
+        );
+        assert!(Manifest::from_json_str(&doc, Path::new("/nonexistent-dir")).is_err());
     }
 }

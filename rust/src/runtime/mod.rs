@@ -21,13 +21,15 @@
 //! retries.
 
 mod exec;
+mod graph;
 mod manifest;
 mod native;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
 pub use exec::{native_manifest, spec_for, ExecKind};
-pub use manifest::{bucket_ladder, ArchSpec, ArgSpec, ConvDir, ExecutableSpec, Manifest, ProbeSpec};
+pub use graph::{bucket_ladder, ArchSpec, ConvInfo, LayerSpec, MidOp, ProbeSpec};
+pub use manifest::{ArgSpec, ConvDir, ExecutableSpec, Manifest};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -92,8 +94,13 @@ pub struct Runtime {
 impl Runtime {
     /// Open an artifact directory.  If it contains a `manifest.json` the
     /// manifest drives validation (and the PJRT backend, when selected);
-    /// otherwise a manifest is synthesized from [`ArchSpec::native_default`]
-    /// — a clean offline checkout needs no artifacts at all.
+    /// otherwise a manifest is synthesized from
+    /// [`ArchSpec::native_default`] — a clean offline checkout needs no
+    /// artifacts at all.  For a *different* synthesized architecture use
+    /// [`Runtime::for_arch`] with an [`ArchSpec::preset`] (the CLI's
+    /// `--arch` resolves through that path — deliberately an explicit
+    /// argument, not ambient env state, so tests and parallel runs cannot
+    /// be silently re-architected).
     pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Arc<Self>> {
         let dir = dir.as_ref();
         let manifest = if dir.join("manifest.json").exists() {
@@ -118,10 +125,11 @@ impl Runtime {
 
     /// A runtime over the native backend for an explicit architecture — no
     /// directory involved.  Tests and benches use this with
-    /// [`ArchSpec::tiny`].
+    /// [`ArchSpec::tiny`] / [`ArchSpec::tiny_deep`].
     pub fn for_arch(arch: ArchSpec) -> Arc<Self> {
         let manifest = exec::native_manifest(arch, std::path::Path::new("."));
-        Self::with_backend(Box::new(NativeBackend), manifest)
+        let backend = Box::new(NativeBackend::new(manifest.config.clone()));
+        Self::with_backend(backend, manifest)
     }
 
     /// Assemble a runtime from an explicit backend + manifest.
@@ -145,8 +153,7 @@ impl Runtime {
             #[cfg(not(feature = "pjrt"))]
             anyhow::bail!("CONVDIST_BACKEND=pjrt requires building with --features pjrt");
         }
-        let _ = manifest;
-        Ok(Box::new(NativeBackend))
+        Ok(Box::new(NativeBackend::new(manifest.config.clone())))
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -333,12 +340,12 @@ mod tests {
         let p = rt.arch().probe.clone();
         let mut rng = Pcg32::seed(1);
         let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
-        let w = Tensor::randn(&[p.k, p.in_ch, rt.arch().kh, rt.arch().kw], &mut rng);
+        let w = Tensor::randn(&[p.k, p.in_ch, p.kh, p.kw], &mut rng);
         let b = Tensor::zeros(&[p.k]);
         let outs = rt
             .execute("probe", &[x.clone().into(), w.clone().into(), b.clone().into()])
             .unwrap();
-        let po = p.img - rt.arch().kh + 1;
+        let po = p.img - p.kh + 1;
         assert_eq!(outs[0].shape(), &[p.batch, p.k, po, po]);
         // Shape mismatch is rejected before the backend runs.
         let bad = Tensor::zeros(&[1, 1, 2, 2]);
@@ -354,7 +361,7 @@ mod tests {
         let rt = Runtime::for_arch(tiny_arch());
         let a = rt.arch().clone();
         let mut rng = Pcg32::seed(2);
-        let p2 = Tensor::randn(&[a.batch, a.k2, a.p2_out, a.p2_out], &mut rng);
+        let p2 = Tensor::randn(&[a.batch, a.kernels(2), a.mid_output(2), a.mid_output(2)], &mut rng);
         let wf = Tensor::randn(&[a.fc_in, a.num_classes], &mut rng);
         let bf = Tensor::zeros(&[a.num_classes]);
         let labels = ITensor::new(vec![a.batch], vec![0; a.batch]).unwrap();

@@ -3,20 +3,34 @@
 //! artifacts, no Python, no network — `Runtime::open` on a clean checkout
 //! lands here.
 //!
-//! All shapes are read from the (already manifest-validated) arguments, so a
-//! prepared executable is just its parsed [`ExecKind`]; "compilation" is
-//! name parsing.
+//! Per-shard conv executables are shape-driven (all dims are read from the
+//! already manifest-validated arguments), but the mid segments and the
+//! fused full-network executables depend on the architecture *graph*: the
+//! backend holds the [`ArchSpec`] and interprets its [`MidOp`] lists and
+//! conv chain directly, so any graph the IR can express runs here with no
+//! per-architecture code.
 
 use anyhow::{anyhow, bail, Result};
 
 use super::exec::ExecKind;
-use super::{Backend, PreparedExec};
+use super::graph::MidOp;
+use super::{ArchSpec, Backend, PreparedExec};
 use crate::kernels as k;
 use crate::linalg;
 use crate::runtime::ExecutableSpec;
 use crate::tensor::{ITensor, Tensor, Value};
 
-pub struct NativeBackend;
+pub struct NativeBackend {
+    /// Shared with every prepared executable — `prepare` is a pointer bump,
+    /// not a deep copy of the graph per executable.
+    arch: std::sync::Arc<ArchSpec>,
+}
+
+impl NativeBackend {
+    pub fn new(arch: ArchSpec) -> Self {
+        Self { arch: std::sync::Arc::new(arch) }
+    }
+}
 
 impl Backend for NativeBackend {
     fn platform(&self) -> String {
@@ -26,12 +40,13 @@ impl Backend for NativeBackend {
     fn prepare(&self, name: &str, _spec: &ExecutableSpec) -> Result<Box<dyn PreparedExec>> {
         let kind = ExecKind::parse(name)
             .ok_or_else(|| anyhow!("no native implementation for executable {name:?}"))?;
-        Ok(Box::new(NativeExec { kind }))
+        Ok(Box::new(NativeExec { kind, arch: self.arch.clone() }))
     }
 }
 
 struct NativeExec {
     kind: ExecKind,
+    arch: std::sync::Arc<ArchSpec>,
 }
 
 /// Borrow a 4-d f32 argument and its dims.
@@ -49,7 +64,7 @@ fn labels_of(v: &Value) -> Result<&ITensor> {
     }
 }
 
-/// One conv-layer forward: `(y, bias, w) -> y` as raw data + dims.
+/// One conv-layer forward: `(x, w, bias) -> y` as a tensor.
 fn conv_fwd(x: &Tensor, w: &Tensor, bias: &Tensor) -> Result<Tensor> {
     let (b, c, h, wd) = {
         let s = x.shape();
@@ -63,48 +78,125 @@ fn conv_fwd(x: &Tensor, w: &Tensor, bias: &Tensor) -> Result<Tensor> {
     Tensor::new(vec![b, kk, h - kh + 1, wd - kw + 1], y)
 }
 
-/// `mid` forward pieces: returns (lrn(y), pool(lrn(y))) so backward can
-/// reuse the LRN output for pooling argmax recomputation.
-fn mid_fwd_parts(y: &Tensor) -> (Vec<f32>, Vec<f32>, [usize; 4]) {
+/// Mid-segment forward: apply `ops` to the conv output `y`.  The first op
+/// reads straight from `y`'s buffer (no seed copy); only the intermediates
+/// between ops are materialized.
+fn mid_fwd(ops: &[MidOp], y: &Tensor) -> Result<Tensor> {
     let s = y.shape();
-    let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
-    let z = k::lrn_fwd(y.data(), b, c, h, w);
-    let p = k::maxpool2_fwd(&z, b, c, h, w);
-    (z, p, [b, c, h, w])
+    let (b, c) = (s[0], s[1]);
+    let (mut h, mut w) = (s[2], s[3]);
+    let mut cur: Option<Vec<f32>> = None; // None = still reading from y
+    for op in ops {
+        let src: &[f32] = cur.as_deref().unwrap_or_else(|| y.data());
+        let next = match op {
+            MidOp::Lrn => k::lrn_fwd(src, b, c, h, w),
+            MidOp::Relu => k::relu_fwd(src),
+            MidOp::MaxPool2 => {
+                let p = k::maxpool2_fwd(src, b, c, h, w);
+                h /= 2;
+                w /= 2;
+                p
+            }
+        };
+        cur = Some(next);
+    }
+    match cur {
+        Some(v) => Tensor::new(vec![b, c, h, w], v),
+        // Empty segment: identity (the output copy is the executable's
+        // contract — it must own its result).
+        None => Ok(y.clone()),
+    }
 }
 
-/// vjp of the mid block: `gp -> gy` (recomputes the LRN output for pooling
-/// argmax; the pooled output itself is not needed, so no pool forward).
-fn mid_bwd(y: &Tensor, gp: &Tensor) -> Vec<f32> {
+/// Mid-segment vjp: `gp -> gy`, recomputing the forward chain from the conv
+/// output `y` (recompute-in-bwd — the pooled outputs are never stored).
+/// The first op's input *is* `y`, so no copy of it is stored either.
+fn mid_bwd(ops: &[MidOp], y: &Tensor, gp: &Tensor) -> Result<Tensor> {
     let s = y.shape();
-    let (b, c, h, w) = (s[0], s[1], s[2], s[3]);
-    let z = k::lrn_fwd(y.data(), b, c, h, w);
-    let gz = k::maxpool2_bwd(&z, gp.data(), b, c, h, w);
-    k::lrn_bwd(y.data(), &gz, b, c, h, w)
+    let (b, c) = (s[0], s[1]);
+    // Forward recompute, keeping each op's input and extent (`None` = `y`).
+    // Backward only needs each op's *input*, so the final op's output is
+    // never computed.
+    let (mut h, mut w) = (s[2], s[3]);
+    let mut stages: Vec<(Option<Vec<f32>>, usize, usize)> = Vec::with_capacity(ops.len());
+    let mut cur: Option<Vec<f32>> = None;
+    for (idx, op) in ops.iter().enumerate() {
+        let next = if idx + 1 == ops.len() {
+            None
+        } else {
+            let src: &[f32] = cur.as_deref().unwrap_or_else(|| y.data());
+            Some(match op {
+                MidOp::Lrn => k::lrn_fwd(src, b, c, h, w),
+                MidOp::Relu => k::relu_fwd(src),
+                MidOp::MaxPool2 => k::maxpool2_fwd(src, b, c, h, w),
+            })
+        };
+        stages.push((cur.take(), h, w));
+        if matches!(op, MidOp::MaxPool2) {
+            h /= 2;
+            w /= 2;
+        }
+        cur = next;
+    }
+    // Backward through the stored inputs.
+    let mut g = gp.data().to_vec();
+    for (op, (input, hin, win)) in ops.iter().zip(&stages).rev() {
+        let src: &[f32] = input.as_deref().unwrap_or_else(|| y.data());
+        g = match op {
+            MidOp::Lrn => k::lrn_bwd(src, &g, b, c, *hin, *win),
+            MidOp::Relu => k::relu_bwd(src, &g),
+            MidOp::MaxPool2 => k::maxpool2_bwd(src, &g, b, c, *hin, *win),
+        };
+    }
+    Tensor::new(y.shape().to_vec(), g)
 }
 
-/// FC head gradients: `(p2_flat, wf, bf, labels) -> (loss, gp2, gwf, gbf)`.
+/// FC head gradients: `(p_flat, wf, bf, labels) -> (loss, gp, gwf, gbf)`.
 fn head_grad(
-    p2: &[f32],
+    p: &[f32],
     wf: &Tensor,
     bf: &Tensor,
     labels: &[i32],
     b: usize,
 ) -> (f32, Vec<f32>, Vec<f32>, Vec<f32>) {
     let (fin, ncls) = (wf.shape()[0], wf.shape()[1]);
-    let logits = k::fc_logits(p2, wf.data(), bf.data(), b, fin, ncls);
+    let logits = k::fc_logits(p, wf.data(), bf.data(), b, fin, ncls);
     let (loss, gl) = k::softmax_xent_grad(&logits, labels, b, ncls);
-    let mut gp2 = vec![0f32; b * fin];
-    linalg::gemm_abt(&gl, wf.data(), b, ncls, fin, &mut gp2);
+    let mut gp = vec![0f32; b * fin];
+    linalg::gemm_abt(&gl, wf.data(), b, ncls, fin, &mut gp);
     let mut gwf = vec![0f32; fin * ncls];
-    linalg::gemm_atb(p2, &gl, b, fin, ncls, &mut gwf);
+    linalg::gemm_atb(p, &gl, b, fin, ncls, &mut gwf);
     let mut gbf = vec![0f32; ncls];
     for row in gl.chunks(ncls) {
         for (g, &v) in gbf.iter_mut().zip(row) {
             *g += v;
         }
     }
-    (loss, gp2, gwf, gbf)
+    (loss, gp, gwf, gbf)
+}
+
+impl NativeExec {
+    /// Full-network forward over the graph: returns the per-conv inputs,
+    /// per-conv outputs and the final mid output (the FC input).
+    /// `params[2l]`/`params[2l+1]` are conv `l+1`'s weight/bias.
+    fn forward_chain(
+        &self,
+        x: &Tensor,
+        params: &[&Tensor],
+    ) -> Result<(Vec<Tensor>, Vec<Tensor>, Tensor)> {
+        let n = self.arch.num_convs();
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        let mut cur = x.clone();
+        for l in 1..=n {
+            let (w, b) = (params[2 * (l - 1)], params[2 * (l - 1) + 1]);
+            let y = conv_fwd(&cur, w, b)?;
+            let p = mid_fwd(self.arch.mid_ops(l), &y)?;
+            xs.push(std::mem::replace(&mut cur, p));
+            ys.push(y);
+        }
+        Ok((xs, ys, cur))
+    }
 }
 
 impl PreparedExec for NativeExec {
@@ -126,106 +218,95 @@ impl PreparedExec for NativeExec {
                     Value::F32(Tensor::new(vec![kk], gb)?),
                 ])
             }
-            ExecKind::MidFwd { .. } => {
-                let y = args[0].as_f32()?;
-                let (_z, p, [b, c, h, w]) = mid_fwd_parts(y);
-                Ok(vec![Value::F32(Tensor::new(vec![b, c, h / 2, w / 2], p)?)])
+            ExecKind::MidFwd { layer } => {
+                let p = mid_fwd(self.arch.mid_ops(*layer), args[0].as_f32()?)?;
+                Ok(vec![Value::F32(p)])
             }
-            ExecKind::MidBwd { .. } => {
-                let y = args[0].as_f32()?;
-                let gy = mid_bwd(y, args[1].as_f32()?);
-                Ok(vec![Value::F32(Tensor::new(y.shape().to_vec(), gy)?)])
+            ExecKind::MidBwd { layer } => {
+                let gy = mid_bwd(self.arch.mid_ops(*layer), args[0].as_f32()?, args[1].as_f32()?)?;
+                Ok(vec![Value::F32(gy)])
             }
             ExecKind::HeadGrad => {
-                let (p2, b, kc, ph, pw) = t4(&args[0])?;
+                let (p, b, kc, ph, pw) = t4(&args[0])?;
                 let wf = args[1].as_f32()?;
                 let bf = args[2].as_f32()?;
                 let labels = labels_of(&args[3])?;
-                let (loss, gp2, gwf, gbf) = head_grad(p2.data(), wf, bf, labels.data(), b);
+                let (loss, gp, gwf, gbf) = head_grad(p.data(), wf, bf, labels.data(), b);
                 Ok(vec![
                     Value::F32(Tensor::scalar(loss)),
-                    Value::F32(Tensor::new(vec![b, kc, ph, pw], gp2)?),
+                    Value::F32(Tensor::new(vec![b, kc, ph, pw], gp)?),
                     Value::F32(Tensor::new(wf.shape().to_vec(), gwf)?),
                     Value::F32(Tensor::new(bf.shape().to_vec(), gbf)?),
                 ])
             }
             ExecKind::EvalFull => {
                 let x = args[0].as_f32()?;
-                let (w1, b1, w2, b2) =
-                    (args[1].as_f32()?, args[2].as_f32()?, args[3].as_f32()?, args[4].as_f32()?);
-                let (wf, bf) = (args[5].as_f32()?, args[6].as_f32()?);
-                let y1 = conv_fwd(x, w1, b1)?;
-                let (_z1, p1, [b, k1, h1, _]) = mid_fwd_parts(&y1);
-                let p1 = Tensor::new(vec![b, k1, h1 / 2, h1 / 2], p1)?;
-                let y2 = conv_fwd(&p1, w2, b2)?;
-                let (_z2, p2, _) = mid_fwd_parts(&y2);
+                let params: Vec<&Tensor> =
+                    args[1..].iter().map(|v| v.as_f32()).collect::<Result<_>>()?;
+                let n = self.arch.num_convs();
+                let (_xs, _ys, p) = self.forward_chain(x, &params[..2 * n])?;
+                let (wf, bf) = (params[2 * n], params[2 * n + 1]);
+                let b = x.shape()[0];
                 let (fin, ncls) = (wf.shape()[0], wf.shape()[1]);
-                let logits = k::fc_logits(&p2, wf.data(), bf.data(), b, fin, ncls);
+                let logits = k::fc_logits(p.data(), wf.data(), bf.data(), b, fin, ncls);
                 Ok(vec![Value::F32(Tensor::new(vec![b, ncls], logits)?)])
             }
             ExecKind::GradFull { .. } => {
                 let x = args[0].as_f32()?;
                 let labels = labels_of(&args[1])?;
-                let (w1, b1, w2, b2) =
-                    (args[2].as_f32()?, args[3].as_f32()?, args[4].as_f32()?, args[5].as_f32()?);
-                let (wf, bf) = (args[6].as_f32()?, args[7].as_f32()?);
+                let params: Vec<&Tensor> =
+                    args[2..].iter().map(|v| v.as_f32()).collect::<Result<_>>()?;
+                let n = self.arch.num_convs();
                 let b = x.shape()[0];
 
-                // ---- forward, keeping what backward needs --------------------
-                let y1 = conv_fwd(x, w1, b1)?;
-                let (z1, p1v, [_, k1, h1, _]) = mid_fwd_parts(&y1);
-                let p1 = Tensor::new(vec![b, k1, h1 / 2, h1 / 2], p1v)?;
-                let y2 = conv_fwd(&p1, w2, b2)?;
-                let (z2, p2v, [_, k2, h2, _]) = mid_fwd_parts(&y2);
+                // ---- forward, keeping what backward needs ----------------
+                let (xs, ys, p) = self.forward_chain(x, &params[..2 * n])?;
 
-                // ---- head ----------------------------------------------------
-                let (loss, gp2, gwf, gbf) = head_grad(&p2v, wf, bf, labels.data(), b);
+                // ---- head ------------------------------------------------
+                let (wf, bf) = (params[2 * n], params[2 * n + 1]);
+                let (loss, gp, gwf, gbf) = head_grad(p.data(), wf, bf, labels.data(), b);
+                let mut gp = Tensor::new(p.shape().to_vec(), gp)?;
 
-                // ---- backward through mid2 + conv2 ---------------------------
-                let gz2 = k::maxpool2_bwd(&z2, &gp2, b, k2, h2, h2);
-                let gy2 = k::lrn_bwd(y2.data(), &gz2, b, k2, h2, h2);
-                let (c2in, h2in) = (p1.shape()[1], p1.shape()[2]);
-                let (kh, kw) = (w2.shape()[2], w2.shape()[3]);
-                let (gp1, gw2, gb2) = k::conv2d_bwd(
-                    p1.data(),
-                    w2.data(),
-                    &gy2,
-                    b,
-                    c2in,
-                    h2in,
-                    h2in,
-                    k2,
-                    kh,
-                    kw,
-                );
+                // ---- backward through each mid + conv, deepest first -----
+                let mut conv_grads: Vec<(Tensor, Tensor)> = Vec::with_capacity(n);
+                for l in (1..=n).rev() {
+                    let gy = mid_bwd(self.arch.mid_ops(l), &ys[l - 1], &gp)?;
+                    let xin = &xs[l - 1];
+                    let w = params[2 * (l - 1)];
+                    let (c, h) = (xin.shape()[1], xin.shape()[2]);
+                    let (kk, kh, kw) = (w.shape()[0], w.shape()[2], w.shape()[3]);
+                    // The input-layer gx is discarded (no layer below), but
+                    // the kernel computes it anyway — same cost structure as
+                    // the paper's convn.
+                    let (gx, gw, gb) = k::conv2d_bwd(
+                        xin.data(),
+                        w.data(),
+                        gy.data(),
+                        b,
+                        c,
+                        h,
+                        h,
+                        kk,
+                        kh,
+                        kw,
+                    );
+                    conv_grads.push((
+                        Tensor::new(w.shape().to_vec(), gw)?,
+                        Tensor::new(vec![kk], gb)?,
+                    ));
+                    gp = Tensor::new(xin.shape().to_vec(), gx)?;
+                }
 
-                // ---- backward through mid1 + conv1 ---------------------------
-                let gz1 = k::maxpool2_bwd(&z1, &gp1, b, k1, h1, h1);
-                let gy1 = k::lrn_bwd(y1.data(), &gz1, b, k1, h1, h1);
-                let (c1in, h1in) = (x.shape()[1], x.shape()[2]);
-                let (kh1, kw1) = (w1.shape()[2], w1.shape()[3]);
-                let (_gx, gw1, gb1) = k::conv2d_bwd(
-                    x.data(),
-                    w1.data(),
-                    &gy1,
-                    b,
-                    c1in,
-                    h1in,
-                    h1in,
-                    k1,
-                    kh1,
-                    kw1,
-                );
-
-                Ok(vec![
-                    Value::F32(Tensor::scalar(loss)),
-                    Value::F32(Tensor::new(w1.shape().to_vec(), gw1)?),
-                    Value::F32(Tensor::new(vec![k1], gb1)?),
-                    Value::F32(Tensor::new(w2.shape().to_vec(), gw2)?),
-                    Value::F32(Tensor::new(vec![k2], gb2)?),
-                    Value::F32(Tensor::new(wf.shape().to_vec(), gwf)?),
-                    Value::F32(Tensor::new(bf.shape().to_vec(), gbf)?),
-                ])
+                // Outputs in param order: loss, conv grads shallow-to-deep,
+                // then the FC pair.
+                let mut outs = vec![Value::F32(Tensor::scalar(loss))];
+                for (gw, gb) in conv_grads.into_iter().rev() {
+                    outs.push(Value::F32(gw));
+                    outs.push(Value::F32(gb));
+                }
+                outs.push(Value::F32(Tensor::new(wf.shape().to_vec(), gwf)?));
+                outs.push(Value::F32(Tensor::new(bf.shape().to_vec(), gbf)?));
+                Ok(outs)
             }
         }
     }

@@ -50,12 +50,12 @@ pub struct AdaptiveConfig {
     pub heartbeat_every: u64,
     /// A worker that does not `Pong` within this window is dropped.
     ///
-    /// Deadline caveat (applies to `gather_timeout` too): the window is
-    /// enforced only on transports whose `Link::recv_timeout` supports
-    /// bounded waits — in-proc links do; `TcpLink` deliberately keeps
-    /// blocking reads (a frame read is not restartable mid-stream), so
-    /// over TCP a wedged-but-connected worker is only detected when the
-    /// socket errors.
+    /// Deadline caveat (applies to `gather_timeout` too): in-proc links
+    /// bound the whole receive; `TcpLink` bounds the wait for the *first
+    /// byte* of a frame (the read timeout is cleared once a frame starts,
+    /// so the stream never desynchronizes).  A totally silent worker is
+    /// therefore detected on every transport; one that trickles a frame
+    /// byte-by-byte is only caught over TCP when the socket errors.
     pub heartbeat_timeout: Duration,
     /// Optional per-result deadline during gather: a worker that exceeds it
     /// is dropped and the step retried on the survivors (elastic

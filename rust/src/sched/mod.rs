@@ -24,6 +24,7 @@ pub use adaptive::{
     predicted_cost, utilization, AdaptiveConfig, AdaptivePolicy, Decision, LayerPlan,
 };
 pub use partition::{
-    apportion, bottleneck_cost, fit_bucket, partition_layer, workload_shares, Shard, ShardTable,
+    apportion, bottleneck_cost, fit_bucket, partition_layer, partition_network, workload_shares,
+    Shard, ShardTable,
 };
 pub use telemetry::{Ewma, FleetTelemetry};

@@ -157,6 +157,22 @@ pub fn partition_layer(k: usize, probe_times: &[f64], buckets: &[usize]) -> Resu
     Ok(shards)
 }
 
+/// Eq. 1 partition of a whole network: one shard table per conv layer,
+/// every layer split over the *same* device times (the paper partitions
+/// each conv with the same calibration).  `layers[i]` is conv layer `i+1`'s
+/// `(kernel_count, bucket_ladder)`.  Devices in the returned tables are
+/// positional (index into `probe_times`) — callers with a sparse fleet
+/// remap them to fleet ids.
+pub fn partition_network(
+    layers: &[(usize, &[usize])],
+    probe_times: &[f64],
+) -> Result<Vec<Vec<Shard>>> {
+    layers
+        .iter()
+        .map(|&(k, buckets)| partition_layer(k, probe_times, buckets))
+        .collect()
+}
+
 /// Predicted *relative* conv time of a partition: every device runs in
 /// parallel, each takes `bucket_i * t_i` (bucketed work at that device's
 /// speed); the layer finishes when the slowest shard does.  Used by tests to
@@ -237,6 +253,30 @@ mod tests {
         assert!(shards.iter().all(|s| !s.is_empty()), "empty shard in table");
         let covered: usize = shards.iter().map(|s| s.len()).sum();
         assert_eq!(covered, 8, "dropped share must be redistributed to the survivors");
+    }
+
+    #[test]
+    fn partition_network_tables_one_per_layer() {
+        // A 3-conv network: every layer tiles [0, k) over the same devices.
+        let (b1, b2, b3) = (vec![4usize], vec![4usize, 6], vec![4usize, 8]);
+        let layers: Vec<(usize, &[usize])> = vec![(4, &b1), (6, &b2), (8, &b3)];
+        let times = [1.0, 2.0, 4.0];
+        let tables = partition_network(&layers, &times).unwrap();
+        assert_eq!(tables.len(), 3);
+        for (li, (shards, &(k, _))) in tables.iter().zip(&layers).enumerate() {
+            let covered: usize = shards.iter().map(|s| s.len()).sum();
+            assert_eq!(covered, k, "layer {} must be fully covered", li + 1);
+            let mut prev_hi = 0;
+            for s in shards {
+                assert_eq!(s.lo, prev_hi, "layer {} tiles contiguously", li + 1);
+                prev_hi = s.hi;
+            }
+        }
+        // Fastest device never gets fewer kernels than the slowest.
+        for shards in &tables {
+            let len_of = |d: usize| shards.iter().find(|s| s.device == d).map_or(0, |s| s.len());
+            assert!(len_of(0) >= len_of(2));
+        }
     }
 
     #[test]

@@ -143,9 +143,17 @@ impl ArchShape {
 /// non-conv layers, per §5.3.1 ("going from 25% with the smallest network to
 /// 13% when training the largest one").  Interpolated in log(conv FLOPs).
 pub fn comp_share(arch: &ArchShape) -> f64 {
-    // Anchors: the four paper archs at batch 1024.
+    // Anchor at batch 1024, like the paper's four archs.
     let probe = ArchShape { batch: 1024, ..*arch };
-    let x = probe.conv_flops_train().log10();
+    comp_share_for_train_flops(probe.conv_flops_train())
+}
+
+/// [`comp_share`] keyed directly by training conv FLOPs at batch 1024 —
+/// the graph-agnostic entry point: an N-conv [`crate::runtime::ArchSpec`]
+/// prices its comp share from `conv_flops_fwd_at(1024) * TRAIN_CONV_FACTOR`
+/// without squeezing into the two-conv [`ArchShape`].
+pub fn comp_share_for_train_flops(flops_train_b1024: f64) -> f64 {
+    let x = flops_train_b1024.log10();
     let small = ArchShape::new(50, 500, 1024).conv_flops_train().log10();
     let large = ArchShape::new(500, 1500, 1024).conv_flops_train().log10();
     let t = ((x - small) / (large - small)).clamp(0.0, 1.0);

@@ -1,0 +1,161 @@
+//! The layer-graph API, end to end: a 3-conv architecture — inexpressible
+//! under the old two-conv `ArchSpec` — must train through the *distributed*
+//! master/worker path with per-layer Eq. 1 partitioning and match
+//! single-device training, and its fused `grad_full` gradients must pass an
+//! e2e directional finite-difference check on the native backend.
+
+use std::sync::Arc;
+
+use convdist::baselines::SingleDeviceTrainer;
+use convdist::cluster::{worker_loop, DistTrainer, WorkerOptions};
+use convdist::config::TrainerConfig;
+use convdist::data::{Dataset, SyntheticCifar};
+use convdist::devices::Throttle;
+use convdist::model::Params;
+use convdist::net::{inproc_pair, Link};
+use convdist::runtime::{ArchSpec, Runtime};
+use convdist::tensor::Value;
+
+fn deep_runtime() -> Arc<Runtime> {
+    Runtime::for_arch(ArchSpec::tiny_deep())
+}
+
+fn cfg(steps: usize) -> TrainerConfig {
+    TrainerConfig {
+        steps,
+        lr: 0.05,
+        momentum: 0.9,
+        weight_decay: 0.0,
+        seed: 42,
+        log_every: 1000,
+        calib_rounds: 1,
+    }
+}
+
+/// A worker thread over an in-proc link with its own tiny_deep runtime
+/// (one runtime per device, like the TCP deployment).
+fn spawn_deep_worker(id: u32, throttle: Throttle) -> Box<dyn Link> {
+    let (master_end, worker_end) = inproc_pair();
+    std::thread::Builder::new()
+        .name(format!("deep-worker-{id}"))
+        .spawn(move || {
+            let rt = Runtime::for_arch(ArchSpec::tiny_deep());
+            let _ = worker_loop(worker_end, rt, WorkerOptions::new(id, throttle));
+        })
+        .expect("spawning deep worker");
+    Box::new(master_end)
+}
+
+#[test]
+fn three_conv_distributed_heterogeneous_matches_single_device() {
+    let rt = deep_runtime();
+    let arch = rt.arch().clone();
+    assert_eq!(arch.num_convs(), 3, "the preset must exercise a third conv layer");
+    let cfg = cfg(3);
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 5);
+
+    // 2 heterogeneous workers: native speed and 3x slower.
+    let links: Vec<Box<dyn Link>> = vec![
+        spawn_deep_worker(1, Throttle::none()),
+        spawn_deep_worker(2, Throttle::new(3.0)),
+    ];
+    let mut dist = DistTrainer::new(rt.clone(), links, &cfg, Throttle::none()).unwrap();
+    let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none()).unwrap();
+
+    // Every conv layer got its own Eq. 1 shard table covering [0, k).
+    for layer in 1..=arch.num_convs() {
+        let covered: usize = dist.shards(layer).iter().map(|s| s.len()).sum();
+        assert_eq!(covered, arch.kernels(layer), "conv{layer} not fully covered");
+    }
+
+    for step in 0..cfg.steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        let r = dist.step(&batch).unwrap();
+        assert_eq!(r.devices, 3);
+        let (sl, _) = single.step(&batch).unwrap();
+        assert!(
+            (r.loss - sl).abs() <= 1e-4 * sl.abs().max(1.0),
+            "step {step}: distributed loss {} vs single {sl}",
+            r.loss
+        );
+    }
+    let diff = dist.params.max_abs_diff(&single.params).unwrap();
+    assert!(diff <= 1e-4, "3-conv distributed vs single params diverged: {diff}");
+
+    // The eval path composes over three conv layers too.
+    let held_out = ds.batch(arch.batch, 999).unwrap();
+    let acc = dist.eval_accuracy(&held_out).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+
+    dist.shutdown().unwrap();
+}
+
+/// Run `grad_full_b{B}` and return `(loss, grads-in-param-order)`.
+fn grad_full(
+    rt: &Runtime,
+    params: &Params,
+    images: &convdist::tensor::Tensor,
+    labels: &convdist::tensor::ITensor,
+) -> (f32, Vec<convdist::tensor::Tensor>) {
+    let name = format!("grad_full_b{}", labels.len());
+    let mut args = vec![Value::F32(images.clone()), Value::I32(labels.clone())];
+    args.extend(params.in_order().into_iter().map(Value::F32));
+    let outs = rt.execute(&name, &args).unwrap();
+    let mut it = outs.into_iter();
+    let loss = it.next().unwrap().as_f32().unwrap().item().unwrap();
+    let grads = it.map(|v| v.as_f32().unwrap().clone()).collect();
+    (loss, grads)
+}
+
+#[test]
+fn three_conv_grad_full_passes_directional_gradcheck() {
+    // e2e finite differences on the f32 loss are noisy coordinate-wise, so
+    // check the *directional* derivative along each parameter's analytic
+    // gradient: d/dε L(θ + ε·ĝ) must equal ||g||.  This exercises every
+    // kernel in the 3-conv chain (conv, LRN, ReLU, pool, FC, softmax) plus
+    // the graph interpreter's fused forward/backward.
+    let rt = deep_runtime();
+    let arch = rt.arch().clone();
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 7);
+    let batch = ds.batch(arch.batch, 0).unwrap();
+
+    let params = Params::init(&arch, 11).unwrap();
+    let (_, grads) = grad_full(&rt, &params, &batch.images, &batch.labels);
+    assert_eq!(grads.len(), params.names().len());
+
+    let eps = 1e-2f32;
+    for (name, g) in params.names().to_vec().into_iter().zip(&grads) {
+        let norm = g.l2norm();
+        assert!(norm.is_finite(), "grad {name} must be finite");
+        if norm < 1e-5 {
+            continue; // direction undefined; nothing to check
+        }
+        let loss_at = |sign: f32| -> f32 {
+            let mut p = params.clone();
+            let t = p.get_mut(&name).unwrap();
+            for (pv, gv) in t.data_mut().iter_mut().zip(g.data()) {
+                *pv += sign * eps * gv / norm;
+            }
+            grad_full(&rt, &p, &batch.images, &batch.labels).0
+        };
+        let fd = (loss_at(1.0) - loss_at(-1.0)) / (2.0 * eps);
+        assert!(
+            (fd - norm).abs() <= 5e-2 * norm + 1e-3,
+            "param {name}: directional fd {fd} vs ||g|| {norm}"
+        );
+    }
+}
+
+#[test]
+fn deep_preset_opens_workloads_the_old_api_could_not() {
+    // The 3-conv deep_cifar preset resolves, enumerates layer-3
+    // executables, and its geometry matches the documented spatial chain.
+    let arch = ArchSpec::preset("deep_cifar").expect("preset must exist");
+    assert_eq!(arch.num_convs(), 3);
+    assert_eq!(arch.label(), "32:48:64");
+    assert_eq!(arch.fc_in, 256);
+    let rt = Runtime::for_arch(arch);
+    assert!(rt.manifest().spec("conv3_fwd_b64").is_ok());
+    assert!(rt.manifest().spec("mid3_bwd").is_ok());
+    assert!(rt.manifest().spec("conv4_fwd_b4").is_err());
+}

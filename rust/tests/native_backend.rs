@@ -137,7 +137,7 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 fn runtime_conv_fwd_and_grads_match_reference_within_1e4() {
     let rt = tiny_runtime();
     let a = rt.arch().clone();
-    let (b, c, h, k, kh) = (a.batch, a.in_ch, a.img, a.k1, a.kh);
+    let (b, c, h, k, kh) = (a.batch, a.in_ch, a.img, a.kernels(1), a.conv_kernel(1).0);
     let mut rng = Pcg32::seed(77);
     let x = Tensor::randn(&[b, c, h, h], &mut rng);
     let w = Tensor::randn(&[k, c, kh, kh], &mut rng);

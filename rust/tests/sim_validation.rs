@@ -12,8 +12,20 @@ use convdist::devices::Throttle;
 use convdist::sim::ArchShape;
 
 fn arch_shape(rt: &convdist::runtime::Runtime) -> ArchShape {
+    // The analytic ArchShape models the paper's two-conv instance; the
+    // default runtime arch is exactly that graph.
     let a = rt.arch();
-    ArchShape { k1: a.k1, k2: a.k2, batch: a.batch, img: a.img, in_ch: a.in_ch, kh: a.kh, kw: a.kw }
+    assert_eq!(a.num_convs(), 2, "ArchShape models the 2-conv paper network");
+    let (kh, kw) = a.conv_kernel(1);
+    ArchShape {
+        k1: a.kernels(1),
+        k2: a.kernels(2),
+        batch: a.batch,
+        img: a.img,
+        in_ch: a.in_ch,
+        kh,
+        kw,
+    }
 }
 
 #[test]
@@ -112,7 +124,7 @@ fn shard_proportions_match_eq1_shares() {
     );
     let dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
     // Shares: master 1x, workers 0.5x each -> master = 1/2 of the work.
-    let k2 = rt.arch().k2 as f64;
+    let k2 = rt.arch().kernels(2) as f64;
     let master2 =
         dist.shards(2).iter().find(|s| s.device == 0).map(|s| s.len()).unwrap_or(0) as f64;
     let frac = master2 / k2;
