@@ -13,6 +13,13 @@ cargo test -q --test adaptive_sched
 # Layer-graph API gate: 3-conv distributed-vs-single equivalence + e2e
 # gradcheck (also part of `cargo test`; named so the target stays alive).
 cargo test -q --test layer_graph
+# Session API gate: builder-vs-legacy bit-for-bit equivalence + the
+# checkpoint/resume scenario (also part of `cargo test`; named so the
+# target stays alive).
+cargo test -q --test session
+# Config-driven end-to-end smoke: one full session (arch preset, in-proc
+# fleet, eval) composed entirely from the checked-in experiment config.
+cargo run --release -- run --config examples/configs/smoke.json
 # Static-vs-adaptive step-time trajectory from the scheduler simulator;
 # uploaded as a workflow artifact for trend tracking.
 cargo run --release --example bench_sched

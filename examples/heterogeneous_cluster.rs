@@ -21,24 +21,27 @@
 //! ```sh
 //! cargo run --release --example heterogeneous_cluster -- --adaptive
 //! ```
+//!
+//! Both demos are four lines of `SessionBuilder` each — the fleet shape,
+//! throttle plans and scheduling mode are axes of one builder, and the
+//! re-shard notices arrive through the event hook.
 
-use convdist::cluster::{spawn_inproc, spawn_inproc_planned, DistTrainer};
 use convdist::config::TrainerConfig;
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::{paper_cpus, Throttle, ThrottlePlan};
 use convdist::metrics::Breakdown;
-use convdist::runtime::Runtime;
 use convdist::sched::{AdaptiveConfig, ShardTable};
+use convdist::session::{Event, Session, SessionBuilder};
 
 fn avg_steps(
-    trainer: &mut DistTrainer,
+    session: &mut Session,
     ds: &mut SyntheticCifar,
     batchsz: usize,
     steps: usize,
 ) -> anyhow::Result<Breakdown> {
     let mut cum = Breakdown::default();
     for step in 0..steps {
-        let res = trainer.step(&ds.batch(batchsz, step)?)?;
+        let res = session.step(&ds.batch(batchsz, step)?)?;
         cum.add(&res.breakdown);
     }
     Ok(cum.scale(1.0 / steps as f64))
@@ -57,11 +60,7 @@ fn main() -> anyhow::Result<()> {
 
 fn static_demo() -> anyhow::Result<()> {
     let steps = 3;
-    let artifacts = convdist::artifacts_dir();
-    let rt = Runtime::open(&artifacts)?;
-    let arch = rt.arch().clone();
     let cfg = TrainerConfig { steps, calib_rounds: 2, ..Default::default() };
-    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 5);
 
     // Virtual-time profiles of the paper's Table 2 CPUs (PC1..PC4 =
     // 20/38/24/42 GFLOPS ratios), fastest pinned at 1 virtual GFLOPS.
@@ -70,27 +69,32 @@ fn static_demo() -> anyhow::Result<()> {
     println!("devices: {:?}\n", profiles.iter().map(|p| p.name).collect::<Vec<_>>());
 
     // --- 1 device (PC1-speed master only): the paper's reference ------------
-    let mut solo = DistTrainer::new(rt.clone(), vec![], &cfg, virt[0])?;
+    let mut solo =
+        SessionBuilder::new().trainer(cfg.clone()).master_throttle(virt[0]).build()?;
+    let arch = solo.runtime().arch().clone();
+    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 5);
     let _ = solo.step(&ds.batch(arch.batch, 999)?)?; // warm executables
     let solo_avg = avg_steps(&mut solo, &mut ds, arch.batch, steps)?;
     println!("1 device (PC1)        {solo_avg}");
     solo.shutdown()?;
 
     // --- 4 devices, Eq. 1 balanced (the paper's technique) ------------------
-    let mut cluster = spawn_inproc(artifacts.clone(), &virt[1..], None);
-    let mut balanced = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, virt[0])?;
+    let mut balanced = SessionBuilder::new()
+        .trainer(cfg)
+        .master_throttle(virt[0])
+        .workers(&virt[1..])
+        .build()?;
     let _ = balanced.step(&ds.batch(arch.batch, 999)?)?;
     let bal_avg = avg_steps(&mut balanced, &mut ds, arch.batch, steps)?;
     println!("4 devices, Eq.1       {bal_avg}");
-    println!("   conv2 shards: {}", ShardTable(balanced.shards(2)));
+    println!("   conv2 shards: {}", ShardTable(balanced.trainer().shards(2)));
 
     // --- same 4 devices, naive equal split (ablation) ------------------------
-    balanced.partition_equal()?;
+    balanced.trainer_mut().partition_equal()?;
     let eq_avg = avg_steps(&mut balanced, &mut ds, arch.batch, steps)?;
     println!("4 devices, equal      {eq_avg}");
-    println!("   conv2 shards: {}", ShardTable(balanced.shards(2)));
+    println!("   conv2 shards: {}", ShardTable(balanced.trainer().shards(2)));
     balanced.shutdown()?;
-    cluster.join()?;
 
     let s_bal = solo_avg.total().as_secs_f64() / bal_avg.total().as_secs_f64();
     let s_eq = solo_avg.total().as_secs_f64() / eq_avg.total().as_secs_f64();
@@ -107,9 +111,6 @@ fn static_demo() -> anyhow::Result<()> {
 // ---------------------------------------------------------------------------
 
 fn adaptive_demo() -> anyhow::Result<()> {
-    let artifacts = convdist::artifacts_dir();
-    let rt = Runtime::open(&artifacts)?;
-    let arch = rt.arch().clone();
     let steps = 12usize;
     let degrade_at_step = 3usize;
     let cfg = TrainerConfig { steps, calib_rounds: 1, ..Default::default() };
@@ -117,36 +118,43 @@ fn adaptive_demo() -> anyhow::Result<()> {
     let fast = Throttle::virtual_gflops(2.0);
     let slow = Throttle::virtual_gflops(0.25); // 8x thermal throttle
     let degrading = ThrottlePlan::degrade_after(fast, 4 * degrade_at_step as u64, slow);
-    let plans = [degrading, ThrottlePlan::fixed(fast), ThrottlePlan::fixed(fast)];
+    let plans = vec![degrading, ThrottlePlan::fixed(fast), ThrottlePlan::fixed(fast)];
     println!(
         "fleet: 4 equal virtual devices; worker 1 throttles 8x at step {degrade_at_step}\n"
     );
 
-    let run = |label: &str, adaptive: Option<AdaptiveConfig>| -> anyhow::Result<Vec<f64>> {
+    let run = |label: &'static str, adaptive: AdaptiveConfig| -> anyhow::Result<Vec<f64>> {
+        let mut session = SessionBuilder::new()
+            .trainer(cfg.clone())
+            .master_throttle(fast)
+            .worker_plans(plans.clone())
+            .adaptive(adaptive)
+            .on_event(move |ev| {
+                if let Event::Repartitioned { step } = ev {
+                    println!("[{label}] step {step}: fleet re-sharded");
+                }
+            })
+            .build()?;
+        let arch = session.runtime().arch().clone();
         let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 5);
-        let mut cluster = spawn_inproc_planned(artifacts.clone(), &plans, None);
-        let mut trainer = match adaptive {
-            Some(a) => {
-                DistTrainer::with_adaptive(rt.clone(), cluster.take_links(), &cfg, fast, a)?
-            }
-            None => DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, fast)?,
-        };
-        println!("[{label}] initial conv2 shards: {}", ShardTable(trainer.shards(2)));
+        println!(
+            "[{label}] initial conv2 shards: {}",
+            ShardTable(session.trainer().shards(2))
+        );
         let mut secs = Vec::with_capacity(steps);
         for step in 0..steps {
             let t0 = std::time::Instant::now();
-            let r = trainer.step(&ds.batch(arch.batch, step)?)?;
+            let r = session.step(&ds.batch(arch.batch, step)?)?;
             secs.push(t0.elapsed().as_secs_f64());
             if r.repartitioned {
                 println!(
-                    "[{label}] step {step}: re-sharded -> {}",
-                    ShardTable(trainer.shards(2))
+                    "[{label}] step {step}: new conv2 shards {}",
+                    ShardTable(session.trainer().shards(2))
                 );
             }
         }
-        println!("[{label}] {}", trainer.sched_stats());
-        trainer.shutdown()?;
-        cluster.join()?;
+        println!("[{label}] {}", session.trainer().sched_stats());
+        session.shutdown()?;
         Ok(secs)
     };
 
@@ -158,16 +166,18 @@ fn adaptive_demo() -> anyhow::Result<()> {
         heartbeat_every: 0,
         ..Default::default()
     };
-    let static_secs = run("static  ", None)?;
-    let adaptive_secs = run("adaptive", Some(adaptive_cfg))?;
+    let static_secs = run("static  ", AdaptiveConfig::disabled())?;
+    let adaptive_secs = run("adaptive", adaptive_cfg)?;
 
     // Oracle: a fleet whose calibration already saw the degraded speed.
     let oracle_secs = {
+        let mut oracle = SessionBuilder::new()
+            .trainer(cfg)
+            .master_throttle(fast)
+            .workers(&[slow, fast, fast])
+            .build()?;
+        let arch = oracle.runtime().arch().clone();
         let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 5);
-        let oplans =
-            [ThrottlePlan::fixed(slow), ThrottlePlan::fixed(fast), ThrottlePlan::fixed(fast)];
-        let mut cluster = spawn_inproc_planned(artifacts.clone(), &oplans, None);
-        let mut oracle = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, fast)?;
         let mut secs = Vec::new();
         for step in 0..6 {
             let t0 = std::time::Instant::now();
@@ -175,7 +185,6 @@ fn adaptive_demo() -> anyhow::Result<()> {
             secs.push(t0.elapsed().as_secs_f64());
         }
         oracle.shutdown()?;
-        cluster.join()?;
         secs
     };
 
@@ -188,7 +197,9 @@ fn adaptive_demo() -> anyhow::Result<()> {
     let a_tail = mean(&adaptive_secs[steps - 4..]);
     let o_tail = mean(&oracle_secs[1..]);
     let recovered = ((s_tail - a_tail) / (s_tail - o_tail).max(1e-9)).clamp(0.0, 1.0);
-    println!("\nsteady-state step time: static {s_tail:.3}s  adaptive {a_tail:.3}s  oracle {o_tail:.3}s");
+    println!(
+        "\nsteady-state step time: static {s_tail:.3}s  adaptive {a_tail:.3}s  oracle {o_tail:.3}s"
+    );
     println!("adaptive recovers {:.0}% of the static-oracle speedup", 100.0 * recovered);
     anyhow::ensure!(
         a_tail <= s_tail * 1.02,

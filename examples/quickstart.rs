@@ -1,60 +1,65 @@
-//! Quickstart: one distributed training batch, end to end.
+//! Quickstart: one distributed training batch, end to end, through the
+//! unified session API.
 //!
-//! Spins up an in-process cluster (master + 2 workers), calibrates, shows
-//! the Eq. 1 kernel partition, runs one batch through distributed forward +
-//! backward + SGD, and prints the paper's Comm/Conv/Comp breakdown.
+//! Composes a session (master + 2 workers, one half-speed so the Eq. 1
+//! partition is visibly unequal), shows the kernel partition, runs one batch
+//! through distributed forward + backward + SGD, and prints the paper's
+//! Comm/Conv/Comp breakdown — with the step line delivered by an event
+//! observer instead of a hand-rolled logging loop.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
-use convdist::cluster::{spawn_inproc, DistTrainer};
 use convdist::config::TrainerConfig;
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
-use convdist::runtime::Runtime;
+use convdist::session::{Event, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = convdist::artifacts_dir();
-    let rt = Runtime::open(&artifacts)?;
-    let arch = rt.arch().clone();
-    println!(
-        "loaded {} AOT executables  (arch {}, batch {}, platform {})",
-        rt.manifest().executables.len(),
-        arch.label(),
-        arch.batch,
-        rt.platform()
-    );
-
-    // Master + two workers; worker 2 emulates a half-speed device so the
-    // Eq. 1 partition is visibly unequal.
-    let throttles = [Throttle::virtual_gflops(2.0), Throttle::virtual_gflops(1.0)];
-    let mut cluster = spawn_inproc(artifacts, &throttles, None);
+    // Master + two workers; worker 2 emulates a half-speed device.
     let cfg = TrainerConfig { steps: 1, calib_rounds: 2, ..Default::default() };
-    let mut trainer =
-        DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::virtual_gflops(2.0))?;
+    let mut session = SessionBuilder::new()
+        .workers(&[Throttle::virtual_gflops(2.0), Throttle::virtual_gflops(1.0)])
+        .master_throttle(Throttle::virtual_gflops(2.0))
+        .trainer(cfg)
+        .on_event(|ev| {
+            if let Event::StepCompleted { loss, devices, breakdown, bytes_moved, .. } = ev {
+                println!("\none distributed step:");
+                println!("  loss        {loss:.4}");
+                println!("  devices     {devices}");
+                println!("  wire        {:.2} MiB", *bytes_moved as f64 / (1 << 20) as f64);
+                println!("  breakdown   {breakdown}");
+            }
+        })
+        .build()?;
 
-    println!("\ncalibration probe times (s): {:?}", trainer.probe_times());
+    let arch = session.runtime().arch().clone();
+    println!(
+        "session up: arch {} ({} conv layers), batch {}, platform {}",
+        arch.label(),
+        arch.num_convs(),
+        arch.batch,
+        session.runtime().platform()
+    );
+    println!("\ncalibration probe times (s): {:?}", session.trainer().probe_times());
     for layer in 1..=arch.num_convs() {
-        let desc: Vec<String> = trainer
+        let desc: Vec<String> = session
+            .trainer()
             .shards(layer)
             .iter()
-            .map(|s| format!("device {} -> kernels {}..{} (bucket {})", s.device, s.lo, s.hi, s.bucket))
+            .map(|s| {
+                format!("device {} -> kernels {}..{} (bucket {})", s.device, s.lo, s.hi, s.bucket)
+            })
             .collect();
         println!("conv{layer} partition: {}", desc.join(", "));
     }
 
     let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 1);
     let batch = ds.batch(arch.batch, 0)?;
-    let res = trainer.step(&batch)?;
-    println!("\none distributed step:");
-    println!("  loss        {:.4}", res.loss);
-    println!("  devices     {}", res.devices);
-    println!("  wire        {:.2} MiB", res.bytes_moved as f64 / (1 << 20) as f64);
-    println!("  breakdown   {}", res.breakdown);
+    session.step(&batch)?;
 
-    trainer.shutdown()?;
-    cluster.join()?;
+    session.shutdown()?;
     println!("\nquickstart OK");
     Ok(())
 }

@@ -4,8 +4,8 @@
 //! steps on a real distributed cluster (master + 2 workers over the wire
 //! protocol), logging the loss curve, and proves all layers compose:
 //!
-//!   L1 Pallas conv kernels -> L2 JAX segments (AOT HLO) -> PJRT runtime
-//!   -> L3 master/worker protocol -> Eq. 1 partitioning -> SGD,
+//!   L1 conv kernels -> L2 runtime executables -> L3 master/worker protocol
+//!   -> Eq. 1 partitioning -> SGD — all composed by one `SessionBuilder`,
 //!
 //! then cross-checks the final parameters against single-device training
 //! (the paper's "without affecting the classification performance" claim)
@@ -23,35 +23,45 @@
 //!
 //! `arch` names an `ArchSpec` preset (default | tiny | deep_cifar |
 //! tiny_deep); when given, the whole cluster runs that synthesized graph on
-//! the native backend (bypassing any `artifacts/manifest.json`).
+//! the native backend (bypassing any `artifacts/manifest.json`) — the
+//! builder hands the same graph to master and workers.
 
 use std::time::Instant;
 
 use convdist::baselines::SingleDeviceTrainer;
-use convdist::cluster::{spawn_inproc, spawn_inproc_arch, DistTrainer};
 use convdist::config::TrainerConfig;
 use convdist::data::default_dataset;
 use convdist::devices::Throttle;
 use convdist::metrics::Breakdown;
-use convdist::runtime::{ArchSpec, Runtime};
+use convdist::session::SessionBuilder;
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
-    let preset = match std::env::args().nth(2) {
-        Some(name) => Some(ArchSpec::preset(&name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown arch preset {name:?} (try: default, tiny, deep_cifar, tiny_deep)"
-            )
-        })?),
-        None => None,
+    let preset = std::env::args().nth(2);
+    let cfg = TrainerConfig {
+        steps,
+        lr: 0.03,
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        ..Default::default()
     };
-    let artifacts = convdist::artifacts_dir();
-    let rt = match &preset {
-        Some(arch) => Runtime::for_arch(arch.clone()),
-        None => Runtime::open(&artifacts)?,
+
+    // Workers must resolve the same graph as the master: the builder's arch
+    // source travels to in-proc workers by argument, never ambient state.
+    let builder = || -> convdist::session::SessionBuilder {
+        let b = SessionBuilder::new()
+            .trainer(cfg.clone())
+            .workers(&[Throttle::none(), Throttle::none()]);
+        match &preset {
+            Some(name) => b.arch_preset(name.clone()),
+            None => b,
+        }
     };
+
+    // --- distributed run: master + 2 workers --------------------------------
+    let mut dist = builder().build()?;
+    let rt = dist.runtime().clone();
     let arch = rt.arch().clone();
-    let cfg = TrainerConfig { steps, lr: 0.03, momentum: 0.9, weight_decay: 1e-4, ..Default::default() };
     println!(
         "e2e: arch {} ({} conv layers) batch {} — {} steps, lr {}, momentum {}",
         arch.label(),
@@ -61,21 +71,9 @@ fn main() -> anyhow::Result<()> {
         cfg.lr,
         cfg.momentum
     );
+    println!("calibration: {:?}", dist.trainer().probe_times());
 
     let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, cfg.seed);
-
-    // Workers must resolve the same graph as the master: a preset travels
-    // by argument, the artifact path otherwise.
-    let spawn = |throttles: &[Throttle]| match &preset {
-        Some(a) => spawn_inproc_arch(a.clone(), throttles, None),
-        None => spawn_inproc(artifacts.clone(), throttles, None),
-    };
-
-    // --- distributed run: master + 2 workers --------------------------------
-    let mut cluster = spawn(&[Throttle::none(), Throttle::none()]);
-    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none())?;
-    println!("calibration: {:?}", dist.probe_times());
-
     let mut curve: Vec<(usize, f32)> = Vec::new();
     let mut cum = Breakdown::default();
     let t0 = Instant::now();
@@ -102,15 +100,18 @@ fn main() -> anyhow::Result<()> {
 
     // --- held-out accuracy ---------------------------------------------------
     let held_out = ds.batch(arch.batch, cfg.steps + 17)?;
-    let acc = dist.eval_accuracy(&held_out)?;
-    println!("\nheld-out accuracy: {:.1}% (chance {:.1}%)", acc * 100.0, 100.0 / arch.num_classes as f32);
+    let acc = dist.eval(&held_out)?;
+    println!(
+        "\nheld-out accuracy: {:.1}% (chance {:.1}%)",
+        acc * 100.0,
+        100.0 / arch.num_classes as f32
+    );
 
     // --- single-device cross-check (same seed, few steps) -------------------
     let check_steps = steps.min(5);
     let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none())?;
     let mut ds2 = default_dataset(arch.img, arch.in_ch, arch.num_classes, cfg.seed);
-    let mut cluster2 = spawn(&[Throttle::none(); 2]);
-    let mut dist2 = DistTrainer::new(rt.clone(), cluster2.take_links(), &cfg, Throttle::none())?;
+    let mut dist2 = builder().build()?;
     let mut worst = 0f32;
     for step in 0..check_steps {
         let batch = ds2.batch(arch.batch, step)?;
@@ -118,17 +119,16 @@ fn main() -> anyhow::Result<()> {
         let r = dist2.step(&batch)?;
         worst = worst.max((sl - r.loss).abs());
     }
-    let pdiff = dist2.params.max_abs_diff(&single.params)?;
+    let pdiff = dist2.trainer().params.max_abs_diff(&single.params)?;
     println!(
-        "distributed vs single-device ({check_steps} steps): max |Δloss| {worst:.2e}, max |Δparam| {pdiff:.2e}"
+        "distributed vs single-device ({check_steps} steps): max |Δloss| {worst:.2e}, \
+         max |Δparam| {pdiff:.2e}"
     );
     anyhow::ensure!(pdiff < 5e-3, "distributed training diverged from single-device");
 
     println!("\ntotals: wall {:.1}s  |  {}", wall.as_secs_f64(), cum);
     dist.shutdown()?;
     dist2.shutdown()?;
-    cluster.join()?;
-    cluster2.join()?;
     println!("e2e OK — record in EXPERIMENTS.md §E2E");
     Ok(())
 }

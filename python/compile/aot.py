@@ -78,10 +78,13 @@ class Emitter:
         print(f"  {name:28s} {len(text):>9d} chars")
 
 
-# Probe workload is fixed across every experiment so performance ratios are
-# comparable between devices (paper §4.1.1 runs the same N-d convolution on
-# every node).
-PROBE_BATCH, PROBE_CH, PROBE_IMG, PROBE_K = 16, 3, 32, 32
+# Probe workload (fixed across experiments — see model.probe_config).
+PROBE_BATCH, PROBE_CH, PROBE_IMG, PROBE_K = (
+    M.PROBE_BATCH,
+    M.PROBE_CH,
+    M.PROBE_IMG,
+    M.PROBE_K,
+)
 
 
 def conv_fwd_flops(batch: int, kb: int, cin: int, hout: int) -> int:
@@ -89,7 +92,7 @@ def conv_fwd_flops(batch: int, kb: int, cin: int, hout: int) -> int:
     return 2 * batch * kb * hout * hout * cin * M.KH * M.KW
 
 
-def build_all(cfg: M.ArchConfig, out_dir: str) -> dict:
+def build_all(cfg: M.ArchConfig, out_dir: str, legacy_config: bool = False) -> dict:
     em = Emitter(out_dir)
     B, C0, IMG = cfg.batch, cfg.in_ch, cfg.img
     c1o, p1o, c2o, p2o = cfg.c1_out, cfg.p1_out, cfg.c2_out, cfg.p2_out
@@ -200,43 +203,14 @@ def build_all(cfg: M.ArchConfig, out_dir: str) -> dict:
         flops=conv_fwd_flops(PROBE_BATCH, PROBE_K, PROBE_CH, PROBE_IMG - M.KH + 1),
     )
 
+    # The manifest's config block: the layer-graph schema by default (what
+    # rust's ArchSpec::from_json parses natively and re-derives geometry
+    # from); --legacy-config keeps the pre-graph k1/k2 form, which rust
+    # loads by conversion.
+    config = M.legacy_config(cfg) if legacy_config else M.graph_config(cfg)
     manifest = {
         "version": 1,
-        "config": {
-            "k1": cfg.k1,
-            "k2": cfg.k2,
-            "batch": cfg.batch,
-            "img": cfg.img,
-            "in_ch": cfg.in_ch,
-            "num_classes": cfg.num_classes,
-            "kh": M.KH,
-            "kw": M.KW,
-            "c1_out": c1o,
-            "p1_out": p1o,
-            "c2_out": c2o,
-            "p2_out": p2o,
-            "fc_in": cfg.fc_in,
-            "buckets1": cfg.buckets1,
-            "buckets2": cfg.buckets2,
-            "batch_buckets": cfg.batch_buckets,
-            "param_shapes": {n: list(pshapes[n]) for n in M.PARAM_NAMES},
-            "param_order": list(M.PARAM_NAMES),
-            "probe": {
-                "batch": PROBE_BATCH,
-                "in_ch": PROBE_CH,
-                "img": PROBE_IMG,
-                "k": PROBE_K,
-                # FLOPs of one probe execution (2*MACs), used to convert the
-                # measured probe time into a GFLOPS performance value.
-                "flops": 2
-                * PROBE_BATCH
-                * PROBE_K
-                * PROBE_CH
-                * (PROBE_IMG - M.KH + 1) ** 2
-                * M.KH
-                * M.KW,
-            },
-        },
+        "config": config,
         "executables": em.entries,
     }
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
@@ -250,10 +224,15 @@ def main() -> None:
     ap.add_argument("--arch", default="32:64", help="k1:k2 kernel counts")
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--img", type=int, default=32)
+    ap.add_argument(
+        "--legacy-config",
+        action="store_true",
+        help="emit the pre-graph k1/k2 manifest config schema",
+    )
     args = ap.parse_args()
     cfg = M.ArchConfig.parse(args.arch, batch=args.batch, img=args.img)
     print(f"AOT: arch {cfg.k1}:{cfg.k2} batch={cfg.batch} img={cfg.img} -> {args.out}")
-    manifest = build_all(cfg, args.out)
+    manifest = build_all(cfg, args.out, legacy_config=args.legacy_config)
     n = len(manifest["executables"])
     print(f"wrote {n} executables + manifest.json")
 

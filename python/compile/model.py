@@ -104,6 +104,96 @@ class ArchConfig:
 
 
 # --------------------------------------------------------------------------
+# Manifest `config` block emission
+# --------------------------------------------------------------------------
+
+# Probe workload is fixed across every experiment so performance ratios are
+# comparable between devices (paper §4.1.1 runs the same N-d convolution on
+# every node).
+PROBE_BATCH, PROBE_CH, PROBE_IMG, PROBE_K = 16, 3, 32, 32
+
+
+def probe_config() -> Dict:
+    """The calibration-probe block shared by both manifest schemas."""
+    return {
+        "batch": PROBE_BATCH,
+        "in_ch": PROBE_CH,
+        "img": PROBE_IMG,
+        "k": PROBE_K,
+        "kh": KH,
+        "kw": KW,
+        # FLOPs of one probe execution (2*MACs), used to convert the
+        # measured probe time into a GFLOPS performance value.
+        "flops": 2 * PROBE_BATCH * PROBE_K * PROBE_CH
+        * (PROBE_IMG - KH + 1) ** 2 * KH * KW,
+    }
+
+
+def layer_graph(cfg: ArchConfig) -> List[Dict]:
+    """The two-conv paper network as an ordered layer-graph op list — the
+    schema the rust side's ``ArchSpec::from_json`` parses natively."""
+    return [
+        {"op": "conv", "k": cfg.k1, "kh": KH, "kw": KW},
+        {"op": "lrn"},
+        {"op": "maxpool2"},
+        {"op": "conv", "k": cfg.k2, "kh": KH, "kw": KW},
+        {"op": "lrn"},
+        {"op": "maxpool2"},
+        {"op": "fc", "out": cfg.num_classes},
+        {"op": "softmax_xent"},
+    ]
+
+
+def graph_config(cfg: ArchConfig) -> Dict:
+    """Manifest ``config`` block in the layer-graph schema (PR 4's IR).
+
+    Derived geometry (spatial chain, param shapes, fc_in) is *not* emitted:
+    the rust side re-derives it by shape inference, so the two pipelines
+    cannot silently disagree.  The bucket ladders and the probe are emitted
+    as overrides because they are contract, not derivation.
+    """
+    return {
+        "layers": layer_graph(cfg),
+        "batch": cfg.batch,
+        "img": cfg.img,
+        "in_ch": cfg.in_ch,
+        "batch_buckets": cfg.batch_buckets,
+        "buckets": [cfg.buckets1, cfg.buckets2],
+        "probe": probe_config(),
+    }
+
+
+def legacy_config(cfg: ArchConfig) -> Dict:
+    """The pre-graph ``k1``/``k2`` schema with spelled-out derived geometry
+    (kept behind ``aot.py --legacy-config``; rust still loads it by
+    conversion and cross-checks every pinned value)."""
+    pshapes = param_shapes(cfg)
+    probe = probe_config()
+    probe.pop("kh"), probe.pop("kw")  # the legacy probe had no kernel geometry
+    return {
+        "k1": cfg.k1,
+        "k2": cfg.k2,
+        "batch": cfg.batch,
+        "img": cfg.img,
+        "in_ch": cfg.in_ch,
+        "num_classes": cfg.num_classes,
+        "kh": KH,
+        "kw": KW,
+        "c1_out": cfg.c1_out,
+        "p1_out": cfg.p1_out,
+        "c2_out": cfg.c2_out,
+        "p2_out": cfg.p2_out,
+        "fc_in": cfg.fc_in,
+        "buckets1": cfg.buckets1,
+        "buckets2": cfg.buckets2,
+        "batch_buckets": cfg.batch_buckets,
+        "param_shapes": {n: list(pshapes[n]) for n in PARAM_NAMES},
+        "param_order": list(PARAM_NAMES),
+        "probe": probe,
+    }
+
+
+# --------------------------------------------------------------------------
 # Layers
 # --------------------------------------------------------------------------
 

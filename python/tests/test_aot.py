@@ -42,11 +42,28 @@ def test_manifest_shapes_are_consistent(tiny_build):
             assert bwd["outs"][1][1][0] == kb  # gw leading dim = bucket
             # bwd gx must match fwd x.
             assert bwd["outs"][0][1] == fwd["args"][0][1]
-    # grad_full outputs match param shapes.
-    pshapes = manifest["config"]["param_shapes"]
+    # grad_full outputs match param shapes.  The default (graph) config
+    # schema carries no param_shapes — rust re-derives them — so check the
+    # executables against the ArchConfig derivation directly.
+    pshapes = M.param_shapes(cfg)
     gf = ex[f"grad_full_b{cfg.batch}"]
-    for out_spec, pname in zip(gf["outs"][1:], manifest["config"]["param_order"]):
-        assert out_spec[1] == pshapes[pname], pname
+    for out_spec, pname in zip(gf["outs"][1:], M.PARAM_NAMES):
+        assert out_spec[1] == list(pshapes[pname]), pname
+
+
+def test_manifest_config_schemas(tiny_build, tmp_path):
+    cfg, manifest, _ = tiny_build
+    # Default emission is the layer-graph schema (no spelled-out geometry).
+    config = manifest["config"]
+    assert config == M.graph_config(cfg)
+    assert "layers" in config and "param_shapes" not in config
+    # --legacy-config emits the pre-graph k1/k2 schema over the *same*
+    # executable set (exercise the real flag path end to end).
+    legacy = aot.build_all(cfg, str(tmp_path), legacy_config=True)
+    assert legacy["config"] == M.legacy_config(cfg)
+    assert legacy["config"]["k1"] == cfg.k1
+    assert "param_shapes" in legacy["config"] and "layers" not in legacy["config"]
+    assert set(legacy["executables"]) == set(manifest["executables"])
 
 
 def test_probe_flops_formula(tiny_build):

@@ -1,0 +1,77 @@
+"""Manifest config emission: the graph schema (default) and the legacy
+k1/k2 schema (behind ``aot.py --legacy-config``).
+
+The cross-language contract is the checked-in fixture
+``rust/tests/fixtures/py_graph_config.json``: this suite asserts the python
+emitter reproduces it exactly, and the rust suite
+(``rust/tests/layer_graph.rs::python_emitted_graph_config_loads_via_manifest``)
+asserts the same bytes load through ``Manifest::from_json`` /
+``ArchSpec::from_json`` and derive the identical architecture.  If either
+side drifts, exactly one of the two suites fails and names the fixture.
+"""
+
+import json
+import os
+
+from compile import model as M
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures",
+    "py_graph_config.json",
+)
+
+
+def test_graph_config_matches_rust_fixture():
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    got = M.graph_config(M.ArchConfig())
+    assert got == want, "regenerate the fixture if the schema changed deliberately"
+    # And the emitted document is valid JSON end to end.
+    assert json.loads(json.dumps(got)) == want
+
+
+def test_graph_config_structure():
+    cfg = M.ArchConfig.parse("500:1500", batch=1024)
+    doc = M.graph_config(cfg)
+    ops = [l["op"] for l in doc["layers"]]
+    assert ops == ["conv", "lrn", "maxpool2", "conv", "lrn", "maxpool2",
+                   "fc", "softmax_xent"]
+    convs = [l for l in doc["layers"] if l["op"] == "conv"]
+    assert [c["k"] for c in convs] == [500, 1500]
+    assert all(c["kh"] == M.KH and c["kw"] == M.KW for c in convs)
+    assert doc["batch"] == 1024 and doc["img"] == 32 and doc["in_ch"] == 3
+    # Bucket ladders are emitted per conv layer and end at k.
+    assert doc["buckets"][0][-1] == 500
+    assert doc["buckets"][1][-1] == 1500
+    assert doc["batch_buckets"][-1] == 1024
+    # No derived geometry leaks into the graph schema (rust re-derives it).
+    for stale in ("c1_out", "p1_out", "c2_out", "p2_out", "fc_in",
+                  "param_shapes", "param_order", "k1", "k2"):
+        assert stale not in doc
+
+
+def test_legacy_config_keeps_old_schema():
+    cfg = M.ArchConfig()
+    doc = M.legacy_config(cfg)
+    # The exact key set the pre-graph rust loader cross-checks.
+    assert set(doc) == {
+        "k1", "k2", "batch", "img", "in_ch", "num_classes", "kh", "kw",
+        "c1_out", "p1_out", "c2_out", "p2_out", "fc_in", "buckets1",
+        "buckets2", "batch_buckets", "param_shapes", "param_order", "probe",
+    }
+    assert (doc["k1"], doc["k2"]) == (16, 32)
+    assert (doc["c1_out"], doc["p1_out"], doc["c2_out"], doc["p2_out"]) == (28, 14, 10, 5)
+    assert doc["param_shapes"]["w2"] == [32, 16, 5, 5]
+    # The legacy probe block carries no kernel geometry (rust defaults it to
+    # the first conv's kernel).
+    assert "kh" not in doc["probe"] and "kw" not in doc["probe"]
+    # Both schemas agree on the shared probe numbers.
+    g = M.graph_config(cfg)["probe"]
+    assert doc["probe"]["flops"] == g["flops"] == 60211200
+    assert doc["probe"]["batch"] == g["batch"]
+
+
+def test_probe_config_flops_formula():
+    p = M.probe_config()
+    oh = M.PROBE_IMG - M.KH + 1
+    assert p["flops"] == 2 * M.PROBE_BATCH * M.PROBE_K * M.PROBE_CH * oh * oh * M.KH * M.KW

@@ -7,7 +7,6 @@
 //! (With `--features pjrt` + `CONVDIST_BACKEND=pjrt` the same benches time
 //! the PJRT path instead, given `make artifacts`.)
 
-use convdist::cluster::{spawn_inproc, DistTrainer};
 use convdist::config::TrainerConfig;
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
@@ -16,6 +15,7 @@ use convdist::runtime::{bucket_ladder, Runtime};
 use convdist::sched::{
     partition_layer, AdaptiveConfig, AdaptivePolicy, FleetTelemetry, LayerPlan,
 };
+use convdist::session::SessionBuilder;
 use convdist::tensor::{Pcg32, Tensor, Value};
 use convdist::util::bench::Bencher;
 
@@ -140,14 +140,16 @@ fn main() -> anyhow::Result<()> {
     let cfg = TrainerConfig { steps: 1, calib_rounds: 1, ..Default::default() };
     let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 9);
     let batch = ds.batch(arch.batch, 0)?;
-    let mut cluster = spawn_inproc(artifacts, &[Throttle::none(); 2], None);
-    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none())?;
+    let mut dist = SessionBuilder::new()
+        .artifacts(artifacts)
+        .trainer(cfg)
+        .workers(&[Throttle::none(); 2])
+        .build()?;
     dist.step(&batch)?; // warm caches
     let slow = Bencher { budget: std::time::Duration::from_secs(6), max_iters: 12, warmup: 1 };
     slow.run("cluster::step end-to-end (3 devices)", || dist.step(&batch).unwrap());
     let r = dist.step(&batch)?;
     println!("  step breakdown: {}", r.breakdown);
     dist.shutdown()?;
-    cluster.join()?;
     Ok(())
 }

@@ -19,14 +19,15 @@
 //! * **Failure recovery** — if a worker dies mid-training the master drops
 //!   it, re-runs the Eq. 1 partition over the survivors and retries the
 //!   batch; the paper's protocol has no recovery story.
-//! * **Adaptive scheduling** (opt-in, [`DistTrainer::with_adaptive`]) — the
+//! * **Adaptive scheduling** (opt-in via the `AdaptiveConfig` argument of
+//!   [`DistTrainer::new`], surfaced as `SessionBuilder::adaptive`) — the
 //!   gather loop feeds per-device EWMA timing telemetry, an
 //!   [`AdaptivePolicy`] re-runs Eq. 1 over the *smoothed observed* rates
 //!   when the predicted payoff clears a threshold, heartbeats detect silent
 //!   workers, a gather deadline drops stragglers, and a `Leave` message
 //!   lets a worker depart gracefully — elastic membership (DESIGN.md §5).
-//!   With adaptation disabled (the `new` default) shard tables and
-//!   numerics are identical to the static path.
+//!   With adaptation disabled (`AdaptiveConfig::disabled()`) shard tables
+//!   and numerics are identical to the static path.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -107,21 +108,12 @@ pub struct DistTrainer {
 }
 
 impl DistTrainer {
-    /// Handshake, calibrate (paper §4.1.1) and partition (Eq. 1) — the
-    /// paper's static scheduler.
+    /// Handshake, calibrate (paper §4.1.1) and partition (Eq. 1).
+    /// `AdaptiveConfig::disabled()` is the paper's static scheduler exactly;
+    /// an enabled config turns on the telemetry/re-partition loop.  (Run
+    /// composition normally goes through [`crate::session::SessionBuilder`],
+    /// which calls this with the links it assembled.)
     pub fn new(
-        rt: Arc<Runtime>,
-        links: Vec<Box<dyn Link>>,
-        cfg: &TrainerConfig,
-        master_throttle: Throttle,
-    ) -> Result<Self> {
-        Self::with_adaptive(rt, links, cfg, master_throttle, AdaptiveConfig::disabled())
-    }
-
-    /// Like [`DistTrainer::new`], with the adaptive scheduling subsystem
-    /// configured.  `AdaptiveConfig::disabled()` reproduces the static
-    /// behavior exactly.
-    pub fn with_adaptive(
         rt: Arc<Runtime>,
         links: Vec<Box<dyn Link>>,
         cfg: &TrainerConfig,
@@ -282,6 +274,23 @@ impl DistTrainer {
 
     pub fn steps_done(&self) -> u64 {
         self.steps_done
+    }
+
+    /// Restore the global step counter (session checkpoint resume).  The
+    /// counter drives the heartbeat cadence and the dataset cursor of a
+    /// resumed run; shard tables are untouched (they come from the fresh
+    /// calibration of the resumed fleet).
+    pub fn set_steps_done(&mut self, steps: u64) {
+        self.steps_done = steps;
+    }
+
+    /// The optimizer (momentum state travels in session checkpoints).
+    pub fn optimizer(&self) -> &Sgd {
+        &self.opt
+    }
+
+    pub fn optimizer_mut(&mut self) -> &mut Sgd {
+        &mut self.opt
     }
 
     fn total_bytes(&self) -> u64 {

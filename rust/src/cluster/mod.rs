@@ -5,10 +5,16 @@
 //! * [`master`] — Algorithm 1: calibrate, partition by Eq. 1, then per batch
 //!   scatter ConvWork / compute own shard / gather, run the non-conv layers
 //!   locally, and update parameters.
-//! * [`spawn_inproc`] — single-process cluster: workers on threads connected
-//!   by in-proc links (optionally bandwidth-shaped and throttled).  The TCP
-//!   path (`convdist worker` / `convdist master`) uses the identical code
-//!   over real sockets.
+//! * [`spawn_workers`] — single-process worker fleet: workers on threads
+//!   connected by in-proc links (optionally bandwidth-shaped and throttled).
+//!   The TCP path (`convdist worker` / `convdist master`) uses the identical
+//!   code over real sockets.
+//!
+//! Run composition lives one level up, in [`crate::session`]: a
+//! [`crate::session::SessionBuilder`] picks the architecture source, the
+//! topology and the scheduling mode, then drives this module.  Construct a
+//! [`DistTrainer`] directly only when you already hold raw [`Link`]s (custom
+//! worker harnesses in tests do).
 
 mod master;
 mod worker;
@@ -19,11 +25,33 @@ pub use worker::{compute_conv_work, worker_loop, WorkerOptions};
 use std::path::PathBuf;
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::devices::{Throttle, ThrottlePlan};
+use crate::devices::ThrottlePlan;
 use crate::net::{inproc_pair, Link, LinkModel, ShapedLink};
-use crate::runtime::Runtime;
+use crate::runtime::{ArchSpec, Runtime};
+
+/// How each spawned worker obtains its [`Runtime`].  The paper's slaves are
+/// separate machines with their own Matlab processes; one runtime per device
+/// mirrors that (and keeps per-device executable stats and throttling state
+/// independent).
+pub enum WorkerSource {
+    /// `Runtime::open` over this directory (manifest-pinned or default).
+    Artifacts(PathBuf),
+    /// `Runtime::for_arch` over a clone of this architecture — how a preset
+    /// or graph-file arch selected on the master reaches in-process workers:
+    /// as an argument, not ambient env state.
+    Arch(ArchSpec),
+}
+
+impl WorkerSource {
+    fn open(&self) -> Result<std::sync::Arc<Runtime>> {
+        match self {
+            WorkerSource::Artifacts(dir) => Runtime::open(dir),
+            WorkerSource::Arch(arch) => Ok(Runtime::for_arch(arch.clone())),
+        }
+    }
+}
 
 /// Handles to an in-process worker fleet: the master-side links plus the
 /// join handles (joined on `TrainOver` so panics propagate to tests).
@@ -32,71 +60,18 @@ pub struct InprocCluster {
     pub handles: Vec<JoinHandle<Result<()>>>,
 }
 
-/// Spawn one in-process worker per entry of `throttles`; `throttles[i]`
-/// slows worker `i` to emulate a heterogeneous device; `shape` meters every
+/// Spawn one in-process worker per entry of `plans`; `plans[i]` throttles
+/// worker `i` to emulate a heterogeneous device (a worker's emulated speed
+/// may change mid-run — `ThrottlePlan::degrade_after`); `shape` meters every
 /// frame through the given bandwidth/latency model.
 ///
-/// Each worker opens its *own* [`Runtime`] over `artifacts` — the paper's
-/// slaves are separate machines with their own Matlab processes, and one
-/// runtime per device mirrors that (it also keeps per-device executable
-/// stats and throttling state independent).
-pub fn spawn_inproc(
-    artifacts: PathBuf,
-    throttles: &[Throttle],
-    shape: Option<LinkModel>,
-) -> InprocCluster {
-    let plans: Vec<ThrottlePlan> = throttles.iter().map(|&t| ThrottlePlan::fixed(t)).collect();
-    spawn_inproc_planned(artifacts, &plans, shape)
-}
-
-/// [`spawn_inproc`] with full throttle *plans*: a worker's emulated speed
-/// may change mid-run (`ThrottlePlan::degrade_after`), which is how the
-/// adaptive-scheduler tests and the `--adaptive` example make a calibrated
-/// fleet go out of balance on cue.
-pub fn spawn_inproc_planned(
-    artifacts: PathBuf,
+/// A failed thread spawn propagates as an error (and the partially spawned
+/// fleet is torn down by dropping its master links) instead of panicking.
+pub fn spawn_workers(
+    source: WorkerSource,
     plans: &[ThrottlePlan],
     shape: Option<LinkModel>,
-) -> InprocCluster {
-    spawn_inproc_impl(WorkerRuntime::Artifacts(artifacts), plans, shape)
-}
-
-/// [`spawn_inproc`] for an explicit (synthesized) architecture: every
-/// worker opens a native runtime over its own clone of `arch` instead of an
-/// artifact directory.  This is how a preset selected on the master (the
-/// CLI's `--arch`, the e2e example's `[arch]` argument) reaches in-process
-/// workers — as an argument, not ambient env state.
-pub fn spawn_inproc_arch(
-    arch: crate::runtime::ArchSpec,
-    throttles: &[Throttle],
-    shape: Option<LinkModel>,
-) -> InprocCluster {
-    let plans: Vec<ThrottlePlan> = throttles.iter().map(|&t| ThrottlePlan::fixed(t)).collect();
-    spawn_inproc_impl(WorkerRuntime::Arch(arch), &plans, shape)
-}
-
-/// How each spawned worker obtains its [`Runtime`].
-enum WorkerRuntime {
-    /// `Runtime::open` over this directory (manifest-pinned or default).
-    Artifacts(PathBuf),
-    /// `Runtime::for_arch` over a clone of this architecture.
-    Arch(crate::runtime::ArchSpec),
-}
-
-impl WorkerRuntime {
-    fn open(&self) -> Result<std::sync::Arc<Runtime>> {
-        match self {
-            WorkerRuntime::Artifacts(dir) => Runtime::open(dir),
-            WorkerRuntime::Arch(arch) => Ok(Runtime::for_arch(arch.clone())),
-        }
-    }
-}
-
-fn spawn_inproc_impl(
-    source: WorkerRuntime,
-    plans: &[ThrottlePlan],
-    shape: Option<LinkModel>,
-) -> InprocCluster {
+) -> Result<InprocCluster> {
     let mut links: Vec<Box<dyn Link>> = Vec::new();
     let mut handles = Vec::new();
     let source = std::sync::Arc::new(source);
@@ -115,7 +90,7 @@ fn spawn_inproc_impl(
                     None => worker_loop(worker_end, rt, opts),
                 }
             })
-            .expect("spawning worker thread");
+            .with_context(|| format!("spawning worker thread {}", i + 1))?;
         let master_link: Box<dyn Link> = match shape {
             Some(m) => Box::new(ShapedLink::new(master_end, m)),
             None => Box::new(master_end),
@@ -123,7 +98,7 @@ fn spawn_inproc_impl(
         links.push(master_link);
         handles.push(handle);
     }
-    InprocCluster { links, handles }
+    Ok(InprocCluster { links, handles })
 }
 
 impl InprocCluster {

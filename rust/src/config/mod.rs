@@ -12,10 +12,25 @@ use anyhow::{ensure, Context, Result};
 
 use crate::util::json::Json;
 
+/// The `arch` field of an experiment config: which network trains.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArchChoice {
+    /// A named `ArchSpec::preset` (`"arch": "deep_cifar"`).
+    Preset(String),
+    /// An inline layer graph (`"arch": {"layers": [...], ...}`), stored in
+    /// its canonical `ArchSpec::to_json` form so configs compare and
+    /// round-trip structurally.
+    Graph(String),
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     /// Human name for logs/CSV.
     pub name: String,
+    /// Architecture: preset name or inline graph.  `None` = the artifact
+    /// directory decides (a `manifest.json` pins it, else the native
+    /// default) — the pre-session behavior, unchanged.
+    pub arch: Option<ArchChoice>,
     pub trainer: TrainerConfig,
     pub cluster: ClusterConfig,
     pub network: NetworkConfig,
@@ -89,6 +104,7 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         Self {
             name: "default".into(),
+            arch: None,
             trainer: TrainerConfig::default(),
             cluster: ClusterConfig::default(),
             network: NetworkConfig::default(),
@@ -107,11 +123,26 @@ fn check_keys(v: &Json, allowed: &[&str], section: &str) -> Result<()> {
 impl ExperimentConfig {
     pub fn from_json_str(text: &str) -> Result<Self> {
         let v = Json::parse(text).context("parsing experiment config JSON")?;
-        check_keys(&v, &["name", "trainer", "cluster", "network"], "config root")?;
+        check_keys(&v, &["name", "arch", "trainer", "cluster", "network"], "config root")?;
         let mut cfg = ExperimentConfig {
             name: v.get("name")?.as_str()?.to_string(),
             ..Default::default()
         };
+        if let Some(a) = v.opt("arch") {
+            cfg.arch = Some(match a {
+                Json::Str(name) => ArchChoice::Preset(name.clone()),
+                Json::Obj(_) => {
+                    // Parse eagerly so a malformed inline graph fails at
+                    // config load, then keep the canonical serialization.
+                    let spec = crate::runtime::ArchSpec::from_json(a)
+                        .context("parsing inline arch graph in config")?;
+                    ArchChoice::Graph(spec.to_json())
+                }
+                other => anyhow::bail!(
+                    "arch must be a preset name or a graph object, got {other:?}"
+                ),
+            });
+        }
         if let Some(t) = v.opt("trainer") {
             check_keys(
                 t,
@@ -181,7 +212,73 @@ impl ExperimentConfig {
         Self::from_json_str(&text)
     }
 
+    /// Serialize — the inverse of [`ExperimentConfig::from_json_str`].  An
+    /// `ExperimentConfig` is the on-disk form of a `SessionBuilder`, so a
+    /// composed run can be written out and replayed with
+    /// `convdist run --config`.
+    pub fn to_json_string(&self) -> String {
+        // Full JSON string escape (control characters included), so any
+        // name/roster/address survives the write -> parse round trip.
+        let esc = |s: &str| -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        };
+        let arch = match &self.arch {
+            None => String::new(),
+            Some(ArchChoice::Preset(name)) => format!("\n  \"arch\": \"{}\",", esc(name)),
+            Some(ArchChoice::Graph(json)) => format!("\n  \"arch\": {json},"),
+        };
+        let t = &self.trainer;
+        let c = &self.cluster;
+        let n = &self.network;
+        let addrs: Vec<String> = c.worker_addrs.iter().map(|a| format!("\"{}\"", esc(a))).collect();
+        format!(
+            "{{\n  \"name\": \"{}\",{arch}\n  \"trainer\": {{\"steps\": {}, \"lr\": {}, \
+             \"momentum\": {}, \"weight_decay\": {}, \"seed\": {}, \"log_every\": {}, \
+             \"calib_rounds\": {}}},\n  \"cluster\": {{\"workers\": {}, \"devices\": \"{}\", \
+             \"throttle\": {}, \"worker_addrs\": [{}]}},\n  \"network\": {{\"bandwidth_mbps\": {}, \
+             \"latency_ms\": {}, \"shaped\": {}}}\n}}",
+            esc(&self.name),
+            t.steps,
+            t.lr,
+            t.momentum,
+            t.weight_decay,
+            t.seed,
+            t.log_every,
+            t.calib_rounds,
+            c.workers,
+            esc(&c.devices),
+            c.throttle,
+            addrs.join(", "),
+            n.bandwidth_mbps,
+            n.latency_ms,
+            n.shaped
+        )
+    }
+
     pub fn validate(&self) -> Result<()> {
+        match &self.arch {
+            Some(ArchChoice::Preset(name)) => ensure!(
+                crate::runtime::ArchSpec::preset(name).is_some(),
+                "unknown arch preset {name:?} (try: default, tiny, deep_cifar, tiny_deep)"
+            ),
+            Some(ArchChoice::Graph(json)) => {
+                crate::runtime::ArchSpec::from_json_str(json)
+                    .context("validating inline arch graph")?;
+            }
+            None => {}
+        }
         ensure!(self.trainer.steps > 0, "steps must be > 0");
         ensure!(self.trainer.lr > 0.0, "lr must be > 0");
         ensure!(
@@ -287,6 +384,61 @@ mod tests {
         let profs = cfg.device_profiles();
         assert_eq!(profs.len(), 8);
         assert!(profs[0].gflops > profs[1].gflops * 5.0, "desktop master, mobile workers");
+    }
+
+    #[test]
+    fn arch_field_preset_and_inline_graph() {
+        let cfg = ExperimentConfig::from_json_str(r#"{"name": "p", "arch": "deep_cifar"}"#)
+            .unwrap();
+        assert_eq!(cfg.arch, Some(ArchChoice::Preset("deep_cifar".into())));
+
+        let inline = crate::runtime::ArchSpec::tiny().to_json();
+        let cfg =
+            ExperimentConfig::from_json_str(&format!(r#"{{"name": "g", "arch": {inline}}}"#))
+                .unwrap();
+        let Some(ArchChoice::Graph(json)) = &cfg.arch else {
+            panic!("expected inline graph, got {:?}", cfg.arch)
+        };
+        let spec = crate::runtime::ArchSpec::from_json_str(json).unwrap();
+        assert_eq!(spec.label(), "4:8");
+
+        // Unknown preset, malformed graph, wrong JSON type: all loud.
+        assert!(ExperimentConfig::from_json_str(r#"{"name": "x", "arch": "quantum"}"#).is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"name": "x", "arch": {"layers": []}}"#)
+            .is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"name": "x", "arch": 7}"#).is_err());
+    }
+
+    #[test]
+    fn config_roundtrips_through_serialization() {
+        // No arch, preset arch, inline-graph arch: parse(to_json(x)) == x.
+        let mut cfg = ExperimentConfig::from_json_str(
+            r#"{
+              "name": "rt",
+              "trainer": {"steps": 7, "lr": 0.125, "seed": 9},
+              "cluster": {"workers": 2, "devices": "uniform", "throttle": true},
+              "network": {"bandwidth_mbps": 25.0, "shaped": true}
+            }"#,
+        )
+        .unwrap();
+        for arch in [
+            None,
+            Some(ArchChoice::Preset("tiny".into())),
+            Some(ArchChoice::Graph(crate::runtime::ArchSpec::tiny_deep().to_json())),
+        ] {
+            cfg.arch = arch;
+            let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+            assert_eq!(back, cfg);
+        }
+        // TCP addresses survive too.
+        cfg.cluster.worker_addrs = vec!["a:1".into(), "b:2".into()];
+        cfg.cluster.workers = 2;
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back, cfg);
+        // And hostile strings: quotes, backslashes, control characters.
+        cfg.name = "we\"ird\\name\nwith\tctrl\u{1}".into();
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back, cfg);
     }
 
     #[test]

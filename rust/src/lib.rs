@@ -10,7 +10,10 @@
 //! * **L3 (this crate)** — master/worker coordination, calibration,
 //!   Eq. 1 workload partitioning, wire protocol, transports (in-proc, TCP,
 //!   bandwidth-shaped), SGD, data pipeline, analytic scalability simulator,
-//!   and the data-parallel baseline.
+//!   and the data-parallel baseline.  Run composition goes through the
+//!   unified [`session`] API: one `SessionBuilder` picks arch source ×
+//!   topology × scheduling, observes via events, and checkpoints/resumes
+//!   (DESIGN.md §9).
 //! * **L2** — the executable contract ([`runtime`]): a typed layer graph
 //!   ([`runtime::ArchSpec`], DESIGN.md §8) from which shape inference
 //!   derives the named segments of the CNN (per-conv kernel shards, the
@@ -37,6 +40,7 @@ pub mod net;
 pub mod proto;
 pub mod runtime;
 pub mod sched;
+pub mod session;
 pub mod sim;
 pub mod tensor;
 pub mod util;

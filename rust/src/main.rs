@@ -1,32 +1,39 @@
 //! `convdist` — CLI for the distributed-CNN-training reproduction.
 //!
 //! ```text
-//! convdist train     [--config exp.json] [--workers N] [--steps N]
-//!                    [--throttle] [--shaped]
+//! convdist run       [--config exp.json] [--workers N] [--steps N]
+//!                    [--throttle] [--shaped] [--arch NAME]
+//!                    [--save ckpt] [--resume ckpt]
+//! convdist train     (alias of run)
 //! convdist worker    [--listen 127.0.0.1:7701] [--id N] [--slowdown X]
 //! convdist master    --workers host:port,host:port [--config exp.json] [--steps N]
 //! convdist calibrate [--rounds N]
 //! convdist figures   [--id fig5|table4|...] [--csv]
 //! convdist baseline  [--kind single|dp] [--replicas N] [--steps N]
-//! convdist stats
 //! ```
+//!
+//! Every training subcommand composes a [`convdist::session::Session`] from
+//! the experiment config plus flag overrides — the CLI is a thin shell over
+//! `SessionBuilder::from_experiment`.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use convdist::baselines::{DataParallelTrainer, SingleDeviceTrainer};
-use convdist::cluster::{spawn_inproc, spawn_inproc_arch, worker_loop, DistTrainer, WorkerOptions};
+use convdist::cluster::{worker_loop, WorkerOptions};
 use convdist::config::{ExperimentConfig, TrainerConfig};
 use convdist::data::default_dataset;
 use convdist::devices::Throttle;
-use convdist::net::{LinkModel, TcpLink};
-use convdist::runtime::{ArchSpec, Runtime};
+use convdist::net::TcpLink;
+use convdist::runtime::Runtime;
+use convdist::session::{ArchSource, Event, RunReport, Session, SessionBuilder};
 use convdist::sim::figures;
 use convdist::util::cli::Args;
 
-const USAGE: &str = "usage: convdist <train|worker|master|calibrate|figures|baseline> [options]
-  train      --config F --workers N --steps N --throttle --shaped
+const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|baseline> [options]
+  run        --config F --workers N --steps N --throttle --shaped
+             --save CKPT --resume CKPT     (train is an alias)
   worker     --listen ADDR --id N --slowdown X
   master     --workers a:p,b:p --config F --steps N
   calibrate  --rounds N
@@ -40,7 +47,7 @@ common: --artifacts DIR --arch NAME   (NAME: default|tiny|deep_cifar|tiny_deep;
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     match args.command.as_str() {
-        "train" => cmd_train(&args),
+        "run" | "train" => cmd_run(&args),
         "worker" => cmd_worker(&args),
         "master" => cmd_master(&args),
         "calibrate" => cmd_calibrate(&args),
@@ -61,42 +68,47 @@ fn artifacts_path(args: &Args) -> std::path::PathBuf {
     }
 }
 
-fn arch_preset(args: &Args) -> Result<Option<ArchSpec>> {
-    match args.opt("arch") {
-        None => Ok(None),
-        Some(name) => Ok(Some(ArchSpec::preset(name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "unknown --arch preset {name:?} (try: default, tiny, deep_cifar, tiny_deep)"
-            )
-        })?)),
+/// `--arch NAME` as an [`ArchSource`], erroring when a pinned manifest in
+/// the (possibly `--artifacts`-overridden) directory conflicts with it.
+fn arch_override(args: &Args) -> Result<Option<ArchSource>> {
+    let Some(name) = args.opt("arch") else { return Ok(None) };
+    let dir = artifacts_path(args);
+    if dir.join("manifest.json").exists() {
+        bail!(
+            "--arch conflicts with {}/manifest.json, which pins the architecture",
+            dir.display()
+        );
     }
+    Ok(Some(ArchSource::Preset(name.to_string())))
 }
 
+/// The `--arch` / `--artifacts` override for session subcommands: an
+/// explicit preset wins over the config's `arch` field; otherwise an
+/// explicit artifact dir wins over a config without `arch`.
+fn apply_arch_override(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    b: SessionBuilder,
+) -> Result<SessionBuilder> {
+    if let Some(source) = arch_override(args)? {
+        return Ok(b.arch(source));
+    }
+    if cfg.arch.is_none() {
+        return Ok(b.arch(ArchSource::Artifacts(artifacts_path(args))));
+    }
+    Ok(b)
+}
+
+/// Runtime for the non-session subcommands (worker / calibrate / baseline):
+/// `--arch NAME` selects a synthesized preset — only without a pinned
+/// manifest — else the artifact directory decides.  Resolution is
+/// `ArchSource::resolve`, the same site the session builder uses.
 fn open_runtime(args: &Args) -> Result<Arc<Runtime>> {
-    let dir = artifacts_path(args);
-    // `--arch NAME` selects a synthesized preset (e.g. the 3-conv
-    // `deep_cifar`) — only meaningful without a pinned manifest.
-    let rt = match arch_preset(args)? {
-        Some(arch) => {
-            if dir.join("manifest.json").exists() {
-                bail!(
-                    "--arch conflicts with {}/manifest.json, which pins the architecture",
-                    dir.display()
-                );
-            }
-            Runtime::for_arch(arch)
-        }
-        None => Runtime::open(&dir)?,
+    let source = match arch_override(args)? {
+        Some(source) => source,
+        None => ArchSource::Artifacts(artifacts_path(args)),
     };
-    eprintln!(
-        "runtime: platform={} arch={} batch={} ({} conv layers, {} executables)",
-        rt.platform(),
-        rt.arch().label(),
-        rt.arch().batch,
-        rt.arch().num_convs(),
-        rt.manifest().executables.len()
-    );
-    Ok(rt)
+    Ok(source.resolve()?.0)
 }
 
 fn load_config(args: &Args) -> Result<ExperimentConfig> {
@@ -119,83 +131,115 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn run_training(rt: Arc<Runtime>, mut trainer: DistTrainer, tcfg: &TrainerConfig) -> Result<()> {
-    let arch = rt.arch().clone();
-    let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, tcfg.seed);
-    eprintln!("calibration (probe seconds): {:?}", trainer.probe_times());
+/// The standard logging observer: step lines at `log_every`, re-shard /
+/// departure / eval / checkpoint notices always.  `steps` is the length of
+/// this run; the last step of the run is always logged (the global `step`
+/// counter continues across a resume, so it cannot serve as the bound).
+fn logging_observer(log_every: usize, steps: usize) -> impl FnMut(&Event) + Send {
+    let mut seen = 0usize;
+    move |ev: &Event| match ev {
+        Event::StepCompleted { step, loss, devices, breakdown, bytes_moved } => {
+            seen += 1;
+            let idx = step.saturating_sub(1);
+            if idx % log_every as u64 == 0 || seen == steps {
+                eprintln!(
+                    "step {idx:>4}  loss {loss:.4}  devices {devices}  {breakdown}  wire {:.2} MiB",
+                    *bytes_moved as f64 / (1 << 20) as f64
+                );
+            }
+        }
+        Event::Repartitioned { step } => eprintln!("step {step}: fleet re-sharded"),
+        Event::WorkerLeft { step, devices_left } => {
+            eprintln!("step {step}: worker left ({devices_left} devices remain)")
+        }
+        Event::EvalDone { accuracy, .. } => {
+            eprintln!("final held-out accuracy: {:.1}%", accuracy * 100.0)
+        }
+        Event::CheckpointSaved { step, path } => {
+            eprintln!("checkpoint @ step {step} -> {}", path.display())
+        }
+    }
+}
+
+fn print_session_banner(session: &Session) {
+    let rt = session.runtime();
+    eprintln!(
+        "runtime: platform={} arch={} batch={} ({} conv layers, {} executables)",
+        rt.platform(),
+        rt.arch().label(),
+        rt.arch().batch,
+        rt.arch().num_convs(),
+        rt.manifest().executables.len()
+    );
+    eprintln!("calibration (probe seconds): {:?}", session.trainer().probe_times());
+    let arch = rt.arch();
     for layer in 1..=arch.num_convs() {
         let k = arch.kernels(layer);
-        let shards: Vec<String> = trainer
+        let shards: Vec<String> = session
+            .trainer()
             .shards(layer)
             .iter()
             .map(|s| format!("dev{}:{}..{} (b{})", s.device, s.lo, s.hi, s.bucket))
             .collect();
         eprintln!("conv{layer} ({k} kernels) -> {}", shards.join(" "));
     }
-    let mut total = convdist::metrics::Breakdown::default();
-    for step in 0..tcfg.steps {
-        let batch = ds.batch(arch.batch, step)?;
-        let res = trainer.step(&batch)?;
-        total.add(&res.breakdown);
-        if step % tcfg.log_every == 0 || step + 1 == tcfg.steps {
-            eprintln!(
-                "step {step:>4}  loss {:.4}  devices {}  {}  wire {:.2} MiB",
-                res.loss,
-                res.devices,
-                res.breakdown,
-                res.bytes_moved as f64 / (1 << 20) as f64
-            );
-        }
-    }
-    let eval = ds.batch(arch.batch, tcfg.steps + 1)?;
-    let acc = trainer.eval_accuracy(&eval)?;
-    eprintln!("final held-out accuracy: {:.1}%", acc * 100.0);
-    eprintln!("cumulative: {total}");
-    if std::env::var("CONVDIST_STATS").is_ok() {
-        eprintln!("master-runtime executable stats (slowest first):");
-        for (name, s) in rt.stats() {
-            eprintln!(
-                "  {name:28} {:>5} calls  {:>10.3?} total  {:>9.3?}/call",
-                s.calls,
-                s.total,
-                s.total / s.calls.max(1) as u32
-            );
-        }
-    }
-    trainer.shutdown()?;
-    Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+fn print_report(report: &RunReport) {
+    eprintln!(
+        "run: {} steps (from step {})  final loss {:.4}  wire {:.2} MiB  wall {:.1}s",
+        report.steps_run,
+        report.first_step,
+        report.final_loss(),
+        report.bytes_moved as f64 / (1 << 20) as f64,
+        report.wall.as_secs_f64()
+    );
+    eprintln!("cumulative: {}", report.cumulative);
+    if report.repartitions > 0 || report.departures > 0 {
+        eprintln!(
+            "scheduler: {} re-shards, {} departures",
+            report.repartitions, report.departures
+        );
+    }
+}
+
+/// `CONVDIST_STATS=1`: dump per-executable timing from the master runtime.
+fn maybe_print_stats(session: &Session) {
+    if std::env::var("CONVDIST_STATS").is_err() {
+        return;
+    }
+    eprintln!("master-runtime executable stats (slowest first):");
+    for (name, s) in session.runtime().stats() {
+        eprintln!(
+            "  {name:28} {:>5} calls  {:>10.3?} total  {:>9.3?}/call",
+            s.calls,
+            s.total,
+            s.total / s.calls.max(1) as u32
+        );
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let rt = open_runtime(args)?;
-    let profiles = cfg.device_profiles();
-    let throttles = if cfg.cluster.throttle {
-        // Virtual-time emulation: fastest device pinned at 2 virtual GFLOPS
-        // so sleeps dominate the host's real compute (see devices::Throttle).
-        Throttle::virtual_cluster(&profiles, 2.0)
-    } else {
-        vec![Throttle::none(); profiles.len()]
-    };
     eprintln!(
         "cluster: {} workers + master, devices={} throttle={} shaped={}",
         cfg.cluster.workers, cfg.cluster.devices, cfg.cluster.throttle, cfg.network.shaped
     );
-    let shape = cfg.network.shaped.then(|| LinkModel {
-        bandwidth_bps: cfg.network.bandwidth_mbps * 1e6,
-        latency: std::time::Duration::from_secs_f64(cfg.network.latency_ms / 1e3),
-    });
-    // With `--arch` the workers must resolve the same synthesized graph as
-    // the master — pass it explicitly instead of re-opening the artifacts.
-    let mut cluster = if args.opt("arch").is_some() {
-        spawn_inproc_arch(rt.arch().clone(), &throttles[1..], shape)
-    } else {
-        spawn_inproc(artifacts_path(args), &throttles[1..], shape)
-    };
-    let trainer = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg.trainer, throttles[0])?;
-    run_training(rt, trainer, &cfg.trainer)?;
-    cluster.handles.into_iter().try_for_each(|h| h.join().unwrap())?;
-    Ok(())
+    let mut builder = SessionBuilder::from_experiment(&cfg)?
+        .on_event(logging_observer(cfg.trainer.log_every, cfg.trainer.steps));
+    builder = apply_arch_override(args, &cfg, builder)?;
+    if let Some(ckpt) = args.opt("resume") {
+        builder = builder.resume_from(ckpt);
+    }
+    let mut session = builder.build()?;
+    print_session_banner(&session);
+    let report = session.run()?;
+    print_report(&report);
+    if let Some(path) = args.opt("save") {
+        session.save_checkpoint(path)?;
+    }
+    maybe_print_stats(&session);
+    session.shutdown()
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
@@ -214,18 +258,22 @@ fn cmd_worker(args: &Args) -> Result<()> {
 
 fn cmd_master(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let rt = open_runtime(args)?;
     let workers = args.require("workers")?;
-    let mut links: Vec<Box<dyn convdist::net::Link>> = Vec::new();
-    for addr in workers.split(',').filter(|s| !s.is_empty()) {
-        eprintln!("connecting to worker {addr}");
-        links.push(Box::new(TcpLink::connect(addr.trim())?));
-    }
-    if links.is_empty() {
+    let addrs: Vec<String> =
+        workers.split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect();
+    if addrs.is_empty() {
         bail!("no worker addresses given");
     }
-    let trainer = DistTrainer::new(rt.clone(), links, &cfg.trainer, Throttle::none())?;
-    run_training(rt, trainer, &cfg.trainer)
+    let mut builder = SessionBuilder::from_experiment(&cfg)?
+        .tcp(addrs)
+        .on_event(logging_observer(cfg.trainer.log_every, cfg.trainer.steps));
+    builder = apply_arch_override(args, &cfg, builder)?;
+    let mut session = builder.build()?;
+    print_session_banner(&session);
+    let report = session.run()?;
+    print_report(&report);
+    maybe_print_stats(&session);
+    session.shutdown()
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {

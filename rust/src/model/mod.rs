@@ -75,6 +75,28 @@ impl Params {
         &self.order
     }
 
+    /// Clone out `(name, tensor)` pairs in manifest order — the parameter
+    /// section of a session checkpoint.
+    pub fn to_named(&self) -> Vec<(String, Tensor)> {
+        self.order.iter().map(|n| (n.clone(), self.tensors[n].clone())).collect()
+    }
+
+    /// Restore from `(name, tensor)` pairs.  Every entry must name an
+    /// existing parameter with an unchanged shape, and every parameter must
+    /// be covered — a checkpoint from a different architecture fails loudly.
+    pub fn load_named(&mut self, entries: &[(String, Tensor)]) -> Result<()> {
+        ensure!(
+            entries.len() == self.order.len(),
+            "checkpoint has {} parameters, architecture has {}",
+            entries.len(),
+            self.order.len()
+        );
+        for (name, t) in entries {
+            self.set(name, t.clone())?;
+        }
+        Ok(())
+    }
+
     pub fn l2norm(&self) -> f32 {
         self.tensors.values().map(|t| t.l2norm().powi(2)).sum::<f32>().sqrt()
     }
@@ -137,6 +159,19 @@ pub struct Sgd {
 impl Sgd {
     pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Self {
         Self { lr, momentum, weight_decay, velocity: BTreeMap::new() }
+    }
+
+    /// Clone out the momentum buffers, sorted by name — the optimizer-state
+    /// section of a session checkpoint.  Parameters that have never been
+    /// stepped have no entry (their velocity is implicitly zero).
+    pub fn export_velocity(&self) -> Vec<(String, Tensor)> {
+        self.velocity.iter().map(|(n, t)| (n.clone(), t.clone())).collect()
+    }
+
+    /// Replace the momentum buffers (checkpoint restore).  Shape agreement
+    /// with the parameters is re-checked on the next `step`.
+    pub fn import_velocity(&mut self, entries: Vec<(String, Tensor)>) {
+        self.velocity = entries.into_iter().collect();
     }
 
     /// `v = μv + g + λθ;  θ -= lr·v`

@@ -23,7 +23,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::util::json::Json;
 
@@ -469,6 +469,13 @@ impl ArchSpec {
         } else {
             Self::from_json_legacy(v)
         }
+    }
+
+    /// Parse a standalone architecture document (either schema) — the
+    /// session API's graph-file arch source and the inline `arch` object of
+    /// an experiment config both load through this.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text).context("parsing architecture JSON")?)
     }
 
     fn from_json_graph(v: &Json) -> Result<Self> {

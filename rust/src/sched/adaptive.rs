@@ -23,7 +23,7 @@ use super::partition::{partition_layer, Shard};
 
 /// Knobs of the adaptive scheduler.  `Default` is the enabled configuration
 /// used by `--adaptive` runs; [`AdaptiveConfig::disabled`] is the static
-/// paper behavior (and the `DistTrainer::new` default).
+/// paper behavior (and the `SessionBuilder` default).
 #[derive(Clone, Copy, Debug)]
 pub struct AdaptiveConfig {
     /// Master switch: when false the scheduler is the paper's static Eq. 1
@@ -83,7 +83,7 @@ impl Default for AdaptiveConfig {
 }
 
 impl AdaptiveConfig {
-    /// The static paper behavior (the `DistTrainer::new` default).
+    /// The static paper behavior (the `SessionBuilder` default).
     pub fn disabled() -> Self {
         Self { enabled: false, ..Self::default() }
     }

@@ -1,0 +1,213 @@
+//! Session checkpoints: parameters + SGD momentum + the step counter, in a
+//! small self-describing binary format (the offline build has no serde, and
+//! JSON would balloon the f32 payload ~3x).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic "CVDSESS1" | u32 version | u64 step | str arch_label
+//! | section params | section velocity
+//! section := u32 count, then per tensor: str name, u32 rank, u64*rank dims,
+//!            f32*prod(dims) data
+//! str     := u32 byte length + UTF-8 bytes
+//! ```
+//!
+//! A resumed run continues the *optimizer trajectory* exactly: velocity and
+//! step counter restore alongside the parameters, and the session's dataset
+//! cursor is the restored step, so the batch sequence continues where the
+//! interrupted run left off (`rust/tests/session.rs` proves resume ==
+//! uninterrupted).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"CVDSESS1";
+const VERSION: u32 = 1;
+
+/// A point-in-time snapshot of everything the master mutates during
+/// training.  Workers are stateless (they receive kernels every step), so
+/// this is the complete resume state.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Training steps completed when the snapshot was taken.
+    pub step: u64,
+    /// `ArchSpec::label()` of the architecture that produced it — restoring
+    /// onto a different graph fails loudly (shapes are re-validated too).
+    pub arch_label: String,
+    /// Parameters, in manifest order.
+    pub params: Vec<(String, Tensor)>,
+    /// SGD momentum buffers (params never stepped have no entry).
+    pub velocity: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        write_str(&mut out, &self.arch_label);
+        write_section(&mut out, &self.params);
+        write_section(&mut out, &self.velocity);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader { b: bytes, pos: 0 };
+        let magic = r.take(8)?;
+        ensure!(magic == MAGIC, "not a convdist checkpoint (bad magic)");
+        let version = r.u32()?;
+        ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let step = r.u64()?;
+        let arch_label = r.string()?;
+        let params = read_section(&mut r)?;
+        let velocity = read_section(&mut r)?;
+        ensure!(r.pos == bytes.len(), "trailing garbage after checkpoint payload");
+        Ok(Self { step, arch_label, params, velocity })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn write_section(out: &mut Vec<u8>, entries: &[(String, Tensor)]) {
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (name, t) in entries {
+        write_str(out, name);
+        out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+fn read_section(r: &mut Reader) -> Result<Vec<(String, Tensor)>> {
+    let count = r.u32()? as usize;
+    let mut entries = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name = r.string()?;
+        let rank = r.u32()? as usize;
+        ensure!(rank <= 8, "tensor {name}: implausible rank {rank}");
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u64()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        ensure!(
+            n.checked_mul(4).map(|b| b <= r.remaining()).unwrap_or(false),
+            "tensor {name}: {n} elements exceed the remaining payload"
+        );
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+        }
+        entries.push((name, Tensor::new(shape, data)?));
+    }
+    Ok(entries)
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated checkpoint at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        ensure!(len <= 4096, "implausible string length {len}");
+        Ok(std::str::from_utf8(self.take(len)?)?.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Pcg32::seed(7);
+        Checkpoint {
+            step: 42,
+            arch_label: "4:8".into(),
+            params: vec![
+                ("conv1.w".into(), Tensor::randn(&[4, 3, 5, 5], &mut rng)),
+                ("fc.b".into(), Tensor::zeros(&[10])),
+            ],
+            velocity: vec![("conv1.w".into(), Tensor::randn(&[4, 3, 5, 5], &mut rng))],
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_for_bit() {
+        let c = sample();
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back.step, c.step);
+        assert_eq!(back.arch_label, c.arch_label);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.velocity.len(), 1);
+        for (a, b) in c.params.iter().zip(&back.params) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.shape(), b.1.shape());
+            assert!(a.1.data().iter().zip(b.1.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let c = sample();
+        let mut bytes = c.to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+        // Truncation anywhere in the payload.
+        bytes.truncate(bytes.len() - 3);
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        // Trailing garbage.
+        let mut long = c.to_bytes();
+        long.push(0);
+        assert!(Checkpoint::from_bytes(&long).is_err());
+    }
+}

@@ -1,0 +1,601 @@
+//! The unified session API: one builder to compose, run, observe and
+//! checkpoint any training run.
+//!
+//! The paper's experiments are a grid over fleet size, device heterogeneity,
+//! bandwidth, batch size and architecture; composing a run used to mean
+//! picking the right constructor from a matrix (`spawn_inproc` /
+//! `spawn_inproc_planned` / `spawn_inproc_arch` × `DistTrainer::new` /
+//! `with_adaptive`) and hand-rolling the training loop.  A [`Session`] is
+//! the single composition point:
+//!
+//! ```no_run
+//! use convdist::devices::Throttle;
+//! use convdist::session::SessionBuilder;
+//!
+//! let mut session = SessionBuilder::new()
+//!     .arch_preset("deep_cifar")                    // or artifacts / graph file
+//!     .workers(&[Throttle::none(), Throttle::new(2.0)]) // in-proc fleet
+//!     .steps(50)
+//!     .on_event(|ev| eprintln!("{ev:?}"))           // observer hook
+//!     .build()?;
+//! let report = session.run()?;                      // full loop + eval
+//! session.save_checkpoint("run.ckpt")?;             // resumable later
+//! session.shutdown()?;
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Axes (every combination is valid):
+//!
+//! * **arch source** — an artifact directory ([`SessionBuilder::artifacts`]),
+//!   a named preset ([`SessionBuilder::arch_preset`]), a graph-JSON file
+//!   ([`SessionBuilder::arch_graph_file`]) or an explicit
+//!   [`ArchSpec`] ([`SessionBuilder::arch_spec`]);
+//! * **topology** — an in-proc fleet with [`ThrottlePlan`]s and optional
+//!   [`LinkModel`] shaping ([`SessionBuilder::workers`] /
+//!   [`SessionBuilder::worker_plans`] / [`SessionBuilder::shaped`]), TCP
+//!   endpoints ([`SessionBuilder::tcp`]), or pre-connected raw links
+//!   ([`SessionBuilder::links`] — custom worker harnesses in tests);
+//! * **scheduling** — static (default) or adaptive
+//!   ([`SessionBuilder::adaptive`]);
+//! * **trainer knobs** — [`SessionBuilder::trainer`] / `steps` /
+//!   `master_throttle` / `dataset`.
+//!
+//! [`SessionBuilder::from_experiment`] maps a declarative
+//! [`ExperimentConfig`] (JSON, including its `arch` field) onto these axes —
+//! `convdist run --config exp.json` drives a full session end to end.
+//! Checkpointing ([`Session::save_checkpoint`] /
+//! [`SessionBuilder::resume_from`]) snapshots parameters, SGD momentum and
+//! the step counter so a run can stop and continue exactly where it left
+//! off (DESIGN.md §9).
+
+mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cluster::{spawn_workers, DistTrainer, InprocCluster, StepResult, WorkerSource};
+use crate::config::{ArchChoice, ExperimentConfig, TrainerConfig};
+use crate::data::{default_dataset, Batch, Dataset};
+use crate::devices::{Throttle, ThrottlePlan};
+use crate::metrics::Breakdown;
+use crate::net::{Link, LinkModel, TcpLink};
+use crate::runtime::{ArchSpec, Runtime};
+use crate::sched::AdaptiveConfig;
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// Something observable happened inside the session.  Observers registered
+/// with [`SessionBuilder::on_event`] see every event in order — this
+/// replaces the hand-rolled logging loop every example used to carry.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A training step finished.  `step` counts from the start of training
+    /// (it continues across checkpoint resume).
+    StepCompleted {
+        step: u64,
+        loss: f32,
+        /// Devices that participated (master included).
+        devices: usize,
+        breakdown: Breakdown,
+        bytes_moved: u64,
+    },
+    /// The adaptive policy re-sharded the fleet after this step.
+    Repartitioned { step: u64 },
+    /// A worker died, left or was dropped during this step.
+    WorkerLeft {
+        step: u64,
+        /// Devices still in the fleet (master included).
+        devices_left: usize,
+    },
+    /// A held-out accuracy evaluation completed.
+    EvalDone { step: u64, accuracy: f32 },
+    /// A checkpoint was written.
+    CheckpointSaved { step: u64, path: PathBuf },
+}
+
+/// An event observer.  Boxed `FnMut` so closures can accumulate state.
+pub type Observer = Box<dyn FnMut(&Event) + Send>;
+
+// ---------------------------------------------------------------------------
+// Builder axes
+// ---------------------------------------------------------------------------
+
+/// Where the architecture (and therefore the runtime) comes from.
+pub enum ArchSource {
+    /// `Runtime::open` over this directory: a `manifest.json` pins the
+    /// architecture, otherwise the native default is synthesized.
+    Artifacts(PathBuf),
+    /// A named [`ArchSpec::preset`] (`default` | `tiny` | `deep_cifar` |
+    /// `tiny_deep`), resolved at build time.
+    Preset(String),
+    /// A standalone graph-JSON file (the `ArchSpec::to_json` schema; the
+    /// legacy `k1`/`k2` schema also loads).
+    GraphFile(PathBuf),
+    /// An explicit, already-built spec.
+    Spec(ArchSpec),
+}
+
+impl ArchSource {
+    /// Resolve to the master's [`Runtime`] plus the source every in-proc
+    /// worker opens its *own* runtime from (one runtime per device, like
+    /// the paper's one-process-per-slave).  The single resolution site —
+    /// the CLI's non-session subcommands reuse it too.
+    pub fn resolve(&self) -> Result<(Arc<Runtime>, WorkerSource)> {
+        match self {
+            ArchSource::Artifacts(dir) => {
+                Ok((Runtime::open(dir)?, WorkerSource::Artifacts(dir.clone())))
+            }
+            ArchSource::Preset(name) => {
+                let spec = ArchSpec::preset(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown arch preset {name:?} (try: default, tiny, deep_cifar, tiny_deep)"
+                    )
+                })?;
+                Ok((Runtime::for_arch(spec.clone()), WorkerSource::Arch(spec)))
+            }
+            ArchSource::GraphFile(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading arch graph {}", path.display()))?;
+                let spec = ArchSpec::from_json_str(&text)
+                    .with_context(|| format!("parsing arch graph {}", path.display()))?;
+                Ok((Runtime::for_arch(spec.clone()), WorkerSource::Arch(spec)))
+            }
+            ArchSource::Spec(spec) => {
+                Ok((Runtime::for_arch(spec.clone()), WorkerSource::Arch(spec.clone())))
+            }
+        }
+    }
+}
+
+enum TopologySpec {
+    /// Spawn one in-proc worker thread per throttle plan.
+    InProc,
+    /// Connect to workers listening on these TCP addresses.
+    Tcp(Vec<String>),
+    /// Use these pre-connected links verbatim.
+    Links(Vec<Box<dyn Link>>),
+}
+
+// ---------------------------------------------------------------------------
+// SessionBuilder
+// ---------------------------------------------------------------------------
+
+/// Composes a training run; [`SessionBuilder::build`] calibrates the fleet
+/// and returns a ready [`Session`].
+pub struct SessionBuilder {
+    arch: ArchSource,
+    topology: TopologySpec,
+    plans: Vec<ThrottlePlan>,
+    shape: Option<LinkModel>,
+    trainer: TrainerConfig,
+    adaptive: AdaptiveConfig,
+    master_throttle: Throttle,
+    observers: Vec<Observer>,
+    dataset: Option<Box<dyn Dataset + Send>>,
+    resume: Option<PathBuf>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionBuilder {
+    /// Defaults: the repo's artifact directory (native default arch when no
+    /// manifest pins one), a master-only fleet, static scheduling,
+    /// `TrainerConfig::default()`, no throttling, no observers.
+    pub fn new() -> Self {
+        Self {
+            arch: ArchSource::Artifacts(crate::artifacts_dir()),
+            topology: TopologySpec::InProc,
+            plans: Vec::new(),
+            shape: None,
+            trainer: TrainerConfig::default(),
+            adaptive: AdaptiveConfig::disabled(),
+            master_throttle: Throttle::none(),
+            observers: Vec::new(),
+            dataset: None,
+            resume: None,
+        }
+    }
+
+    /// Map a declarative [`ExperimentConfig`] onto the builder axes: `arch`
+    /// (preset name or inline graph), `cluster` (worker count, device
+    /// roster -> virtual throttles when `throttle` is set, TCP addresses
+    /// when given) and `network` (bandwidth shaping).  Further builder
+    /// calls refine the result — the CLI layers its flag overrides on top.
+    pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut b = Self::new().trainer(cfg.trainer.clone());
+        match &cfg.arch {
+            Some(ArchChoice::Preset(name)) => b = b.arch(ArchSource::Preset(name.clone())),
+            Some(ArchChoice::Graph(json)) => {
+                b = b.arch(ArchSource::Spec(
+                    ArchSpec::from_json_str(json).context("parsing inline arch graph")?,
+                ))
+            }
+            None => {}
+        }
+        if !cfg.cluster.worker_addrs.is_empty() {
+            // Real sockets carry real timing; `network.shaped` is an in-proc
+            // emulation knob and is ignored for TCP (as the CLI always has).
+            b = b.tcp(cfg.cluster.worker_addrs.clone());
+        } else {
+            let profiles = cfg.device_profiles();
+            let throttles = if cfg.cluster.throttle {
+                // Virtual-time emulation: fastest device pinned at 2 virtual
+                // GFLOPS so sleeps dominate the host's real compute.
+                Throttle::virtual_cluster(&profiles, 2.0)
+            } else {
+                vec![Throttle::none(); profiles.len()]
+            };
+            b = b.master_throttle(throttles[0]).workers(&throttles[1..]);
+            if cfg.network.shaped {
+                b = b.shaped(LinkModel {
+                    bandwidth_bps: cfg.network.bandwidth_mbps * 1e6,
+                    latency: Duration::from_secs_f64(cfg.network.latency_ms / 1e3),
+                });
+            }
+        }
+        Ok(b)
+    }
+
+    // -- arch source ---------------------------------------------------------
+
+    pub fn arch(mut self, source: ArchSource) -> Self {
+        self.arch = source;
+        self
+    }
+
+    pub fn artifacts(self, dir: impl Into<PathBuf>) -> Self {
+        self.arch(ArchSource::Artifacts(dir.into()))
+    }
+
+    pub fn arch_preset(self, name: impl Into<String>) -> Self {
+        self.arch(ArchSource::Preset(name.into()))
+    }
+
+    pub fn arch_graph_file(self, path: impl Into<PathBuf>) -> Self {
+        self.arch(ArchSource::GraphFile(path.into()))
+    }
+
+    pub fn arch_spec(self, spec: ArchSpec) -> Self {
+        self.arch(ArchSource::Spec(spec))
+    }
+
+    // -- topology ------------------------------------------------------------
+
+    /// In-proc fleet: one worker thread per throttle (fixed-speed plans).
+    pub fn workers(self, throttles: &[Throttle]) -> Self {
+        self.worker_plans(throttles.iter().map(|&t| ThrottlePlan::fixed(t)).collect())
+    }
+
+    /// In-proc fleet with full throttle *plans* — a worker's emulated speed
+    /// may change mid-run (`ThrottlePlan::degrade_after`), which is how the
+    /// adaptive-scheduler tests make a calibrated fleet go out of balance.
+    pub fn worker_plans(mut self, plans: Vec<ThrottlePlan>) -> Self {
+        self.topology = TopologySpec::InProc;
+        self.plans = plans;
+        self
+    }
+
+    /// Meter every frame through a bandwidth/latency model (in-proc fleets
+    /// only; TCP links carry real network timing already).
+    pub fn shaped(mut self, model: LinkModel) -> Self {
+        self.shape = Some(model);
+        self
+    }
+
+    /// Connect to workers listening on TCP addresses (`host:port`).
+    pub fn tcp(mut self, addrs: Vec<String>) -> Self {
+        self.topology = TopologySpec::Tcp(addrs);
+        self
+    }
+
+    /// Use pre-connected links verbatim (custom worker harnesses; the links
+    /// must speak the worker protocol starting with `Hello`).
+    pub fn links(mut self, links: Vec<Box<dyn Link>>) -> Self {
+        self.topology = TopologySpec::Links(links);
+        self
+    }
+
+    // -- scheduling / trainer knobs ------------------------------------------
+
+    /// Adaptive scheduling configuration (`AdaptiveConfig::disabled()` — the
+    /// default — is exactly the paper's static path).
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = cfg;
+        self
+    }
+
+    pub fn trainer(mut self, cfg: TrainerConfig) -> Self {
+        self.trainer = cfg;
+        self
+    }
+
+    /// Steps per [`Session::run`] call (shorthand for mutating `trainer`).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.trainer.steps = steps;
+        self
+    }
+
+    pub fn master_throttle(mut self, t: Throttle) -> Self {
+        self.master_throttle = t;
+        self
+    }
+
+    /// Replace the default dataset (synthetic CIFAR seeded from the trainer
+    /// seed, or `data/cifar-10-batches-bin` when present).
+    pub fn dataset(mut self, ds: Box<dyn Dataset + Send>) -> Self {
+        self.dataset = Some(ds);
+        self
+    }
+
+    // -- observation / resume ------------------------------------------------
+
+    /// Register an event observer (may be called multiple times; observers
+    /// fire in registration order).
+    pub fn on_event(mut self, f: impl FnMut(&Event) + Send + 'static) -> Self {
+        self.observers.push(Box::new(f));
+        self
+    }
+
+    /// Restore a [`Checkpoint`] right after the fleet is built: parameters,
+    /// momentum and step counter continue where the saved run stopped.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
+    // -- build ---------------------------------------------------------------
+
+    /// Resolve the arch, assemble the topology, calibrate and Eq.1-partition
+    /// the fleet, and (when resuming) restore the checkpoint.
+    pub fn build(mut self) -> Result<Session> {
+        let (rt, worker_source) = self.arch.resolve()?;
+        let (links, cluster) = match std::mem::replace(&mut self.topology, TopologySpec::InProc) {
+            TopologySpec::InProc => {
+                let mut cluster = spawn_workers(worker_source, &self.plans, self.shape)?;
+                (cluster.take_links(), Some(cluster))
+            }
+            TopologySpec::Tcp(addrs) => {
+                ensure!(!addrs.is_empty(), "TCP topology needs at least one worker address");
+                // No artificial shaping on real sockets: TCP links carry
+                // real network timing already (`shaped` is an in-proc knob).
+                let mut links: Vec<Box<dyn Link>> = Vec::with_capacity(addrs.len());
+                for addr in &addrs {
+                    let link = TcpLink::connect(addr.trim())
+                        .with_context(|| format!("connecting to worker {addr}"))?;
+                    links.push(Box::new(link));
+                }
+                (links, None)
+            }
+            TopologySpec::Links(links) => (links, None),
+        };
+        let trainer = DistTrainer::new(
+            rt.clone(),
+            links,
+            &self.trainer,
+            self.master_throttle,
+            self.adaptive,
+        )?;
+        let dataset = match self.dataset.take() {
+            Some(ds) => ds,
+            None => {
+                let a = rt.arch();
+                default_dataset(a.img, a.in_ch, a.num_classes, self.trainer.seed)
+            }
+        };
+        let mut session = Session {
+            rt,
+            trainer,
+            cluster,
+            cfg: self.trainer,
+            observers: self.observers,
+            dataset,
+        };
+        if let Some(path) = self.resume {
+            let ckpt = Checkpoint::load(&path)?;
+            session.restore(&ckpt)?;
+        }
+        Ok(session)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`Session::run`] call.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Global step count when the run started (> 0 after a resume).
+    pub first_step: u64,
+    pub steps_run: usize,
+    /// Per-step losses, in order.
+    pub losses: Vec<f32>,
+    /// Held-out accuracy measured after the last step.
+    pub eval_accuracy: f32,
+    /// Comm/Conv/Comp totals over the run.
+    pub cumulative: Breakdown,
+    /// Bytes moved over all links (Eq. 2 ground truth).
+    pub bytes_moved: u64,
+    /// Lifetime scheduler counters at the end of the run.
+    pub repartitions: u64,
+    pub departures: u64,
+    pub wall: Duration,
+}
+
+impl RunReport {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+}
+
+/// A composed, calibrated training run.  Drive it coarse
+/// ([`Session::run`] — the full loop plus eval) or fine
+/// ([`Session::step`] per batch); both emit [`Event`]s.
+pub struct Session {
+    rt: Arc<Runtime>,
+    trainer: DistTrainer,
+    cluster: Option<InprocCluster>,
+    cfg: TrainerConfig,
+    observers: Vec<Observer>,
+    dataset: Box<dyn Dataset + Send>,
+}
+
+impl Session {
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// The underlying trainer: shard tables, probe times, telemetry, params.
+    pub fn trainer(&self) -> &DistTrainer {
+        &self.trainer
+    }
+
+    /// Mutable trainer access (ablations re-partition mid-run, e.g.
+    /// `partition_equal`).
+    pub fn trainer_mut(&mut self) -> &mut DistTrainer {
+        &mut self.trainer
+    }
+
+    pub fn config(&self) -> &TrainerConfig {
+        &self.cfg
+    }
+
+    fn emit(&mut self, ev: Event) {
+        for obs in &mut self.observers {
+            obs(&ev);
+        }
+    }
+
+    /// One training step on an explicit batch, with events.
+    pub fn step(&mut self, batch: &Batch) -> Result<StepResult> {
+        let devices_before = 1 + self.trainer.alive_workers();
+        let r = self.trainer.step(batch)?;
+        let step = self.trainer.steps_done();
+        self.emit(Event::StepCompleted {
+            step,
+            loss: r.loss,
+            devices: r.devices,
+            breakdown: r.breakdown,
+            bytes_moved: r.bytes_moved,
+        });
+        if r.repartitioned {
+            self.emit(Event::Repartitioned { step });
+        }
+        if r.devices < devices_before {
+            self.emit(Event::WorkerLeft { step, devices_left: r.devices });
+        }
+        Ok(r)
+    }
+
+    /// The full training loop: `trainer.steps` steps from the session
+    /// dataset (the cursor is the global step counter, so a resumed session
+    /// continues the exact batch sequence), then a held-out eval.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let t0 = Instant::now();
+        let batch_size = self.rt.arch().batch;
+        let first_step = self.trainer.steps_done();
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut cumulative = Breakdown::default();
+        let mut bytes = 0u64;
+        for _ in 0..self.cfg.steps {
+            let cursor = self.trainer.steps_done() as usize;
+            let batch = self.dataset.batch(batch_size, cursor)?;
+            let r = self.step(&batch)?;
+            cumulative.add(&r.breakdown);
+            bytes += r.bytes_moved;
+            losses.push(r.loss);
+        }
+        let cursor = self.trainer.steps_done() as usize + 1;
+        let held_out = self.dataset.batch(batch_size, cursor)?;
+        let eval_accuracy = self.eval(&held_out)?;
+        let stats = self.trainer.sched_stats();
+        let (repartitions, departures) = (stats.repartitions, stats.departures);
+        Ok(RunReport {
+            first_step,
+            steps_run: losses.len(),
+            losses,
+            eval_accuracy,
+            cumulative,
+            bytes_moved: bytes,
+            repartitions,
+            departures,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Evaluate accuracy on a batch (emits [`Event::EvalDone`]).
+    pub fn eval(&mut self, batch: &Batch) -> Result<f32> {
+        let accuracy = self.trainer.eval_accuracy(batch)?;
+        let step = self.trainer.steps_done();
+        self.emit(Event::EvalDone { step, accuracy });
+        Ok(accuracy)
+    }
+
+    // -- checkpointing -------------------------------------------------------
+
+    /// Snapshot the complete resume state (params + momentum + step).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            step: self.trainer.steps_done(),
+            arch_label: self.rt.arch().label(),
+            params: self.trainer.params.to_named(),
+            velocity: self.trainer.optimizer().export_velocity(),
+        }
+    }
+
+    /// Write a checkpoint to `path` (emits [`Event::CheckpointSaved`]).
+    pub fn save_checkpoint(&mut self, path: impl Into<PathBuf>) -> Result<()> {
+        let path = path.into();
+        self.checkpoint().save(&path)?;
+        let step = self.trainer.steps_done();
+        self.emit(Event::CheckpointSaved { step, path });
+        Ok(())
+    }
+
+    /// Restore a snapshot into this session: architecture label and every
+    /// tensor shape must match; momentum and the step counter (which is also
+    /// the dataset cursor) come along.
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        let label = self.rt.arch().label();
+        ensure!(
+            ckpt.arch_label == label,
+            "checkpoint is for arch {} but the session runs {label}",
+            ckpt.arch_label
+        );
+        self.trainer.params.load_named(&ckpt.params)?;
+        for (name, t) in &ckpt.velocity {
+            let p = self.trainer.params.get(name)?;
+            ensure!(
+                p.shape() == t.shape(),
+                "checkpoint velocity {name} shape {:?} != param {:?}",
+                t.shape(),
+                p.shape()
+            );
+        }
+        self.trainer.optimizer_mut().import_velocity(ckpt.velocity.clone());
+        self.trainer.set_steps_done(ckpt.step);
+        Ok(())
+    }
+
+    /// Tell every worker training is over and join the in-proc fleet.
+    pub fn shutdown(self) -> Result<()> {
+        let Session { trainer, cluster, .. } = self;
+        trainer.shutdown()?;
+        if let Some(c) = cluster {
+            c.join()?;
+        }
+        Ok(())
+    }
+}

@@ -2,20 +2,21 @@
 //! in-proc clusters: telemetry-driven re-partitioning after a mid-run 8x
 //! degradation, elastic membership (graceful `Leave`, gather-deadline
 //! drops), and the static-path regression guarantee when adaptation is off.
+//! Fleets compose through `SessionBuilder` (`worker_plans` + `adaptive`);
+//! the custom worker harnesses ride in through `SessionBuilder::links`.
 
 mod common;
 
 use std::time::{Duration, Instant};
 
-use convdist::cluster::{
-    spawn_inproc_planned, worker_loop, DistTrainer, WorkerOptions,
-};
+use convdist::cluster::{worker_loop, WorkerOptions};
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::{Throttle, ThrottlePlan};
 use convdist::net::{inproc_pair, Link};
 use convdist::proto::Message;
 use convdist::runtime::Runtime;
 use convdist::sched::{partition_layer, AdaptiveConfig};
+use convdist::session::SessionBuilder;
 
 /// A healthy library worker on an in-proc link, optionally scripted to
 /// leave gracefully after `leave_after` ConvWork frames.
@@ -74,7 +75,7 @@ fn spawn_hanging_worker(id: u32, live: usize) -> Box<dyn Link> {
     Box::new(master_end)
 }
 
-/// The ISSUE's headline scenario: a 4-device virtual fleet where one worker
+/// The headline scenario: a 4-device virtual fleet where one worker
 /// degrades 8x at step 3.  The policy must re-balance within the cooldown
 /// window and the steady-state step time must land within 25% of the static
 /// oracle calibrated on the already-degraded fleet.
@@ -88,7 +89,7 @@ fn degraded_worker_triggers_repartition_and_recovers_near_oracle() {
     let fast = Throttle::virtual_gflops(2.0);
     let slow = Throttle::virtual_gflops(0.25); // 8x degradation
     // Worker 0 (device 1) degrades after 3 steps (4 conv calls per step).
-    let plans = [
+    let plans = vec![
         ThrottlePlan::degrade_after(fast, 12, slow),
         ThrottlePlan::fixed(fast),
         ThrottlePlan::fixed(fast),
@@ -102,13 +103,16 @@ fn degraded_worker_triggers_repartition_and_recovers_near_oracle() {
         heartbeat_every: 0,
         ..Default::default()
     };
-    let mut cluster = spawn_inproc_planned(convdist::artifacts_dir(), &plans, None);
-    let mut dist =
-        DistTrainer::with_adaptive(rt.clone(), cluster.take_links(), &cfg, fast, adaptive)
-            .unwrap();
+    let mut dist = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .master_throttle(fast)
+        .worker_plans(plans)
+        .adaptive(adaptive)
+        .build()
+        .unwrap();
 
     let pre_shard =
-        dist.shards(2).iter().find(|s| s.device == 1).map(|s| s.len()).unwrap_or(0);
+        dist.trainer().shards(2).iter().find(|s| s.device == 1).map(|s| s.len()).unwrap_or(0);
     assert!(pre_shard > 0, "equal fleet must give worker 1 a layer-2 shard");
     let mut repartition_step = None;
     let mut step_secs = Vec::new();
@@ -127,28 +131,26 @@ fn degraded_worker_triggers_repartition_and_recovers_near_oracle() {
     let when = repartition_step.expect("degradation never triggered a re-shard");
     assert!((3..=7).contains(&when), "re-shard at step {when}, expected 3..=7");
     let post_shard =
-        dist.shards(2).iter().find(|s| s.device == 1).map(|s| s.len()).unwrap_or(0);
+        dist.trainer().shards(2).iter().find(|s| s.device == 1).map(|s| s.len()).unwrap_or(0);
     assert!(
         post_shard < pre_shard,
         "slow device's shard must shrink: {pre_shard} -> {post_shard}"
     );
-    let stats = dist.sched_stats().clone();
+    let stats = dist.trainer().sched_stats().clone();
     assert!(stats.repartitions >= 1, "{stats}");
     assert!(stats.straggler_flags >= 1, "8x straggler never flagged: {stats}");
     assert_eq!(stats.departures, 0, "{stats}");
     assert_eq!(stats.utilization.len(), 4, "{stats}");
     dist.shutdown().unwrap();
-    cluster.join().unwrap();
 
-    // Static oracle for the degraded fleet: a fresh trainer whose
+    // Static oracle for the degraded fleet: a fresh session whose
     // calibration already sees the slow device.
-    let oracle_plans = [
-        ThrottlePlan::fixed(slow),
-        ThrottlePlan::fixed(fast),
-        ThrottlePlan::fixed(fast),
-    ];
-    let mut ocl = spawn_inproc_planned(convdist::artifacts_dir(), &oracle_plans, None);
-    let mut oracle = DistTrainer::new(rt.clone(), ocl.take_links(), &cfg, fast).unwrap();
+    let mut oracle = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .master_throttle(fast)
+        .workers(&[slow, fast, fast])
+        .build()
+        .unwrap();
     let mut oracle_secs = Vec::new();
     for step in 0..5 {
         let batch = ds.batch(arch.batch, step).unwrap();
@@ -157,7 +159,6 @@ fn degraded_worker_triggers_repartition_and_recovers_near_oracle() {
         oracle_secs.push(t0.elapsed().as_secs_f64());
     }
     oracle.shutdown().unwrap();
-    ocl.join().unwrap();
 
     // Steady state (last 4 adaptive steps, well past the re-shard) within
     // 25% of the oracle (skipping its first step: executable preparation).
@@ -188,27 +189,42 @@ fn worker_leave_mid_epoch_matches_smaller_fleet_trajectory() {
     // pins the policy so this test isolates the membership path.
     let adaptive =
         AdaptiveConfig { imbalance_threshold: 5.0, heartbeat_every: 0, ..Default::default() };
-    let mut dist =
-        DistTrainer::with_adaptive(rt.clone(), links, &cfg, Throttle::none(), adaptive).unwrap();
+    let mut dist = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .links(links)
+        .adaptive(adaptive)
+        .build()
+        .unwrap();
     let mut losses = Vec::new();
+    let mut left_events = 0usize;
     for step in 0..cfg.steps {
         let batch = ds.batch(arch.batch, step).unwrap();
-        losses.push(dist.step(&batch).unwrap().loss);
+        let before = 1 + dist.trainer().alive_workers();
+        let r = dist.step(&batch).unwrap();
+        if r.devices < before {
+            left_events += 1;
+        }
+        losses.push(r.loss);
     }
-    assert_eq!(dist.alive_workers(), 1);
-    assert_eq!(dist.sched_stats().departures, 1);
+    assert_eq!(dist.trainer().alive_workers(), 1);
+    assert_eq!(dist.trainer().sched_stats().departures, 1);
+    assert_eq!(left_events, 1, "the departure must surface in exactly one step result");
     // The departed device's range was re-absorbed by the survivors.
     for layer in [1usize, 2] {
-        let covered: usize = dist.shards(layer).iter().map(|s| s.len()).sum();
+        let covered: usize = dist.trainer().shards(layer).iter().map(|s| s.len()).sum();
         assert_eq!(covered, arch.kernels(layer));
-        assert!(dist.shards(layer).iter().all(|s| s.device != 1), "left device scheduled");
+        assert!(
+            dist.trainer().shards(layer).iter().all(|s| s.device != 1),
+            "left device scheduled"
+        );
     }
     dist.shutdown().unwrap();
 
     // Reference run that started with one fewer worker, same seed.
     let mut ds2 = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 33);
     let links2: Vec<Box<dyn Link>> = vec![spawn_library_worker(1, None)];
-    let mut smaller = DistTrainer::new(rt.clone(), links2, &cfg, Throttle::none()).unwrap();
+    let mut smaller =
+        SessionBuilder::new().trainer(cfg.clone()).links(links2).build().unwrap();
     let mut ref_losses = Vec::new();
     for step in 0..cfg.steps {
         let batch = ds2.batch(arch.batch, step).unwrap();
@@ -240,17 +256,24 @@ fn hung_worker_is_dropped_on_gather_deadline() {
         heartbeat_every: 0,
         ..Default::default()
     };
-    let mut dist =
-        DistTrainer::with_adaptive(rt.clone(), links, &cfg, Throttle::none(), adaptive).unwrap();
+    let mut dist = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .links(links)
+        .adaptive(adaptive)
+        .build()
+        .unwrap();
     for step in 0..cfg.steps {
         let batch = ds.batch(arch.batch, step).unwrap();
         let r = dist.step(&batch).unwrap();
         assert!(r.loss.is_finite());
     }
-    assert_eq!(dist.alive_workers(), 1);
-    assert_eq!(dist.sched_stats().departures, 1);
+    assert_eq!(dist.trainer().alive_workers(), 1);
+    assert_eq!(dist.trainer().sched_stats().departures, 1);
     for layer in [1usize, 2] {
-        assert!(dist.shards(layer).iter().all(|s| s.device != 1), "hung device scheduled");
+        assert!(
+            dist.trainer().shards(layer).iter().all(|s| s.device != 1),
+            "hung device scheduled"
+        );
     }
     dist.shutdown().unwrap();
     // The wedged worker thread is reaped with the test process.
@@ -272,30 +295,40 @@ fn adaptation_disabled_is_identical_to_static_path() {
     // and exact table comparison is meaningful.
     let v = Throttle::virtual_gflops(0.5);
     let degrading = ThrottlePlan::degrade_after(v, 8, Throttle::virtual_gflops(0.25));
-    let plans = [degrading, ThrottlePlan::fixed(v)];
+    let plans = vec![degrading, ThrottlePlan::fixed(v)];
 
-    let mut c1 = spawn_inproc_planned(convdist::artifacts_dir(), &plans, None);
-    let mut stat = DistTrainer::new(rt.clone(), c1.take_links(), &cfg, v).unwrap();
-    let mut c2 = spawn_inproc_planned(convdist::artifacts_dir(), &plans, None);
-    let mut off = DistTrainer::with_adaptive(
-        rt.clone(),
-        c2.take_links(),
-        &cfg,
-        v,
-        AdaptiveConfig::disabled(),
-    )
-    .unwrap();
+    let mut stat = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .master_throttle(v)
+        .worker_plans(plans.clone())
+        .build()
+        .unwrap();
+    let mut off = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .master_throttle(v)
+        .worker_plans(plans)
+        .adaptive(AdaptiveConfig::disabled())
+        .build()
+        .unwrap();
 
-    assert_eq!(stat.probe_times(), off.probe_times(), "virtual probes must be deterministic");
+    assert_eq!(
+        stat.trainer().probe_times(),
+        off.trainer().probe_times(),
+        "virtual probes must be deterministic"
+    );
     for layer in [1usize, 2] {
-        assert_eq!(stat.shards(layer), off.shards(layer));
+        assert_eq!(stat.trainer().shards(layer), off.trainer().shards(layer));
         // The disabled path is the pure Eq. 1 partitioner, nothing more.
-        let direct =
-            partition_layer(arch.kernels(layer), off.probe_times(), arch.buckets(layer)).unwrap();
-        assert_eq!(off.shards(layer), &direct[..]);
+        let direct = partition_layer(
+            arch.kernels(layer),
+            off.trainer().probe_times(),
+            arch.buckets(layer),
+        )
+        .unwrap();
+        assert_eq!(off.trainer().shards(layer), &direct[..]);
     }
-    let initial1 = stat.shards(1).to_vec();
-    let initial2 = stat.shards(2).to_vec();
+    let initial1 = stat.trainer().shards(1).to_vec();
+    let initial2 = stat.trainer().shards(2).to_vec();
 
     let mut ds_a = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 55);
     let mut ds_b = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 55);
@@ -313,14 +346,12 @@ fn adaptation_disabled_is_identical_to_static_path() {
     }
     // The mid-run degradation must NOT move the tables when adaptation is
     // off — exactly the static paper behavior.
-    assert_eq!(off.shards(1), &initial1[..]);
-    assert_eq!(off.shards(2), &initial2[..]);
-    assert_eq!(off.sched_stats().repartitions, 0);
-    assert_eq!(off.sched_stats().straggler_flags, 0);
-    let diff = stat.params.max_abs_diff(&off.params).unwrap();
+    assert_eq!(off.trainer().shards(1), &initial1[..]);
+    assert_eq!(off.trainer().shards(2), &initial2[..]);
+    assert_eq!(off.trainer().sched_stats().repartitions, 0);
+    assert_eq!(off.trainer().sched_stats().straggler_flags, 0);
+    let diff = stat.trainer().params.max_abs_diff(&off.trainer().params).unwrap();
     assert!(diff < 1e-4, "param divergence with adaptation off: {diff}");
     stat.shutdown().unwrap();
     off.shutdown().unwrap();
-    c1.join().unwrap();
-    c2.join().unwrap();
 }

@@ -3,14 +3,15 @@
 //! without affecting the classification performance" — i.e. the distributed
 //! step computes the *same* update as single-device training.
 //!
-//! Requires `make artifacts` (the Makefile's `test` target orders this).
+//! Clusters are composed through the session API (`SessionBuilder`); the
+//! single-device references stay on the raw baseline trainers.
 
 mod common;
 
 use convdist::baselines::{DataParallelTrainer, SingleDeviceTrainer};
-use convdist::cluster::{spawn_inproc, DistTrainer};
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
+use convdist::session::SessionBuilder;
 
 #[test]
 fn distributed_step_matches_single_device() {
@@ -29,8 +30,11 @@ fn distributed_step_matches_single_device() {
     }
 
     // Distributed: master + 2 workers, same seed.
-    let mut cluster = spawn_inproc(convdist::artifacts_dir(), &[Throttle::none(); 2], None);
-    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut dist = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .workers(&[Throttle::none(); 2])
+        .build()
+        .unwrap();
     let mut dist_losses = Vec::new();
     for step in 0..cfg.steps {
         let batch = ds.batch(arch.batch, step).unwrap();
@@ -48,11 +52,10 @@ fn distributed_step_matches_single_device() {
         );
     }
     // And the parameters themselves must agree.
-    let diff = dist.params.max_abs_diff(&single.params).unwrap();
+    let diff = dist.trainer().params.max_abs_diff(&single.params).unwrap();
     assert!(diff < 5e-3, "param divergence after {} steps: {diff}", cfg.steps);
 
     dist.shutdown().unwrap();
-    cluster.join().unwrap();
 }
 
 #[test]
@@ -65,15 +68,14 @@ fn distributed_matches_with_heterogeneous_throttles() {
     let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 9);
 
     let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none()).unwrap();
-    let mut cluster = spawn_inproc(
-        convdist::artifacts_dir(),
-        &[Throttle::new(2.0), Throttle::new(4.0)],
-        None,
-    );
-    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut dist = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .workers(&[Throttle::new(2.0), Throttle::new(4.0)])
+        .build()
+        .unwrap();
 
     // The throttled workers must have received *smaller* shards.
-    let shards = dist.shards(2);
+    let shards = dist.trainer().shards(2);
     let master_shard = shards.iter().find(|s| s.device == 0).map(|s| s.len()).unwrap_or(0);
     let w2_shard = shards.iter().find(|s| s.device == 2).map(|s| s.len()).unwrap_or(0);
     assert!(
@@ -87,10 +89,9 @@ fn distributed_matches_with_heterogeneous_throttles() {
         let r = dist.step(&batch).unwrap();
         assert!((sl - r.loss).abs() < 1e-3 * sl.abs().max(1.0), "step {step}: {sl} vs {}", r.loss);
     }
-    let diff = dist.params.max_abs_diff(&single.params).unwrap();
+    let diff = dist.trainer().params.max_abs_diff(&single.params).unwrap();
     assert!(diff < 5e-3, "param divergence: {diff}");
     dist.shutdown().unwrap();
-    cluster.join().unwrap();
 }
 
 #[test]
@@ -118,27 +119,22 @@ fn data_parallel_baseline_trains_and_differs_by_averaging_only() {
 fn training_reduces_loss_and_beats_chance_accuracy() {
     // The e2e learning signal at test scale: 15 steps of distributed
     // training on the synthetic task must cut the loss and beat 10-class
-    // chance on a held-out batch.
-    let rt = common::runtime();
-    let arch = rt.arch().clone();
+    // chance on a held-out batch — driven entirely by Session::run.
     let cfg = common::fast_cfg(15);
-    let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 13);
-
-    let mut cluster = spawn_inproc(convdist::artifacts_dir(), &[Throttle::none(); 2], None);
-    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
-    let mut first = None;
-    let mut last = 0.0;
-    for step in 0..cfg.steps {
-        let batch = ds.batch(arch.batch, step).unwrap();
-        let r = dist.step(&batch).unwrap();
-        first.get_or_insert(r.loss);
-        last = r.loss;
-    }
-    let first = first.unwrap();
+    let mut session = SessionBuilder::new()
+        .trainer(cfg)
+        .workers(&[Throttle::none(); 2])
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.steps_run, 15);
+    let first = report.losses[0];
+    let last = report.final_loss();
     assert!(last < first, "loss must fall: {first} -> {last}");
-    let held_out = ds.batch(arch.batch, 10_000).unwrap();
-    let acc = dist.eval_accuracy(&held_out).unwrap();
-    assert!(acc > 0.15, "accuracy {acc} should beat 10-class chance");
-    dist.shutdown().unwrap();
-    cluster.join().unwrap();
+    assert!(
+        report.eval_accuracy > 0.15,
+        "accuracy {} should beat 10-class chance",
+        report.eval_accuracy
+    );
+    session.shutdown().unwrap();
 }

@@ -5,12 +5,13 @@
 
 mod common;
 
-use convdist::cluster::{worker_loop, DistTrainer, WorkerOptions};
+use convdist::cluster::{worker_loop, WorkerOptions};
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
 use convdist::net::{inproc_pair, Link};
 use convdist::proto::Message;
 use convdist::runtime::Runtime;
+use convdist::session::SessionBuilder;
 
 /// A worker that serves calibration + `live_batches` worth of conv work,
 /// then drops the link (simulating a crash).
@@ -78,8 +79,8 @@ fn master_survives_worker_death_and_repartitions() {
     // Worker 1 dies after serving 2 ConvWork messages (mid-batch: each step
     // issues 4 per worker), worker 2 stays healthy.
     let links: Vec<Box<dyn Link>> = vec![spawn_dying_worker(1, 2), spawn_healthy_worker(2)];
-    let mut dist = DistTrainer::new(rt.clone(), links, &cfg, Throttle::none()).unwrap();
-    assert_eq!(dist.alive_workers(), 2);
+    let mut dist = SessionBuilder::new().trainer(cfg.clone()).links(links).build().unwrap();
+    assert_eq!(dist.trainer().alive_workers(), 2);
 
     let mut losses = Vec::new();
     for step in 0..cfg.steps {
@@ -88,12 +89,15 @@ fn master_survives_worker_death_and_repartitions() {
         losses.push(res.loss);
     }
     // The dying worker was dropped; training continued on master + worker 2.
-    assert_eq!(dist.alive_workers(), 1);
+    assert_eq!(dist.trainer().alive_workers(), 1);
     // Post-death shards must cover both layers over the 2 survivors.
     for layer in [1, 2] {
-        let covered: usize = dist.shards(layer).iter().map(|s| s.len()).sum();
+        let covered: usize = dist.trainer().shards(layer).iter().map(|s| s.len()).sum();
         assert_eq!(covered, rt.arch().kernels(layer));
-        assert!(dist.shards(layer).iter().all(|s| s.device != 1), "dead device still scheduled");
+        assert!(
+            dist.trainer().shards(layer).iter().all(|s| s.device != 1),
+            "dead device still scheduled"
+        );
     }
     // And the numerics still match a single-device reference.
     let mut single = convdist::baselines::SingleDeviceTrainer::new(
@@ -122,16 +126,16 @@ fn all_workers_dead_falls_back_to_master_only() {
     let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 32);
 
     let links: Vec<Box<dyn Link>> = vec![spawn_dying_worker(1, 0)];
-    let mut dist = DistTrainer::new(rt.clone(), links, &cfg, Throttle::none()).unwrap();
+    let mut dist = SessionBuilder::new().trainer(cfg.clone()).links(links).build().unwrap();
     for step in 0..cfg.steps {
         let batch = ds.batch(arch.batch, step).unwrap();
         let res = dist.step(&batch).unwrap();
         assert!(res.loss.is_finite());
     }
-    assert_eq!(dist.alive_workers(), 0);
+    assert_eq!(dist.trainer().alive_workers(), 0);
     // Master holds every kernel now.
     for layer in [1, 2] {
-        assert!(dist.shards(layer).iter().all(|s| s.device == 0));
+        assert!(dist.trainer().shards(layer).iter().all(|s| s.device == 0));
     }
     dist.shutdown().unwrap();
 }

@@ -7,13 +7,14 @@
 use std::sync::Arc;
 
 use convdist::baselines::SingleDeviceTrainer;
-use convdist::cluster::{worker_loop, DistTrainer, WorkerOptions};
+use convdist::cluster::{worker_loop, WorkerOptions};
 use convdist::config::TrainerConfig;
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
 use convdist::model::Params;
 use convdist::net::{inproc_pair, Link};
 use convdist::runtime::{ArchSpec, Runtime};
+use convdist::session::SessionBuilder;
 use convdist::tensor::Value;
 
 fn deep_runtime() -> Arc<Runtime> {
@@ -59,12 +60,17 @@ fn three_conv_distributed_heterogeneous_matches_single_device() {
         spawn_deep_worker(1, Throttle::none()),
         spawn_deep_worker(2, Throttle::new(3.0)),
     ];
-    let mut dist = DistTrainer::new(rt.clone(), links, &cfg, Throttle::none()).unwrap();
+    let mut dist = SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny_deep())
+        .trainer(cfg.clone())
+        .links(links)
+        .build()
+        .unwrap();
     let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none()).unwrap();
 
     // Every conv layer got its own Eq. 1 shard table covering [0, k).
     for layer in 1..=arch.num_convs() {
-        let covered: usize = dist.shards(layer).iter().map(|s| s.len()).sum();
+        let covered: usize = dist.trainer().shards(layer).iter().map(|s| s.len()).sum();
         assert_eq!(covered, arch.kernels(layer), "conv{layer} not fully covered");
     }
 
@@ -79,12 +85,12 @@ fn three_conv_distributed_heterogeneous_matches_single_device() {
             r.loss
         );
     }
-    let diff = dist.params.max_abs_diff(&single.params).unwrap();
+    let diff = dist.trainer().params.max_abs_diff(&single.params).unwrap();
     assert!(diff <= 1e-4, "3-conv distributed vs single params diverged: {diff}");
 
     // The eval path composes over three conv layers too.
     let held_out = ds.batch(arch.batch, 999).unwrap();
-    let acc = dist.eval_accuracy(&held_out).unwrap();
+    let acc = dist.eval(&held_out).unwrap();
     assert!((0.0..=1.0).contains(&acc));
 
     dist.shutdown().unwrap();
@@ -144,6 +150,35 @@ fn three_conv_grad_full_passes_directional_gradcheck() {
             "param {name}: directional fd {fd} vs ||g|| {norm}"
         );
     }
+}
+
+#[test]
+fn python_emitted_graph_config_loads_via_manifest() {
+    // The cross-language contract: python's `model.graph_config` emitted
+    // this fixture (tests/fixtures/py_graph_config.json, asserted
+    // byte-identical by python/tests/test_manifest_schema.py); it must load
+    // through ArchSpec/Manifest and derive the same architecture the native
+    // backend synthesizes for the default 16:32 @ 64 geometry.
+    let text = include_str!("fixtures/py_graph_config.json");
+    let arch = ArchSpec::from_json_str(text).unwrap();
+    let native = ArchSpec::native_default();
+    assert_eq!(arch.layers, native.layers);
+    assert_eq!(arch.convs, native.convs);
+    assert_eq!(arch.param_shapes, native.param_shapes);
+    assert_eq!(arch.param_order, native.param_order);
+    assert_eq!(arch.batch_buckets, native.batch_buckets);
+    assert_eq!(arch.label(), "16:32");
+    // The python pipeline pins its own (bigger) probe; the override wins
+    // over the synthesized default.
+    assert_eq!(arch.probe.flops, 60_211_200);
+    assert_eq!((arch.probe.batch, arch.probe.img, arch.probe.k), (16, 32, 32));
+    assert_eq!((arch.probe.kh, arch.probe.kw), (5, 5));
+    // A full manifest wrapping this config parses end to end.
+    let doc = format!("{{\"version\": 1, \"config\": {text}, \"executables\": {{}}}}");
+    let m = convdist::runtime::Manifest::from_json_str(&doc, std::path::Path::new("/tmp"))
+        .unwrap();
+    assert_eq!(m.config.label(), "16:32");
+    assert_eq!(m.config.fc_in, 32 * 5 * 5);
 }
 
 #[test]

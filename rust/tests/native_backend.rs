@@ -19,6 +19,7 @@ use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
 use convdist::net::{inproc_pair, Link};
 use convdist::runtime::{ArchSpec, Runtime};
+use convdist::sched::AdaptiveConfig;
 use convdist::tensor::{Pcg32, Tensor, Value};
 
 fn tiny_runtime() -> Arc<Runtime> {
@@ -210,7 +211,9 @@ fn tiny_arch_distributed_heterogeneous_matches_single_within_1e4() {
         spawn_tiny_worker(2, Throttle::new(2.0)),
         spawn_tiny_worker(3, Throttle::new(4.0)),
     ];
-    let mut dist = DistTrainer::new(rt.clone(), links, &cfg, Throttle::none()).unwrap();
+    let mut dist =
+        DistTrainer::new(rt.clone(), links, &cfg, Throttle::none(), AdaptiveConfig::disabled())
+            .unwrap();
     let mut single = SingleDeviceTrainer::new(rt.clone(), &cfg, Throttle::none()).unwrap();
 
     // Every layer is fully covered by the Eq. 1 partition.

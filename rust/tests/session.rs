@@ -1,0 +1,269 @@
+//! The session API contract: a `SessionBuilder`-composed run IS the legacy
+//! hand-assembled `DistTrainer` run (bit-for-bit on the tiny preset), events
+//! fire in order, `ExperimentConfig` drives a full session, and
+//! checkpoint/resume continues a run exactly where it stopped.
+//!
+//! Determinism setup: rayon is pinned to one thread (set before any pool
+//! exists in this test binary) so intra-op reduction splits cannot vary, and
+//! every device runs a *virtual-time* throttle so calibration probes — and
+//! therefore Eq. 1 shard tables — are identical across runs.  Under those
+//! two pins the whole stack is deterministic and exact float comparison is
+//! meaningful.
+
+use std::sync::{Arc, Mutex, Once};
+
+use convdist::cluster::{worker_loop, DistTrainer, WorkerOptions};
+use convdist::config::{ExperimentConfig, TrainerConfig};
+use convdist::data::default_dataset;
+use convdist::devices::Throttle;
+use convdist::net::{inproc_pair, Link};
+use convdist::runtime::{ArchSpec, Runtime};
+use convdist::sched::AdaptiveConfig;
+use convdist::session::{Event, Session, SessionBuilder};
+
+static SERIAL_RAYON: Once = Once::new();
+
+/// Pin the global rayon pool to one thread.  Every test calls this first,
+/// before any rayon use in the process, so the pool is built single-threaded
+/// and adaptive iterator splitting (the one nondeterminism in the native
+/// kernels' fold/reduce gradients) cannot occur.
+fn serial_rayon() {
+    SERIAL_RAYON.call_once(|| {
+        std::env::set_var("RAYON_NUM_THREADS", "1");
+    });
+}
+
+/// Virtual device speed for the tiny arch: slow enough that the virtual
+/// duration dominates real compute (deterministic probes), fast enough that
+/// a test run stays in milliseconds.
+const VGF: f64 = 0.2;
+
+fn vthrottle() -> Throttle {
+    Throttle::virtual_gflops(VGF)
+}
+
+fn tiny_cfg(steps: usize) -> TrainerConfig {
+    TrainerConfig {
+        steps,
+        lr: 0.05,
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        seed: 42,
+        log_every: 100,
+        calib_rounds: 1,
+    }
+}
+
+fn tiny_session(steps: usize) -> Session {
+    SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny())
+        .trainer(tiny_cfg(steps))
+        .master_throttle(vthrottle())
+        .workers(&[vthrottle(), vthrottle()])
+        .build()
+        .unwrap()
+}
+
+/// The pre-session composition: hand-spawned worker threads over in-proc
+/// links plus a directly constructed `DistTrainer` — what every example
+/// used to inline.
+fn legacy_worker(id: u32) -> Box<dyn Link> {
+    let (master_end, worker_end) = inproc_pair();
+    std::thread::Builder::new()
+        .name(format!("legacy-worker-{id}"))
+        .spawn(move || {
+            let rt = Runtime::for_arch(ArchSpec::tiny());
+            let _ = worker_loop(worker_end, rt, WorkerOptions::new(id, vthrottle()));
+        })
+        .unwrap();
+    Box::new(master_end)
+}
+
+#[test]
+fn session_reproduces_legacy_trainer_bit_for_bit() {
+    serial_rayon();
+    let steps = 4;
+    let cfg = tiny_cfg(steps);
+    let arch = ArchSpec::tiny();
+
+    // Legacy-style run: manual links + DistTrainer + hand-rolled loop.
+    let rt = Runtime::for_arch(arch.clone());
+    let links = vec![legacy_worker(1), legacy_worker(2)];
+    let mut legacy =
+        DistTrainer::new(rt, links, &cfg, vthrottle(), AdaptiveConfig::disabled()).unwrap();
+    let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, cfg.seed);
+    let mut legacy_losses = Vec::new();
+    for step in 0..steps {
+        let batch = ds.batch(arch.batch, step).unwrap();
+        legacy_losses.push(legacy.step(&batch).unwrap().loss);
+    }
+
+    // Session-built run, same axes.
+    let mut session = tiny_session(steps);
+    assert_eq!(
+        session.trainer().probe_times(),
+        legacy.probe_times(),
+        "virtual-time probes must be identical"
+    );
+    for layer in 1..=arch.num_convs() {
+        assert_eq!(session.trainer().shards(layer), legacy.shards(layer));
+    }
+    let mut ds2 = default_dataset(arch.img, arch.in_ch, arch.num_classes, cfg.seed);
+    for step in 0..steps {
+        let batch = ds2.batch(arch.batch, step).unwrap();
+        let loss = session.step(&batch).unwrap().loss;
+        assert_eq!(
+            loss.to_bits(),
+            legacy_losses[step].to_bits(),
+            "step {step}: session loss {loss} != legacy loss {}",
+            legacy_losses[step]
+        );
+    }
+    let diff = session.trainer().params.max_abs_diff(&legacy.params).unwrap();
+    assert_eq!(diff, 0.0, "session and legacy params must be bit-identical");
+
+    legacy.shutdown().unwrap();
+    session.shutdown().unwrap();
+}
+
+#[test]
+fn checkpoint_resume_equals_uninterrupted_run() {
+    serial_rayon();
+    let total = 6;
+    let half = 3;
+
+    // Uninterrupted reference: one session, `total` steps.
+    let mut full = tiny_session(total);
+    let full_report = full.run().unwrap();
+    assert_eq!(full_report.steps_run, total);
+    let full_params = full.trainer().params.to_named();
+    full.shutdown().unwrap();
+
+    // Interrupted run: `half` steps, checkpoint to disk, fresh session
+    // resumes from the file and trains the remaining steps.
+    let ckpt_path =
+        std::env::temp_dir().join(format!("convdist-ckpt-{}.bin", std::process::id()));
+    let mut first = tiny_session(half);
+    let first_report = first.run().unwrap();
+    first.save_checkpoint(&ckpt_path).unwrap();
+    first.shutdown().unwrap();
+
+    let mut resumed = SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny())
+        .trainer(tiny_cfg(total - half))
+        .master_throttle(vthrottle())
+        .workers(&[vthrottle(), vthrottle()])
+        .resume_from(&ckpt_path)
+        .build()
+        .unwrap();
+    assert_eq!(resumed.trainer().steps_done(), half as u64);
+    let resumed_report = resumed.run().unwrap();
+    assert_eq!(resumed_report.first_step, half as u64);
+
+    // The loss trajectory continues exactly: first half + resumed half ==
+    // the uninterrupted run, bit for bit.
+    let stitched: Vec<f32> = first_report
+        .losses
+        .iter()
+        .chain(&resumed_report.losses)
+        .copied()
+        .collect();
+    assert_eq!(stitched.len(), full_report.losses.len());
+    for (i, (a, b)) in stitched.iter().zip(&full_report.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "step {i}: stitched {a} vs uninterrupted {b}");
+    }
+    // And so do the parameters (momentum state traveled through the file).
+    let resumed_params = resumed.trainer().params.to_named();
+    for ((na, ta), (nb, tb)) in resumed_params.iter().zip(&full_params) {
+        assert_eq!(na, nb);
+        assert!(
+            ta.data().iter().zip(tb.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "param {na} diverged after resume"
+        );
+    }
+    resumed.shutdown().unwrap();
+    let _ = std::fs::remove_file(&ckpt_path);
+}
+
+#[test]
+fn restore_rejects_wrong_architecture() {
+    serial_rayon();
+    let full = tiny_session(1);
+    let ckpt = full.checkpoint();
+    full.shutdown().unwrap();
+
+    // A master-only tiny_deep session is cheap to build.
+    let mut other = SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny_deep())
+        .trainer(tiny_cfg(1))
+        .master_throttle(vthrottle())
+        .build()
+        .unwrap();
+    let err = other.restore(&ckpt).unwrap_err();
+    assert!(format!("{err:#}").contains("arch"), "unhelpful error: {err:#}");
+    other.shutdown().unwrap();
+}
+
+#[test]
+fn events_fire_in_order_with_checkpoint_and_eval() {
+    serial_rayon();
+    let log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = log.clone();
+    let mut session = SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny())
+        .trainer(tiny_cfg(2))
+        .master_throttle(vthrottle())
+        .workers(&[vthrottle()])
+        .on_event(move |ev| {
+            let tag = match ev {
+                Event::StepCompleted { step, loss, devices, .. } => {
+                    assert!(loss.is_finite());
+                    assert_eq!(*devices, 2);
+                    format!("step{step}")
+                }
+                Event::Repartitioned { .. } => "repartition".into(),
+                Event::WorkerLeft { .. } => "left".into(),
+                Event::EvalDone { accuracy, .. } => {
+                    assert!((0.0..=1.0).contains(accuracy));
+                    "eval".into()
+                }
+                Event::CheckpointSaved { step, .. } => format!("ckpt{step}"),
+            };
+            sink.lock().unwrap().push(tag);
+        })
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.steps_run, 2);
+    let ckpt_path =
+        std::env::temp_dir().join(format!("convdist-ev-ckpt-{}.bin", std::process::id()));
+    session.save_checkpoint(&ckpt_path).unwrap();
+    session.shutdown().unwrap();
+    let _ = std::fs::remove_file(&ckpt_path);
+
+    let got = log.lock().unwrap().clone();
+    assert_eq!(got, vec!["step1", "step2", "eval", "ckpt2"]);
+}
+
+#[test]
+fn experiment_config_drives_a_full_session() {
+    serial_rayon();
+    // The serialized-builder form: a JSON config with an arch preset maps
+    // onto the same axes and runs end to end (`convdist run --config`).
+    let cfg = ExperimentConfig::from_json_str(
+        r#"{
+          "name": "session-test",
+          "arch": "tiny",
+          "trainer": {"steps": 2, "calib_rounds": 1, "log_every": 1},
+          "cluster": {"workers": 1, "devices": "uniform"}
+        }"#,
+    )
+    .unwrap();
+    let mut session = SessionBuilder::from_experiment(&cfg).unwrap().build().unwrap();
+    assert_eq!(session.runtime().arch().label(), "4:8");
+    let report = session.run().unwrap();
+    assert_eq!(report.steps_run, 2);
+    assert!(report.final_loss().is_finite());
+    assert!(report.bytes_moved > 0, "one worker must move bytes");
+    session.shutdown().unwrap();
+}

@@ -6,9 +6,9 @@
 
 mod common;
 
-use convdist::cluster::{spawn_inproc, DistTrainer};
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
+use convdist::session::SessionBuilder;
 use convdist::sim::ArchShape;
 
 fn arch_shape(rt: &convdist::runtime::Runtime) -> ArchShape {
@@ -35,8 +35,11 @@ fn real_wire_volume_matches_eq2_model() {
     let cfg = common::fast_cfg(1);
     let mut ds = SyntheticCifar::new(arch.img, arch.in_ch, arch.num_classes, 41);
 
-    let mut cluster = spawn_inproc(convdist::artifacts_dir(), &[Throttle::none(); 2], None);
-    let mut dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut dist = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .workers(&[Throttle::none(); 2])
+        .build()
+        .unwrap();
     let batch = ds.batch(arch.batch, 0).unwrap();
     let res = dist.step(&batch).unwrap();
 
@@ -46,8 +49,13 @@ fn real_wire_volume_matches_eq2_model() {
         let mut total = 0.0;
         for layer in [1usize, 2] {
             let k = arch.kernels(layer) as f64;
-            let slaves: usize =
-                dist.shards(layer).iter().filter(|s| s.device != 0).map(|s| s.len()).sum();
+            let slaves: usize = dist
+                .trainer()
+                .shards(layer)
+                .iter()
+                .filter(|s| s.device != 0)
+                .map(|s| s.len())
+                .sum();
             total += slaves as f64 / k / 2.0;
         }
         total
@@ -63,7 +71,6 @@ fn real_wire_volume_matches_eq2_model() {
         "Eq.2+bwd model {model_bytes:.0}B vs real wire {real:.0}B (ratio {ratio:.3})"
     );
     dist.shutdown().unwrap();
-    cluster.join().unwrap();
 }
 
 #[test]
@@ -87,13 +94,18 @@ fn throttled_cluster_overlaps_conv_like_the_model() {
     let th = Throttle::virtual_gflops(0.5);
 
     // Solo master at 10x.
-    let mut solo = DistTrainer::new(rt.clone(), vec![], &cfg, th).unwrap();
+    let mut solo =
+        SessionBuilder::new().trainer(cfg.clone()).master_throttle(th).build().unwrap();
     let _ = solo.step(&batch).unwrap(); // warm the executables
     let solo_conv = solo.step(&batch).unwrap().breakdown.conv;
 
     // Master + 1 worker, both 10x: Eq. 1 splits ~evenly, sleeps overlap.
-    let mut cluster = spawn_inproc(convdist::artifacts_dir(), &[th], None);
-    let mut duo = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, th).unwrap();
+    let mut duo = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .master_throttle(th)
+        .workers(&[th])
+        .build()
+        .unwrap();
     let _ = duo.step(&batch).unwrap();
     let duo_conv = duo.step(&batch).unwrap().breakdown.conv;
 
@@ -108,7 +120,6 @@ fn throttled_cluster_overlaps_conv_like_the_model() {
 
     solo.shutdown().unwrap();
     duo.shutdown().unwrap();
-    cluster.join().unwrap();
 }
 
 #[test]
@@ -117,21 +128,24 @@ fn shard_proportions_match_eq1_shares() {
     // strongly throttled (deterministic-ish) devices.
     let rt = common::runtime();
     let cfg = common::fast_cfg(1);
-    let mut cluster = spawn_inproc(
-        convdist::artifacts_dir(),
-        &[Throttle::new(2.0), Throttle::new(2.0)],
-        None,
-    );
-    let dist = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+    let dist = SessionBuilder::new()
+        .trainer(cfg)
+        .workers(&[Throttle::new(2.0), Throttle::new(2.0)])
+        .build()
+        .unwrap();
     // Shares: master 1x, workers 0.5x each -> master = 1/2 of the work.
     let k2 = rt.arch().kernels(2) as f64;
-    let master2 =
-        dist.shards(2).iter().find(|s| s.device == 0).map(|s| s.len()).unwrap_or(0) as f64;
+    let master2 = dist
+        .trainer()
+        .shards(2)
+        .iter()
+        .find(|s| s.device == 0)
+        .map(|s| s.len())
+        .unwrap_or(0) as f64;
     let frac = master2 / k2;
     assert!(
         (0.32..=0.68).contains(&frac),
         "master share {frac:.2} should be near 0.5 for a 1x/2x/2x cluster"
     );
     dist.shutdown().unwrap();
-    cluster.join().unwrap();
 }

@@ -1,18 +1,23 @@
 //! The real deployment shape: workers listening on TCP sockets, master
 //! connecting over loopback — Algorithm 1 line 2 verbatim.  Numerics must
 //! match the in-proc path (it is the same code over a different Link).
+//! The master side composes through `SessionBuilder::tcp`.
 
 mod common;
 
 use std::net::TcpListener;
 
-use convdist::cluster::{worker_loop, DistTrainer, WorkerOptions};
+use convdist::cluster::{worker_loop, WorkerOptions};
 use convdist::data::{Dataset, SyntheticCifar};
 use convdist::devices::Throttle;
 use convdist::net::{Link, LinkModel, ShapedLink, TcpLink};
 use convdist::runtime::Runtime;
+use convdist::session::SessionBuilder;
 
-fn spawn_tcp_worker(id: u32, slowdown: f64) -> (std::net::SocketAddr, std::thread::JoinHandle<anyhow::Result<()>>) {
+fn spawn_tcp_worker(
+    id: u32,
+    slowdown: f64,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<anyhow::Result<()>>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let handle = std::thread::spawn(move || {
@@ -32,19 +37,18 @@ fn tcp_cluster_trains_and_matches_inproc_losses() {
 
     let (addr1, h1) = spawn_tcp_worker(1, 1.0);
     let (addr2, h2) = spawn_tcp_worker(2, 1.0);
-    let links: Vec<Box<dyn Link>> = vec![
-        Box::new(TcpLink::connect(addr1).unwrap()),
-        Box::new(TcpLink::connect(addr2).unwrap()),
-    ];
-    let mut dist = DistTrainer::new(rt.clone(), links, &cfg, Throttle::none()).unwrap();
+    let mut dist = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .tcp(vec![addr1.to_string(), addr2.to_string()])
+        .build()
+        .unwrap();
 
     // In-proc reference with identical seeds.
-    let mut cluster = convdist::cluster::spawn_inproc(
-        convdist::artifacts_dir(),
-        &[Throttle::none(); 2],
-        None,
-    );
-    let mut inproc = DistTrainer::new(rt.clone(), cluster.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut inproc = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .workers(&[Throttle::none(); 2])
+        .build()
+        .unwrap();
 
     for step in 0..cfg.steps {
         let batch = ds.batch(arch.batch, step).unwrap();
@@ -58,14 +62,13 @@ fn tcp_cluster_trains_and_matches_inproc_losses() {
         );
         assert!(a.bytes_moved > 0, "tcp cluster must move bytes");
     }
-    let diff = dist.params.max_abs_diff(&inproc.params).unwrap();
+    let diff = dist.trainer().params.max_abs_diff(&inproc.trainer().params).unwrap();
     assert!(diff < 1e-4, "tcp vs inproc params: {diff}");
 
     dist.shutdown().unwrap();
     inproc.shutdown().unwrap();
     h1.join().unwrap().unwrap();
     h2.join().unwrap().unwrap();
-    cluster.join().unwrap();
 }
 
 #[test]
@@ -79,19 +82,21 @@ fn shaped_link_inflates_comm_share() {
     let batch = ds.batch(arch.batch, 1).unwrap();
 
     // Unshaped.
-    let mut c1 = convdist::cluster::spawn_inproc(convdist::artifacts_dir(), &[Throttle::none()], None);
-    let mut t1 = DistTrainer::new(rt.clone(), c1.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut t1 = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .workers(&[Throttle::none()])
+        .build()
+        .unwrap();
     let _ = t1.step(&batch).unwrap(); // compile warm-up
     let fast = t1.step(&batch).unwrap();
 
     // Shaped to ~200 Mbps: the ~14 MiB of per-step traffic costs ~0.6 s.
-    let model = LinkModel::mbps(200.0);
-    let mut c2 = convdist::cluster::spawn_inproc(
-        convdist::artifacts_dir(),
-        &[Throttle::none()],
-        Some(model),
-    );
-    let mut t2 = DistTrainer::new(rt.clone(), c2.take_links(), &cfg, Throttle::none()).unwrap();
+    let mut t2 = SessionBuilder::new()
+        .trainer(cfg.clone())
+        .workers(&[Throttle::none()])
+        .shaped(LinkModel::mbps(200.0))
+        .build()
+        .unwrap();
     let _ = t2.step(&batch).unwrap();
     let slow = t2.step(&batch).unwrap();
 
@@ -106,8 +111,6 @@ fn shaped_link_inflates_comm_share() {
 
     t1.shutdown().unwrap();
     t2.shutdown().unwrap();
-    c1.join().unwrap();
-    c2.join().unwrap();
 }
 
 #[test]
