@@ -4,7 +4,10 @@
 set -eux
 
 cargo fmt --all --check
-cargo clippy --all-targets -- -D warnings
+# -D warnings plus a curated always-deny subset: debug/stub macros and
+# mem::forget must never land, even if a future edit allows the lint group.
+cargo clippy --all-targets -- -D warnings -D clippy::dbg_macro -D clippy::todo \
+  -D clippy::unimplemented -D clippy::mem_forget
 cargo build --release
 cargo test -q
 # Adaptive-scheduler suite under the throttled in-proc cluster (also part
@@ -17,9 +20,21 @@ cargo test -q --test layer_graph
 # checkpoint/resume scenario (also part of `cargo test`; named so the
 # target stays alive).
 cargo test -q --test session
+# Static-analyzer gate (DESIGN.md §10): the bad_graphs corpus must fail
+# with its documented codes, shipped presets/configs must check clean.
+cargo test -q --test static_analysis
+# `convdist check` must pass (exit 0) on everything the repo ships.
+for arch in default tiny deep_cifar tiny_deep; do
+  cargo run --release -- check --arch "$arch"
+done
+for cfg in examples/configs/*.json; do
+  cargo run --release -- check --config "$cfg"
+done
 # Config-driven end-to-end smoke: one full session (arch preset, in-proc
 # fleet, eval) composed entirely from the checked-in experiment config.
 cargo run --release -- run --config examples/configs/smoke.json
+# Adaptive end-to-end: the config pre-flight plus an adaptive-enabled run.
+cargo run --release -- run --config examples/configs/adaptive.json
 # Static-vs-adaptive step-time trajectory from the scheduler simulator;
 # uploaded as a workflow artifact for trend tracking.
 cargo run --release --example bench_sched
@@ -30,3 +45,9 @@ cargo run --release --example bench_gemm
 test -s BENCH_gemm.json
 # The PJRT path must keep compiling even though it is an offline stub.
 cargo check --features pjrt
+# Sanitizer pass over the unsafe core (linalg byte-level GEMM paths with
+# SIMD forced off, proto wire-format byte casts) — runs where a nightly
+# miri is available; the GitHub workflow provisions one in a dedicated job.
+if cargo miri --version >/dev/null 2>&1; then
+  CONVDIST_NO_SIMD=1 cargo miri test -p convdist --lib -- linalg proto
+fi

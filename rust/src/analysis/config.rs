@@ -1,0 +1,304 @@
+//! Config pass: lint `ExperimentConfig` documents and structs.
+//!
+//! Two entry points: [`check_config_text`] works on raw JSON (so unknown
+//! keys get precise `section.key` locations before the strict parser
+//! rejects them wholesale) and [`check_config`] lints an already-parsed
+//! struct (knobs that can never fire, emulation flags ignored over TCP).
+//! [`check_experiment`] is the full pre-flight: config pass, then graph
+//! and plan passes against the config's own arch, roster and bandwidth —
+//! the same composite gate [`crate::session::SessionBuilder`] runs.
+
+use crate::config::{ArchChoice, ExperimentConfig};
+use crate::runtime::ArchSpec;
+use crate::util::json::Json;
+
+use super::diag::Report;
+use super::graph::check_spec;
+use super::plan::{check_plan, PlanCheckOptions};
+
+const ROOT_KEYS: &[&str] = &["name", "arch", "trainer", "cluster", "network", "adaptive"];
+const TRAINER_KEYS: &[&str] =
+    &["steps", "lr", "momentum", "weight_decay", "seed", "log_every", "calib_rounds"];
+const CLUSTER_KEYS: &[&str] = &["workers", "devices", "throttle", "worker_addrs"];
+const NETWORK_KEYS: &[&str] = &["bandwidth_mbps", "latency_ms", "shaped"];
+const ADAPTIVE_KEYS: &[&str] = &[
+    "enabled",
+    "alpha",
+    "warmup_steps",
+    "imbalance_threshold",
+    "hysteresis",
+    "cooldown_steps",
+    "straggler_k",
+    "straggler_min_ratio",
+    "heartbeat_every",
+    "heartbeat_timeout_ms",
+    "gather_timeout_ms",
+];
+
+fn lint_keys(rep: &mut Report, v: &Json, section: &str, allowed: &[&str]) {
+    if let Json::Obj(m) = v {
+        for key in m.keys() {
+            if !allowed.contains(&key.as_str()) {
+                let loc = if section.is_empty() {
+                    key.clone()
+                } else {
+                    format!("{section}.{key}")
+                };
+                rep.emit(
+                    "C001",
+                    Some(loc),
+                    format!("unknown key {key:?} (allowed: {allowed:?})"),
+                );
+            }
+        }
+    }
+}
+
+/// Lint a raw experiment-config document, then hand the parsed struct to
+/// [`check_experiment`].  Parse/validate failures become C002 diagnostics
+/// (or keep the more precise C001/C003 already emitted from the raw doc).
+pub fn check_config_text(text: &str) -> Report {
+    let mut rep = Report::new();
+    let v = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            rep.emit("C002", None, format!("config is not valid JSON: {e:#}"));
+            return rep;
+        }
+    };
+    lint_keys(&mut rep, &v, "", ROOT_KEYS);
+    for (section, allowed) in [
+        ("trainer", TRAINER_KEYS),
+        ("cluster", CLUSTER_KEYS),
+        ("network", NETWORK_KEYS),
+        ("adaptive", ADAPTIVE_KEYS),
+    ] {
+        if let Some(s) = v.opt(section) {
+            lint_keys(&mut rep, s, section, allowed);
+        }
+    }
+    // Topology mismatch straight off the raw doc, for a precise code.
+    if let Some(c) = v.opt("cluster") {
+        if let Some(addrs) = c.opt("worker_addrs").and_then(|x| x.as_arr().ok()) {
+            let workers = c
+                .opt("workers")
+                .and_then(|x| x.as_usize().ok())
+                .unwrap_or_else(|| crate::config::ClusterConfig::default().workers);
+            if !addrs.is_empty() && addrs.len() != workers {
+                rep.emit(
+                    "C003",
+                    Some("cluster.worker_addrs".into()),
+                    format!(
+                        "{} worker_addrs for workers={workers} — TCP mode needs exactly \
+                         one listen address per worker",
+                        addrs.len()
+                    ),
+                );
+            }
+        }
+    }
+    match ExperimentConfig::from_json_str(text) {
+        Ok(cfg) => rep.merge(check_experiment(&cfg)),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            // The strict parser stops at the first problem; skip C002 when a
+            // raw-doc lint above already coded that exact problem.
+            let already = (msg.contains("unknown key")
+                && rep.diags.iter().any(|d| d.code == "C001"))
+                || (msg.contains("worker_addrs")
+                    && rep.diags.iter().any(|d| d.code == "C003"));
+            if !already {
+                rep.emit("C002", None, msg);
+            }
+        }
+    }
+    rep
+}
+
+/// Struct-level config lints: everything checkable without the raw JSON.
+pub fn check_config(cfg: &ExperimentConfig) -> Report {
+    let mut rep = Report::new();
+    let steps = cfg.trainer.steps as u64;
+    let tcp = !cfg.cluster.worker_addrs.is_empty();
+    if tcp && cfg.cluster.worker_addrs.len() != cfg.cluster.workers {
+        rep.emit(
+            "C003",
+            Some("cluster.worker_addrs".into()),
+            format!(
+                "{} worker_addrs for workers={} — TCP mode needs exactly one listen \
+                 address per worker",
+                cfg.cluster.worker_addrs.len(),
+                cfg.cluster.workers
+            ),
+        );
+    }
+    if tcp && (cfg.cluster.throttle || cfg.network.shaped) {
+        rep.emit(
+            "C005",
+            Some("cluster".into()),
+            "throttle/shaped are in-proc emulation knobs — over TCP the links carry \
+             real device and network timing, so they are ignored",
+        );
+    }
+    if cfg.trainer.log_every as u64 > steps {
+        rep.emit(
+            "C006",
+            Some("trainer.log_every".into()),
+            format!(
+                "log_every={} exceeds steps={} — only the final report is logged",
+                cfg.trainer.log_every, cfg.trainer.steps
+            ),
+        );
+    }
+    if cfg.trainer.calib_rounds == 0 {
+        rep.emit(
+            "C007",
+            Some("trainer.calib_rounds".into()),
+            "calib_rounds=0 is clamped to 1 at calibration time — say what you mean",
+        );
+    }
+    let a = &cfg.adaptive;
+    if a.enabled {
+        if a.warmup_steps >= steps {
+            rep.emit(
+                "C004",
+                Some("adaptive.warmup_steps".into()),
+                format!(
+                    "warmup_steps={} >= steps={steps}: the policy never leaves warmup, \
+                     so no re-partition can ever fire",
+                    a.warmup_steps
+                ),
+            );
+        }
+        if a.cooldown_steps >= steps {
+            rep.emit(
+                "C004",
+                Some("adaptive.cooldown_steps".into()),
+                format!(
+                    "cooldown_steps={} >= steps={steps}: at most one re-partition can \
+                     ever fire",
+                    a.cooldown_steps
+                ),
+            );
+        }
+        if a.hysteresis >= a.imbalance_threshold && a.imbalance_threshold > 0.0 {
+            rep.emit(
+                "C004",
+                Some("adaptive.hysteresis".into()),
+                format!(
+                    "hysteresis={} >= imbalance_threshold={}: the re-arm level clamps \
+                     to a gain of 1.0, so under steady imbalance the policy triggers \
+                     once and effectively never re-arms",
+                    a.hysteresis, a.imbalance_threshold
+                ),
+            );
+        }
+        if a.heartbeat_every >= steps && a.heartbeat_every != 0 {
+            rep.emit(
+                "C004",
+                Some("adaptive.heartbeat_every".into()),
+                format!(
+                    "heartbeat_every={} >= steps={steps}: no heartbeat will ever be \
+                     sent, so a hung worker is only detected by gather_timeout",
+                    a.heartbeat_every
+                ),
+            );
+        }
+    }
+    rep
+}
+
+/// Full pre-flight over a parsed config: config lints, then the graph and
+/// plan passes against the config's own arch, device roster and bandwidth.
+pub fn check_experiment(cfg: &ExperimentConfig) -> Report {
+    let mut rep = check_config(cfg);
+    let arch = match &cfg.arch {
+        Some(ArchChoice::Preset(name)) => match ArchSpec::preset(name) {
+            Some(a) => Some(a),
+            None => {
+                rep.emit(
+                    "C002",
+                    Some("arch".into()),
+                    format!("unknown arch preset {name:?}"),
+                );
+                None
+            }
+        },
+        Some(ArchChoice::Graph(json)) => match ArchSpec::from_json_str(json) {
+            Ok(a) => Some(a),
+            Err(e) => {
+                rep.emit("C002", Some("arch".into()), format!("inline arch graph: {e:#}"));
+                None
+            }
+        },
+        // `None` = the artifact directory decides; analyze the native
+        // default the runtime synthesizes absent a manifest.
+        None => Some(ArchSpec::native_default()),
+    };
+    if let Some(arch) = arch {
+        rep.merge(check_spec(&arch));
+        rep.merge(check_plan(
+            &arch,
+            &cfg.device_profiles(),
+            &PlanCheckOptions {
+                bandwidth_mbps: cfg.network.bandwidth_mbps,
+                adaptive: Some(cfg.adaptive),
+            },
+        ));
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_keys_get_section_scoped_locations() {
+        let rep = check_config_text(r#"{"name": "x", "trainer": {"stepz": 3}}"#);
+        let d = rep.diags.iter().find(|d| d.code == "C001").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("trainer.stepz"));
+        assert!(rep.has_deny());
+        // No redundant C002 for the same problem.
+        assert!(!rep.diags.iter().any(|d| d.code == "C002"), "{}", rep.render_human());
+    }
+
+    #[test]
+    fn topology_mismatch_is_c003() {
+        let rep = check_config_text(
+            r#"{"name": "x", "cluster": {"workers": 2, "worker_addrs": ["127.0.0.1:7901"]}}"#,
+        );
+        assert!(rep.diags.iter().any(|d| d.code == "C003"), "{}", rep.render_human());
+        assert!(!rep.diags.iter().any(|d| d.code == "C002"), "{}", rep.render_human());
+    }
+
+    #[test]
+    fn dead_adaptive_knobs_warn() {
+        let text = r#"{
+            "name": "x",
+            "trainer": {"steps": 5},
+            "adaptive": {"enabled": true, "warmup_steps": 10,
+                         "hysteresis": 0.5, "imbalance_threshold": 0.2}
+        }"#;
+        let rep = check_config_text(text);
+        assert!(
+            rep.diags.iter().filter(|d| d.code == "C004").count() >= 2,
+            "{}",
+            rep.render_human()
+        );
+        assert!(!rep.has_deny(), "{}", rep.render_human());
+    }
+
+    #[test]
+    fn default_experiment_has_no_deny() {
+        let rep = check_experiment(&ExperimentConfig::default());
+        assert!(!rep.has_deny(), "{}", rep.render_human());
+    }
+
+    #[test]
+    fn malformed_json_is_c002_not_a_crash() {
+        let rep = check_config_text("{\"name\": ");
+        assert!(rep.diags.iter().any(|d| d.code == "C002"));
+        assert!(rep.has_deny());
+    }
+}

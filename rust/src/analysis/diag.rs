@@ -1,0 +1,242 @@
+//! The diagnostics engine behind `convdist check`.
+//!
+//! Every finding carries a **stable code** (`G…` graph pass, `P…` plan pass,
+//! `C…` config pass), a severity fixed by the [`REGISTRY`] — not by the call
+//! site — an optional source location into the analyzed document
+//! (`layers[3]`, `trainer.log_every`, `conv2.buckets`) and a human message.
+//! Reports render either human-readable (`error[G005]: … (at layers[0])`)
+//! or as JSON-lines for tooling.
+//!
+//! Codes are append-only: once shipped, a code keeps its meaning and its
+//! severity so fixtures, scripts and CI greps stay valid across versions.
+
+use std::fmt;
+
+/// How bad a finding is.  Ordered: `Note < Warn < Deny`.
+///
+/// * `Deny` — the artifact is unusable; `convdist check` exits non-zero and
+///   [`crate::session::SessionBuilder`] refuses to build a session from it.
+/// * `Warn` — legal but almost certainly not what was meant (dead layers,
+///   comm-bound plans, knobs that can never fire).
+/// * `Note` — informational reports (per-layer params/FLOPs/memory).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Note,
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warn => "warning",
+            Severity::Deny => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The code registry: `(code, severity, summary)`.  The single source of
+/// truth for what each code means — `Report::emit` looks severities up here,
+/// DESIGN.md §10 documents the same table, and the `bad_graphs/` fixtures
+/// name their expected code in their filename.
+pub const REGISTRY: &[(&str, Severity, &str)] = &[
+    // -- graph pass ---------------------------------------------------------
+    ("G001", Severity::Deny, "no conv layer before the Fc head"),
+    ("G002", Severity::Deny, "mid op (lrn/maxpool2/relu) before the first conv"),
+    ("G003", Severity::Deny, "non-square conv kernel (activations are square)"),
+    ("G004", Severity::Deny, "degenerate geometry (zero batch/img/in_ch/k/kh/kw/fc width)"),
+    ("G005", Severity::Deny, "conv kernel larger than its input (valid padding, stride 1)"),
+    ("G006", Severity::Deny, "maxpool2 over an odd extent (2x2 window, stride 2)"),
+    ("G007", Severity::Deny, "graph has no Fc head"),
+    ("G008", Severity::Deny, "SoftmaxXent missing, duplicated, or not directly after Fc"),
+    ("G009", Severity::Deny, "layer after the Fc head (only SoftmaxXent may follow)"),
+    ("G010", Severity::Deny, "graph JSON malformed (unknown op, missing or ill-typed key)"),
+    ("G011", Severity::Warn, "dead mid segment (op repeated back-to-back has no effect)"),
+    ("G012", Severity::Warn, "bucket-ladder oddity (unsorted, duplicate, zero or >k entry)"),
+    ("G013", Severity::Deny, "bucket-ladder override structurally invalid"),
+    ("G101", Severity::Note, "per-layer resource report (params, FLOPs, activation memory)"),
+    ("G102", Severity::Note, "whole-network resource totals"),
+    // -- plan pass ----------------------------------------------------------
+    ("P001", Severity::Warn, "device receives a zero-share shard (idles for the layer)"),
+    ("P002", Severity::Deny, "bucket ladder cannot cover a partition the scheduler can reach"),
+    ("P003", Severity::Warn, "bucket padding waste above 25% under the Eq.1 plan"),
+    ("P004", Severity::Warn, "predicted comm time >= conv compute time at this bandwidth"),
+    ("P005", Severity::Warn, "fewer kernels than devices (some devices always idle)"),
+    ("P006", Severity::Note, "single-device fleet (nothing to distribute)"),
+    ("P007", Severity::Deny, "activation+scratch memory exceeds the device budget (static plan)"),
+    ("P008", Severity::Warn, "worst adaptive-reachable bucket exceeds the device memory budget"),
+    ("P101", Severity::Note, "plan summary (Eq.1 shares, predicted step composition)"),
+    // -- config pass --------------------------------------------------------
+    ("C001", Severity::Deny, "unknown config key"),
+    ("C002", Severity::Deny, "config value invalid or config JSON malformed"),
+    ("C003", Severity::Deny, "worker_addrs count does not match cluster.workers"),
+    ("C004", Severity::Warn, "adaptive knob can never fire with these trainer settings"),
+    ("C005", Severity::Warn, "in-proc emulation knob (throttle/shaped) ignored over TCP"),
+    ("C006", Severity::Note, "log_every exceeds steps (no mid-run step logs)"),
+    ("C007", Severity::Warn, "calib_rounds is 0 (clamped to 1 at calibration time)"),
+];
+
+/// Look a code up in the [`REGISTRY`].
+pub fn lookup(code: &str) -> Option<(Severity, &'static str)> {
+    REGISTRY.iter().find(|(c, _, _)| *c == code).map(|&(_, sev, summary)| (sev, summary))
+}
+
+/// One finding: a registered code, its registry severity, an optional
+/// location into the analyzed document, and a message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub loc: Option<String>,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]: {}", self.severity, self.code, self.message)?;
+        if let Some(loc) = &self.loc {
+            write!(f, " (at {loc})")?;
+        }
+        Ok(())
+    }
+}
+
+/// An ordered collection of findings from one or more passes.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a finding.  The severity comes from the [`REGISTRY`]; an
+    /// unregistered code is a bug in the analyzer itself.
+    pub fn emit(&mut self, code: &'static str, loc: Option<String>, message: impl Into<String>) {
+        let (severity, _) = lookup(code)
+            .unwrap_or_else(|| panic!("diagnostic code {code} missing from REGISTRY"));
+        self.diags.push(Diagnostic { code, severity, loc, message: message.into() });
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        self.diags.extend(other.diags);
+    }
+
+    pub fn has_deny(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Deny)
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity == severity).count()
+    }
+
+    /// `error[G005]: 40x40 conv does not fit … (at layers[0])`, one per line,
+    /// deny first, then warnings, then notes (stable within a severity).
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for want in [Severity::Deny, Severity::Warn, Severity::Note] {
+            for d in self.diags.iter().filter(|d| d.severity == want) {
+                out.push_str(&d.to_string());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// One JSON object per line: `{"code": …, "severity": …, "loc": …,
+    /// "message": …}` — parseable by `crate::util::json` (and anything else).
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str("{\"code\": \"");
+            out.push_str(d.code);
+            out.push_str("\", \"severity\": \"");
+            out.push_str(d.severity.label());
+            out.push_str("\", \"loc\": ");
+            match &d.loc {
+                Some(loc) => {
+                    out.push('"');
+                    out.push_str(&json_escape(loc));
+                    out.push('"');
+                }
+                None => out.push_str("null"),
+            }
+            out.push_str(", \"message\": \"");
+            out.push_str(&json_escape(&d.message));
+            out.push_str("\"}\n");
+        }
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_codes_are_unique_and_prefixed() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (code, _, summary) in REGISTRY {
+            assert!(seen.insert(*code), "duplicate code {code}");
+            assert!(
+                code.starts_with('G') || code.starts_with('P') || code.starts_with('C'),
+                "bad code family {code}"
+            );
+            assert!(!summary.is_empty());
+        }
+    }
+
+    #[test]
+    fn severity_comes_from_registry_not_call_site() {
+        let mut rep = Report::new();
+        rep.emit("G011", None, "x");
+        rep.emit("G005", Some("layers[0]".into()), "y");
+        assert_eq!(rep.diags[0].severity, Severity::Warn);
+        assert_eq!(rep.diags[1].severity, Severity::Deny);
+        assert!(rep.has_deny());
+        assert_eq!(rep.count(Severity::Warn), 1);
+    }
+
+    #[test]
+    fn renderings_are_well_formed() {
+        let mut rep = Report::new();
+        rep.emit("G101", Some("conv1".into()), "note first in vec");
+        rep.emit("C001", Some("trainer.stepz".into()), "unknown key \"stepz\"");
+        let human = rep.render_human();
+        // Deny renders before the note despite insertion order.
+        let deny_at = human.find("error[C001]").unwrap();
+        let note_at = human.find("note[G101]").unwrap();
+        assert!(deny_at < note_at, "{human}");
+        assert!(human.contains("(at trainer.stepz)"));
+        for line in rep.render_jsonl().lines() {
+            let v = crate::util::json::Json::parse(line).unwrap();
+            lookup(v.get("code").unwrap().as_str().unwrap()).unwrap();
+            v.get("message").unwrap().as_str().unwrap();
+        }
+    }
+}

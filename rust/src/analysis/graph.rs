@@ -1,0 +1,456 @@
+//! Graph pass: shape/geometry inference over the layer IR, accumulated as
+//! coded diagnostics instead of failing on the first problem.
+//!
+//! The walk mirrors the invariants [`ArchSpec::build`] enforces — square
+//! kernels, valid padding at stride 1, even extents for `maxpool2`, mid ops
+//! only after the first conv, an `Fc` head terminated by `SoftmaxXent` —
+//! but keeps going after a finding so one `check` run reports everything
+//! wrong with a graph.  On top of the hard invariants it lints dead mid
+//! segments (G011), odd bucket ladders (G012) and emits a per-layer
+//! resource report (G101/G102: params, FLOPs, activation + im2col memory).
+
+use crate::runtime::{ArchSpec, LayerSpec};
+use crate::util::json::Json;
+
+use super::diag::Report;
+
+const MIB: f64 = (1u64 << 20) as f64;
+
+/// Analyze an already-built [`ArchSpec`].  Building implies the hard
+/// invariants hold, so on specs from [`ArchSpec::build`] this yields only
+/// warnings and notes — but a spec whose ladders were mutated after the
+/// fact (e.g. by a hand-edited manifest) still gets the ladder lints.
+pub fn check_spec(arch: &ArchSpec) -> Report {
+    let mut rep = Report::new();
+    check_layers(arch.batch, arch.img, arch.in_ch, &arch.layers, &mut rep);
+    for (i, cv) in arch.convs.iter().enumerate() {
+        lint_ladder(i + 1, cv.k, &cv.buckets, &mut rep);
+    }
+    resource_report(arch, &mut rep);
+    rep
+}
+
+/// Analyze a standalone graph document (text form).  A parse failure is
+/// itself a diagnostic (G010), not an `Err` — `convdist check` never
+/// crashes on its input.
+pub fn check_graph_text(text: &str) -> Report {
+    match Json::parse(text) {
+        Ok(v) => check_graph_json(&v),
+        Err(e) => {
+            let mut rep = Report::new();
+            rep.emit("G010", None, format!("graph is not valid JSON: {e:#}"));
+            rep
+        }
+    }
+}
+
+/// Analyze a parsed graph document.  Handles both manifest-config schemas:
+/// the layer-graph form (a `"layers"` array, analyzed leniently with
+/// per-layer locations) and the legacy two-conv `k1`/`k2` form (delegated
+/// to the strict parser, then the built spec is linted).
+pub fn check_graph_json(v: &Json) -> Report {
+    let mut rep = Report::new();
+    if v.opt("layers").is_none() {
+        match ArchSpec::from_json(v) {
+            Ok(spec) => return check_spec(&spec),
+            Err(e) => {
+                rep.emit("G010", None, format!("legacy two-conv document rejected: {e:#}"));
+                return rep;
+            }
+        }
+    }
+
+    // Geometry keys, each reported independently.
+    let key_usize = |rep: &mut Report, key: &str| -> Option<usize> {
+        match v.opt(key) {
+            None => {
+                rep.emit("G010", Some(key.to_string()), format!("missing key {key:?}"));
+                None
+            }
+            Some(x) => match x.as_usize() {
+                Ok(n) => Some(n),
+                Err(e) => {
+                    rep.emit("G010", Some(key.to_string()), format!("{e:#}"));
+                    None
+                }
+            },
+        }
+    };
+    let batch = key_usize(&mut rep, "batch");
+    let img = key_usize(&mut rep, "img");
+    let in_ch = key_usize(&mut rep, "in_ch");
+
+    // Layers, best effort: a layer that fails to parse is reported and
+    // skipped so the structural walk still covers the rest.
+    let mut layers: Vec<LayerSpec> = Vec::new();
+    match v.get("layers").and_then(|lv| lv.as_arr().map(<[Json]>::to_vec)) {
+        Err(e) => rep.emit("G010", Some("layers".into()), format!("{e:#}")),
+        Ok(arr) => {
+            for (i, item) in arr.iter().enumerate() {
+                match parse_layer(item) {
+                    Ok(l) => layers.push(l),
+                    Err(e) => {
+                        rep.emit("G010", Some(format!("layers[{i}]")), format!("{e:#}"));
+                    }
+                }
+            }
+        }
+    }
+    if let (Some(b), Some(im), Some(c)) = (batch, img, in_ch) {
+        check_layers(b, im, c, &layers, &mut rep);
+    }
+
+    // Ladder override structure, against the conv layers that did parse.
+    let conv_ks: Vec<usize> = layers
+        .iter()
+        .filter_map(|l| if let LayerSpec::Conv { k, .. } = l { Some(*k) } else { None })
+        .collect();
+    if let Some(bk) = v.opt("buckets") {
+        match bk.as_arr() {
+            Err(e) => rep.emit("G013", Some("buckets".into()), format!("{e:#}")),
+            Ok(lists) => {
+                if lists.len() != conv_ks.len() {
+                    rep.emit(
+                        "G013",
+                        Some("buckets".into()),
+                        format!("{} ladders for {} conv layers", lists.len(), conv_ks.len()),
+                    );
+                }
+                for (i, (lv, &k)) in lists.iter().zip(&conv_ks).enumerate() {
+                    let loc = format!("buckets[{i}]");
+                    match lv.as_usize_vec() {
+                        Err(e) => rep.emit("G013", Some(loc), format!("{e:#}")),
+                        Ok(ladder) => {
+                            if ladder.last() != Some(&k) {
+                                rep.emit(
+                                    "G013",
+                                    Some(loc),
+                                    format!(
+                                        "ladder {ladder:?} must end at k={k} so a single \
+                                         surviving device can take the whole layer"
+                                    ),
+                                );
+                            } else {
+                                lint_ladder(i + 1, k, &ladder, &mut rep);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Some(bb) = v.opt("batch_buckets") {
+        if let Err(e) = bb.as_usize_vec() {
+            rep.emit("G010", Some("batch_buckets".into()), format!("{e:#}"));
+        }
+    }
+
+    // Cross-check: analysis-clean must imply the strict parser accepts the
+    // document (probe blocks and anything the walk above does not model).
+    if !rep.has_deny() {
+        match ArchSpec::from_json(v) {
+            Ok(spec) => resource_report(&spec, &mut rep),
+            Err(e) => rep.emit("G010", None, format!("{e:#}")),
+        }
+    }
+    rep
+}
+
+fn parse_layer(v: &Json) -> anyhow::Result<LayerSpec> {
+    let op = v.get("op")?.as_str()?;
+    Ok(match op {
+        "conv" => LayerSpec::Conv {
+            k: v.get("k")?.as_usize()?,
+            kh: v.get("kh")?.as_usize()?,
+            kw: v.get("kw")?.as_usize()?,
+        },
+        "lrn" => LayerSpec::Lrn,
+        "maxpool2" => LayerSpec::MaxPool2,
+        "relu" => LayerSpec::Relu,
+        "fc" => LayerSpec::Fc { out: v.get("out")?.as_usize()? },
+        "softmax_xent" => LayerSpec::SoftmaxXent,
+        other => anyhow::bail!("unknown op {other:?}"),
+    })
+}
+
+/// The structural + geometric walk.  Geometric checks (G004/G005/G006) stop
+/// propagating once the spatial extent is unknowable, but structural checks
+/// (ordering, head, loss) continue to the end of the layer list.
+fn check_layers(batch: usize, img: usize, in_ch: usize, layers: &[LayerSpec], rep: &mut Report) {
+    if batch == 0 || img == 0 || in_ch == 0 {
+        rep.emit(
+            "G004",
+            None,
+            format!("degenerate input geometry: batch={batch} img={img} in_ch={in_ch}"),
+        );
+    }
+    let mut geometry_ok = batch > 0 && img > 0 && in_ch > 0;
+    let mut hw = img;
+    let mut saw_conv = false;
+    let mut saw_fc = false;
+    let mut saw_loss = false;
+    let mut prev: Option<&LayerSpec> = None;
+    for (i, l) in layers.iter().enumerate() {
+        let loc = || Some(format!("layers[{i}]"));
+        if saw_fc && !matches!(l, LayerSpec::SoftmaxXent) {
+            rep.emit(
+                "G009",
+                loc(),
+                format!("{l:?} after the Fc head — only SoftmaxXent may follow Fc"),
+            );
+        }
+        match *l {
+            LayerSpec::Conv { k, kh, kw } => {
+                if k == 0 || kh == 0 || kw == 0 {
+                    rep.emit("G004", loc(), format!("degenerate conv: k={k} kh={kh} kw={kw}"));
+                    geometry_ok = false;
+                } else {
+                    if kh != kw {
+                        rep.emit(
+                            "G003",
+                            loc(),
+                            format!(
+                                "non-square {kh}x{kw} kernel — activations are square, \
+                                 so kernels must satisfy kh == kw"
+                            ),
+                        );
+                    }
+                    if geometry_ok {
+                        if hw >= kh {
+                            hw = hw - kh + 1;
+                        } else {
+                            rep.emit(
+                                "G005",
+                                loc(),
+                                format!(
+                                    "{kh}x{kw} conv does not fit a {hw}x{hw} input — valid \
+                                     padding at stride 1 needs an extent of at least {kh}"
+                                ),
+                            );
+                            geometry_ok = false;
+                        }
+                    }
+                }
+                saw_conv = true;
+            }
+            LayerSpec::Lrn | LayerSpec::Relu => {
+                if !saw_conv {
+                    rep.emit(
+                        "G002",
+                        loc(),
+                        format!("{l:?} before the first conv — mid ops attach to a conv layer"),
+                    );
+                }
+                if prev == Some(l) {
+                    rep.emit(
+                        "G011",
+                        loc(),
+                        format!(
+                            "{l:?} repeated back-to-back — Relu is idempotent and double \
+                             LRN is almost surely unintended; the repeat is dead weight"
+                        ),
+                    );
+                }
+            }
+            LayerSpec::MaxPool2 => {
+                if !saw_conv {
+                    rep.emit(
+                        "G002",
+                        loc(),
+                        "MaxPool2 before the first conv — mid ops attach to a conv layer",
+                    );
+                } else if geometry_ok {
+                    if hw % 2 == 0 {
+                        hw /= 2;
+                    } else {
+                        rep.emit(
+                            "G006",
+                            loc(),
+                            format!(
+                                "maxpool2 needs an even extent, got {hw}x{hw} — the 2x2 \
+                                 window at stride 2 cannot tile an odd input"
+                            ),
+                        );
+                        geometry_ok = false;
+                    }
+                }
+            }
+            LayerSpec::Fc { out } => {
+                if !saw_conv {
+                    rep.emit(
+                        "G001",
+                        loc(),
+                        "no conv layer before the Fc head — nothing to distribute",
+                    );
+                }
+                if out == 0 {
+                    rep.emit("G004", loc(), "zero-width Fc head");
+                }
+                saw_fc = true;
+            }
+            LayerSpec::SoftmaxXent => {
+                if !saw_fc {
+                    rep.emit("G008", loc(), "SoftmaxXent must directly follow the Fc head");
+                } else if saw_loss {
+                    rep.emit("G008", loc(), "duplicate SoftmaxXent");
+                }
+                saw_loss = true;
+            }
+        }
+        prev = Some(l);
+    }
+    if !saw_fc {
+        rep.emit("G007", None, "graph has no Fc head");
+    } else if !saw_loss {
+        rep.emit("G008", None, "graph must end in SoftmaxXent");
+    }
+}
+
+/// G012: ladders that the runtime accepts but that waste compile slots or
+/// signal a typo — unsorted, duplicate, zero or above-k entries.
+fn lint_ladder(layer: usize, k: usize, ladder: &[usize], rep: &mut Report) {
+    let loc = format!("conv{layer}.buckets");
+    if ladder.iter().any(|&b| b == 0 || b > k) {
+        rep.emit(
+            "G012",
+            Some(loc.clone()),
+            format!("ladder {ladder:?} has an entry of 0 or above k={k}"),
+        );
+    }
+    if ladder.windows(2).any(|w| w[0] >= w[1]) {
+        rep.emit(
+            "G012",
+            Some(loc),
+            format!(
+                "ladder {ladder:?} is not strictly ascending — shard-to-bucket fitting \
+                 assumes sorted, duplicate-free ladders"
+            ),
+        );
+    }
+}
+
+/// G101/G102: params, forward FLOPs and peak activation + im2col scratch
+/// per conv layer, plus whole-network totals (fc head included).
+fn resource_report(arch: &ArchSpec, rep: &mut Report) {
+    const BYTES: f64 = 4.0;
+    let mut total_params: usize = 0;
+    let mut total_fwd_flops = 0.0f64;
+    for (i, cv) in arch.convs.iter().enumerate() {
+        let layer = i + 1;
+        let params = cv.k * cv.in_ch * cv.kh * cv.kw + cv.k;
+        let flops = arch.conv_layer_flops(layer, cv.k, arch.batch);
+        let acts = (arch.batch * cv.in_ch * cv.in_hw * cv.in_hw
+            + arch.batch * cv.k * cv.out_hw * cv.out_hw) as f64
+            * BYTES;
+        let scratch =
+            (arch.batch * cv.in_ch * cv.kh * cv.kw * cv.out_hw * cv.out_hw) as f64 * BYTES;
+        rep.emit(
+            "G101",
+            Some(format!("conv{layer}")),
+            format!(
+                "{} kernels {}x{} over {}x{}x{}: {params} params, {:.2} MFLOP fwd/step, \
+                 {:.2} MiB activations + {:.2} MiB im2col scratch at batch {}",
+                cv.k,
+                cv.kh,
+                cv.kw,
+                cv.in_ch,
+                cv.in_hw,
+                cv.in_hw,
+                flops / 1e6,
+                acts / MIB,
+                scratch / MIB,
+                arch.batch
+            ),
+        );
+        total_params += params;
+        total_fwd_flops += flops;
+    }
+    let fc_params = arch.fc_in * arch.num_classes + arch.num_classes;
+    total_params += fc_params;
+    rep.emit(
+        "G102",
+        None,
+        format!(
+            "{} conv layers + fc head ({} -> {}): {} params total ({} in the head), \
+             {:.2} MFLOP conv fwd per step at batch {}",
+            arch.num_convs(),
+            arch.fc_in,
+            arch.num_classes,
+            total_params,
+            fc_params,
+            total_fwd_flops / 1e6,
+            arch.batch
+        ),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(rep: &Report) -> Vec<&'static str> {
+        rep.diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn presets_are_clean() {
+        for name in ["default", "tiny", "deep_cifar", "tiny_deep"] {
+            let rep = check_spec(&ArchSpec::preset(name).unwrap());
+            assert!(!rep.has_deny(), "{name}: {}", rep.render_human());
+            assert!(codes(&rep).contains(&"G102"), "{name} missing resource totals");
+        }
+    }
+
+    #[test]
+    fn walk_reports_everything_not_just_the_first_error() {
+        let layers = vec![
+            LayerSpec::Relu,                            // G002
+            LayerSpec::Conv { k: 4, kh: 5, kw: 3 },     // G003
+            LayerSpec::Conv { k: 4, kh: 40, kw: 40 },   // G005
+            LayerSpec::Fc { out: 0 },                   // G004
+            LayerSpec::Lrn,                             // G009
+            LayerSpec::SoftmaxXent,
+        ];
+        let mut rep = Report::new();
+        check_layers(2, 32, 3, &layers, &mut rep);
+        for want in ["G002", "G003", "G005", "G004", "G009"] {
+            assert!(codes(&rep).contains(&want), "missing {want}: {}", rep.render_human());
+        }
+    }
+
+    #[test]
+    fn dead_mid_segment_is_a_warning_only() {
+        let layers = vec![
+            LayerSpec::Conv { k: 4, kh: 5, kw: 5 },
+            LayerSpec::Relu,
+            LayerSpec::Relu, // G011
+            LayerSpec::Fc { out: 10 },
+            LayerSpec::SoftmaxXent,
+        ];
+        let mut rep = Report::new();
+        check_layers(2, 32, 3, &layers, &mut rep);
+        assert!(codes(&rep).contains(&"G011"));
+        assert!(!rep.has_deny());
+    }
+
+    #[test]
+    fn graph_doc_locations_point_at_layers() {
+        let rep = check_graph_text(
+            r#"{"layers": [{"op": "deconv"}], "batch": 2, "img": 32, "in_ch": 3}"#,
+        );
+        let d = rep.diags.iter().find(|d| d.code == "G010").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("layers[0]"));
+        assert!(d.message.contains("deconv"));
+    }
+
+    #[test]
+    fn ladder_lints() {
+        let mut rep = Report::new();
+        lint_ladder(1, 8, &[4, 2, 8], &mut rep); // unsorted
+        lint_ladder(2, 8, &[4, 12], &mut rep); // entry above k
+        assert_eq!(rep.count(super::super::Severity::Warn), 2);
+        let mut clean = Report::new();
+        lint_ladder(1, 16, &[4, 8, 12, 16], &mut clean);
+        assert!(clean.diags.is_empty());
+    }
+}

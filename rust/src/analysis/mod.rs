@@ -1,0 +1,35 @@
+//! Static analysis: pre-flight checks over graphs, partition plans and
+//! experiment configs — the engine behind `convdist check`.
+//!
+//! The paper's speedups only hold when the Eq.1 partition, the compiled
+//! bucket ladder and the device fleet are mutually consistent.  Before this
+//! module those invariants surfaced at runtime — a panic or a `bail!` at
+//! step 0, deep in `cluster::master`.  The analyzer finds them *statically*
+//! and reports every problem at once, with stable codes, severities and
+//! source locations (see [`diag::REGISTRY`] and DESIGN.md §10):
+//!
+//! * **graph pass** ([`check_spec`] / [`check_graph_text`], `G…` codes) —
+//!   shape/geometry inference over the layer IR with actionable errors,
+//!   dead-segment lints and a per-layer params/FLOPs/memory report;
+//! * **plan pass** ([`check_plan`], `P…` codes) — Eq.1 feasibility against
+//!   a concrete [`crate::devices::DeviceProfile`] roster: ladder coverage
+//!   of every partition the adaptive policy can reach, per-device memory
+//!   fit, padding waste and comm-vs-compute economics;
+//! * **config pass** ([`check_config_text`], `C…` codes) — unknown keys
+//!   with precise locations, topology mismatches, knobs that can never
+//!   fire given the trainer settings.
+//!
+//! [`check_experiment`] composes all three the way the session layer does:
+//! `SessionBuilder::from_experiment` refuses to build when it reports a
+//! deny, and `SessionBuilder::build` re-checks the resolved arch so even
+//! hand-assembled sessions are covered.
+
+mod config;
+mod diag;
+mod graph;
+mod plan;
+
+pub use config::{check_config, check_config_text, check_experiment};
+pub use diag::{lookup, Diagnostic, Report, Severity, REGISTRY};
+pub use graph::{check_graph_json, check_graph_text, check_spec};
+pub use plan::{check_plan, PlanCheckOptions};

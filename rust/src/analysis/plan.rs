@@ -1,0 +1,318 @@
+//! Plan pass: Eq.1 partition feasibility against a concrete device fleet.
+//!
+//! Given an [`ArchSpec`] and a [`DeviceProfile`] roster, this pass builds
+//! the same static partition the master would (probe times proportional to
+//! the catalog GFLOPS, [`partition_network`] over every conv layer) and
+//! vets it *before* any worker is spawned:
+//!
+//! * ladder coverage — every partition the adaptive policy can reach must
+//!   fit some bucket, which reduces to "the ladder ends at k" (P002, deny);
+//! * memory fit — per-device activation + im2col scratch against a
+//!   per-[`DeviceKind`] budget, both for the static plan (P007, deny) and
+//!   for the worst adaptive-reachable bucket (P008, warn);
+//! * economics — zero-share shards (P001), >25% bucket padding waste
+//!   (P003), fewer kernels than devices (P005) and a comm-vs-compute ratio
+//!   from the sim cost model at the configured bandwidth (P004).
+
+use crate::devices::{DeviceKind, DeviceProfile};
+use crate::runtime::ArchSpec;
+use crate::sched::{partition_network, workload_shares, AdaptiveConfig};
+use crate::sim::ArchShape;
+
+use super::diag::Report;
+
+const GIB: f64 = (1u64 << 30) as f64;
+
+/// Plan-pass knobs beyond the arch and the fleet.
+#[derive(Clone, Debug)]
+pub struct PlanCheckOptions {
+    /// Master-link bandwidth for the comm-vs-compute warning, in Mbps.
+    pub bandwidth_mbps: f64,
+    /// Adaptive scheduling config, when known: enables the P008 check over
+    /// every bucket a re-partition can reach.
+    pub adaptive: Option<AdaptiveConfig>,
+}
+
+impl Default for PlanCheckOptions {
+    fn default() -> Self {
+        Self { bandwidth_mbps: crate::sim::EFFECTIVE_BANDWIDTH_MBPS, adaptive: None }
+    }
+}
+
+/// Activation + scratch budget per device kind, in bytes.  Host RAM for
+/// CPUs, VRAM for the paper-era discrete and mobile GPUs — deliberately
+/// conservative round numbers; the point is catching plans that are off by
+/// orders of magnitude before they OOM a worker at step 0.
+fn memory_budget(kind: DeviceKind) -> f64 {
+    match kind {
+        DeviceKind::Cpu => 8.0 * GIB,
+        DeviceKind::Gpu => 2.0 * GIB,
+        DeviceKind::MobileGpu => GIB,
+    }
+}
+
+/// Bytes device-resident for conv `layer` when holding a shard padded to
+/// `bucket` kernels: full input slab + padded kernels + padded output +
+/// the im2col patch matrix the native backend materializes.
+fn layer_device_bytes(arch: &ArchSpec, layer: usize, bucket: usize) -> f64 {
+    if bucket == 0 {
+        return 0.0;
+    }
+    let cv = arch.conv(layer);
+    let b = arch.batch;
+    let inputs = b * cv.in_ch * cv.in_hw * cv.in_hw;
+    let kernels = bucket * cv.in_ch * cv.kh * cv.kw;
+    let outputs = b * bucket * cv.out_hw * cv.out_hw;
+    let im2col = b * cv.in_ch * cv.kh * cv.kw * cv.out_hw * cv.out_hw;
+    (inputs + kernels + outputs + im2col) as f64 * 4.0
+}
+
+/// Run the plan pass.  Device 0 is the master, like everywhere else.
+pub fn check_plan(arch: &ArchSpec, profiles: &[DeviceProfile], opts: &PlanCheckOptions) -> Report {
+    let mut rep = Report::new();
+
+    // Ladder coverage is a property of the arch alone: the adaptive policy
+    // can concentrate a layer onto any subset of devices, so any shard size
+    // in 1..=k is reachable and the ladder must end at k to cover them all
+    // (fit_bucket takes the smallest bucket >= n).
+    for layer in 1..=arch.num_convs() {
+        let k = arch.kernels(layer);
+        let buckets = arch.buckets(layer);
+        if buckets.iter().copied().max() != Some(k) {
+            rep.emit(
+                "P002",
+                Some(format!("conv{layer}.buckets")),
+                format!(
+                    "ladder {buckets:?} cannot cover every reachable shard of conv{layer} \
+                     (k={k}): a single surviving device takes all {k} kernels, so the \
+                     ladder must contain {k}"
+                ),
+            );
+        }
+    }
+
+    if profiles.len() <= 1 {
+        rep.emit(
+            "P006",
+            None,
+            format!("{}-device fleet — nothing to distribute, Eq.1 is trivial", profiles.len()),
+        );
+        return rep;
+    }
+
+    let probe_flops = arch.probe.flops as f64;
+    let times: Vec<f64> = profiles.iter().map(|p| p.exec_time(probe_flops)).collect();
+    let shares = match workload_shares(&times) {
+        Ok(s) => s,
+        Err(e) => {
+            rep.emit("P002", None, format!("Eq.1 shares unsolvable for this fleet: {e:#}"));
+            return rep;
+        }
+    };
+    let layers: Vec<(usize, &[usize])> =
+        (1..=arch.num_convs()).map(|l| (arch.kernels(l), arch.buckets(l))).collect();
+    let tables = match partition_network(&layers, &times) {
+        Ok(t) => t,
+        Err(e) => {
+            rep.emit("P002", None, format!("Eq.1 partition infeasible for this fleet: {e:#}"));
+            return rep;
+        }
+    };
+
+    for (li, shards) in tables.iter().enumerate() {
+        let layer = li + 1;
+        let k = arch.kernels(layer);
+        if k < profiles.len() {
+            rep.emit(
+                "P005",
+                Some(format!("conv{layer}")),
+                format!(
+                    "{k} kernels across {} devices — at least {} device(s) sit idle on \
+                     this layer every step",
+                    profiles.len(),
+                    profiles.len() - k
+                ),
+            );
+        }
+        for (d, p) in profiles.iter().enumerate() {
+            if !shards.iter().any(|s| s.device == d) {
+                rep.emit(
+                    "P001",
+                    Some(format!("conv{layer}")),
+                    format!(
+                        "device {d} ({}) gets a zero-share shard — its Eq.1 share of {k} \
+                         kernels rounds to zero, so it idles for this layer",
+                        p.name
+                    ),
+                );
+            }
+        }
+        let bucketed: usize = shards.iter().map(|s| s.bucket).sum();
+        if bucketed > k {
+            let waste = 1.0 - k as f64 / bucketed as f64;
+            if waste > 0.25 {
+                rep.emit(
+                    "P003",
+                    Some(format!("conv{layer}")),
+                    format!(
+                        "bucket padding waste {:.0}%: {k} kernels padded to {bucketed} \
+                         bucketed kernels — consider a denser ladder",
+                        waste * 100.0
+                    ),
+                );
+            }
+        }
+    }
+
+    // Memory fit, static plan (deny) and worst adaptive-reachable (warn).
+    let adaptive_on = opts.adaptive.is_some_and(|a| a.enabled);
+    for (d, prof) in profiles.iter().enumerate() {
+        let budget = memory_budget(prof.kind);
+        let mut static_peak = 0.0f64;
+        let mut reachable_peak = 0.0f64;
+        for (li, shards) in tables.iter().enumerate() {
+            let layer = li + 1;
+            let bucket = shards.iter().find(|s| s.device == d).map_or(0, |s| s.bucket);
+            static_peak = static_peak.max(layer_device_bytes(arch, layer, bucket));
+            reachable_peak =
+                reachable_peak.max(layer_device_bytes(arch, layer, arch.kernels(layer)));
+        }
+        if static_peak > budget {
+            rep.emit(
+                "P007",
+                None,
+                format!(
+                    "device {d} ({}, {:?}): static plan needs {:.2} GiB activations + \
+                     scratch but the budget is {:.1} GiB",
+                    prof.name,
+                    prof.kind,
+                    static_peak / GIB,
+                    budget / GIB
+                ),
+            );
+        } else if adaptive_on && reachable_peak > budget {
+            rep.emit(
+                "P008",
+                None,
+                format!(
+                    "device {d} ({}): worst adaptive-reachable bucket needs {:.2} GiB \
+                     against a {:.1} GiB budget — a re-shard concentrating a full layer \
+                     here would not fit",
+                    prof.name,
+                    reachable_peak / GIB,
+                    budget / GIB
+                ),
+            );
+        }
+    }
+
+    // Comm vs compute from the sim cost model, generalized to N conv layers
+    // (same per-layer volumes as ArchShape::eq2_upload_elements and
+    // bwd_upload_elements, summed over arch.convs).
+    let n_slaves = profiles.len() - 1;
+    let slave_share = 1.0 - shares[0];
+    let mut elems = 0.0f64;
+    for layer in 1..=arch.num_convs() {
+        let cv = arch.conv(layer);
+        let inputs = (cv.in_hw * cv.in_hw * cv.in_ch * arch.batch) as f64 * n_slaves as f64;
+        let kernels = (cv.kh * cv.kw * cv.k * cv.in_ch) as f64 * slave_share;
+        let outputs = (cv.out_hw * cv.out_hw * cv.k * arch.batch) as f64 * slave_share;
+        let gy = outputs;
+        let kernels_bwd = 2.0 * (cv.kh * cv.kw * cv.k * cv.in_ch) as f64 * slave_share;
+        let gx = inputs;
+        elems += inputs + kernels + outputs + gy + kernels_bwd + gx;
+    }
+    let comm_s = elems * 4.0 * 8.0 / (opts.bandwidth_mbps * 1e6);
+    let mut comp_s = 0.0f64;
+    for (li, shards) in tables.iter().enumerate() {
+        let layer = li + 1;
+        let mut layer_s = 0.0f64;
+        for s in shards {
+            let flops =
+                arch.conv_layer_flops(layer, s.bucket, arch.batch) * ArchShape::TRAIN_CONV_FACTOR;
+            layer_s = layer_s.max(profiles[s.device].exec_time(flops));
+        }
+        comp_s += layer_s;
+    }
+    if comp_s > 0.0 && comm_s >= comp_s {
+        rep.emit(
+            "P004",
+            None,
+            format!(
+                "predicted comm/conv ratio {:.1} at {} Mbps ({:.2} ms comm vs {:.2} ms \
+                 conv per step) — the fleet is bandwidth-bound and distribution will \
+                 not pay off at this scale",
+                comm_s / comp_s,
+                opts.bandwidth_mbps,
+                comm_s * 1e3,
+                comp_s * 1e3
+            ),
+        );
+    }
+    let share_str: Vec<String> = shares.iter().map(|s| format!("{s:.2}")).collect();
+    rep.emit(
+        "P101",
+        None,
+        format!(
+            "{} devices, Eq.1 shares [{}]; predicted per-step conv {:.2} ms, comm {:.2} \
+             ms at {} Mbps",
+            profiles.len(),
+            share_str.join(", "),
+            comp_s * 1e3,
+            comm_s * 1e3,
+            opts.bandwidth_mbps
+        ),
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::paper_cpus;
+
+    #[test]
+    fn paper_fleet_on_presets_has_no_deny() {
+        for name in ["default", "tiny", "deep_cifar", "tiny_deep"] {
+            let arch = ArchSpec::preset(name).unwrap();
+            let rep = check_plan(&arch, &paper_cpus(), &PlanCheckOptions::default());
+            assert!(!rep.has_deny(), "{name}: {}", rep.render_human());
+        }
+    }
+
+    #[test]
+    fn ladder_gap_is_deny() {
+        let mut arch = ArchSpec::tiny();
+        arch.convs[1].buckets = vec![4]; // k=8 is now unreachable
+        let rep = check_plan(&arch, &paper_cpus(), &PlanCheckOptions::default());
+        let d = rep.diags.iter().find(|d| d.code == "P002").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("conv2.buckets"));
+        assert!(rep.has_deny());
+    }
+
+    #[test]
+    fn single_device_is_a_note() {
+        let arch = ArchSpec::tiny();
+        let rep = check_plan(&arch, &paper_cpus()[..1], &PlanCheckOptions::default());
+        assert!(rep.diags.iter().any(|d| d.code == "P006"));
+        assert!(!rep.has_deny());
+    }
+
+    #[test]
+    fn starved_bandwidth_warns_comm_bound() {
+        let arch = ArchSpec::tiny();
+        let opts = PlanCheckOptions { bandwidth_mbps: 0.001, adaptive: None };
+        let rep = check_plan(&arch, &paper_cpus(), &opts);
+        assert!(rep.diags.iter().any(|d| d.code == "P004"), "{}", rep.render_human());
+        assert!(!rep.has_deny());
+    }
+
+    #[test]
+    fn more_devices_than_kernels_warns() {
+        let arch = ArchSpec::tiny(); // conv1 has k=4
+        let five: Vec<DeviceProfile> =
+            (0..5).map(|_| paper_cpus()[0].clone()).collect();
+        let rep = check_plan(&arch, &five, &PlanCheckOptions::default());
+        assert!(rep.diags.iter().any(|d| d.code == "P005"), "{}", rep.render_human());
+    }
+}

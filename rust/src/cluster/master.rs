@@ -858,12 +858,13 @@ impl DistTrainer {
         let mut correct = 0usize;
         for i in 0..n {
             let row = &logits.data()[i * classes..(i + 1) * classes];
+            // total_cmp: a NaN logit (e.g. a diverged run at a huge lr) must
+            // not panic the master mid-eval — it just loses the argmax.
             let pred = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map_or(0, |(i, _)| i);
             if pred as i32 == batch.labels.data()[i] {
                 correct += 1;
             }

@@ -7,9 +7,11 @@
 //! `util::json`.)
 
 use std::path::Path;
+use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::sched::AdaptiveConfig;
 use crate::util::json::Json;
 
 /// The `arch` field of an experiment config: which network trains.
@@ -34,6 +36,9 @@ pub struct ExperimentConfig {
     pub trainer: TrainerConfig,
     pub cluster: ClusterConfig,
     pub network: NetworkConfig,
+    /// Adaptive re-partitioning policy (disabled by default — the static
+    /// Eq.1 plan from calibration stands for the whole run).
+    pub adaptive: AdaptiveConfig,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -108,6 +113,7 @@ impl Default for ExperimentConfig {
             trainer: TrainerConfig::default(),
             cluster: ClusterConfig::default(),
             network: NetworkConfig::default(),
+            adaptive: AdaptiveConfig::disabled(),
         }
     }
 }
@@ -123,7 +129,11 @@ fn check_keys(v: &Json, allowed: &[&str], section: &str) -> Result<()> {
 impl ExperimentConfig {
     pub fn from_json_str(text: &str) -> Result<Self> {
         let v = Json::parse(text).context("parsing experiment config JSON")?;
-        check_keys(&v, &["name", "arch", "trainer", "cluster", "network"], "config root")?;
+        check_keys(
+            &v,
+            &["name", "arch", "trainer", "cluster", "network", "adaptive"],
+            "config root",
+        )?;
         let mut cfg = ExperimentConfig {
             name: v.get("name")?.as_str()?.to_string(),
             ..Default::default()
@@ -202,6 +212,67 @@ impl ExperimentConfig {
                 d.shaped = x.as_bool()?;
             }
         }
+        if let Some(a) = v.opt("adaptive") {
+            check_keys(
+                a,
+                &[
+                    "enabled",
+                    "alpha",
+                    "warmup_steps",
+                    "imbalance_threshold",
+                    "hysteresis",
+                    "cooldown_steps",
+                    "straggler_k",
+                    "straggler_min_ratio",
+                    "heartbeat_every",
+                    "heartbeat_timeout_ms",
+                    "gather_timeout_ms",
+                ],
+                "adaptive",
+            )?;
+            let ms = |x: &Json| -> Result<Duration> {
+                let ms = x.as_f64()?;
+                ensure!(ms >= 0.0 && ms.is_finite(), "timeout must be >= 0 ms, got {ms}");
+                Ok(Duration::from_secs_f64(ms / 1e3))
+            };
+            let d = &mut cfg.adaptive;
+            if let Some(x) = a.opt("enabled") {
+                d.enabled = x.as_bool()?;
+            }
+            if let Some(x) = a.opt("alpha") {
+                d.alpha = x.as_f64()?;
+            }
+            if let Some(x) = a.opt("warmup_steps") {
+                d.warmup_steps = x.as_u64()?;
+            }
+            if let Some(x) = a.opt("imbalance_threshold") {
+                d.imbalance_threshold = x.as_f64()?;
+            }
+            if let Some(x) = a.opt("hysteresis") {
+                d.hysteresis = x.as_f64()?;
+            }
+            if let Some(x) = a.opt("cooldown_steps") {
+                d.cooldown_steps = x.as_u64()?;
+            }
+            if let Some(x) = a.opt("straggler_k") {
+                d.straggler_k = x.as_f64()?;
+            }
+            if let Some(x) = a.opt("straggler_min_ratio") {
+                d.straggler_min_ratio = x.as_f64()?;
+            }
+            if let Some(x) = a.opt("heartbeat_every") {
+                d.heartbeat_every = x.as_u64()?;
+            }
+            if let Some(x) = a.opt("heartbeat_timeout_ms") {
+                d.heartbeat_timeout = ms(x)?;
+            }
+            if let Some(x) = a.opt("gather_timeout_ms") {
+                d.gather_timeout = match x {
+                    Json::Null => None,
+                    x => Some(ms(x)?),
+                };
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -243,8 +314,31 @@ impl ExperimentConfig {
         let c = &self.cluster;
         let n = &self.network;
         let addrs: Vec<String> = c.worker_addrs.iter().map(|a| format!("\"{}\"", esc(a))).collect();
+        // Millisecond timeouts: f64 `{}` is shortest-round-trip, so the
+        // value survives write -> parse exactly.
+        let ad = &self.adaptive;
+        let gather_ms = match ad.gather_timeout {
+            None => "null".to_string(),
+            Some(d) => format!("{}", d.as_secs_f64() * 1e3),
+        };
+        let adaptive = format!(
+            "\n  \"adaptive\": {{\"enabled\": {}, \"alpha\": {}, \"warmup_steps\": {}, \
+             \"imbalance_threshold\": {}, \"hysteresis\": {}, \"cooldown_steps\": {}, \
+             \"straggler_k\": {}, \"straggler_min_ratio\": {}, \"heartbeat_every\": {}, \
+             \"heartbeat_timeout_ms\": {}, \"gather_timeout_ms\": {gather_ms}}},",
+            ad.enabled,
+            ad.alpha,
+            ad.warmup_steps,
+            ad.imbalance_threshold,
+            ad.hysteresis,
+            ad.cooldown_steps,
+            ad.straggler_k,
+            ad.straggler_min_ratio,
+            ad.heartbeat_every,
+            ad.heartbeat_timeout.as_secs_f64() * 1e3,
+        );
         format!(
-            "{{\n  \"name\": \"{}\",{arch}\n  \"trainer\": {{\"steps\": {}, \"lr\": {}, \
+            "{{\n  \"name\": \"{}\",{arch}{adaptive}\n  \"trainer\": {{\"steps\": {}, \"lr\": {}, \
              \"momentum\": {}, \"weight_decay\": {}, \"seed\": {}, \"log_every\": {}, \
              \"calib_rounds\": {}}},\n  \"cluster\": {{\"workers\": {}, \"devices\": \"{}\", \
              \"throttle\": {}, \"worker_addrs\": [{}]}},\n  \"network\": {{\"bandwidth_mbps\": {}, \
@@ -300,6 +394,29 @@ impl ExperimentConfig {
             known.contains(&self.cluster.devices.as_str()),
             "unknown device roster {:?} (expected one of {known:?})",
             self.cluster.devices
+        );
+        let a = &self.adaptive;
+        ensure!(
+            a.alpha > 0.0 && a.alpha <= 1.0,
+            "adaptive.alpha must be in (0, 1], got {}",
+            a.alpha
+        );
+        ensure!(
+            a.imbalance_threshold >= 0.0 && a.imbalance_threshold.is_finite(),
+            "adaptive.imbalance_threshold must be >= 0, got {}",
+            a.imbalance_threshold
+        );
+        ensure!(
+            a.hysteresis >= 0.0 && a.hysteresis.is_finite(),
+            "adaptive.hysteresis must be >= 0, got {}",
+            a.hysteresis
+        );
+        ensure!(
+            a.straggler_k >= 0.0 && a.straggler_min_ratio >= 1.0,
+            "adaptive straggler knobs out of range: straggler_k {} (>= 0), \
+             straggler_min_ratio {} (>= 1)",
+            a.straggler_k,
+            a.straggler_min_ratio
         );
         Ok(())
     }
@@ -439,6 +556,41 @@ mod tests {
         cfg.name = "we\"ird\\name\nwith\tctrl\u{1}".into();
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn adaptive_section_parses_and_roundtrips() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{
+              "name": "ad",
+              "adaptive": {"enabled": true, "alpha": 0.5, "warmup_steps": 4,
+                           "imbalance_threshold": 0.3, "hysteresis": 0.05,
+                           "cooldown_steps": 6, "heartbeat_every": 16,
+                           "heartbeat_timeout_ms": 2500, "gather_timeout_ms": 250}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.adaptive.enabled);
+        assert_eq!(cfg.adaptive.warmup_steps, 4);
+        assert_eq!(cfg.adaptive.heartbeat_timeout, Duration::from_millis(2500));
+        assert_eq!(cfg.adaptive.gather_timeout, Some(Duration::from_millis(250)));
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back, cfg);
+
+        // `null` means "wait forever"; bad knobs and typoed keys are loud.
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"name": "x", "adaptive": {"gather_timeout_ms": null}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.adaptive.gather_timeout, None);
+        assert!(
+            ExperimentConfig::from_json_str(r#"{"name": "x", "adaptive": {"alpha": 0.0}}"#)
+                .is_err()
+        );
+        assert!(
+            ExperimentConfig::from_json_str(r#"{"name": "x", "adaptive": {"warmup": 1}}"#)
+                .is_err()
+        );
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //!   trains offline with no artifacts.  Optional (`--features pjrt`): the
 //!   original AOT-HLO PJRT path over `python/compile/` artifacts.
 
+pub mod analysis;
 pub mod baselines;
 pub mod cluster;
 pub mod config;

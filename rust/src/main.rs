@@ -10,6 +10,8 @@
 //! convdist calibrate [--rounds N]
 //! convdist figures   [--id fig5|table4|...] [--csv]
 //! convdist baseline  [--kind single|dp] [--replicas N] [--steps N]
+//! convdist check     [--config exp.json] [--graph arch.json] [--arch NAME]
+//!                    [--format jsonl]
 //! ```
 //!
 //! Every training subcommand composes a [`convdist::session::Session`] from
@@ -20,13 +22,14 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use convdist::analysis;
 use convdist::baselines::{DataParallelTrainer, SingleDeviceTrainer};
 use convdist::cluster::{worker_loop, WorkerOptions};
 use convdist::config::{ExperimentConfig, TrainerConfig};
 use convdist::data::default_dataset;
 use convdist::devices::Throttle;
 use convdist::net::TcpLink;
-use convdist::runtime::Runtime;
+use convdist::runtime::{ArchSpec, Runtime};
 use convdist::session::{ArchSource, Event, RunReport, Session, SessionBuilder};
 use convdist::sim::figures;
 use convdist::util::cli::Args;
@@ -40,6 +43,9 @@ const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|
   figures    --id ID --csv          (IDs: table1 fig5 fig6 fig7 fig8 table4 table5
                                           fig9 fig10 fig11 fig12 fig13 amdahl)
   baseline   --kind single|dp --replicas N --steps N
+  check      --config F | --graph F | --arch NAME   [--format human|jsonl]
+             (static analyzer; no source = the default experiment config;
+              exits non-zero on any deny-level diagnostic)
 common: --artifacts DIR --arch NAME   (NAME: default|tiny|deep_cifar|tiny_deep;
                                        only without a manifest.json — a manifest
                                        pins the architecture)";
@@ -53,6 +59,7 @@ fn main() -> Result<()> {
         "calibrate" => cmd_calibrate(&args),
         "figures" => cmd_figures(&args),
         "baseline" => cmd_baseline(&args),
+        "check" => cmd_check(&args),
         "" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -348,5 +355,68 @@ fn cmd_baseline(args: &Args) -> Result<()> {
         }
         other => bail!("unknown baseline kind {other:?} (single|dp)"),
     }
+    Ok(())
+}
+
+/// `convdist check`: run the static analyzer over a config file, a graph
+/// JSON file and/or a named preset (any combination; reports merge).  With
+/// no source, the default experiment config — what `convdist run` without
+/// `--config` would build — is pre-flighted.  Exits non-zero on any
+/// deny-level diagnostic, so CI can gate on it directly.
+fn cmd_check(args: &Args) -> Result<()> {
+    let jsonl = match args.opt("format") {
+        None | Some("human") => false,
+        Some("jsonl") => true,
+        Some(other) => bail!("unknown --format {other:?} (human|jsonl)"),
+    };
+    let mut rep = analysis::Report::new();
+    let mut sources = 0usize;
+    if let Some(path) = args.opt("config") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        rep.merge(analysis::check_config_text(&text));
+        sources += 1;
+    }
+    if let Some(path) = args.opt("graph") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        rep.merge(analysis::check_graph_text(&text));
+        sources += 1;
+    }
+    if let Some(name) = args.opt("arch") {
+        let Some(spec) = ArchSpec::preset(name) else {
+            bail!("unknown arch preset {name:?} (try: default, tiny, deep_cifar, tiny_deep)");
+        };
+        rep.merge(analysis::check_spec(&spec));
+        // Plan pass against the default roster and bandwidth, so a bare
+        // `check --arch` still exercises Eq.1 feasibility.
+        let cfg = ExperimentConfig::default();
+        rep.merge(analysis::check_plan(
+            &spec,
+            &cfg.device_profiles(),
+            &analysis::PlanCheckOptions {
+                bandwidth_mbps: cfg.network.bandwidth_mbps,
+                adaptive: Some(cfg.adaptive),
+            },
+        ));
+        sources += 1;
+    }
+    if sources == 0 {
+        rep.merge(analysis::check_experiment(&ExperimentConfig::default()));
+    }
+    if jsonl {
+        print!("{}", rep.render_jsonl());
+    } else {
+        print!("{}", rep.render_human());
+    }
+    let denies = rep.count(analysis::Severity::Deny);
+    if denies > 0 {
+        bail!("check failed: {denies} deny-level diagnostic(s)");
+    }
+    eprintln!(
+        "check passed: {} warning(s), {} note(s)",
+        rep.count(analysis::Severity::Warn),
+        rep.count(analysis::Severity::Note)
+    );
     Ok(())
 }

@@ -103,8 +103,11 @@ pub struct TcpLink {
 
 impl TcpLink {
     pub fn from_stream(stream: TcpStream) -> Result<Self> {
-        stream.set_nodelay(true)?;
-        let reader = BufReader::with_capacity(1 << 20, stream.try_clone()?);
+        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        let reader = BufReader::with_capacity(
+            1 << 20,
+            stream.try_clone().context("cloning stream for the read half")?,
+        );
         let writer = BufWriter::with_capacity(1 << 20, stream);
         Ok(Self { reader, writer, bytes: 0 })
     }
@@ -128,8 +131,8 @@ impl TcpLink {
 
     /// Worker side: accept exactly one master connection.
     pub fn accept_one(listener: &TcpListener) -> Result<Self> {
-        let (stream, _peer) = listener.accept()?;
-        Self::from_stream(stream)
+        let (stream, peer) = listener.accept().context("accepting master connection")?;
+        Self::from_stream(stream).with_context(|| format!("initializing link to {peer}"))
     }
 }
 

@@ -31,8 +31,19 @@ impl WireTensor {
         out.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
         // Bulk-copy the f32 payload as bytes (little-endian hosts only,
         // which PJRT CPU already assumes).
+        //
+        // SAFETY: `data` is a live `Vec<f32>`, so `data.as_ptr()` is valid
+        // for reads of `data.len() * 4` bytes; f32 has no padding or invalid
+        // bit patterns, and any alignment is fine when reinterpreting *down*
+        // to u8 (align 1).  The borrow of `self.data` outlives `bytes`.
+        debug_assert_eq!(
+            self.data.as_ptr() as usize % std::mem::align_of::<f32>(),
+            0,
+            "Vec<f32> allocation must be f32-aligned"
+        );
         let bytes =
             unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4) };
+        debug_assert_eq!(bytes.len(), self.data.len() * 4);
         out.extend_from_slice(bytes);
     }
 
@@ -49,6 +60,18 @@ impl WireTensor {
         ensure!(buf.len() >= *pos + n * 4, "tensor payload truncated");
         let mut data = vec![0f32; n];
         let src = &buf[*pos..*pos + n * 4];
+        // SAFETY: `src` is an in-bounds slice of exactly `n * 4` bytes
+        // (checked by the `ensure!` above); the destination is a freshly
+        // allocated `Vec<f32>` of `n` elements, i.e. `n * 4` writable bytes
+        // that cannot overlap a borrowed input buffer.  Byte-wise copy
+        // (u8 -> u8) has no alignment requirement on either side, and every
+        // bit pattern is a valid f32.
+        debug_assert_eq!(src.len(), n * 4);
+        debug_assert_eq!(
+            data.as_ptr() as usize % std::mem::align_of::<f32>(),
+            0,
+            "Vec<f32> allocation must be f32-aligned"
+        );
         unsafe {
             std::ptr::copy_nonoverlapping(src.as_ptr(), data.as_mut_ptr() as *mut u8, n * 4);
         }
@@ -303,4 +326,102 @@ fn take_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
     let v = f64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
     *pos += 8;
     Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wt(shape: &[u32]) -> WireTensor {
+        let n: u64 = shape.iter().map(|&d| d as u64).product();
+        WireTensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|i| i as f32 * 0.5 - 1.0).collect(),
+        }
+    }
+
+    #[test]
+    fn wire_tensor_round_trips_odd_lengths() {
+        // Odd element counts exercise every tail case of the byte-cast
+        // copies; `[]` is a scalar (empty product = 1), `[0]` is empty.
+        for shape in [
+            &[][..],
+            &[1][..],
+            &[3][..],
+            &[5][..],
+            &[7, 3][..],
+            &[2, 3, 5, 7][..],
+            &[0][..],
+        ] {
+            let t = wt(shape);
+            let mut buf = Vec::new();
+            t.encode_into(&mut buf);
+            assert_eq!(buf.len(), t.size_bytes(), "size_bytes mismatch for {shape:?}");
+            let mut pos = 0;
+            let back = WireTensor::decode_from(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len(), "decode must consume the whole frame");
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn wire_tensor_rejects_corrupt_frames() {
+        let t = wt(&[7, 3]);
+        let mut buf = Vec::new();
+        t.encode_into(&mut buf);
+        // Truncated payload.
+        let mut pos = 0;
+        assert!(WireTensor::decode_from(&buf[..buf.len() - 1], &mut pos).is_err());
+        // Tampered shape: product no longer matches the element count.
+        let mut bad = buf.clone();
+        bad[4] = 9;
+        let mut pos = 0;
+        assert!(WireTensor::decode_from(&bad, &mut pos).is_err());
+        // Absurd rank.
+        let mut pos = 0;
+        assert!(WireTensor::decode_from(&99u32.to_le_bytes(), &mut pos).is_err());
+    }
+
+    #[test]
+    fn conv_work_round_trips_with_and_without_extra() {
+        for extra in [None, Some(wt(&[5]))] {
+            let msg = Message::ConvWork {
+                seq: 7,
+                layer: 1,
+                dir: 1,
+                bucket: 8,
+                inputs: wt(&[2, 3, 5, 5]),
+                kernels: wt(&[8, 3, 3, 3]),
+                extra,
+            };
+            let (id, buf) = msg.encode();
+            assert_eq!(Message::decode(id, &buf).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn conv_result_and_control_messages_round_trip() {
+        let msgs = [
+            Message::ConvResult {
+                seq: 3,
+                outputs: vec![wt(&[2, 4, 3, 3]), wt(&[4, 3, 5, 5]), wt(&[4])],
+                seconds: 0.125,
+            },
+            Message::Hello { worker_id: 2, version: 1 },
+            Message::Calibrate { rounds: 3 },
+            Message::CalibrateResult { seconds: 1.5e-3 },
+            Message::AllOk,
+            Message::TrainOver,
+            Message::Error { reason: "boom".into() },
+            Message::Ping { nonce: 42 },
+            Message::Pong { nonce: 42 },
+            Message::Leave { worker_id: 1, reason: "maintenance".into() },
+            Message::ShardUpdate { layer: 0, lo: 4, hi: 8, bucket: 4 },
+        ];
+        for msg in msgs {
+            let (id, buf) = msg.encode();
+            assert_eq!(Message::decode(id, &buf).unwrap(), msg, "{}", msg.tag());
+        }
+        assert!(Message::decode(0xEE, &[]).is_err());
+    }
 }

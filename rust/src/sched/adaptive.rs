@@ -24,7 +24,7 @@ use super::partition::{partition_layer, Shard};
 /// Knobs of the adaptive scheduler.  `Default` is the enabled configuration
 /// used by `--adaptive` runs; [`AdaptiveConfig::disabled`] is the static
 /// paper behavior (and the `SessionBuilder` default).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AdaptiveConfig {
     /// Master switch: when false the scheduler is the paper's static Eq. 1
     /// partition — no telemetry-driven re-shards, no heartbeats, no gather

@@ -214,7 +214,17 @@ impl SessionBuilder {
     /// calls refine the result — the CLI layers its flag overrides on top.
     pub fn from_experiment(cfg: &ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
-        let mut b = Self::new().trainer(cfg.trainer.clone());
+        // Pre-flight: the full static analyzer (config + graph + plan passes
+        // against this config's own arch, roster and bandwidth).  Deny-level
+        // findings refuse the build; warnings go to stderr and run anyway.
+        let report = crate::analysis::check_experiment(cfg);
+        if report.has_deny() {
+            anyhow::bail!("config pre-flight failed:\n{}", report.render_human());
+        }
+        for d in report.diags.iter().filter(|d| d.severity == crate::analysis::Severity::Warn) {
+            eprintln!("{d}");
+        }
+        let mut b = Self::new().trainer(cfg.trainer.clone()).adaptive(cfg.adaptive);
         match &cfg.arch {
             Some(ArchChoice::Preset(name)) => b = b.arch(ArchSource::Preset(name.clone())),
             Some(ArchChoice::Graph(json)) => {
@@ -361,6 +371,14 @@ impl SessionBuilder {
     /// the fleet, and (when resuming) restore the checkpoint.
     pub fn build(mut self) -> Result<Session> {
         let (rt, worker_source) = self.arch.resolve()?;
+        // Pre-flight the resolved arch.  A spec that came through
+        // `ArchSpec::build` already satisfies the hard invariants, but a
+        // manifest-pinned arch with hand-edited ladders does not — the graph
+        // pass is the last line before workers spawn and memory is committed.
+        let report = crate::analysis::check_spec(rt.arch());
+        if report.has_deny() {
+            anyhow::bail!("arch pre-flight failed:\n{}", report.render_human());
+        }
         let (links, cluster) = match std::mem::replace(&mut self.topology, TopologySpec::InProc) {
             TopologySpec::InProc => {
                 let mut cluster = spawn_workers(worker_source, &self.plans, self.shape)?;
