@@ -23,6 +23,10 @@ cargo test -q --test session
 # Static-analyzer gate (DESIGN.md §10): the bad_graphs corpus must fail
 # with its documented codes, shipped presets/configs must check clean.
 cargo test -q --test static_analysis
+# Observability gate (DESIGN.md §11): traced adaptive run in causal order,
+# trace.json vs step breakdowns, report rendering (also part of `cargo
+# test`; named so the target stays alive).
+cargo test -q --test obs
 # `convdist check` must pass (exit 0) on everything the repo ships.
 for arch in default tiny deep_cifar tiny_deep; do
   cargo run --release -- check --arch "$arch"
@@ -31,8 +35,13 @@ for cfg in examples/configs/*.json; do
   cargo run --release -- check --config "$cfg"
 done
 # Config-driven end-to-end smoke: one full session (arch preset, in-proc
-# fleet, eval) composed entirely from the checked-in experiment config.
-cargo run --release -- run --config examples/configs/smoke.json
+# fleet, eval) composed entirely from the checked-in experiment config —
+# fully traced, then the run log must validate and re-render via `report`.
+rm -rf ci_trace
+cargo run --release -- run --config examples/configs/smoke.json --trace ci_trace --metrics
+test -s ci_trace/run.jsonl
+test -s ci_trace/trace.json
+cargo run --release -- report ci_trace/run.jsonl
 # Adaptive end-to-end: the config pre-flight plus an adaptive-enabled run.
 cargo run --release -- run --config examples/configs/adaptive.json
 # Static-vs-adaptive step-time trajectory from the scheduler simulator;
@@ -43,6 +52,10 @@ test -s BENCH_sched.json
 # >= 3x engine speedup gate and is uploaded as a workflow artifact.
 cargo run --release --example bench_gemm
 test -s BENCH_gemm.json
+# Tracing overhead gate (< 2% of step time on a sleep-dominated fleet);
+# uploaded as a workflow artifact for trend tracking.
+cargo run --release --example bench_obs
+test -s BENCH_obs.json
 # The PJRT path must keep compiling even though it is an offline stub.
 cargo check --features pjrt
 # Sanitizer pass over the unsafe core (linalg byte-level GEMM paths with

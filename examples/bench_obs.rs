@@ -1,0 +1,91 @@
+//! `cargo run --release --example bench_obs`
+//!
+//! Emits `BENCH_obs.json` and gates the tracing overhead: on the tiny
+//! preset with virtual-time throttles (sleep-dominated, so step walls are
+//! stable), the median step time of a fully traced run (`--trace`: spans +
+//! run log + metrics) must stay within 2% of an unobserved run.  CI uploads
+//! the file as a workflow artifact so the overhead is tracked over time.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use convdist::config::TrainerConfig;
+use convdist::data::default_dataset;
+use convdist::devices::Throttle;
+use convdist::obs::ObsConfig;
+use convdist::runtime::ArchSpec;
+use convdist::session::SessionBuilder;
+
+const STEPS: usize = 30;
+const WARMUP: usize = 3;
+
+/// Median step wall (ms) over a tiny-preset fleet, warmup excluded.
+fn median_step_ms(obs: Option<ObsConfig>) -> anyhow::Result<f64> {
+    // 0.1 virtual GFLOPS: the padded sleep dominates real compute in both
+    // runs, so the measured delta isolates the tracer's own cost.
+    let v = Throttle::virtual_gflops(0.1);
+    let mut b = SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny())
+        .trainer(TrainerConfig {
+            steps: STEPS,
+            calib_rounds: 1,
+            log_every: 10_000,
+            ..Default::default()
+        })
+        .master_throttle(v)
+        .workers(&[v, v]);
+    if let Some(cfg) = obs {
+        b = b.observe(cfg);
+    }
+    let mut session = b.build()?;
+    let arch = session.runtime().arch().clone();
+    let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, 42);
+    let mut times_ms = Vec::with_capacity(STEPS);
+    for step in 0..STEPS {
+        let batch = ds.batch(arch.batch, step)?;
+        let t0 = Instant::now();
+        session.step(&batch)?;
+        times_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    session.shutdown()?;
+    let mut tail = times_ms[WARMUP..].to_vec();
+    tail.sort_by(|a, b| a.total_cmp(b));
+    Ok(tail[tail.len() / 2])
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("convdist_bench_obs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let base_ms = median_step_ms(None)?;
+    let traced_ms = median_step_ms(Some(ObsConfig::trace_to(&dir)))?;
+    let overhead_pct = ((traced_ms - base_ms) / base_ms * 100.0).max(0.0);
+    let span_lines = std::fs::read_to_string(dir.join("run.jsonl"))
+        .map(|t| t.lines().filter(|l| l.contains("\"type\":\"span\"")).count())
+        .unwrap_or(0);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut json = String::new();
+    writeln!(json, "{{")?;
+    writeln!(json, "  \"name\": \"obs_tracing_overhead\",")?;
+    writeln!(json, "  \"arch\": \"tiny\",")?;
+    writeln!(json, "  \"steps\": {STEPS},")?;
+    writeln!(json, "  \"base_step_ms\": {base_ms:.4},")?;
+    writeln!(json, "  \"traced_step_ms\": {traced_ms:.4},")?;
+    writeln!(json, "  \"span_lines\": {span_lines},")?;
+    writeln!(json, "  \"overhead_pct\": {overhead_pct:.3}")?;
+    writeln!(json, "}}")?;
+    std::fs::write("BENCH_obs.json", &json)?;
+
+    println!(
+        "BENCH_obs.json written: base {base_ms:.3} ms/step, traced {traced_ms:.3} ms/step \
+         ({span_lines} spans logged) -> {overhead_pct:.2}% overhead"
+    );
+    anyhow::ensure!(span_lines > 0, "the traced run must record spans");
+    anyhow::ensure!(
+        overhead_pct < 2.0,
+        "tracing overhead {overhead_pct:.2}% exceeds the 2% gate \
+         (base {base_ms:.3} ms vs traced {traced_ms:.3} ms)"
+    );
+    Ok(())
+}

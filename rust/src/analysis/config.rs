@@ -17,8 +17,16 @@ use super::graph::check_spec;
 use super::plan::{check_plan, PlanCheckOptions};
 
 const ROOT_KEYS: &[&str] = &["name", "arch", "trainer", "cluster", "network", "adaptive"];
-const TRAINER_KEYS: &[&str] =
-    &["steps", "lr", "momentum", "weight_decay", "seed", "log_every", "calib_rounds"];
+const TRAINER_KEYS: &[&str] = &[
+    "steps",
+    "lr",
+    "momentum",
+    "weight_decay",
+    "seed",
+    "log_every",
+    "calib_rounds",
+    "checkpoint_every",
+];
 const CLUSTER_KEYS: &[&str] = &["workers", "devices", "throttle", "worker_addrs"];
 const NETWORK_KEYS: &[&str] = &["bandwidth_mbps", "latency_ms", "shaped"];
 const ADAPTIVE_KEYS: &[&str] = &[
@@ -157,6 +165,18 @@ pub fn check_config(cfg: &ExperimentConfig) -> Report {
             "calib_rounds=0 is clamped to 1 at calibration time — say what you mean",
         );
     }
+    if let Some(every) = cfg.trainer.checkpoint_every {
+        if every == 0 || every as u64 >= steps {
+            rep.emit(
+                "C008",
+                Some("trainer.checkpoint_every".into()),
+                format!(
+                    "checkpoint_every={every} with steps={steps}: must be in 1..steps \
+                     (0 never fires; >= steps only duplicates the final state)"
+                ),
+            );
+        }
+    }
     let a = &cfg.adaptive;
     if a.enabled {
         if a.warmup_steps >= steps {
@@ -287,6 +307,27 @@ mod tests {
             rep.render_human()
         );
         assert!(!rep.has_deny(), "{}", rep.render_human());
+    }
+
+    #[test]
+    fn checkpoint_every_out_of_range_is_c008() {
+        // 0 can never fire; >= steps only duplicates the final state.
+        for every in [0usize, 4, 9] {
+            let text = format!(
+                r#"{{"name": "x", "trainer": {{"steps": 4, "checkpoint_every": {every}}}}}"#
+            );
+            let rep = check_config_text(&text);
+            assert!(
+                rep.diags.iter().any(|d| d.code == "C008"),
+                "every={every}: {}",
+                rep.render_human()
+            );
+            assert!(rep.has_deny());
+        }
+        let rep = check_config_text(
+            r#"{"name": "x", "trainer": {"steps": 4, "checkpoint_every": 2}}"#,
+        );
+        assert!(!rep.diags.iter().any(|d| d.code == "C008"), "{}", rep.render_human());
     }
 
     #[test]

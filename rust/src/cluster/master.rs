@@ -40,7 +40,8 @@ use crate::devices::Throttle;
 use crate::metrics::{Breakdown, Phase, PhaseTimer, SchedStats};
 use crate::model::{Grads, Params, Sgd};
 use crate::net::Link;
-use crate::proto::{Message, WireTensor};
+use crate::obs::{ObsHandle, SpanCat, SpanRec};
+use crate::proto::{Message, WireSpan, WireTensor};
 use crate::runtime::{ArchSpec, ConvDir, Manifest, Runtime};
 use crate::sched::{
     partition_network, utilization, AdaptiveConfig, AdaptivePolicy, Decision, FleetTelemetry,
@@ -105,6 +106,8 @@ pub struct DistTrainer {
     stats: SchedStats,
     steps_done: u64,
     hb_nonce: u32,
+    /// Observability sink (spans + metrics); `None` = zero-cost no-op path.
+    obs: Option<ObsHandle>,
 }
 
 impl DistTrainer {
@@ -148,6 +151,7 @@ impl DistTrainer {
             stats: SchedStats::default(),
             steps_done: 0,
             hb_nonce: 0,
+            obs: None,
         };
         trainer.calibrate(cfg.calib_rounds)?;
         // Seed the telemetry from the calibration probe so every device has
@@ -297,6 +301,83 @@ impl DistTrainer {
         self.workers.iter().map(|w| w.link.bytes_moved()).sum()
     }
 
+    /// Attach an observability handle: spans for scatter/conv/gather/comp
+    /// intervals and the per-step phase attribution.  Set by
+    /// `SessionBuilder::observe`; without it every obs call is a no-op.
+    pub fn attach_obs(&mut self, obs: ObsHandle) {
+        self.obs = Some(obs);
+    }
+
+    /// Per-worker link traffic as `(device id, bytes, frames)` — absorbed
+    /// into the metrics registry when a run finishes.
+    pub fn link_stats(&self) -> Vec<(usize, u64, u64)> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (i + 1, w.link.bytes_moved(), w.link.frames_moved()))
+            .collect()
+    }
+
+    fn obs_tracing(&self) -> bool {
+        self.obs.as_ref().is_some_and(|o| o.tracing())
+    }
+
+    /// Microseconds on the obs clock (0 when no handle is attached).
+    fn obs_now(&self) -> u64 {
+        self.obs.as_ref().map_or(0, |o| o.now_us())
+    }
+
+    /// Record a span on device `device`'s row, attributed to the step in
+    /// flight (`steps_done` advances only after `try_step` returns).
+    fn obs_span(&self, name: String, cat: SpanCat, device: u32, layer: u32, ts_us: u64, dur_us: u64) {
+        if let Some(o) = &self.obs {
+            o.span(SpanRec { name, cat, device, layer, step: self.steps_done + 1, ts_us, dur_us });
+        }
+    }
+
+    /// Place worker-reported spans on the worker's timeline row.  Clocks are
+    /// unsynchronized, so the report is end-anchored at the gather receive:
+    /// `offset = now - max(start + dur)` shifts the worker-relative spans so
+    /// their latest edge meets the receive instant.  A non-tracing worker
+    /// sends no report; its conv span is synthesized from the reported
+    /// compute seconds instead.
+    fn obs_worker_spans(
+        &self,
+        device: usize,
+        layer: usize,
+        dir: ConvDir,
+        seconds: f64,
+        spans: &[WireSpan],
+    ) {
+        if !self.obs_tracing() {
+            return;
+        }
+        let now = self.obs_now();
+        if spans.is_empty() {
+            let dur = (seconds * 1e6) as u64;
+            self.obs_span(
+                format!("{} dev{device}", op_key(layer, dir)),
+                SpanCat::Conv,
+                device as u32,
+                layer as u32,
+                now.saturating_sub(dur),
+                dur,
+            );
+            return;
+        }
+        let end = spans.iter().map(|s| s.start_us.saturating_add(s.dur_us)).max().unwrap_or(0);
+        let offset = now.saturating_sub(end);
+        for sp in spans {
+            let d = if sp.dir == 0 { ConvDir::Fwd } else { ConvDir::Bwd };
+            let (name, cat) = if sp.kind == WireSpan::KIND_SERVE {
+                (format!("serve dev{device}"), SpanCat::Comm)
+            } else {
+                (format!("{} dev{device}", op_key(sp.layer as usize, d)), SpanCat::Conv)
+            };
+            self.obs_span(name, cat, device as u32, sp.layer as u32, offset + sp.start_us, sp.dur_us);
+        }
+    }
+
     /// One training step with recovery and (opt-in) adaptation: if a worker
     /// dies, leaves or times out, drop it, re-absorb its kernel range into
     /// the survivors and rerun the batch; after a successful step, consult
@@ -378,7 +459,9 @@ impl DistTrainer {
                 match self.workers[i].link.recv_timeout(timeout) {
                     Ok(Some(Message::Pong { nonce: got })) if got == nonce => break,
                     // Stale replies from an aborted round or an older ping.
-                    Ok(Some(Message::Pong { .. })) | Ok(Some(Message::ConvResult { .. })) => {
+                    Ok(Some(Message::Pong { .. }))
+                    | Ok(Some(Message::ConvResult { .. }))
+                    | Ok(Some(Message::SpanReport { .. })) => {
                         continue;
                     }
                     // Silent, departing or confused: drop from the fleet.
@@ -500,6 +583,7 @@ impl DistTrainer {
 
     fn try_step(&mut self, batch: &Batch) -> Result<StepResult> {
         let bytes0 = self.total_bytes();
+        let step_t0 = self.obs_now();
         let mut timer = PhaseTimer::default();
         let arch = self.rt.arch().clone();
         ensure!(
@@ -534,6 +618,7 @@ impl DistTrainer {
         // head: loss + gradients wrt (p, fc.w, fc.b)
         let wf = self.params.get(ArchSpec::FC_W)?.clone();
         let bf = self.params.get(ArchSpec::FC_B)?.clone();
+        let head_t0 = self.obs_now();
         let outs = timer.time(Phase::Comp, || {
             self.rt.execute(
                 "head_grad",
@@ -545,6 +630,17 @@ impl DistTrainer {
                 ],
             )
         })?;
+        if self.obs_tracing() {
+            let now = self.obs_now();
+            self.obs_span(
+                "head_grad".to_string(),
+                SpanCat::Comp,
+                0,
+                0,
+                head_t0,
+                now.saturating_sub(head_t0),
+            );
+        }
         let mut it = outs.into_iter();
         let loss = it.next().unwrap().as_f32()?.item()?;
         let mut gp = it.next().unwrap();
@@ -575,10 +671,46 @@ impl DistTrainer {
         }
 
         // ---------------- update ----------------
+        let opt_t0 = self.obs_now();
         timer.time(Phase::Comp, || self.opt.step(&mut self.params, &grads))?;
+        if self.obs_tracing() {
+            let now = self.obs_now();
+            self.obs_span(
+                "sgd_step".to_string(),
+                SpanCat::Comp,
+                0,
+                0,
+                opt_t0,
+                now.saturating_sub(opt_t0),
+            );
+        }
 
         // Batch acknowledged (Algorithm 1 line 21).
         self.broadcast(&Message::AllOk);
+
+        if let Some(o) = &self.obs {
+            let step = self.steps_done + 1;
+            if o.tracing() {
+                let now = o.now_us();
+                o.span(SpanRec {
+                    name: format!("step {step}"),
+                    cat: SpanCat::Step,
+                    device: 0,
+                    layer: 0,
+                    step,
+                    ts_us: step_t0,
+                    dur_us: now.saturating_sub(step_t0),
+                });
+                // The Figure-6 attribution row: tiled from the step start
+                // with the exact values the printed Breakdown carries, so
+                // trace and stdout always agree.
+                o.phase_spans(step, step_t0, &timer.breakdown);
+            }
+            let misuse = timer.misuse();
+            if misuse > 0 {
+                o.metrics(|m| m.inc("phase_timer_misuse", misuse));
+            }
+        }
 
         Ok(StepResult {
             loss,
@@ -601,6 +733,7 @@ impl DistTrainer {
         timer: &mut PhaseTimer,
     ) -> Result<Tensor> {
         let t0 = Instant::now();
+        let obs_t0 = self.obs_now();
         self.seq += 1;
         let seq = self.seq;
         // Scatter to workers (Algorithm 1 lines 8-13): same inputs,
@@ -619,28 +752,63 @@ impl DistTrainer {
             };
             self.send_to(s.device - 1, &msg)?;
         }
+        if self.obs_tracing() {
+            let now = self.obs_now();
+            self.obs_span(
+                format!("scatter {}", op_key(layer, ConvDir::Fwd)),
+                SpanCat::Comm,
+                0,
+                layer as u32,
+                obs_t0,
+                now.saturating_sub(obs_t0),
+            );
+        }
         // Master's own shard overlaps with the slaves' compute.
         let mut parts: Vec<(usize, Tensor)> = Vec::with_capacity(shards.len());
         let mut slowest = Duration::ZERO;
         if let Some(s) = shards.iter().find(|s| s.device == 0) {
+            let local_t0 = self.obs_now();
             let (y, secs) = self.local_conv_fwd(layer, s, x, w, b)?;
             let exec = Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket);
             let flops = self.rt.flops(&exec) as f64;
             self.telemetry.record(0, secs.as_secs_f64(), flops);
             self.stats.observe_gflops(&op_key(layer, ConvDir::Fwd), secs.as_secs_f64(), flops);
+            if self.obs_tracing() {
+                self.obs_span(
+                    format!("{} dev0", op_key(layer, ConvDir::Fwd)),
+                    SpanCat::Conv,
+                    0,
+                    layer as u32,
+                    local_t0,
+                    (secs.as_secs_f64() * 1e6) as u64,
+                );
+            }
             slowest = slowest.max(secs);
             parts.push((s.lo, y));
         }
         // Gather (Algorithm 1 lines 19-22).
+        let gather_t0 = self.obs_now();
         for s in shards.iter().filter(|s| s.device != 0) {
-            let (mut outputs, seconds) = self.recv_result(s.device - 1, seq)?;
+            let (mut outputs, seconds, spans) = self.recv_result(s.device - 1, seq)?;
             ensure!(outputs.len() == 1, "fwd ConvResult must carry 1 tensor");
             let exec = Manifest::conv_exec(layer, ConvDir::Fwd, s.bucket);
             let flops = self.rt.flops(&exec) as f64;
             self.telemetry.record(s.device, seconds, flops);
             self.stats.observe_gflops(&op_key(layer, ConvDir::Fwd), seconds, flops);
+            self.obs_worker_spans(s.device, layer, ConvDir::Fwd, seconds, &spans);
             slowest = slowest.max(Duration::from_secs_f64(seconds));
             parts.push((s.lo, outputs.remove(0).into_tensor()?));
+        }
+        if self.obs_tracing() && shards.iter().any(|s| s.device != 0) {
+            let now = self.obs_now();
+            self.obs_span(
+                format!("gather {}", op_key(layer, ConvDir::Fwd)),
+                SpanCat::Comm,
+                0,
+                layer as u32,
+                gather_t0,
+                now.saturating_sub(gather_t0),
+            );
         }
         parts.sort_by_key(|(lo, _)| *lo);
         let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
@@ -664,6 +832,7 @@ impl DistTrainer {
         timer: &mut PhaseTimer,
     ) -> Result<(Tensor, Tensor, Tensor)> {
         let t0 = Instant::now();
+        let obs_t0 = self.obs_now();
         self.seq += 1;
         let seq = self.seq;
         for s in shards.iter().filter(|s| s.device != 0) {
@@ -680,34 +849,69 @@ impl DistTrainer {
             };
             self.send_to(s.device - 1, &msg)?;
         }
+        if self.obs_tracing() {
+            let now = self.obs_now();
+            self.obs_span(
+                format!("scatter {}", op_key(layer, ConvDir::Bwd)),
+                SpanCat::Comm,
+                0,
+                layer as u32,
+                obs_t0,
+                now.saturating_sub(obs_t0),
+            );
+        }
         let mut gx = Tensor::zeros(x.shape());
         let mut gw_parts: Vec<(usize, Tensor)> = Vec::new();
         let mut gb_parts: Vec<(usize, Tensor)> = Vec::new();
         let mut slowest = Duration::ZERO;
         if let Some(s) = shards.iter().find(|s| s.device == 0) {
+            let local_t0 = self.obs_now();
             let (gxp, gw, gb, secs) = self.local_conv_bwd(layer, s, x, w, gy)?;
             let exec = Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket);
             let flops = self.rt.flops(&exec) as f64;
             self.telemetry.record(0, secs.as_secs_f64(), flops);
             self.stats.observe_gflops(&op_key(layer, ConvDir::Bwd), secs.as_secs_f64(), flops);
+            if self.obs_tracing() {
+                self.obs_span(
+                    format!("{} dev0", op_key(layer, ConvDir::Bwd)),
+                    SpanCat::Conv,
+                    0,
+                    layer as u32,
+                    local_t0,
+                    (secs.as_secs_f64() * 1e6) as u64,
+                );
+            }
             slowest = slowest.max(secs);
             gx.add_assign(&gxp)?;
             gw_parts.push((s.lo, gw));
             gb_parts.push((s.lo, gb));
         }
+        let gather_t0 = self.obs_now();
         for s in shards.iter().filter(|s| s.device != 0) {
-            let (outputs, seconds) = self.recv_result(s.device - 1, seq)?;
+            let (outputs, seconds, spans) = self.recv_result(s.device - 1, seq)?;
             ensure!(outputs.len() == 3, "bwd ConvResult must carry 3 tensors");
             let exec = Manifest::conv_exec(layer, ConvDir::Bwd, s.bucket);
             let flops = self.rt.flops(&exec) as f64;
             self.telemetry.record(s.device, seconds, flops);
             self.stats.observe_gflops(&op_key(layer, ConvDir::Bwd), seconds, flops);
+            self.obs_worker_spans(s.device, layer, ConvDir::Bwd, seconds, &spans);
             slowest = slowest.max(Duration::from_secs_f64(seconds));
             let mut it = outputs.into_iter();
             // Partial input-cotangents sum (conv is linear in K).
             gx.add_assign(&it.next().unwrap().into_tensor()?)?;
             gw_parts.push((s.lo, it.next().unwrap().into_tensor()?));
             gb_parts.push((s.lo, it.next().unwrap().into_tensor()?));
+        }
+        if self.obs_tracing() && shards.iter().any(|s| s.device != 0) {
+            let now = self.obs_now();
+            self.obs_span(
+                format!("gather {}", op_key(layer, ConvDir::Bwd)),
+                SpanCat::Comm,
+                0,
+                layer as u32,
+                gather_t0,
+                now.saturating_sub(gather_t0),
+            );
         }
         gw_parts.sort_by_key(|(lo, _)| *lo);
         gb_parts.sort_by_key(|(lo, _)| *lo);
@@ -760,7 +964,19 @@ impl DistTrainer {
 
     /// Run a 1-in/1-out master segment, attributing time to Comp.
     fn master_exec1(&self, name: &str, arg: Value, timer: &mut PhaseTimer) -> Result<Tensor> {
+        let t0 = self.obs_now();
         let outs = timer.time(Phase::Comp, || self.rt.execute(name, &[arg]))?;
+        if self.obs_tracing() {
+            let now = self.obs_now();
+            self.obs_span(
+                name.to_string(),
+                SpanCat::Comp,
+                0,
+                0,
+                t0,
+                now.saturating_sub(t0),
+            );
+        }
         Ok(outs.into_iter().next().unwrap().as_f32()?.clone())
     }
 
@@ -796,8 +1012,17 @@ impl DistTrainer {
     /// results for the old round).  In adaptive mode a `gather_timeout`
     /// bounds the wait: a worker past the deadline is dropped from the
     /// fleet (elastic membership) and the step retried without it.
-    fn recv_result(&mut self, worker: usize, seq: u32) -> Result<(Vec<WireTensor>, f64)> {
+    ///
+    /// A tracing worker sends a `SpanReport` for the round immediately
+    /// before its ConvResult; the spans ride back in the third tuple slot
+    /// (empty when the worker does not trace).
+    fn recv_result(
+        &mut self,
+        worker: usize,
+        seq: u32,
+    ) -> Result<(Vec<WireTensor>, f64, Vec<WireSpan>)> {
         let timeout = if self.adaptive.enabled { self.adaptive.gather_timeout } else { None };
+        let mut spans: Vec<WireSpan> = Vec::new();
         loop {
             let msg = match timeout {
                 Some(d) => {
@@ -822,10 +1047,17 @@ impl DistTrainer {
             match msg {
                 Message::ConvResult { seq: got, outputs, seconds } => {
                     if got == seq {
-                        return Ok((outputs, seconds));
+                        return Ok((outputs, seconds, spans));
                     }
                     ensure!(got < seq, "worker {worker} replied from the future: {got} > {seq}");
                     // Stale reply from an aborted round: drop and re-read.
+                }
+                Message::SpanReport { seq: got, spans: reported, .. } => {
+                    // Stale reports (aborted round) are dropped like stale
+                    // ConvResults.
+                    if got == seq {
+                        spans = reported;
+                    }
                 }
                 Message::Leave { reason, .. } => {
                     self.workers[worker].alive = false;

@@ -20,7 +20,7 @@ mod master;
 mod worker;
 
 pub use master::{DistTrainer, StepResult};
-pub use worker::{compute_conv_work, worker_loop, WorkerOptions};
+pub use worker::{compute_conv_work, worker_loop, WorkerOptions, PROTO_VERSION};
 
 use std::path::PathBuf;
 use std::thread::JoinHandle;
@@ -72,12 +72,24 @@ pub fn spawn_workers(
     plans: &[ThrottlePlan],
     shape: Option<LinkModel>,
 ) -> Result<InprocCluster> {
+    spawn_workers_traced(source, plans, shape, false)
+}
+
+/// [`spawn_workers`] with worker-side tracing: each worker measures its
+/// ConvWork service and ships the spans back (`Message::SpanReport`) for
+/// the master's obs timeline.
+pub fn spawn_workers_traced(
+    source: WorkerSource,
+    plans: &[ThrottlePlan],
+    shape: Option<LinkModel>,
+    trace: bool,
+) -> Result<InprocCluster> {
     let mut links: Vec<Box<dyn Link>> = Vec::new();
     let mut handles = Vec::new();
     let source = std::sync::Arc::new(source);
     for (i, &plan) in plans.iter().enumerate() {
         let (master_end, worker_end) = inproc_pair();
-        let opts = WorkerOptions::with_plan(i as u32 + 1, plan);
+        let opts = WorkerOptions::with_plan(i as u32 + 1, plan).traced(trace);
         let src = source.clone();
         let handle = std::thread::Builder::new()
             .name(format!("convdist-worker-{}", i + 1))

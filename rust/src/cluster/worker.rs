@@ -18,12 +18,13 @@
 //! the master can attribute Conv vs Comm time exactly.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::devices::{Throttle, ThrottlePlan};
 use crate::net::Link;
-use crate::proto::{Message, WireTensor};
+use crate::proto::{Message, WireSpan, WireTensor};
 use crate::runtime::{ConvDir, Manifest, Runtime};
 use crate::tensor::{Tensor, Value};
 
@@ -37,15 +38,26 @@ pub struct WorkerOptions {
     /// frames, announce [`Message::Leave`] and exit — exercises the
     /// master's elastic-membership path in tests and demos.
     pub leave_after: Option<u64>,
+    /// Measure each ConvWork service (serve + pure conv spans) and ship the
+    /// spans back with [`Message::SpanReport`] right before the matching
+    /// `ConvResult` — the master's tracer places them on this worker's
+    /// timeline row.  Off by default; a non-tracing master absorbs and
+    /// drops the extra frame harmlessly.
+    pub trace: bool,
 }
 
 impl WorkerOptions {
     pub fn new(worker_id: u32, throttle: Throttle) -> Self {
-        Self { worker_id, throttle: ThrottlePlan::fixed(throttle), leave_after: None }
+        Self { worker_id, throttle: ThrottlePlan::fixed(throttle), leave_after: None, trace: false }
     }
 
     pub fn with_plan(worker_id: u32, plan: ThrottlePlan) -> Self {
-        Self { worker_id, throttle: plan, leave_after: None }
+        Self { worker_id, throttle: plan, leave_after: None, trace: false }
+    }
+
+    pub fn traced(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
     }
 }
 
@@ -73,11 +85,47 @@ pub fn worker_loop(mut link: impl Link, rt: Arc<Runtime>, opts: WorkerOptions) -
                 }
                 let throttle = opts.throttle.current(served);
                 served += 1;
+                let t0 = Instant::now();
                 let reply = compute_conv_work(
                     &rt, throttle, seq, layer, dir, bucket as usize, inputs, kernels, extra,
                 );
                 match reply {
-                    Ok(msg) => link.send(&msg)?,
+                    Ok(msg) => {
+                        if opts.trace {
+                            if let Message::ConvResult { seconds, .. } = &msg {
+                                // Serve span = whole frame handling (real
+                                // wall); conv span = reported compute
+                                // seconds (virtual under a throttle, so it
+                                // may exceed the serve wall — the master
+                                // end-anchors both at the gather receive).
+                                let serve_us = t0.elapsed().as_micros() as u64;
+                                let conv_us = (seconds * 1e6) as u64;
+                                link.send(&Message::SpanReport {
+                                    worker_id: opts.worker_id,
+                                    seq,
+                                    spans: vec![
+                                        WireSpan {
+                                            kind: WireSpan::KIND_SERVE,
+                                            layer,
+                                            dir,
+                                            bucket,
+                                            start_us: 0,
+                                            dur_us: serve_us,
+                                        },
+                                        WireSpan {
+                                            kind: WireSpan::KIND_CONV,
+                                            layer,
+                                            dir,
+                                            bucket,
+                                            start_us: serve_us.saturating_sub(conv_us),
+                                            dur_us: conv_us,
+                                        },
+                                    ],
+                                })?;
+                            }
+                        }
+                        link.send(&msg)?
+                    }
                     Err(e) => {
                         link.send(&Message::Error { reason: format!("worker {}: {e:#}", opts.worker_id) })?;
                         bail!("worker {} failed conv work: {e:#}", opts.worker_id);

@@ -52,6 +52,11 @@ pub struct TrainerConfig {
     pub log_every: usize,
     /// Calibration probe repetitions (paper's "quick test").
     pub calib_rounds: u32,
+    /// Auto-checkpoint every N steps during `Session::run` (to the
+    /// session's checkpoint dir, emitting `Event::CheckpointSaved`).
+    /// `None` = no periodic checkpoints.  The static analyzer rejects 0
+    /// and values >= `steps` (diagnostic C008).
+    pub checkpoint_every: Option<usize>,
 }
 
 impl Default for TrainerConfig {
@@ -64,6 +69,7 @@ impl Default for TrainerConfig {
             seed: 42,
             log_every: 10,
             calib_rounds: 3,
+            checkpoint_every: None,
         }
     }
 }
@@ -156,7 +162,16 @@ impl ExperimentConfig {
         if let Some(t) = v.opt("trainer") {
             check_keys(
                 t,
-                &["steps", "lr", "momentum", "weight_decay", "seed", "log_every", "calib_rounds"],
+                &[
+                    "steps",
+                    "lr",
+                    "momentum",
+                    "weight_decay",
+                    "seed",
+                    "log_every",
+                    "calib_rounds",
+                    "checkpoint_every",
+                ],
                 "trainer",
             )?;
             let d = &mut cfg.trainer;
@@ -180,6 +195,12 @@ impl ExperimentConfig {
             }
             if let Some(x) = t.opt("calib_rounds") {
                 d.calib_rounds = x.as_usize()? as u32;
+            }
+            if let Some(x) = t.opt("checkpoint_every") {
+                d.checkpoint_every = match x {
+                    Json::Null => None,
+                    x => Some(x.as_usize()?),
+                };
             }
         }
         if let Some(c) = v.opt("cluster") {
@@ -337,10 +358,15 @@ impl ExperimentConfig {
             ad.heartbeat_every,
             ad.heartbeat_timeout.as_secs_f64() * 1e3,
         );
+        // Absent when None so older configs compare and round-trip exactly.
+        let ckpt = match t.checkpoint_every {
+            None => String::new(),
+            Some(n) => format!(", \"checkpoint_every\": {n}"),
+        };
         format!(
             "{{\n  \"name\": \"{}\",{arch}{adaptive}\n  \"trainer\": {{\"steps\": {}, \"lr\": {}, \
              \"momentum\": {}, \"weight_decay\": {}, \"seed\": {}, \"log_every\": {}, \
-             \"calib_rounds\": {}}},\n  \"cluster\": {{\"workers\": {}, \"devices\": \"{}\", \
+             \"calib_rounds\": {}{ckpt}}},\n  \"cluster\": {{\"workers\": {}, \"devices\": \"{}\", \
              \"throttle\": {}, \"worker_addrs\": [{}]}},\n  \"network\": {{\"bandwidth_mbps\": {}, \
              \"latency_ms\": {}, \"shaped\": {}}}\n}}",
             esc(&self.name),
@@ -552,6 +578,11 @@ mod tests {
         cfg.cluster.workers = 2;
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
         assert_eq!(back, cfg);
+        // checkpoint_every survives (and is absent from JSON when None).
+        assert!(!cfg.to_json_string().contains("checkpoint_every"));
+        cfg.trainer.checkpoint_every = Some(3);
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back, cfg);
         // And hostile strings: quotes, backslashes, control characters.
         cfg.name = "we\"ird\\name\nwith\tctrl\u{1}".into();
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
@@ -591,6 +622,26 @@ mod tests {
             ExperimentConfig::from_json_str(r#"{"name": "x", "adaptive": {"warmup": 1}}"#)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn checkpoint_every_parses_and_null_means_none() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"name": "c", "trainer": {"steps": 10, "checkpoint_every": 4}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.trainer.checkpoint_every, Some(4));
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"name": "c", "trainer": {"checkpoint_every": null}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.trainer.checkpoint_every, None);
+        // Out-of-range values parse here; the static analyzer (C008) is the
+        // gate that refuses to run them.
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "c", "trainer": {"checkpoint_every": 0}}"#
+        )
+        .is_ok());
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod proto;
 pub mod runtime;
 pub mod sched;

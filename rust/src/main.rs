@@ -4,14 +4,18 @@
 //! convdist run       [--config exp.json] [--workers N] [--steps N]
 //!                    [--throttle] [--shaped] [--arch NAME]
 //!                    [--save ckpt] [--resume ckpt]
+//!                    [--trace out/] [--metrics]
 //! convdist train     (alias of run)
 //! convdist worker    [--listen 127.0.0.1:7701] [--id N] [--slowdown X]
+//!                    [--trace]
 //! convdist master    --workers host:port,host:port [--config exp.json] [--steps N]
+//!                    [--trace out/] [--metrics]
 //! convdist calibrate [--rounds N]
 //! convdist figures   [--id fig5|table4|...] [--csv]
 //! convdist baseline  [--kind single|dp] [--replicas N] [--steps N]
 //! convdist check     [--config exp.json] [--graph arch.json] [--arch NAME]
 //!                    [--format jsonl]
+//! convdist report    out/run.jsonl
 //! ```
 //!
 //! Every training subcommand composes a [`convdist::session::Session`] from
@@ -29,6 +33,7 @@ use convdist::config::{ExperimentConfig, TrainerConfig};
 use convdist::data::default_dataset;
 use convdist::devices::Throttle;
 use convdist::net::TcpLink;
+use convdist::obs::ObsConfig;
 use convdist::runtime::{ArchSpec, Runtime};
 use convdist::session::{ArchSource, Event, RunReport, Session, SessionBuilder};
 use convdist::sim::figures;
@@ -37,8 +42,11 @@ use convdist::util::cli::Args;
 const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|baseline> [options]
   run        --config F --workers N --steps N --throttle --shaped
              --save CKPT --resume CKPT     (train is an alias)
-  worker     --listen ADDR --id N --slowdown X
-  master     --workers a:p,b:p --config F --steps N
+             --trace DIR --metrics    (DIR gets run.jsonl + trace.json;
+                                       bare --metrics = summary table only)
+  worker     --listen ADDR --id N --slowdown X --trace
+             (--trace ships per-op spans back to the master's timeline)
+  master     --workers a:p,b:p --config F --steps N --trace DIR --metrics
   calibrate  --rounds N
   figures    --id ID --csv          (IDs: table1 fig5 fig6 fig7 fig8 table4 table5
                                           fig9 fig10 fig11 fig12 fig13 amdahl)
@@ -46,12 +54,19 @@ const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|
   check      --config F | --graph F | --arch NAME   [--format human|jsonl]
              (static analyzer; no source = the default experiment config;
               exits non-zero on any deny-level diagnostic)
+  report     RUN.jsonl              (schema-validate a --trace run log and
+                                     print the Fig. 6-style phase summary)
 common: --artifacts DIR --arch NAME   (NAME: default|tiny|deep_cifar|tiny_deep;
                                        only without a manifest.json — a manifest
                                        pins the architecture)";
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    if args.command != "report" {
+        if let Some(p) = args.positional.first() {
+            bail!("unexpected positional argument {p:?}\n{USAGE}");
+        }
+    }
     match args.command.as_str() {
         "run" | "train" => cmd_run(&args),
         "worker" => cmd_worker(&args),
@@ -60,6 +75,7 @@ fn main() -> Result<()> {
         "figures" => cmd_figures(&args),
         "baseline" => cmd_baseline(&args),
         "check" => cmd_check(&args),
+        "report" => cmd_report(&args),
         "" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -136,6 +152,35 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.network.shaped = true;
     }
     Ok(cfg)
+}
+
+/// `--trace DIR` / `--metrics` as an [`ObsConfig`].  `--trace` implies the
+/// metrics registry; a bare `--metrics` keeps everything in memory and only
+/// prints the summary table.
+fn obs_config(args: &Args) -> ObsConfig {
+    match args.opt("trace") {
+        Some(dir) => ObsConfig::trace_to(dir),
+        None if args.flag("metrics") => ObsConfig::metrics_only(),
+        None => ObsConfig::default(),
+    }
+}
+
+/// Flush the observability sinks and print the metrics table + sink paths.
+/// Safe to call unconditionally: without `--trace`/`--metrics` it is a
+/// no-op, and `Session::shutdown` finishing a second time is idempotent.
+fn finish_obs(session: &mut Session, args: &Args) -> Result<()> {
+    if let Some(table) = session.finish_obs()? {
+        eprintln!("{table}");
+    }
+    if let Some(dir) = args.opt("trace") {
+        let dir = std::path::Path::new(dir);
+        eprintln!(
+            "trace written: {} (run log), {} (load in Perfetto / chrome://tracing)",
+            dir.join("run.jsonl").display(),
+            dir.join("trace.json").display()
+        );
+    }
+    Ok(())
 }
 
 /// The standard logging observer: step lines at `log_every`, re-shard /
@@ -233,6 +278,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.cluster.workers, cfg.cluster.devices, cfg.cluster.throttle, cfg.network.shaped
     );
     let mut builder = SessionBuilder::from_experiment(&cfg)?
+        .observe(obs_config(args))
         .on_event(logging_observer(cfg.trainer.log_every, cfg.trainer.steps));
     builder = apply_arch_override(args, &cfg, builder)?;
     if let Some(ckpt) = args.opt("resume") {
@@ -246,6 +292,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         session.save_checkpoint(path)?;
     }
     maybe_print_stats(&session);
+    finish_obs(&mut session, args)?;
     session.shutdown()
 }
 
@@ -257,7 +304,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let listener = std::net::TcpListener::bind(listen)?;
     eprintln!("worker {id} listening on {listen} (slowdown {slowdown}x)");
     let link = TcpLink::accept_one(&listener)?;
-    let opts = WorkerOptions::new(id, Throttle::new(slowdown.max(1.0)));
+    let opts =
+        WorkerOptions::new(id, Throttle::new(slowdown.max(1.0))).traced(args.flag("trace"));
     worker_loop(link, rt, opts)?;
     eprintln!("worker {id}: TrainOver received, shutting down");
     Ok(())
@@ -273,6 +321,7 @@ fn cmd_master(args: &Args) -> Result<()> {
     }
     let mut builder = SessionBuilder::from_experiment(&cfg)?
         .tcp(addrs)
+        .observe(obs_config(args))
         .on_event(logging_observer(cfg.trainer.log_every, cfg.trainer.steps));
     builder = apply_arch_override(args, &cfg, builder)?;
     let mut session = builder.build()?;
@@ -280,6 +329,7 @@ fn cmd_master(args: &Args) -> Result<()> {
     let report = session.run()?;
     print_report(&report);
     maybe_print_stats(&session);
+    finish_obs(&mut session, args)?;
     session.shutdown()
 }
 
@@ -418,5 +468,16 @@ fn cmd_check(args: &Args) -> Result<()> {
         rep.count(analysis::Severity::Warn),
         rep.count(analysis::Severity::Note)
     );
+    Ok(())
+}
+
+/// `convdist report run.jsonl`: schema-validate a `--trace` run log and
+/// print the paper's Figure-6-style phase summary.  Exits non-zero on any
+/// malformed line, so CI can gate traced runs on it directly.
+fn cmd_report(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.first() else {
+        bail!("usage: convdist report <run.jsonl>");
+    };
+    print!("{}", convdist::obs::report::summarize_file(std::path::Path::new(path))?);
     Ok(())
 }

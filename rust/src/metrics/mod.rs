@@ -75,11 +75,15 @@ impl fmt::Display for Breakdown {
 }
 
 /// Accumulates phase time with explicit start/stop, panicking on misuse in
-/// debug builds (a phase left open is a bookkeeping bug).
+/// debug builds (a phase left open is a bookkeeping bug).  Release builds
+/// recover gracefully instead: the open span is dropped, nothing is
+/// recorded, and [`PhaseTimer::misuse`] counts the incident so the obs
+/// layer can surface it as a `phase_timer_misuse` metric.
 #[derive(Debug, Default)]
 pub struct PhaseTimer {
     pub breakdown: Breakdown,
     open: Option<(Phase, Instant)>,
+    misuse: u64,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -92,12 +96,24 @@ pub enum Phase {
 impl PhaseTimer {
     pub fn start(&mut self, phase: Phase) {
         debug_assert!(self.open.is_none(), "phase {:?} still open", self.open);
+        if self.open.take().is_some() {
+            self.misuse += 1; // release: drop the open span, keep going
+        }
         self.open = Some((phase, Instant::now()));
     }
 
     pub fn stop(&mut self) {
-        let (phase, t0) = self.open.take().expect("stop() without start()");
-        self.record(phase, t0.elapsed());
+        debug_assert!(self.open.is_some(), "stop() without start()");
+        match self.open.take() {
+            Some((phase, t0)) => self.record(phase, t0.elapsed()),
+            None => self.misuse += 1, // release: nothing to close
+        }
+    }
+
+    /// Misuse incidents survived in release builds (start-over-open or
+    /// stop-without-start); always 0 in debug builds, which panic instead.
+    pub fn misuse(&self) -> u64 {
+        self.misuse
     }
 
     /// Record an externally measured duration (e.g. a worker-reported conv
@@ -186,6 +202,17 @@ impl fmt::Display for SchedStats {
     }
 }
 
+/// RFC-4180 CSV quoting: fields containing commas, quotes or newlines are
+/// wrapped in double quotes with embedded quotes doubled, so composite
+/// labels like `cpu,4` stay one field for downstream parsers.
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
 /// One figure/table row as emitted by the harness: label + series of
 /// (x, value) points; rendered as aligned text or CSV.
 #[derive(Clone, Debug)]
@@ -204,9 +231,10 @@ impl Series {
     }
 
     pub fn to_csv(&self) -> String {
+        let label = csv_field(&self.label);
         let mut s = String::new();
         for (x, y) in &self.points {
-            s.push_str(&format!("{},{x},{y}\n", self.label));
+            s.push_str(&format!("{label},{x},{y}\n"));
         }
         s
     }
@@ -303,5 +331,48 @@ mod tests {
         s.push(1.0, 1.5);
         s.push(2.0, 2.5);
         assert_eq!(s.to_csv(), "cpu4,1,1.5\ncpu4,2,2.5\n");
+    }
+
+    #[test]
+    fn series_csv_quotes_composite_labels() {
+        // RFC-4180: a label with a comma must be quoted...
+        let mut s = Series::new("cpu,4");
+        s.push(1.0, 1.5);
+        assert_eq!(s.to_csv(), "\"cpu,4\",1,1.5\n");
+        // ...and embedded quotes doubled inside the quoted field.
+        let mut q = Series::new("8\" node");
+        q.push(2.0, 3.0);
+        assert_eq!(q.to_csv(), "\"8\"\" node\",2,3\n");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "stop() without start()")]
+    fn phase_timer_stop_without_start_panics_in_debug() {
+        PhaseTimer::default().stop();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "still open")]
+    fn phase_timer_double_start_panics_in_debug() {
+        let mut t = PhaseTimer::default();
+        t.start(Phase::Comm);
+        t.start(Phase::Conv);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn phase_timer_recovers_from_misuse_in_release() {
+        let mut t = PhaseTimer::default();
+        t.stop(); // stop without start: counted, nothing recorded
+        assert_eq!(t.misuse(), 1);
+        assert_eq!(t.breakdown, Breakdown::default());
+        t.start(Phase::Comm);
+        t.start(Phase::Conv); // drops the open Comm span
+        t.stop();
+        assert_eq!(t.misuse(), 2);
+        assert_eq!(t.breakdown.comm, Duration::ZERO);
+        assert!(t.breakdown.conv >= Duration::ZERO);
     }
 }

@@ -36,6 +36,12 @@ pub trait Link: Send {
     }
     /// Cumulative bytes sent + received (Eq. 2 accounting).
     fn bytes_moved(&self) -> u64;
+    /// Cumulative frames sent + received — the obs layer's per-link rate
+    /// denominator (bytes alone can't separate many small control frames
+    /// from one tensor frame).  Default 0 for links that don't count.
+    fn frames_moved(&self) -> u64 {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -47,6 +53,7 @@ pub struct InProcLink {
     tx: Sender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
     bytes: u64,
+    frames: u64,
 }
 
 /// A connected pair of in-process endpoints.
@@ -54,8 +61,8 @@ pub fn inproc_pair() -> (InProcLink, InProcLink) {
     let (atx, brx) = std::sync::mpsc::channel();
     let (btx, arx) = std::sync::mpsc::channel();
     (
-        InProcLink { tx: atx, rx: arx, bytes: 0 },
-        InProcLink { tx: btx, rx: brx, bytes: 0 },
+        InProcLink { tx: atx, rx: arx, bytes: 0, frames: 0 },
+        InProcLink { tx: btx, rx: brx, bytes: 0, frames: 0 },
     )
 }
 
@@ -64,6 +71,7 @@ impl Link for InProcLink {
         let mut buf = Vec::new();
         write_frame(&mut buf, msg)?;
         self.bytes += buf.len() as u64;
+        self.frames += 1;
         self.tx.send(buf).map_err(|_| anyhow::anyhow!("in-proc peer hung up"))?;
         Ok(())
     }
@@ -71,6 +79,7 @@ impl Link for InProcLink {
     fn recv(&mut self) -> Result<Message> {
         let buf = self.rx.recv().map_err(|_| anyhow::anyhow!("in-proc peer hung up"))?;
         self.bytes += buf.len() as u64;
+        self.frames += 1;
         read_frame(&mut std::io::Cursor::new(buf))
     }
 
@@ -79,6 +88,7 @@ impl Link for InProcLink {
         match self.rx.recv_timeout(timeout) {
             Ok(buf) => {
                 self.bytes += buf.len() as u64;
+                self.frames += 1;
                 read_frame(&mut std::io::Cursor::new(buf)).map(Some)
             }
             Err(RecvTimeoutError::Timeout) => Ok(None),
@@ -88,6 +98,10 @@ impl Link for InProcLink {
 
     fn bytes_moved(&self) -> u64 {
         self.bytes
+    }
+
+    fn frames_moved(&self) -> u64 {
+        self.frames
     }
 }
 
@@ -99,6 +113,7 @@ pub struct TcpLink {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     bytes: u64,
+    frames: u64,
 }
 
 impl TcpLink {
@@ -109,7 +124,7 @@ impl TcpLink {
             stream.try_clone().context("cloning stream for the read half")?,
         );
         let writer = BufWriter::with_capacity(1 << 20, stream);
-        Ok(Self { reader, writer, bytes: 0 })
+        Ok(Self { reader, writer, bytes: 0, frames: 0 })
     }
 
     /// Master side: connect to a worker's listen address (Algorithm 1
@@ -139,12 +154,14 @@ impl TcpLink {
 impl Link for TcpLink {
     fn send(&mut self, msg: &Message) -> Result<()> {
         self.bytes += frame_len(msg) as u64;
+        self.frames += 1;
         write_frame(&mut self.writer, msg)
     }
 
     fn recv(&mut self) -> Result<Message> {
         let msg = read_frame(&mut self.reader)?;
         self.bytes += frame_len(&msg) as u64;
+        self.frames += 1;
         Ok(msg)
     }
 
@@ -205,6 +222,10 @@ impl Link for TcpLink {
     fn bytes_moved(&self) -> u64 {
         self.bytes
     }
+
+    fn frames_moved(&self) -> u64 {
+        self.frames
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -262,6 +283,10 @@ impl<L: Link> Link for ShapedLink<L> {
     fn bytes_moved(&self) -> u64 {
         self.inner.bytes_moved()
     }
+
+    fn frames_moved(&self) -> u64 {
+        self.inner.frames_moved()
+    }
 }
 
 #[cfg(test)]
@@ -276,6 +301,9 @@ mod tests {
         b.send(&Message::AllOk).unwrap();
         assert_eq!(a.recv().unwrap(), Message::AllOk);
         assert!(a.bytes_moved() > 0);
+        // One frame out, one frame in — on both ends and on both counters.
+        assert_eq!(a.frames_moved(), 2);
+        assert_eq!(b.frames_moved(), 2);
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Fleet-wide observability: spans, a metrics registry, and durable sinks.
+//!
+//! The paper's entire argument is an observability claim — Figures 6 and 8
+//! decompose every step into Comm/Conv/Comp to show where heterogeneous
+//! fleets lose their speedup.  This module turns the transient stdout
+//! breakdown into a durable, queryable record of a run:
+//!
+//! * **Spans** ([`SpanRec`]) — `step → phase(comm|conv|comp) → op` intervals
+//!   with device/worker/layer attribution.  The master records its own
+//!   scatter/gather/compute intervals; workers measure their conv ops
+//!   locally and ship them back piggybacked on the gather
+//!   (`proto::Message::SpanReport`), so worker-side spans land in the
+//!   master's timeline re-anchored at the gather receive time.
+//! * **Metrics** ([`MetricsRegistry`]) — counters, gauges and fixed-bucket
+//!   histograms (p50/p95/p99) absorbing [`Breakdown`], `SchedStats`,
+//!   per-link byte/frame counts and achieved GFLOP/s.
+//! * **Sinks** — a JSONL run log (`run.jsonl`, one event per line, schema in
+//!   [`runlog`] and DESIGN.md §11, parseable by the in-tree `util::json`)
+//!   and a Chrome trace-event export (`trace.json`, loadable in Perfetto or
+//!   `chrome://tracing`, master and every worker as rows).
+//!
+//! Wiring: `SessionBuilder::observe(ObsConfig)` attaches an [`ObsHandle`]
+//! to the trainer; `convdist run --trace out/ --metrics` drives it from the
+//! CLI and `convdist report out/run.jsonl` summarizes a finished run.
+//! Tracing must stay cheap — `examples/bench_obs.rs` gates the overhead at
+//! <2% of step time on the tiny preset.
+
+mod registry;
+pub mod report;
+pub mod runlog;
+mod trace;
+
+pub use registry::{Histogram, MetricsRegistry, MS_BUCKETS};
+pub use trace::chrome_trace_json;
+
+use std::fs;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Breakdown;
+use crate::session::Event;
+
+/// The virtual trace row ("thread id") that carries the per-step
+/// Comm/Conv/Comp phase attribution — the paper's Figure-6 decomposition —
+/// tiled under each step span.  Real devices use their device id as the row.
+pub const PHASES_TID: u32 = 1000;
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// What to observe and where the sinks live.
+#[derive(Clone, Debug, Default)]
+pub struct ObsConfig {
+    /// When set, write `run.jsonl` and `trace.json` under this directory
+    /// (created if missing) and record spans.
+    pub dir: Option<PathBuf>,
+    /// Collect the metrics registry and render a summary table at the end.
+    pub metrics: bool,
+}
+
+impl ObsConfig {
+    /// Full tracing + metrics into `dir` (the CLI's `--trace out/`).
+    pub fn trace_to(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: Some(dir.into()), metrics: true }
+    }
+
+    /// Registry only — no files on disk (the CLI's bare `--metrics`).
+    pub fn metrics_only() -> Self {
+        Self { dir: None, metrics: true }
+    }
+
+    /// Whether spans are recorded and sinks written.
+    pub fn tracing(&self) -> bool {
+        self.dir.is_some()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// Span category — doubles as the Chrome trace-event `cat` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanCat {
+    /// A whole training step (master row).
+    Step,
+    /// Transfer / wait time (scatter, gather, worker serve overhead).
+    Comm,
+    /// Convolution compute (master shard, worker shards).
+    Conv,
+    /// Non-conv compute (LRN/pool/FC/loss/optimizer).
+    Comp,
+}
+
+impl SpanCat {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanCat::Step => "step",
+            SpanCat::Comm => "comm",
+            SpanCat::Conv => "conv",
+            SpanCat::Comp => "comp",
+        }
+    }
+}
+
+/// One closed interval on a device's timeline, in microseconds since the
+/// observability epoch (`Observability::new`).  Durations measured under
+/// virtual throttles are virtual time and may exceed the enclosing wall
+/// interval — that is expected and documented (DESIGN.md §11).
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub name: String,
+    pub cat: SpanCat,
+    /// Device id: 0 = master, `d` = worker on device `d`, [`PHASES_TID`] =
+    /// the synthetic phase-attribution row.
+    pub device: u32,
+    pub layer: u32,
+    pub step: u64,
+    pub ts_us: u64,
+    pub dur_us: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Handle (shared, cheap, cloneable)
+// ---------------------------------------------------------------------------
+
+struct Inner {
+    spans: Vec<SpanRec>,
+    registry: MetricsRegistry,
+    log: Option<BufWriter<fs::File>>,
+}
+
+struct Shared {
+    t0: Instant,
+    tracing: bool,
+    inner: Mutex<Inner>,
+}
+
+/// Cheap cloneable handle threaded through the trainer and session.  All
+/// methods are no-ops along whichever axes the [`ObsConfig`] disabled, so
+/// call sites never branch.
+#[derive(Clone)]
+pub struct ObsHandle {
+    shared: Arc<Shared>,
+}
+
+impl ObsHandle {
+    /// Microseconds since the observability epoch.
+    pub fn now_us(&self) -> u64 {
+        self.shared.t0.elapsed().as_micros() as u64
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.shared.tracing
+    }
+
+    /// Record a closed span (and mirror it into the run log).
+    pub fn span(&self, rec: SpanRec) {
+        if !self.shared.tracing {
+            return;
+        }
+        let mut inner = self.shared.inner.lock().expect("obs lock");
+        if let Some(log) = inner.log.as_mut() {
+            let _ = writeln!(log, "{}", runlog::span_line(&rec));
+        }
+        inner.spans.push(rec);
+    }
+
+    /// Tile the step's Comm/Conv/Comp phase attribution (the exact values
+    /// the printed `Breakdown` carries) onto the [`PHASES_TID`] row,
+    /// anchored at the step's start so the rows line up in Perfetto.
+    pub fn phase_spans(&self, step: u64, start_us: u64, b: &Breakdown) {
+        let mut cursor = start_us;
+        for (cat, d) in [
+            (SpanCat::Comm, b.comm),
+            (SpanCat::Conv, b.conv),
+            (SpanCat::Comp, b.comp),
+        ] {
+            let dur = d.as_micros() as u64;
+            self.span(SpanRec {
+                name: format!("phase {}", cat.label()),
+                cat,
+                device: PHASES_TID,
+                layer: 0,
+                step,
+                ts_us: cursor,
+                dur_us: dur,
+            });
+            cursor += dur;
+        }
+    }
+
+    /// Mirror a session [`Event`] into the run log.
+    pub fn event(&self, ev: &Event) {
+        let ts = self.now_us();
+        let mut inner = self.shared.inner.lock().expect("obs lock");
+        if let Some(log) = inner.log.as_mut() {
+            let _ = writeln!(log, "{}", runlog::event_line(ts, ev));
+        }
+    }
+
+    /// Mutate the metrics registry under the lock.
+    pub fn metrics(&self, f: impl FnOnce(&mut MetricsRegistry)) {
+        let mut inner = self.shared.inner.lock().expect("obs lock");
+        f(&mut inner.registry);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observability (owner: sinks + lifecycle)
+// ---------------------------------------------------------------------------
+
+/// Owns the sinks for one run: opened by `SessionBuilder::build`, finished
+/// (idempotently) by `Session::shutdown` or `Session::finish_obs`.
+pub struct Observability {
+    handle: ObsHandle,
+    dir: Option<PathBuf>,
+    metrics: bool,
+    workers: usize,
+    finished: bool,
+}
+
+impl Observability {
+    /// Open the sinks and write the `run_start` line.  `devices` counts the
+    /// master; `steps` is the planned step count.
+    pub fn new(cfg: &ObsConfig, arch: &str, devices: usize, steps: usize) -> Result<Self> {
+        let log = match &cfg.dir {
+            Some(dir) => {
+                fs::create_dir_all(dir)
+                    .with_context(|| format!("creating trace dir {}", dir.display()))?;
+                let path = dir.join("run.jsonl");
+                let file = fs::File::create(&path)
+                    .with_context(|| format!("creating {}", path.display()))?;
+                let mut w = BufWriter::new(file);
+                writeln!(w, "{}", runlog::run_start_line(0, arch, devices, steps))?;
+                w.flush()?;
+                Some(w)
+            }
+            None => None,
+        };
+        let handle = ObsHandle {
+            shared: Arc::new(Shared {
+                t0: Instant::now(),
+                tracing: cfg.tracing(),
+                inner: Mutex::new(Inner {
+                    spans: Vec::new(),
+                    registry: MetricsRegistry::default(),
+                    log,
+                }),
+            }),
+        };
+        Ok(Self {
+            handle,
+            dir: cfg.dir.clone(),
+            metrics: cfg.metrics,
+            workers: devices.saturating_sub(1),
+            finished: false,
+        })
+    }
+
+    pub fn handle(&self) -> ObsHandle {
+        self.handle.clone()
+    }
+
+    /// Flush the sinks: write the `metrics` + `run_end` lines, export
+    /// `trace.json`, and (when metrics are on) return the rendered summary
+    /// table.  Idempotent — the second call is a no-op returning `None`.
+    pub fn finish(&mut self, steps_done: u64) -> Result<Option<String>> {
+        if self.finished {
+            return Ok(None);
+        }
+        self.finished = true;
+        let ts = self.handle.now_us();
+        let mut inner = self.handle.shared.inner.lock().expect("obs lock");
+        if let Some(log) = inner.log.as_mut() {
+            let metrics_line = runlog::metrics_line(ts, &inner.registry);
+            writeln!(log, "{metrics_line}")?;
+            writeln!(log, "{}", runlog::run_end_line(ts, steps_done))?;
+            log.flush()?;
+        }
+        inner.log = None;
+        if let Some(dir) = &self.dir {
+            let json = chrome_trace_json(&inner.spans, self.workers);
+            let path = dir.join("trace.json");
+            fs::write(&path, json)
+                .with_context(|| format!("writing {}", path.display()))?;
+        }
+        Ok(if self.metrics { Some(inner.registry.render_table()) } else { None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("convdist_obs_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn sinks_written_and_finish_is_idempotent() {
+        let dir = tmpdir("sinks");
+        let mut obs =
+            Observability::new(&ObsConfig::trace_to(&dir), "tiny", 3, 2).unwrap();
+        let h = obs.handle();
+        assert!(h.tracing());
+        h.span(SpanRec {
+            name: "conv1_fwd dev1".into(),
+            cat: SpanCat::Conv,
+            device: 1,
+            layer: 1,
+            step: 1,
+            ts_us: 10,
+            dur_us: 90,
+        });
+        h.phase_spans(
+            1,
+            0,
+            &Breakdown {
+                comm: Duration::from_micros(40),
+                conv: Duration::from_micros(90),
+                comp: Duration::from_micros(20),
+            },
+        );
+        h.metrics(|m| m.inc("steps", 1));
+        let table = obs.finish(2).unwrap();
+        assert!(table.is_some());
+        assert!(obs.finish(2).unwrap().is_none(), "finish must be idempotent");
+        let log = fs::read_to_string(dir.join("run.jsonl")).unwrap();
+        for line in log.lines() {
+            let v = crate::util::json::Json::parse(line).unwrap();
+            runlog::validate_line(&v).unwrap();
+        }
+        assert!(log.contains("\"type\":\"run_start\""));
+        assert!(log.contains("\"type\":\"run_end\""));
+        let trace = fs::read_to_string(dir.join("trace.json")).unwrap();
+        let v = crate::util::json::Json::parse(&trace).unwrap();
+        assert!(!v.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metrics_only_config_writes_no_files() {
+        let mut obs = Observability::new(&ObsConfig::metrics_only(), "tiny", 2, 1).unwrap();
+        let h = obs.handle();
+        assert!(!h.tracing());
+        // Spans are dropped without tracing; metrics still accumulate.
+        h.span(SpanRec {
+            name: "x".into(),
+            cat: SpanCat::Step,
+            device: 0,
+            layer: 0,
+            step: 1,
+            ts_us: 0,
+            dur_us: 1,
+        });
+        h.metrics(|m| m.inc("steps", 1));
+        let table = obs.finish(1).unwrap().unwrap();
+        assert!(table.contains("steps"), "{table}");
+    }
+}

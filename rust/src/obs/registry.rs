@@ -1,0 +1,264 @@
+//! A cheap in-process metrics registry: counters, gauges and fixed-bucket
+//! histograms with interpolated p50/p95/p99.
+//!
+//! Deliberately minimal — `BTreeMap<String, _>` under the caller's lock, no
+//! atomics, no label dimensions.  The hot path (`DistTrainer::try_step`)
+//! touches it once per step, so a map lookup is already far below the <2%
+//! overhead gate enforced by `examples/bench_obs.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{Breakdown, SchedStats};
+
+/// Default millisecond bucket ladder: log-ish spacing from 50µs to 60s,
+/// matched to step times seen on the paper's presets (tiny preset steps run
+/// single-digit ms; throttled deep fleets run tens of seconds).
+pub const MS_BUCKETS: &[f64] = &[
+    0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1e3, 2e3, 5e3,
+    1e4, 3e4, 6e4,
+];
+
+/// A fixed-bucket histogram: `bounds` are ascending upper edges, with one
+/// implicit overflow bucket above the last bound.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Self {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Self {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one observation; non-finite samples are dropped (the same
+    /// policy as `SchedStats::observe_gflops` and the telemetry).
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Interpolated quantile (`q` in [0,1]): walk the buckets to the target
+    /// rank, interpolate linearly inside the bucket, clamp to the observed
+    /// [min, max].  Exact at the resolution of the bucket ladder.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                cum += c;
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= target {
+                let lo = if i == 0 { self.min } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { self.max };
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                let v = lo + (hi - lo) * frac;
+                return v.clamp(self.min, self.max);
+            }
+            cum = next;
+        }
+        self.max
+    }
+}
+
+/// Counters (monotonic u64), gauges (last-write f64) and histograms.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Observe into a millisecond histogram on the default ladder.
+    pub fn observe_ms(&mut self, name: &str, ms: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(MS_BUCKETS))
+            .observe(ms);
+    }
+
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    pub fn gauges(&self) -> &BTreeMap<String, f64> {
+        &self.gauges
+    }
+
+    pub fn hists(&self) -> &BTreeMap<String, Histogram> {
+        &self.hists
+    }
+
+    /// Absorb one step's phase attribution: per-phase + total histograms
+    /// plus cumulative phase-time counters (µs).
+    pub fn absorb_breakdown(&mut self, b: &Breakdown) {
+        self.inc("steps", 1);
+        self.inc("comm_us_total", b.comm.as_micros() as u64);
+        self.inc("conv_us_total", b.conv.as_micros() as u64);
+        self.inc("comp_us_total", b.comp.as_micros() as u64);
+        self.observe_ms("step_ms", b.total().as_secs_f64() * 1e3);
+        self.observe_ms("comm_ms", b.comm.as_secs_f64() * 1e3);
+        self.observe_ms("conv_ms", b.conv.as_secs_f64() * 1e3);
+        self.observe_ms("comp_ms", b.comp.as_secs_f64() * 1e3);
+    }
+
+    /// Absorb the scheduler's lifetime counters, last-step utilization and
+    /// achieved per-op GFLOP/s.
+    pub fn absorb_sched(&mut self, s: &SchedStats) {
+        self.set_gauge("sched.repartitions", s.repartitions as f64);
+        self.set_gauge("sched.departures", s.departures as f64);
+        self.set_gauge("sched.straggler_flags", s.straggler_flags as f64);
+        for (d, u) in &s.utilization {
+            self.set_gauge(&format!("util.dev{d}"), *u);
+        }
+        for (op, r) in &s.op_gflops {
+            self.set_gauge(&format!("gflops.{op}"), *r);
+        }
+    }
+
+    /// Absorb one link's wire totals (Eq. 2 ground truth per worker).
+    pub fn absorb_link(&mut self, device: usize, bytes: u64, frames: u64) {
+        self.set_gauge(&format!("net.dev{device}.bytes"), bytes as f64);
+        self.set_gauge(&format!("net.dev{device}.frames"), frames as f64);
+    }
+
+    /// Human-readable summary: counters, gauges, then histogram quantiles.
+    pub fn render_table(&self) -> String {
+        let mut out = String::from("metrics:\n");
+        for (k, v) in &self.counters {
+            out.push_str(&format!("  {k:<28} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("  {k:<28} {v:.3}\n"));
+        }
+        for (k, h) in &self.hists {
+            out.push_str(&format!(
+                "  {k:<28} n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3}\n",
+                h.count(),
+                h.mean(),
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut r = MetricsRegistry::default();
+        r.inc("steps", 1);
+        r.inc("steps", 2);
+        r.set_gauge("util.dev0", 0.5);
+        r.set_gauge("util.dev0", 0.9);
+        assert_eq!(r.counters()["steps"], 3);
+        assert!((r.gauges()["util.dev0"] - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_on_uniform_data() {
+        let mut h = Histogram::new(MS_BUCKETS);
+        for i in 1..=100 {
+            h.observe(i as f64); // 1..=100 ms, uniform
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        let p50 = h.quantile(0.50);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        // Bucket interpolation: within one ladder step of the exact value.
+        assert!((40.0..=60.0).contains(&p50), "p50={p50}");
+        assert!((90.0..=100.0).contains(&p95), "p95={p95}");
+        assert!(p99 >= p95 && p99 <= 100.0, "p99={p99}");
+        assert_eq!(h.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_drops_non_finite_and_handles_empty() {
+        let mut h = Histogram::new(MS_BUCKETS);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn absorbs_breakdown_and_sched() {
+        let mut r = MetricsRegistry::default();
+        let b = Breakdown {
+            comm: Duration::from_millis(2),
+            conv: Duration::from_millis(6),
+            comp: Duration::from_millis(2),
+        };
+        r.absorb_breakdown(&b);
+        r.absorb_breakdown(&b);
+        assert_eq!(r.counters()["steps"], 2);
+        assert_eq!(r.counters()["conv_us_total"], 12_000);
+        assert_eq!(r.hists()["step_ms"].count(), 2);
+        let mut s = SchedStats::default();
+        s.repartitions = 3;
+        s.utilization = vec![(0, 1.0), (1, 0.75)];
+        s.observe_gflops("conv1_fwd", 0.5, 4e9);
+        r.absorb_sched(&s);
+        assert!((r.gauges()["sched.repartitions"] - 3.0).abs() < 1e-12);
+        assert!((r.gauges()["util.dev1"] - 0.75).abs() < 1e-12);
+        assert!((r.gauges()["gflops.conv1_fwd"] - 8.0).abs() < 1e-12);
+        r.absorb_link(1, 4096, 7);
+        assert!((r.gauges()["net.dev1.bytes"] - 4096.0).abs() < 1e-12);
+        let table = r.render_table();
+        assert!(table.contains("step_ms"), "{table}");
+        assert!(table.contains("p95"), "{table}");
+    }
+}

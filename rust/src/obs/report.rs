@@ -1,0 +1,155 @@
+//! `convdist report run.jsonl` — summarize a finished run log into the
+//! paper's Figure-6-style phase table.
+//!
+//! Strict by design: every line is schema-validated first
+//! ([`super::runlog::validate_text`]), so the subcommand doubles as the CI
+//! gate that a `--trace` run produced a well-formed log.
+
+use anyhow::Result;
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+fn mib(bytes: f64) -> f64 {
+    bytes / (1024.0 * 1024.0)
+}
+
+/// Validate `text` (a whole run.jsonl) and render the summary table.
+pub fn summarize(text: &str) -> Result<String> {
+    let lines = super::runlog::validate_text(text)?;
+    let mut arch = String::from("?");
+    let mut devices = 0u64;
+    let mut planned = 0u64;
+    let mut step_ms: Vec<f64> = Vec::new();
+    let (mut comm_us, mut conv_us, mut comp_us) = (0.0f64, 0.0f64, 0.0f64);
+    let mut bytes = 0.0f64;
+    let mut last_loss = f64::NAN;
+    let mut eval: Option<f64> = None;
+    let (mut repartitions, mut worker_left, mut checkpoints, mut spans) = (0u64, 0u64, 0u64, 0u64);
+    for v in &lines {
+        match v.get("type")?.as_str()? {
+            "run_start" => {
+                arch = v.get("arch")?.as_str()?.to_string();
+                devices = v.get("devices")?.as_u64()?;
+                planned = v.get("steps")?.as_u64()?;
+            }
+            "step" => {
+                let (c, v_, p) = (
+                    v.get("comm_us")?.as_f64()?,
+                    v.get("conv_us")?.as_f64()?,
+                    v.get("comp_us")?.as_f64()?,
+                );
+                comm_us += c;
+                conv_us += v_;
+                comp_us += p;
+                step_ms.push((c + v_ + p) / 1e3);
+                bytes += v.get("bytes")?.as_f64()?;
+                last_loss = v.get("loss")?.as_f64()?;
+            }
+            "repartition" => repartitions += 1,
+            "worker_left" => worker_left += 1,
+            "checkpoint" => checkpoints += 1,
+            "eval" => eval = Some(v.get("accuracy")?.as_f64()?),
+            "span" => spans += 1,
+            _ => {}
+        }
+    }
+    anyhow::ensure!(!step_ms.is_empty(), "run log contains no step lines");
+    let total_us = (comm_us + conv_us + comp_us).max(1.0);
+    let mut sorted = step_ms.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let mean = step_ms.iter().sum::<f64>() / step_ms.len() as f64;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "run summary: arch {arch}, {devices} devices, {}/{planned} steps, {spans} spans\n",
+        step_ms.len()
+    ));
+    out.push_str(&format!(
+        "  step time: mean {mean:.3} ms  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms\n",
+        percentile(&sorted, 0.50),
+        percentile(&sorted, 0.95),
+        percentile(&sorted, 0.99),
+    ));
+    out.push_str("  phase totals (Fig. 6 attribution):\n");
+    for (label, us) in [("comm", comm_us), ("conv", conv_us), ("comp", comp_us)] {
+        out.push_str(&format!(
+            "    {label}  {:9.3} s  ({:4.1}%)\n",
+            us / 1e6,
+            100.0 * us / total_us
+        ));
+    }
+    out.push_str(&format!("  final loss {last_loss:.4}"));
+    if let Some(acc) = eval {
+        out.push_str(&format!("  eval accuracy {:.2}%", 100.0 * acc));
+    }
+    out.push('\n');
+    out.push_str(&format!(
+        "  bytes moved {:.2} MiB  repartitions {repartitions}  departures {worker_left}  checkpoints {checkpoints}\n",
+        mib(bytes)
+    ));
+    Ok(out)
+}
+
+/// Parse + summarize a run-log file (also re-exported to the CLI).
+pub fn summarize_file(path: &std::path::Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    summarize(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Breakdown;
+    use crate::obs::runlog;
+    use crate::session::Event;
+    use std::time::Duration;
+
+    fn step_line(t: u64, step: u64, comm: u64, conv: u64, comp: u64) -> String {
+        runlog::event_line(
+            t,
+            &Event::StepCompleted {
+                step,
+                loss: 2.0,
+                devices: 3,
+                breakdown: Breakdown {
+                    comm: Duration::from_micros(comm),
+                    conv: Duration::from_micros(conv),
+                    comp: Duration::from_micros(comp),
+                },
+                bytes_moved: 2048,
+            },
+        )
+    }
+
+    #[test]
+    fn summarize_aggregates_phases_and_events() {
+        let log = [
+            runlog::run_start_line(0, "tiny", 3, 2),
+            step_line(10, 1, 100, 300, 100),
+            runlog::event_line(11, &Event::Repartitioned { step: 1 }),
+            step_line(20, 2, 100, 300, 100),
+            runlog::event_line(21, &Event::EvalDone { step: 2, accuracy: 0.25 }),
+            runlog::run_end_line(30, 2),
+        ]
+        .join("\n");
+        let out = summarize(&log).unwrap();
+        assert!(out.contains("arch tiny, 3 devices, 2/2 steps"), "{out}");
+        assert!(out.contains("conv      0.001 s  (60.0%)"), "{out}");
+        assert!(out.contains("repartitions 1"), "{out}");
+        assert!(out.contains("eval accuracy 25.00%"), "{out}");
+    }
+
+    #[test]
+    fn summarize_rejects_invalid_or_step_free_logs() {
+        assert!(summarize("{\"type\":\"bogus\",\"t_us\":0}").is_err());
+        let only_start = runlog::run_start_line(0, "tiny", 2, 1);
+        let err = summarize(&only_start).unwrap_err().to_string();
+        assert!(err.contains("no step lines"), "{err}");
+    }
+}

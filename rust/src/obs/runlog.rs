@@ -1,0 +1,310 @@
+//! The JSONL run log: one event per line, hand-rendered (offline build, no
+//! serde) and parsed back with the in-tree [`crate::util::json::Json`] —
+//! the same arrangement `analysis::diag::render_jsonl` uses.
+//!
+//! Schema (every line is an object with a `type` tag; all timestamps are
+//! microseconds since the observability epoch; extra keys are allowed so
+//! the schema can grow without breaking old readers):
+//!
+//! | `type`        | required fields                                                        |
+//! |---------------|------------------------------------------------------------------------|
+//! | `run_start`   | `t_us`, `arch` (str), `devices`, `steps`                               |
+//! | `step`        | `t_us`, `step`, `loss`, `devices`, `comm_us`, `conv_us`, `comp_us`, `bytes` |
+//! | `repartition` | `t_us`, `step`                                                         |
+//! | `worker_left` | `t_us`, `step`, `devices_left`                                         |
+//! | `eval`        | `t_us`, `step`, `accuracy`                                             |
+//! | `checkpoint`  | `t_us`, `step`, `path` (str)                                           |
+//! | `span`        | `t_us`, `name` (str), `cat` (`step\|comm\|conv\|comp`), `device`, `layer`, `step`, `dur_us` |
+//! | `metrics`     | `t_us`, `counters` (obj), `gauges` (obj), `hists` (obj)                |
+//! | `run_end`     | `t_us`, `steps`                                                        |
+//!
+//! [`validate_line`] is the single schema authority: the obs tests, the
+//! `convdist report` subcommand and the CI gate all call it.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{MetricsRegistry, SpanRec};
+use crate::session::Event;
+use crate::util::json::Json;
+
+/// Escape a string for embedding in a JSON literal (same contract as
+/// `analysis::diag`'s private helper).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a float as a JSON number (non-finite values have no JSON
+/// rendering; they collapse to 0 rather than corrupt the line).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+pub fn run_start_line(t_us: u64, arch: &str, devices: usize, steps: usize) -> String {
+    format!(
+        "{{\"type\":\"run_start\",\"t_us\":{t_us},\"arch\":\"{}\",\"devices\":{devices},\"steps\":{steps}}}",
+        json_escape(arch)
+    )
+}
+
+pub fn run_end_line(t_us: u64, steps: u64) -> String {
+    format!("{{\"type\":\"run_end\",\"t_us\":{t_us},\"steps\":{steps}}}")
+}
+
+pub fn span_line(s: &SpanRec) -> String {
+    format!(
+        "{{\"type\":\"span\",\"t_us\":{},\"name\":\"{}\",\"cat\":\"{}\",\"device\":{},\"layer\":{},\"step\":{},\"dur_us\":{}}}",
+        s.ts_us,
+        json_escape(&s.name),
+        s.cat.label(),
+        s.device,
+        s.layer,
+        s.step,
+        s.dur_us,
+    )
+}
+
+/// Mirror a session [`Event`] into its run-log line.
+pub fn event_line(t_us: u64, ev: &Event) -> String {
+    match ev {
+        Event::StepCompleted { step, loss, devices, breakdown, bytes_moved } => format!(
+            "{{\"type\":\"step\",\"t_us\":{t_us},\"step\":{step},\"loss\":{},\"devices\":{devices},\"comm_us\":{},\"conv_us\":{},\"comp_us\":{},\"bytes\":{bytes_moved}}}",
+            num(*loss as f64),
+            breakdown.comm.as_micros(),
+            breakdown.conv.as_micros(),
+            breakdown.comp.as_micros(),
+        ),
+        Event::Repartitioned { step } => {
+            format!("{{\"type\":\"repartition\",\"t_us\":{t_us},\"step\":{step}}}")
+        }
+        Event::WorkerLeft { step, devices_left } => format!(
+            "{{\"type\":\"worker_left\",\"t_us\":{t_us},\"step\":{step},\"devices_left\":{devices_left}}}"
+        ),
+        Event::EvalDone { step, accuracy } => format!(
+            "{{\"type\":\"eval\",\"t_us\":{t_us},\"step\":{step},\"accuracy\":{}}}",
+            num(*accuracy as f64)
+        ),
+        Event::CheckpointSaved { step, path } => format!(
+            "{{\"type\":\"checkpoint\",\"t_us\":{t_us},\"step\":{step},\"path\":\"{}\"}}",
+            json_escape(&path.display().to_string())
+        ),
+    }
+}
+
+/// The end-of-run metrics snapshot as one line.
+pub fn metrics_line(t_us: u64, reg: &MetricsRegistry) -> String {
+    let mut out = format!("{{\"type\":\"metrics\",\"t_us\":{t_us},\"counters\":{{");
+    for (i, (k, v)) in reg.counters().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{v}", json_escape(k)));
+    }
+    out.push_str("},\"gauges\":{");
+    for (i, (k, v)) in reg.gauges().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{}", json_escape(k), num(*v)));
+    }
+    out.push_str("},\"hists\":{");
+    for (i, (k, h)) in reg.hists().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\"{}\":{{\"count\":{},\"mean\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+            json_escape(k),
+            h.count(),
+            num(h.mean()),
+            num(h.quantile(0.50)),
+            num(h.quantile(0.95)),
+            num(h.quantile(0.99)),
+        ));
+    }
+    out.push_str("}}");
+    out
+}
+
+fn req_num(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)?.as_f64()
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.get(key)?.as_str()
+}
+
+/// Validate one parsed run-log line against the schema table above.
+/// Unknown `type` tags and missing/mistyped required fields are errors;
+/// extra fields are allowed.
+pub fn validate_line(v: &Json) -> Result<()> {
+    let ty = req_str(v, "type")?.to_string();
+    req_num(v, "t_us")?;
+    match ty.as_str() {
+        "run_start" => {
+            req_str(v, "arch")?;
+            req_num(v, "devices")?;
+            req_num(v, "steps")?;
+        }
+        "step" => {
+            for k in ["step", "loss", "devices", "comm_us", "conv_us", "comp_us", "bytes"] {
+                req_num(v, k)?;
+            }
+        }
+        "repartition" => {
+            req_num(v, "step")?;
+        }
+        "worker_left" => {
+            req_num(v, "step")?;
+            req_num(v, "devices_left")?;
+        }
+        "eval" => {
+            req_num(v, "step")?;
+            req_num(v, "accuracy")?;
+        }
+        "checkpoint" => {
+            req_num(v, "step")?;
+            req_str(v, "path")?;
+        }
+        "span" => {
+            req_str(v, "name")?;
+            let cat = req_str(v, "cat")?;
+            ensure!(
+                matches!(cat, "step" | "comm" | "conv" | "comp"),
+                "span cat {cat:?} not one of step|comm|conv|comp"
+            );
+            for k in ["device", "layer", "step", "dur_us"] {
+                req_num(v, k)?;
+            }
+        }
+        "metrics" => {
+            v.get("counters")?.as_obj()?;
+            v.get("gauges")?.as_obj()?;
+            v.get("hists")?.as_obj()?;
+        }
+        "run_end" => {
+            req_num(v, "steps")?;
+        }
+        other => bail!("unknown run-log line type {other:?}"),
+    }
+    Ok(())
+}
+
+/// Parse and validate a whole run log; errors carry the 1-based line number.
+pub fn validate_text(text: &str) -> Result<Vec<Json>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("run log line {}: {e}", i + 1))?;
+        validate_line(&v).map_err(|e| anyhow::anyhow!("run log line {}: {e}", i + 1))?;
+        out.push(v);
+    }
+    ensure!(!out.is_empty(), "run log is empty");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Breakdown;
+    use crate::obs::SpanCat;
+    use std::time::Duration;
+
+    #[test]
+    fn every_event_variant_round_trips_through_the_validator() {
+        let b = Breakdown {
+            comm: Duration::from_micros(10),
+            conv: Duration::from_micros(20),
+            comp: Duration::from_micros(5),
+        };
+        let events = vec![
+            Event::StepCompleted {
+                step: 1,
+                loss: 2.25,
+                devices: 3,
+                breakdown: b,
+                bytes_moved: 1024,
+            },
+            Event::Repartitioned { step: 2 },
+            Event::WorkerLeft { step: 2, devices_left: 2 },
+            Event::EvalDone { step: 3, accuracy: 0.125 },
+            Event::CheckpointSaved { step: 2, path: "out/step2 \"x\".ckpt".into() },
+        ];
+        for ev in &events {
+            let line = event_line(42, ev);
+            let v = Json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            validate_line(&v).unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+        // Step numbers survive the round trip.
+        let v = Json::parse(&event_line(7, &events[0])).unwrap();
+        assert_eq!(v.get("step").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(v.get("conv_us").unwrap().as_u64().unwrap(), 20);
+    }
+
+    #[test]
+    fn span_metrics_and_lifecycle_lines_validate() {
+        let s = SpanRec {
+            name: "conv1_fwd dev1 \"q\"".into(),
+            cat: SpanCat::Conv,
+            device: 1,
+            layer: 1,
+            step: 4,
+            ts_us: 100,
+            dur_us: 50,
+        };
+        let mut reg = MetricsRegistry::default();
+        reg.inc("steps", 3);
+        reg.set_gauge("util.dev0", 0.5);
+        reg.observe_ms("step_ms", 12.0);
+        for line in [
+            run_start_line(0, "tiny", 3, 5),
+            span_line(&s),
+            metrics_line(9, &reg),
+            run_end_line(10, 5),
+        ] {
+            let v = Json::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            validate_line(&v).unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+    }
+
+    #[test]
+    fn validator_rejects_bad_lines() {
+        for bad in [
+            r#"{"t_us":0}"#,                                     // no type
+            r#"{"type":"nope","t_us":0}"#,                       // unknown type
+            r#"{"type":"step","t_us":0,"step":1}"#,              // missing fields
+            r#"{"type":"step","step":1}"#,                       // missing t_us
+            r#"{"type":"span","t_us":0,"name":"x","cat":"io","device":0,"layer":0,"step":1,"dur_us":1}"#, // bad cat
+            r#"{"type":"eval","t_us":0,"step":1,"accuracy":"hi"}"#, // mistyped
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(validate_line(&v).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn validate_text_reports_line_numbers() {
+        let text = format!("{}\nnot json\n", run_start_line(0, "tiny", 2, 1));
+        let err = validate_text(&text).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(validate_text("").is_err(), "empty log must be rejected");
+    }
+}

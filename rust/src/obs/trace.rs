@@ -1,0 +1,104 @@
+//! Chrome trace-event export: renders recorded spans as a `trace.json`
+//! loadable in Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//!
+//! Layout: one process (`pid` 0, named `convdist`), one row per device —
+//! `tid` 0 is the master, `tid` d is the worker on device d, and
+//! [`PHASES_TID`] is a synthetic row carrying the per-step Comm/Conv/Comp
+//! attribution (the paper's Figure-6 decomposition) tiled under each step.
+//! Spans are "X" (complete) events with microsecond `ts`/`dur`; row names
+//! ride on "M" (metadata) `thread_name` events.
+
+use super::{runlog::json_escape, SpanRec, PHASES_TID};
+
+fn meta_event(tid: u32, name: &str) -> String {
+    format!(
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"args\":{{\"name\":\"{}\"}}}}",
+        json_escape(name)
+    )
+}
+
+/// Render spans into a complete Chrome trace-event JSON document.
+/// `workers` is the worker count (device rows 1..=workers get names even if
+/// a worker contributed no spans).
+pub fn chrome_trace_json(spans: &[SpanRec], workers: usize) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    out.push_str(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"args\":{\"name\":\"convdist\"}}",
+    );
+    out.push(',');
+    out.push_str(&meta_event(0, "master (device 0)"));
+    for d in 1..=workers {
+        out.push(',');
+        out.push_str(&meta_event(d as u32, &format!("worker (device {d})")));
+    }
+    out.push(',');
+    out.push_str(&meta_event(PHASES_TID, "phases (Fig. 6 attribution)"));
+    for s in spans {
+        out.push(',');
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"step\":{},\"layer\":{}}}}}",
+            json_escape(&s.name),
+            s.cat.label(),
+            s.device,
+            s.ts_us,
+            s.dur_us,
+            s.step,
+            s.layer,
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanCat;
+    use crate::util::json::Json;
+
+    #[test]
+    fn export_is_valid_trace_event_json_with_named_rows() {
+        let spans = vec![
+            SpanRec {
+                name: "step 1".into(),
+                cat: SpanCat::Step,
+                device: 0,
+                layer: 0,
+                step: 1,
+                ts_us: 0,
+                dur_us: 1000,
+            },
+            SpanRec {
+                name: "conv1_fwd dev2".into(),
+                cat: SpanCat::Conv,
+                device: 2,
+                layer: 1,
+                step: 1,
+                ts_us: 100,
+                dur_us: 400,
+            },
+        ];
+        let text = chrome_trace_json(&spans, 2);
+        let v = Json::parse(&text).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 4 thread_name (master, 2 workers, phases) + 2 X.
+        assert_eq!(events.len(), 7);
+        let mut names = Vec::new();
+        for e in events {
+            let ph = e.get("ph").unwrap().as_str().unwrap().to_string();
+            assert!(matches!(ph.as_str(), "X" | "M"), "bad ph {ph}");
+            e.get("pid").unwrap().as_u64().unwrap();
+            if ph == "X" {
+                e.get("tid").unwrap().as_u64().unwrap();
+                e.get("ts").unwrap().as_u64().unwrap();
+                e.get("dur").unwrap().as_u64().unwrap();
+                e.get("args").unwrap().get("step").unwrap().as_u64().unwrap();
+            } else if e.get("name").unwrap().as_str().unwrap() == "thread_name" {
+                names.push(e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string());
+            }
+        }
+        assert!(names.iter().any(|n| n.contains("master")), "{names:?}");
+        assert!(names.iter().any(|n| n.contains("device 2")), "{names:?}");
+        assert!(names.iter().any(|n| n.contains("phases")), "{names:?}");
+    }
+}

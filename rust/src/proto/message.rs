@@ -93,6 +93,53 @@ impl From<&Tensor> for WireTensor {
     }
 }
 
+/// One timed interval measured on a worker, shipped back piggybacked on the
+/// gather (`Message::SpanReport`) so worker-side conv spans land in the
+/// master's timeline.  Times are microseconds relative to the worker's own
+/// handling of the `ConvWork` frame — the master re-anchors them at the
+/// gather receive time (the two clocks are never compared directly).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSpan {
+    /// [`WireSpan::KIND_CONV`] (pure conv compute) or
+    /// [`WireSpan::KIND_SERVE`] (whole frame handling: decode + compute +
+    /// encode — the non-conv remainder is wire/serialization overhead).
+    pub kind: u8,
+    pub layer: u8,
+    /// 0 = forward, 1 = backward (mirrors `ConvWork::dir`).
+    pub dir: u8,
+    pub bucket: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl WireSpan {
+    pub const KIND_CONV: u8 = 0;
+    pub const KIND_SERVE: u8 = 1;
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.push(self.kind);
+        out.push(self.layer);
+        out.push(self.dir);
+        out.extend_from_slice(&self.bucket.to_le_bytes());
+        out.extend_from_slice(&self.start_us.to_le_bytes());
+        out.extend_from_slice(&self.dur_us.to_le_bytes());
+    }
+
+    fn decode_from(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        ensure!(buf.len() >= *pos + 3, "WireSpan truncated");
+        let (kind, layer, dir) = (buf[*pos], buf[*pos + 1], buf[*pos + 2]);
+        *pos += 3;
+        Ok(Self {
+            kind,
+            layer,
+            dir,
+            bucket: take_u32(buf, pos)?,
+            start_us: take_u64(buf, pos)?,
+            dur_us: take_u64(buf, pos)?,
+        })
+    }
+}
+
 /// Everything master and slaves say to each other.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
@@ -145,6 +192,11 @@ pub enum Message {
     /// slave pre-warms the bucket executables so the re-sharded fleet does
     /// not pay preparation time on the next scatter.
     ShardUpdate { layer: u8, lo: u32, hi: u32, bucket: u32 },
+    /// Slave -> master, immediately before the matching `ConvResult` when
+    /// the worker runs with tracing on: the spans it measured while serving
+    /// scatter round `seq`.  Piggybacked on the gather — no extra round
+    /// trip — and safely ignored by masters that are not tracing.
+    SpanReport { worker_id: u32, seq: u32, spans: Vec<WireSpan> },
 }
 
 const ID_HELLO: u8 = 0x01;
@@ -159,6 +211,7 @@ const ID_PING: u8 = 0x09;
 const ID_PONG: u8 = 0x0A;
 const ID_LEAVE: u8 = 0x0B;
 const ID_SHARD_UPDATE: u8 = 0x0C;
+const ID_SPAN_REPORT: u8 = 0x0D;
 
 impl Message {
     /// -> (message id, payload bytes)
@@ -226,6 +279,15 @@ impl Message {
                 out.extend_from_slice(&bucket.to_le_bytes());
                 (ID_SHARD_UPDATE, out)
             }
+            Message::SpanReport { worker_id, seq, spans } => {
+                out.extend_from_slice(&worker_id.to_le_bytes());
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&(spans.len() as u32).to_le_bytes());
+                for s in spans {
+                    s.encode_into(&mut out);
+                }
+                (ID_SPAN_REPORT, out)
+            }
         }
     }
 
@@ -290,6 +352,17 @@ impl Message {
                     bucket: take_u32(buf, &mut pos)?,
                 }
             }
+            ID_SPAN_REPORT => {
+                let worker_id = take_u32(buf, &mut pos)?;
+                let seq = take_u32(buf, &mut pos)?;
+                let n = take_u32(buf, &mut pos)? as usize;
+                ensure!(n <= 4096, "SpanReport span count {n} too large");
+                let mut spans = Vec::with_capacity(n);
+                for _ in 0..n {
+                    spans.push(WireSpan::decode_from(buf, &mut pos)?);
+                }
+                Message::SpanReport { worker_id, seq, spans }
+            }
             other => bail!("unknown message id {other:#x}"),
         };
         Ok(msg)
@@ -310,6 +383,7 @@ impl Message {
             Message::Pong { .. } => "Pong",
             Message::Leave { .. } => "Leave",
             Message::ShardUpdate { .. } => "ShardUpdate",
+            Message::SpanReport { .. } => "SpanReport",
         }
     }
 }
@@ -318,6 +392,13 @@ fn take_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
     ensure!(buf.len() >= *pos + 4, "payload truncated at {pos}");
     let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
     *pos += 4;
+    Ok(v)
+}
+
+fn take_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    ensure!(buf.len() >= *pos + 8, "payload truncated at {pos}");
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
     Ok(v)
 }
 
@@ -417,6 +498,29 @@ mod tests {
             Message::Pong { nonce: 42 },
             Message::Leave { worker_id: 1, reason: "maintenance".into() },
             Message::ShardUpdate { layer: 0, lo: 4, hi: 8, bucket: 4 },
+            Message::SpanReport { worker_id: 2, seq: 3, spans: vec![] },
+            Message::SpanReport {
+                worker_id: 1,
+                seq: 9,
+                spans: vec![
+                    WireSpan {
+                        kind: WireSpan::KIND_SERVE,
+                        layer: 1,
+                        dir: 0,
+                        bucket: 8,
+                        start_us: 0,
+                        dur_us: 1500,
+                    },
+                    WireSpan {
+                        kind: WireSpan::KIND_CONV,
+                        layer: 1,
+                        dir: 1,
+                        bucket: 8,
+                        start_us: 200,
+                        dur_us: 1200,
+                    },
+                ],
+            },
         ];
         for msg in msgs {
             let (id, buf) = msg.encode();

@@ -21,7 +21,7 @@ mod frame;
 mod message;
 
 pub use frame::{crc32, frame_len, read_frame, write_frame, FRAME_MAGIC, MAX_PAYLOAD};
-pub use message::{Message, WireTensor};
+pub use message::{Message, WireSpan, WireTensor};
 
 #[cfg(test)]
 mod tests {
@@ -60,6 +60,18 @@ mod tests {
             Message::Pong { nonce: 77 },
             Message::Leave { worker_id: 2, reason: "preempted".into() },
             Message::ShardUpdate { layer: 2, lo: 6, hi: 16, bucket: 12 },
+            Message::SpanReport {
+                worker_id: 1,
+                seq: 9,
+                spans: vec![WireSpan {
+                    kind: WireSpan::KIND_CONV,
+                    layer: 2,
+                    dir: 1,
+                    bucket: 8,
+                    start_us: 5,
+                    dur_us: 100,
+                }],
+            },
         ];
         for m in msgs {
             assert_eq!(roundtrip(&m), m);

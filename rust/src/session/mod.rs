@@ -58,12 +58,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::cluster::{spawn_workers, DistTrainer, InprocCluster, StepResult, WorkerSource};
+use crate::cluster::{spawn_workers_traced, DistTrainer, InprocCluster, StepResult, WorkerSource};
 use crate::config::{ArchChoice, ExperimentConfig, TrainerConfig};
 use crate::data::{default_dataset, Batch, Dataset};
 use crate::devices::{Throttle, ThrottlePlan};
 use crate::metrics::Breakdown;
 use crate::net::{Link, LinkModel, TcpLink};
+use crate::obs::{ObsConfig, Observability};
 use crate::runtime::{ArchSpec, Runtime};
 use crate::sched::AdaptiveConfig;
 
@@ -180,6 +181,8 @@ pub struct SessionBuilder {
     observers: Vec<Observer>,
     dataset: Option<Box<dyn Dataset + Send>>,
     resume: Option<PathBuf>,
+    obs: ObsConfig,
+    checkpoint_dir: PathBuf,
 }
 
 impl Default for SessionBuilder {
@@ -204,6 +207,8 @@ impl SessionBuilder {
             observers: Vec::new(),
             dataset: None,
             resume: None,
+            obs: ObsConfig::default(),
+            checkpoint_dir: PathBuf::from("checkpoints"),
         }
     }
 
@@ -358,6 +363,24 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach fleet-wide observability (see [`crate::obs`]): spans + a
+    /// JSONL run log + a Chrome trace when the config names a directory,
+    /// and/or a metrics registry rendered as a table at the end.  Every
+    /// [`Event`] is mirrored into the run log; in-proc workers are spawned
+    /// with tracing on so their conv spans land in the master's timeline.
+    pub fn observe(mut self, cfg: ObsConfig) -> Self {
+        self.obs = cfg;
+        self
+    }
+
+    /// Where `checkpoint_every` auto-checkpoints are written
+    /// (`<dir>/step<N>.ckpt`; created on first use).  Default
+    /// `checkpoints/`.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = dir.into();
+        self
+    }
+
     /// Restore a [`Checkpoint`] right after the fleet is built: parameters,
     /// momentum and step counter continue where the saved run stopped.
     pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
@@ -381,7 +404,12 @@ impl SessionBuilder {
         }
         let (links, cluster) = match std::mem::replace(&mut self.topology, TopologySpec::InProc) {
             TopologySpec::InProc => {
-                let mut cluster = spawn_workers(worker_source, &self.plans, self.shape)?;
+                let mut cluster = spawn_workers_traced(
+                    worker_source,
+                    &self.plans,
+                    self.shape,
+                    self.obs.tracing(),
+                )?;
                 (cluster.take_links(), Some(cluster))
             }
             TopologySpec::Tcp(addrs) => {
@@ -398,13 +426,24 @@ impl SessionBuilder {
             }
             TopologySpec::Links(links) => (links, None),
         };
-        let trainer = DistTrainer::new(
+        let mut trainer = DistTrainer::new(
             rt.clone(),
             links,
             &self.trainer,
             self.master_throttle,
             self.adaptive,
         )?;
+        // The obs epoch starts *after* calibration so step 1's spans sit
+        // near t=0 of the trace instead of behind the calibration gap.
+        let obs = if self.obs.tracing() || self.obs.metrics {
+            let label = rt.arch().label();
+            let devices = 1 + trainer.alive_workers();
+            let o = Observability::new(&self.obs, &label, devices, self.trainer.steps)?;
+            trainer.attach_obs(o.handle());
+            Some(o)
+        } else {
+            None
+        };
         let dataset = match self.dataset.take() {
             Some(ds) => ds,
             None => {
@@ -419,6 +458,8 @@ impl SessionBuilder {
             cfg: self.trainer,
             observers: self.observers,
             dataset,
+            obs,
+            checkpoint_dir: self.checkpoint_dir,
         };
         if let Some(path) = self.resume {
             let ckpt = Checkpoint::load(&path)?;
@@ -468,6 +509,8 @@ pub struct Session {
     cfg: TrainerConfig,
     observers: Vec<Observer>,
     dataset: Box<dyn Dataset + Send>,
+    obs: Option<Observability>,
+    checkpoint_dir: PathBuf,
 }
 
 impl Session {
@@ -491,6 +534,10 @@ impl Session {
     }
 
     fn emit(&mut self, ev: Event) {
+        // The run log sees every event first, in emission order.
+        if let Some(o) = &self.obs {
+            o.handle().event(&ev);
+        }
         for obs in &mut self.observers {
             obs(&ev);
         }
@@ -501,6 +548,9 @@ impl Session {
         let devices_before = 1 + self.trainer.alive_workers();
         let r = self.trainer.step(batch)?;
         let step = self.trainer.steps_done();
+        if let Some(o) = &self.obs {
+            o.handle().metrics(|m| m.absorb_breakdown(&r.breakdown));
+        }
         self.emit(Event::StepCompleted {
             step,
             loss: r.loss,
@@ -534,6 +584,17 @@ impl Session {
             cumulative.add(&r.breakdown);
             bytes += r.bytes_moved;
             losses.push(r.loss);
+            // Periodic auto-checkpoint (`checkpoint_every` trainer knob).
+            if let Some(every) = self.cfg.checkpoint_every {
+                let done = self.trainer.steps_done();
+                if every > 0 && done % every as u64 == 0 {
+                    std::fs::create_dir_all(&self.checkpoint_dir).with_context(|| {
+                        format!("creating checkpoint dir {}", self.checkpoint_dir.display())
+                    })?;
+                    let path = self.checkpoint_dir.join(format!("step{done}.ckpt"));
+                    self.save_checkpoint(path)?;
+                }
+            }
         }
         let cursor = self.trainer.steps_done() as usize + 1;
         let held_out = self.dataset.batch(batch_size, cursor)?;
@@ -607,13 +668,33 @@ impl Session {
         Ok(())
     }
 
-    /// Tell every worker training is over and join the in-proc fleet.
-    pub fn shutdown(self) -> Result<()> {
+    /// Flush the observability sinks: absorb the end-of-run scheduler and
+    /// link counters into the registry, write the `metrics`/`run_end` run-log
+    /// lines and `trace.json`, and return the rendered metrics table (when
+    /// metrics are on).  Idempotent; [`Session::shutdown`] calls it too, so
+    /// only call this directly to print the table before tearing down.
+    pub fn finish_obs(&mut self) -> Result<Option<String>> {
+        let Some(obs) = self.obs.as_mut() else {
+            return Ok(None);
+        };
+        let h = obs.handle();
+        let stats = self.trainer.sched_stats();
+        h.metrics(|m| m.absorb_sched(stats));
+        for (device, bytes, frames) in self.trainer.link_stats() {
+            h.metrics(|m| m.absorb_link(device, bytes, frames));
+        }
+        obs.finish(self.trainer.steps_done())
+    }
+
+    /// Tell every worker training is over and join the in-proc fleet (after
+    /// flushing the observability sinks).
+    pub fn shutdown(mut self) -> Result<()> {
+        let finish = self.finish_obs();
         let Session { trainer, cluster, .. } = self;
         trainer.shutdown()?;
         if let Some(c) = cluster {
             c.join()?;
         }
-        Ok(())
+        finish.map(|_| ())
     }
 }

@@ -4,17 +4,20 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-/// Parsed command line: a subcommand plus `--key value` / `--flag` options.
+/// Parsed command line: a subcommand plus `--key value` / `--flag` options
+/// and any remaining bare tokens as positionals (`convdist report FILE`).
 #[derive(Debug, Default)]
 pub struct Args {
     pub command: String,
+    pub positional: Vec<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
     /// Parse `argv[1..]`: first bare token is the subcommand; `--key value`
-    /// pairs and bare `--flag`s may appear in any order.
+    /// pairs and bare `--flag`s may appear in any order; further bare tokens
+    /// collect into `positional` (subcommands that take none reject them).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -34,7 +37,7 @@ impl Args {
             } else if out.command.is_empty() {
                 out.command = tok;
             } else {
-                bail!("unexpected positional argument {tok:?}");
+                out.positional.push(tok);
             }
         }
         Ok(out)
@@ -94,12 +97,23 @@ mod tests {
 
     #[test]
     fn errors() {
-        assert!(Args::parse(["a".into(), "b".into()]).is_err());
         assert!(Args::parse(["x".into(), "--n".into(), "3".into(), "--n".into(), "4".into()])
             .is_err());
         let a = args("train --steps abc");
         assert!(a.get::<usize>("steps", 0).is_err());
         assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn positionals_collect_after_the_subcommand() {
+        let a = args("report out/run.jsonl");
+        assert_eq!(a.command, "report");
+        assert_eq!(a.positional, vec!["out/run.jsonl"]);
+        // `--key value` consumes its value; it does not become a positional.
+        let b = args("report --format human out/run.jsonl extra");
+        assert_eq!(b.opt("format"), Some("human"));
+        assert_eq!(b.positional, vec!["out/run.jsonl", "extra"]);
+        assert!(args("train").positional.is_empty());
     }
 
     #[test]

@@ -24,5 +24,6 @@ pub fn fast_cfg(steps: usize) -> convdist::config::TrainerConfig {
         seed: 42,
         log_every: 100,
         calib_rounds: 1,
+        checkpoint_every: None,
     }
 }

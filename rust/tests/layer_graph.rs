@@ -30,6 +30,7 @@ fn cfg(steps: usize) -> TrainerConfig {
         seed: 42,
         log_every: 1000,
         calib_rounds: 1,
+        checkpoint_every: None,
     }
 }
 

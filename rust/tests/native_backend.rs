@@ -35,6 +35,7 @@ fn tiny_cfg(steps: usize, momentum: f32) -> TrainerConfig {
         seed: 42,
         log_every: 1000,
         calib_rounds: 1,
+        checkpoint_every: None,
     }
 }
 

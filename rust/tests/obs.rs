@@ -1,0 +1,267 @@
+//! End-to-end observability contract: a traced adaptive run with a mid-run
+//! degradation, a scripted departure and periodic auto-checkpoints must
+//! produce a schema-valid `run.jsonl` whose lifecycle/step/event lines sit
+//! in causal order, and a `trace.json` that is well-formed Chrome
+//! trace-event JSON whose per-step phase spans agree with the step lines'
+//! own Comm/Conv/Comp attribution.
+
+use std::path::PathBuf;
+
+use convdist::cluster::{worker_loop, WorkerOptions};
+use convdist::config::TrainerConfig;
+use convdist::devices::{Throttle, ThrottlePlan};
+use convdist::net::{inproc_pair, Link};
+use convdist::obs::{runlog, ObsConfig, PHASES_TID};
+use convdist::runtime::{ArchSpec, Runtime};
+use convdist::sched::AdaptiveConfig;
+use convdist::session::SessionBuilder;
+use convdist::util::json::Json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("convdist_obs_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A library worker over an in-proc link with span shipping on, optionally
+/// carrying a throttle plan (mid-run degradation) and a scripted departure.
+fn spawn_traced_worker(id: u32, plan: ThrottlePlan, leave_after: Option<u64>) -> Box<dyn Link> {
+    let (master_end, worker_end) = inproc_pair();
+    std::thread::Builder::new()
+        .name(format!("obs-worker-{id}"))
+        .spawn(move || {
+            let rt = Runtime::open(convdist::artifacts_dir()).unwrap();
+            let mut opts = WorkerOptions::with_plan(id, plan).traced(true);
+            opts.leave_after = leave_after;
+            let _ = worker_loop(worker_end, rt, opts);
+        })
+        .unwrap();
+    Box::new(master_end)
+}
+
+/// The headline scenario from the issue: an adaptive throttled fleet where
+/// one worker degrades 8x (forcing a re-shard) and another departs late,
+/// with `checkpoint_every` firing twice — every resulting run-log line must
+/// validate, and the step/repartition/worker_left/checkpoint/eval lines must
+/// land in causal order.
+#[test]
+fn traced_adaptive_run_logs_events_in_causal_order() {
+    let trace_dir = tmpdir("causal");
+    let ckpt_dir = tmpdir("causal_ckpt");
+    let steps = 12usize;
+
+    let fast = Throttle::virtual_gflops(2.0);
+    let slow = Throttle::virtual_gflops(0.25); // 8x degradation
+    // Worker 1 (device 1) degrades after 3 steps (4 conv frames per step);
+    // worker 2 (device 2) leaves during step 10 (after 36 frames).
+    let links: Vec<Box<dyn Link>> = vec![
+        spawn_traced_worker(1, ThrottlePlan::degrade_after(fast, 12, slow), None),
+        spawn_traced_worker(2, ThrottlePlan::fixed(fast), Some(36)),
+    ];
+    let adaptive = AdaptiveConfig {
+        alpha: 0.5,
+        warmup_steps: 1,
+        imbalance_threshold: 0.2,
+        hysteresis: 0.05,
+        cooldown_steps: 2,
+        heartbeat_every: 0,
+        ..Default::default()
+    };
+    let cfg = TrainerConfig {
+        steps,
+        calib_rounds: 1,
+        log_every: 100,
+        checkpoint_every: Some(5),
+        ..Default::default()
+    };
+    let mut session = SessionBuilder::new()
+        .trainer(cfg)
+        .master_throttle(fast)
+        .links(links)
+        .adaptive(adaptive)
+        .observe(ObsConfig::trace_to(&trace_dir))
+        .checkpoint_dir(&ckpt_dir)
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.steps_run, steps);
+    assert!(report.repartitions >= 1, "degradation never re-sharded");
+    assert_eq!(report.departures, 1, "scripted departure never landed");
+    let table = session.finish_obs().unwrap().expect("--trace implies metrics");
+    assert!(table.contains("steps"), "{table}");
+    assert!(table.contains("sched.repartitions"), "{table}");
+    assert!(table.contains("net.dev1.bytes"), "{table}");
+    session.shutdown().unwrap();
+    assert!(ckpt_dir.join("step5.ckpt").exists());
+    assert!(ckpt_dir.join("step10.ckpt").exists());
+
+    // Every line validates; the validator is the single schema authority.
+    let text = std::fs::read_to_string(trace_dir.join("run.jsonl")).unwrap();
+    let lines = runlog::validate_text(&text).unwrap();
+    let ty = |v: &Json| v.get("type").unwrap().as_str().unwrap().to_string();
+    assert_eq!(ty(&lines[0]), "run_start");
+    assert_eq!(ty(lines.last().unwrap()), "run_end");
+    assert_eq!(lines[0].get("devices").unwrap().as_u64().unwrap(), 3);
+    assert_eq!(lines[0].get("steps").unwrap().as_u64().unwrap(), steps as u64);
+
+    // Causal order: step lines strictly increasing; every repartition /
+    // worker_left / checkpoint line refers to the most recent step line
+    // (the session emits them right after the step they happened in).
+    let mut last_step = 0u64;
+    let mut counts = std::collections::BTreeMap::new();
+    for v in &lines {
+        let t = ty(v);
+        *counts.entry(t.clone()).or_insert(0u64) += 1;
+        match t.as_str() {
+            "step" => {
+                let s = v.get("step").unwrap().as_u64().unwrap();
+                assert_eq!(s, last_step + 1, "step lines must be consecutive");
+                last_step = s;
+            }
+            "repartition" | "worker_left" | "checkpoint" => {
+                let s = v.get("step").unwrap().as_u64().unwrap();
+                assert_eq!(s, last_step, "{t} line out of causal position");
+            }
+            "eval" => {
+                assert_eq!(last_step, steps as u64, "eval must come after the last step");
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(counts["step"], steps as u64);
+    assert_eq!(counts["eval"], 1);
+    assert_eq!(counts["worker_left"], 1);
+    assert_eq!(counts["checkpoint"], 2);
+    assert!(counts["repartition"] >= 1);
+    assert_eq!(counts["metrics"], 1);
+    assert!(counts["span"] > 0, "a traced run must record spans");
+
+    // Worker-side spans crossed the wire: conv spans on worker device rows
+    // and their serve (comm) envelopes, re-anchored into the master's log.
+    let span_on = |device: u64, cat: &str| {
+        lines.iter().any(|v| {
+            ty(v) == "span"
+                && v.get("device").unwrap().as_u64().unwrap() == device
+                && v.get("cat").unwrap().as_str().unwrap() == cat
+        })
+    };
+    assert!(span_on(1, "conv"), "worker 1 conv spans missing");
+    assert!(span_on(2, "conv"), "worker 2 conv spans missing");
+    assert!(span_on(1, "comm"), "worker 1 serve spans missing");
+    assert!(span_on(0, "conv"), "master-shard conv spans missing");
+    assert!(span_on(0, "step"), "step spans missing");
+
+    let _ = std::fs::remove_dir_all(&trace_dir);
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+/// Trace-export golden contract on the tiny preset: `trace.json` is valid
+/// Chrome trace-event JSON (named rows, complete "X" events), and for every
+/// step the phase spans on the [`PHASES_TID`] row sum to the step line's own
+/// `comm_us`/`conv_us`/`comp_us` within 5% — the acceptance bound between
+/// the trace and the printed `Breakdown`.
+#[test]
+fn trace_json_is_valid_and_phase_spans_match_step_breakdowns() {
+    let trace_dir = tmpdir("trace");
+    let v = Throttle::virtual_gflops(0.2);
+    let cfg = TrainerConfig { steps: 3, calib_rounds: 1, log_every: 100, ..Default::default() };
+    let mut session = SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny())
+        .trainer(cfg)
+        .master_throttle(v)
+        .workers(&[v, v])
+        .observe(ObsConfig::trace_to(&trace_dir))
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    session.shutdown().unwrap();
+
+    // Per-step phase totals from the run log's step lines.
+    let text = std::fs::read_to_string(trace_dir.join("run.jsonl")).unwrap();
+    let lines = runlog::validate_text(&text).unwrap();
+    let mut want: Vec<(u64, [f64; 3])> = Vec::new();
+    for v in &lines {
+        if v.get("type").unwrap().as_str().unwrap() == "step" {
+            want.push((
+                v.get("step").unwrap().as_u64().unwrap(),
+                [
+                    v.get("comm_us").unwrap().as_f64().unwrap(),
+                    v.get("conv_us").unwrap().as_f64().unwrap(),
+                    v.get("comp_us").unwrap().as_f64().unwrap(),
+                ],
+            ));
+        }
+    }
+    assert_eq!(want.len(), 3);
+
+    // The trace parses; rows are named; X events carry ts/dur/args.
+    let trace = std::fs::read_to_string(trace_dir.join("trace.json")).unwrap();
+    let doc = Json::parse(&trace).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut row_names = Vec::new();
+    let mut phase_sums: std::collections::BTreeMap<(u64, String), f64> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "M" => {
+                if e.get("name").unwrap().as_str().unwrap() == "thread_name" {
+                    let name = e.get("args").unwrap().get("name").unwrap().as_str().unwrap();
+                    row_names.push(name.to_string());
+                }
+            }
+            "X" => {
+                let tid = e.get("tid").unwrap().as_u64().unwrap();
+                e.get("ts").unwrap().as_u64().unwrap();
+                let dur = e.get("dur").unwrap().as_u64().unwrap();
+                let step = e.get("args").unwrap().get("step").unwrap().as_u64().unwrap();
+                if tid == PHASES_TID as u64 {
+                    let cat = e.get("cat").unwrap().as_str().unwrap().to_string();
+                    *phase_sums.entry((step, cat)).or_insert(0.0) += dur as f64;
+                }
+            }
+            other => panic!("unexpected trace event ph {other:?}"),
+        }
+    }
+    assert!(row_names.iter().any(|n| n.contains("master")), "{row_names:?}");
+    assert!(row_names.iter().any(|n| n.contains("device 2")), "{row_names:?}");
+    assert!(row_names.iter().any(|n| n.contains("phases")), "{row_names:?}");
+
+    // Fig. 6 agreement: trace phase spans vs the step lines, within 5%.
+    for (step, [comm, conv, comp]) in want {
+        for (cat, us) in [("comm", comm), ("conv", conv), ("comp", comp)] {
+            let got = phase_sums.get(&(step, cat.to_string())).copied().unwrap_or(0.0);
+            assert!(
+                (got - us).abs() <= 0.05 * us + 2.0,
+                "step {step} phase {cat}: trace {got}us vs run log {us}us"
+            );
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&trace_dir);
+}
+
+/// The `convdist report` path over a real traced run: `summarize_file`
+/// validates every line and renders the Figure-6-style table.
+#[test]
+fn report_summarizes_a_real_traced_run() {
+    let trace_dir = tmpdir("report");
+    let v = Throttle::virtual_gflops(0.2);
+    let cfg = TrainerConfig { steps: 2, calib_rounds: 1, log_every: 100, ..Default::default() };
+    let mut session = SessionBuilder::new()
+        .arch_spec(ArchSpec::tiny())
+        .trainer(cfg)
+        .master_throttle(v)
+        .workers(&[v])
+        .observe(ObsConfig::trace_to(&trace_dir))
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    session.shutdown().unwrap();
+
+    let out = convdist::obs::report::summarize_file(&trace_dir.join("run.jsonl")).unwrap();
+    assert!(out.contains("2 devices, 2/2 steps"), "{out}");
+    assert!(out.contains("phase totals"), "{out}");
+    assert!(out.contains("eval accuracy"), "{out}");
+
+    let _ = std::fs::remove_dir_all(&trace_dir);
+}

@@ -51,6 +51,7 @@ fn tiny_cfg(steps: usize) -> TrainerConfig {
         seed: 42,
         log_every: 100,
         calib_rounds: 1,
+        checkpoint_every: None,
     }
 }
 
