@@ -42,6 +42,51 @@ cargo run --release -- run --config examples/configs/smoke.json --trace ci_trace
 test -s ci_trace/run.jsonl
 test -s ci_trace/trace.json
 cargo run --release -- report ci_trace/run.jsonl
+# Cross-run regression gate (DESIGN.md §12): the committed golden baseline
+# must compare clean against itself; the committed slow variant (a +50%
+# injected slowdown) must trip the gate's non-zero exit; and the fresh
+# smoke log must re-parse through the same pipeline (`top` + a machine
+# readable self-compare, kept as a workflow artifact next to the trace).
+cargo run --release -- compare rust/tests/fixtures/golden_run.jsonl \
+  rust/tests/fixtures/golden_run.jsonl
+if cargo run --release -- compare rust/tests/fixtures/golden_run.jsonl \
+  rust/tests/fixtures/golden_run_slow.jsonl --threshold 20; then
+  echo "compare gate failed to trip on the slow fixture" >&2
+  exit 1
+fi
+cargo run --release -- top ci_trace/run.jsonl
+cargo run --release -- compare ci_trace/run.jsonl ci_trace/run.jsonl \
+  --format jsonl >ci_trace/compare.jsonl
+test -s ci_trace/compare.jsonl
+# Live fleet endpoint smoke (DESIGN.md §12): re-run the smoke config with a
+# metrics listener on an ephemeral port, scrape it with curl mid-run, and
+# require the exposition header plus per-device health gauges.  Skipped
+# where curl is absent (the GitHub runners always have it).
+if command -v curl >/dev/null 2>&1; then
+  rm -f live_run.out live_metrics.txt
+  cargo run --release -- run --config examples/configs/smoke.json --steps 60 \
+    --metrics-addr 127.0.0.1:0 >live_run.out 2>&1 &
+  live_pid=$!
+  i=0
+  while [ "$i" -lt 100 ]; do
+    addr=$(sed -n 's|.*live metrics: http://\([0-9.:]*\)/metrics.*|\1|p' live_run.out | head -n 1)
+    if [ -n "$addr" ] && curl -fsS "http://$addr/metrics" >live_metrics.txt 2>/dev/null &&
+      grep -q 'convdist_health{' live_metrics.txt; then
+      break
+    fi
+    i=$((i + 1))
+    sleep 0.1
+  done
+  if ! grep -q 'convdist_health{' live_metrics.txt 2>/dev/null; then
+    kill "$live_pid" 2>/dev/null || true
+    echo "live metrics endpoint never served the health gauges" >&2
+    exit 1
+  fi
+  grep -q '^convdist_up 1' live_metrics.txt
+  grep -q '^# TYPE convdist_steps counter' live_metrics.txt
+  wait "$live_pid"
+  rm -f live_run.out live_metrics.txt
+fi
 # Adaptive end-to-end: the config pre-flight plus an adaptive-enabled run.
 cargo run --release -- run --config examples/configs/adaptive.json
 # Static-vs-adaptive step-time trajectory from the scheduler simulator;

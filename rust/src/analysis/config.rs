@@ -16,7 +16,7 @@ use super::diag::Report;
 use super::graph::check_spec;
 use super::plan::{check_plan, PlanCheckOptions};
 
-const ROOT_KEYS: &[&str] = &["name", "arch", "trainer", "cluster", "network", "adaptive"];
+const ROOT_KEYS: &[&str] = &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs"];
 const TRAINER_KEYS: &[&str] = &[
     "steps",
     "lr",
@@ -42,6 +42,7 @@ const ADAPTIVE_KEYS: &[&str] = &[
     "heartbeat_timeout_ms",
     "gather_timeout_ms",
 ];
+const OBS_KEYS: &[&str] = &["metrics_addr"];
 
 fn lint_keys(rep: &mut Report, v: &Json, section: &str, allowed: &[&str]) {
     if let Json::Obj(m) = v {
@@ -80,6 +81,7 @@ pub fn check_config_text(text: &str) -> Report {
         ("cluster", CLUSTER_KEYS),
         ("network", NETWORK_KEYS),
         ("adaptive", ADAPTIVE_KEYS),
+        ("obs", OBS_KEYS),
     ] {
         if let Some(s) = v.opt(section) {
             lint_keys(&mut rep, s, section, allowed);

@@ -40,7 +40,10 @@ use crate::devices::Throttle;
 use crate::metrics::{Breakdown, Phase, PhaseTimer, SchedStats};
 use crate::model::{Grads, Params, Sgd};
 use crate::net::Link;
-use crate::obs::{ObsHandle, SpanCat, SpanRec};
+use crate::obs::{
+    AnomalyDetector, FleetHealth, HealthConfig, HealthState, HealthTransition, ObsHandle,
+    SpanCat, SpanRec, StepAnomaly,
+};
 use crate::proto::{Message, WireSpan, WireTensor};
 use crate::runtime::{ArchSpec, ConvDir, Manifest, Runtime};
 use crate::sched::{
@@ -60,6 +63,12 @@ pub struct StepResult {
     pub devices: usize,
     /// The adaptive policy re-sharded the fleet after this step.
     pub repartitioned: bool,
+    /// Health-state transitions this step triggered (EWMA slowness ladder,
+    /// departures), in device order.
+    pub health: Vec<HealthTransition>,
+    /// Set when this step's total time was a high outlier against the
+    /// rolling median/MAD window.
+    pub anomaly: Option<StepAnomaly>,
 }
 
 struct WorkerSlot {
@@ -108,6 +117,10 @@ pub struct DistTrainer {
     hb_nonce: u32,
     /// Observability sink (spans + metrics); `None` = zero-cost no-op path.
     obs: Option<ObsHandle>,
+    /// Per-device health ladder over the same telemetry (DESIGN.md §12).
+    health: FleetHealth,
+    /// Rolling median/MAD outlier detector over step times.
+    anomaly: AnomalyDetector,
 }
 
 impl DistTrainer {
@@ -152,6 +165,8 @@ impl DistTrainer {
             steps_done: 0,
             hb_nonce: 0,
             obs: None,
+            health: FleetHealth::new(n_devices, HealthConfig::default()),
+            anomaly: AnomalyDetector::default(),
         };
         trainer.calibrate(cfg.calib_rounds)?;
         // Seed the telemetry from the calibration probe so every device has
@@ -274,6 +289,33 @@ impl DistTrainer {
     /// The per-device EWMA timing telemetry (seconds per GFLOP).
     pub fn telemetry(&self) -> &FleetTelemetry {
         &self.telemetry
+    }
+
+    /// Current per-device health ladder (index = device id).
+    pub fn health_states(&self) -> &[HealthState] {
+        self.health.states()
+    }
+
+    /// Kernel share per device, FLOP-weighted across every conv layer:
+    /// `(device, fraction of total conv work)`. The live metrics endpoint
+    /// renders this as `convdist_share{device=..}`.
+    pub fn device_shares(&self) -> Vec<(usize, f64)> {
+        let arch = self.rt.arch();
+        let n_dev = self.probe_times.len().max(1);
+        let mut work = vec![0.0f64; n_dev];
+        let mut total = 0.0f64;
+        for (li, shards) in self.shards.iter().enumerate() {
+            let per_kernel = flops_per_kernel(arch, li + 1);
+            for s in shards {
+                let w = s.len() as f64 * per_kernel;
+                if s.device < n_dev {
+                    work[s.device] += w;
+                }
+                total += w;
+            }
+        }
+        let total = total.max(1e-12);
+        work.into_iter().enumerate().map(|(d, w)| (d, w / total)).collect()
     }
 
     pub fn steps_done(&self) -> u64 {
@@ -410,6 +452,8 @@ impl DistTrainer {
                     if self.adaptive.enabled {
                         r.repartitioned = self.consider_repartition()?;
                     }
+                    r.anomaly = self.anomaly.observe(r.breakdown.total().as_secs_f64() * 1e3);
+                    r.health = self.health.update(&self.active_devices(), &self.telemetry);
                     return Ok(r);
                 }
                 Err(e) => {
@@ -718,6 +762,8 @@ impl DistTrainer {
             bytes_moved: self.total_bytes() - bytes0,
             devices: 1 + self.alive_workers(),
             repartitioned: false,
+            health: Vec::new(),
+            anomaly: None,
         })
     }
 

@@ -39,6 +39,10 @@ pub struct ExperimentConfig {
     /// Adaptive re-partitioning policy (disabled by default — the static
     /// Eq.1 plan from calibration stands for the whole run).
     pub adaptive: AdaptiveConfig,
+    /// Observability: serve live Prometheus metrics on this address for the
+    /// run's lifetime (`"obs": {"metrics_addr": "127.0.0.1:9184"}`); the CLI
+    /// `--metrics-addr` flag overrides it.  `None` = no endpoint.
+    pub metrics_addr: Option<String>,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -120,6 +124,7 @@ impl Default for ExperimentConfig {
             cluster: ClusterConfig::default(),
             network: NetworkConfig::default(),
             adaptive: AdaptiveConfig::disabled(),
+            metrics_addr: None,
         }
     }
 }
@@ -137,7 +142,7 @@ impl ExperimentConfig {
         let v = Json::parse(text).context("parsing experiment config JSON")?;
         check_keys(
             &v,
-            &["name", "arch", "trainer", "cluster", "network", "adaptive"],
+            &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs"],
             "config root",
         )?;
         let mut cfg = ExperimentConfig {
@@ -294,6 +299,15 @@ impl ExperimentConfig {
                 };
             }
         }
+        if let Some(o) = v.opt("obs") {
+            check_keys(o, &["metrics_addr"], "obs")?;
+            if let Some(x) = o.opt("metrics_addr") {
+                cfg.metrics_addr = match x {
+                    Json::Null => None,
+                    x => Some(x.as_str()?.to_string()),
+                };
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -363,12 +377,16 @@ impl ExperimentConfig {
             None => String::new(),
             Some(n) => format!(", \"checkpoint_every\": {n}"),
         };
+        let obs = match &self.metrics_addr {
+            None => String::new(),
+            Some(addr) => format!(",\n  \"obs\": {{\"metrics_addr\": \"{}\"}}", esc(addr)),
+        };
         format!(
             "{{\n  \"name\": \"{}\",{arch}{adaptive}\n  \"trainer\": {{\"steps\": {}, \"lr\": {}, \
              \"momentum\": {}, \"weight_decay\": {}, \"seed\": {}, \"log_every\": {}, \
              \"calib_rounds\": {}{ckpt}}},\n  \"cluster\": {{\"workers\": {}, \"devices\": \"{}\", \
              \"throttle\": {}, \"worker_addrs\": [{}]}},\n  \"network\": {{\"bandwidth_mbps\": {}, \
-             \"latency_ms\": {}, \"shaped\": {}}}\n}}",
+             \"latency_ms\": {}, \"shaped\": {}}}{obs}\n}}",
             esc(&self.name),
             t.steps,
             t.lr,
@@ -583,6 +601,11 @@ mod tests {
         cfg.trainer.checkpoint_every = Some(3);
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
         assert_eq!(back, cfg);
+        // metrics_addr survives (and the obs section is absent when None).
+        assert!(!cfg.to_json_string().contains("\"obs\""));
+        cfg.metrics_addr = Some("127.0.0.1:9184".into());
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back, cfg);
         // And hostile strings: quotes, backslashes, control characters.
         cfg.name = "we\"ird\\name\nwith\tctrl\u{1}".into();
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
@@ -642,6 +665,23 @@ mod tests {
             r#"{"name": "c", "trainer": {"checkpoint_every": 0}}"#
         )
         .is_ok());
+    }
+
+    #[test]
+    fn obs_section_parses_and_null_means_none() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"name": "o", "obs": {"metrics_addr": "0.0.0.0:9184"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("0.0.0.0:9184"));
+        let cfg =
+            ExperimentConfig::from_json_str(r#"{"name": "o", "obs": {"metrics_addr": null}}"#)
+                .unwrap();
+        assert_eq!(cfg.metrics_addr, None);
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "o", "obs": {"metrics_adr": "x"}}"#
+        )
+        .is_err());
     }
 
     #[test]

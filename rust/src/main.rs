@@ -16,6 +16,8 @@
 //! convdist check     [--config exp.json] [--graph arch.json] [--arch NAME]
 //!                    [--format jsonl]
 //! convdist report    out/run.jsonl
+//! convdist top       <host:port | out/run.jsonl>
+//! convdist compare   BASE.jsonl CAND.jsonl [--threshold PCT] [--format jsonl]
 //! ```
 //!
 //! Every training subcommand composes a [`convdist::session::Session`] from
@@ -44,9 +46,12 @@ const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|
              --save CKPT --resume CKPT     (train is an alias)
              --trace DIR --metrics    (DIR gets run.jsonl + trace.json;
                                        bare --metrics = summary table only)
+             --metrics-addr HOST:PORT (serve live Prometheus text for the
+                                       lifetime of the run)
   worker     --listen ADDR --id N --slowdown X --trace
              (--trace ships per-op spans back to the master's timeline)
   master     --workers a:p,b:p --config F --steps N --trace DIR --metrics
+             --metrics-addr HOST:PORT
   calibrate  --rounds N
   figures    --id ID --csv          (IDs: table1 fig5 fig6 fig7 fig8 table4 table5
                                           fig9 fig10 fig11 fig12 fig13 amdahl)
@@ -56,13 +61,20 @@ const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|
               exits non-zero on any deny-level diagnostic)
   report     RUN.jsonl              (schema-validate a --trace run log and
                                      print the Fig. 6-style phase summary)
+  top        HOST:PORT | RUN.jsonl  (one-shot fleet view: per-device share,
+                                     GFLOP/s and health, from a live
+                                     --metrics-addr endpoint or a run log)
+  compare    BASE.jsonl CAND.jsonl  [--threshold PCT] [--format human|jsonl]
+                                    (cross-run regression gate over step-time
+                                     p50/p95 and phase means; exits non-zero
+                                     when the candidate regresses)
 common: --artifacts DIR --arch NAME   (NAME: default|tiny|deep_cifar|tiny_deep;
                                        only without a manifest.json — a manifest
                                        pins the architecture)";
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    if args.command != "report" {
+    if !matches!(args.command.as_str(), "report" | "top" | "compare") {
         if let Some(p) = args.positional.first() {
             bail!("unexpected positional argument {p:?}\n{USAGE}");
         }
@@ -76,6 +88,8 @@ fn main() -> Result<()> {
         "baseline" => cmd_baseline(&args),
         "check" => cmd_check(&args),
         "report" => cmd_report(&args),
+        "top" => cmd_top(&args),
+        "compare" => cmd_compare(&args),
         "" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -154,14 +168,20 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-/// `--trace DIR` / `--metrics` as an [`ObsConfig`].  `--trace` implies the
-/// metrics registry; a bare `--metrics` keeps everything in memory and only
-/// prints the summary table.
-fn obs_config(args: &Args) -> ObsConfig {
-    match args.opt("trace") {
+/// `--trace DIR` / `--metrics` / `--metrics-addr` as an [`ObsConfig`].
+/// `--trace` implies the metrics registry; a bare `--metrics` keeps
+/// everything in memory and only prints the summary table.  The live
+/// endpoint address comes from `--metrics-addr`, falling back to the
+/// config's `obs.metrics_addr`; either implies `--metrics`.
+fn obs_config(args: &Args, cfg: &ExperimentConfig) -> ObsConfig {
+    let obs = match args.opt("trace") {
         Some(dir) => ObsConfig::trace_to(dir),
         None if args.flag("metrics") => ObsConfig::metrics_only(),
         None => ObsConfig::default(),
+    };
+    match args.opt("metrics-addr").or_else(|| cfg.metrics_addr.as_deref()) {
+        Some(addr) => obs.serve(addr),
+        None => obs,
     }
 }
 
@@ -210,10 +230,21 @@ fn logging_observer(log_every: usize, steps: usize) -> impl FnMut(&Event) + Send
         Event::CheckpointSaved { step, path } => {
             eprintln!("checkpoint @ step {step} -> {}", path.display())
         }
+        Event::HealthChanged { step, device, from, to, ratio } => eprintln!(
+            "step {step}: dev{device} {} -> {} (step-time ratio {ratio:.2}x)",
+            from.label(),
+            to.label()
+        ),
+        Event::AnomalyFlagged { step, step_ms, median_ms, .. } => eprintln!(
+            "step {step}: anomalous step time {step_ms:.1} ms (rolling median {median_ms:.1} ms)"
+        ),
     }
 }
 
 fn print_session_banner(session: &Session) {
+    if let Some(addr) = session.metrics_addr() {
+        eprintln!("live metrics: http://{addr}/metrics  (convdist top {addr})");
+    }
     let rt = session.runtime();
     eprintln!(
         "runtime: platform={} arch={} batch={} ({} conv layers, {} executables)",
@@ -238,6 +269,10 @@ fn print_session_banner(session: &Session) {
 }
 
 fn print_report(report: &RunReport) {
+    if report.steps_run == 0 {
+        eprintln!("run: no steps recorded (wall {:.1}s)", report.wall.as_secs_f64());
+        return;
+    }
     eprintln!(
         "run: {} steps (from step {})  final loss {:.4}  wire {:.2} MiB  wall {:.1}s",
         report.steps_run,
@@ -278,7 +313,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.cluster.workers, cfg.cluster.devices, cfg.cluster.throttle, cfg.network.shaped
     );
     let mut builder = SessionBuilder::from_experiment(&cfg)?
-        .observe(obs_config(args))
+        .observe(obs_config(args, &cfg))
         .on_event(logging_observer(cfg.trainer.log_every, cfg.trainer.steps));
     builder = apply_arch_override(args, &cfg, builder)?;
     if let Some(ckpt) = args.opt("resume") {
@@ -321,7 +356,7 @@ fn cmd_master(args: &Args) -> Result<()> {
     }
     let mut builder = SessionBuilder::from_experiment(&cfg)?
         .tcp(addrs)
-        .observe(obs_config(args))
+        .observe(obs_config(args, &cfg))
         .on_event(logging_observer(cfg.trainer.log_every, cfg.trainer.steps));
     builder = apply_arch_override(args, &cfg, builder)?;
     let mut session = builder.build()?;
@@ -479,5 +514,62 @@ fn cmd_report(args: &Args) -> Result<()> {
         bail!("usage: convdist report <run.jsonl>");
     };
     print!("{}", convdist::obs::report::summarize_file(std::path::Path::new(path))?);
+    Ok(())
+}
+
+/// `convdist top <host:port | run.jsonl>`: one-shot fleet view — per-device
+/// share, throughput and health — scraped from a live `--metrics-addr`
+/// endpoint or reconstructed from a (possibly still-growing) run log.
+fn cmd_top(args: &Args) -> Result<()> {
+    use convdist::obs::live;
+    let Some(target) = args.positional.first() else {
+        bail!("usage: convdist top <host:port | run.jsonl>");
+    };
+    let path = std::path::Path::new(target);
+    let snap = if path.exists() {
+        // Lenient tail read: a log being written right now may end mid-line.
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {target}: {e}"))?;
+        live::TopSnapshot::from_runlog(&text)
+            .map_err(|e| anyhow::anyhow!("{target}: {e}"))?
+    } else if target.contains(':') {
+        let body = live::http_get(target)?;
+        live::TopSnapshot::from_prometheus(&body)?
+    } else {
+        bail!("{target}: neither a run log on disk nor a host:port address");
+    };
+    print!("{}", snap.render());
+    Ok(())
+}
+
+/// `convdist compare BASE.jsonl CAND.jsonl`: diff two run logs on step-time
+/// p50/p95 and per-phase means; exit non-zero when any gated metric is more
+/// than `--threshold` percent slower than the baseline.
+fn cmd_compare(args: &Args) -> Result<()> {
+    use convdist::obs::compare;
+    let (Some(base_path), Some(cand_path)) = (args.positional.first(), args.positional.get(1))
+    else {
+        bail!("usage: convdist compare BASE.jsonl CAND.jsonl [--threshold PCT] [--format jsonl]");
+    };
+    let jsonl = match args.opt("format") {
+        None | Some("human") => false,
+        Some("jsonl") => true,
+        Some(other) => bail!("unknown --format {other:?} (human|jsonl)"),
+    };
+    let threshold: f64 = args.get("threshold", 10.0)?;
+    if !threshold.is_finite() || threshold < 0.0 {
+        bail!("--threshold must be a non-negative percentage, got {threshold}");
+    }
+    let base = compare::stats_from_file(std::path::Path::new(base_path))?;
+    let cand = compare::stats_from_file(std::path::Path::new(cand_path))?;
+    let rep = compare::compare(&base, &cand, threshold);
+    if jsonl {
+        print!("{}", rep.render_jsonl());
+    } else {
+        print!("{}", rep.render_human(base.steps, cand.steps));
+    }
+    if rep.regressed() {
+        bail!("compare failed: candidate regressed past the {threshold}% threshold");
+    }
     Ok(())
 }

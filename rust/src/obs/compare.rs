@@ -1,0 +1,276 @@
+//! `convdist compare BASE.jsonl CAND.jsonl` — cross-run regression
+//! analytics over two run logs.
+//!
+//! The gated metrics are the ones the paper's evaluation is built on: step
+//! time (p50/p95) and the Fig.-6 per-phase attribution (mean comm/conv/comp
+//! ms per step). A candidate regresses when a gated metric exceeds the
+//! baseline by more than `--threshold` percent. Event counts
+//! (repartitions, departures, anomalies) are reported as informational
+//! deltas — a re-partition storm is a symptom, not itself a failure.
+//!
+//! CI commits a golden baseline log (`rust/tests/fixtures/golden_run.jsonl`)
+//! and runs the gate twice: golden-vs-self must pass clean, and
+//! golden-vs-slowed must trip (see ci.sh).
+
+use anyhow::{ensure, Result};
+
+use super::runlog;
+
+/// Phase means are compared against `max(base, FLOOR_MS)` so a
+/// microsecond-scale base phase cannot turn scheduler jitter into a
+/// thousand-percent "regression".
+const FLOOR_MS: f64 = 0.05;
+
+/// Aggregates of one run log, as the comparator sees it.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub steps: u64,
+    pub step_p50_ms: f64,
+    pub step_p95_ms: f64,
+    /// Mean per-step phase cost, ms.
+    pub comm_ms: f64,
+    pub conv_ms: f64,
+    pub comp_ms: f64,
+    pub repartitions: u64,
+    pub departures: u64,
+    pub anomalies: u64,
+}
+
+/// Aggregate a run log (lenient tail read — a crashed candidate still
+/// compares). Requires at least one step: an empty candidate is a hard
+/// error, not a 100% speedup.
+pub fn stats_from_text(text: &str) -> Result<RunStats> {
+    let tail = runlog::read_text_tail(text)?;
+    let mut s = RunStats::default();
+    let mut step_ms: Vec<f64> = Vec::new();
+    let (mut comm, mut conv, mut comp) = (0.0f64, 0.0f64, 0.0f64);
+    for v in &tail.lines {
+        match v.get("type")?.as_str()? {
+            "step" => {
+                let (c, k, p) = (
+                    v.get("comm_us")?.as_f64()?,
+                    v.get("conv_us")?.as_f64()?,
+                    v.get("comp_us")?.as_f64()?,
+                );
+                comm += c;
+                conv += k;
+                comp += p;
+                step_ms.push((c + k + p) / 1e3);
+            }
+            "repartition" => s.repartitions += 1,
+            "worker_left" => s.departures += 1,
+            "anomaly" => s.anomalies += 1,
+            _ => {}
+        }
+    }
+    ensure!(!step_ms.is_empty(), "run log has no step lines to compare");
+    s.steps = step_ms.len() as u64;
+    let n = step_ms.len() as f64;
+    s.comm_ms = comm / 1e3 / n;
+    s.conv_ms = conv / 1e3 / n;
+    s.comp_ms = comp / 1e3 / n;
+    step_ms.sort_by(|a, b| a.total_cmp(b));
+    let pct =
+        |q: f64| step_ms[((step_ms.len() as f64 * q).ceil() as usize).clamp(1, step_ms.len()) - 1];
+    s.step_p50_ms = pct(0.50);
+    s.step_p95_ms = pct(0.95);
+    Ok(s)
+}
+
+pub fn stats_from_file(path: &std::path::Path) -> Result<RunStats> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    stats_from_text(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+/// One compared metric. `gated` metrics can trip the regression exit code;
+/// count deltas are informational.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub metric: &'static str,
+    pub base: f64,
+    pub cand: f64,
+    /// Percent change over the (floored) base.
+    pub pct: f64,
+    pub gated: bool,
+    pub regressed: bool,
+}
+
+/// The full diff of two runs at one threshold.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub threshold_pct: f64,
+    pub deltas: Vec<Delta>,
+}
+
+/// Diff `cand` against `base`; a gated metric regresses when it exceeds
+/// the baseline by more than `threshold_pct` percent.
+pub fn compare(base: &RunStats, cand: &RunStats, threshold_pct: f64) -> CompareReport {
+    let mut deltas = Vec::new();
+    let mut timed = |metric: &'static str, b: f64, c: f64| {
+        let floor = b.max(FLOOR_MS);
+        let pct = 100.0 * (c - floor) / floor;
+        let regressed = pct > threshold_pct;
+        deltas.push(Delta { metric, base: b, cand: c, pct, gated: true, regressed });
+    };
+    timed("step_p50_ms", base.step_p50_ms, cand.step_p50_ms);
+    timed("step_p95_ms", base.step_p95_ms, cand.step_p95_ms);
+    timed("comm_ms", base.comm_ms, cand.comm_ms);
+    timed("conv_ms", base.conv_ms, cand.conv_ms);
+    timed("comp_ms", base.comp_ms, cand.comp_ms);
+    for (metric, b, c) in [
+        ("repartitions", base.repartitions, cand.repartitions),
+        ("departures", base.departures, cand.departures),
+        ("anomalies", base.anomalies, cand.anomalies),
+    ] {
+        let (b, c) = (b as f64, c as f64);
+        let pct = if b > 0.0 { 100.0 * (c - b) / b } else { 0.0 };
+        deltas.push(Delta { metric, base: b, cand: c, pct, gated: false, regressed: false });
+    }
+    CompareReport { threshold_pct, deltas }
+}
+
+impl CompareReport {
+    /// True when any gated metric tripped — the CLI's non-zero exit.
+    pub fn regressed(&self) -> bool {
+        self.deltas.iter().any(|d| d.regressed)
+    }
+
+    pub fn render_human(&self, base_steps: u64, cand_steps: u64) -> String {
+        let mut out = format!(
+            "compare: base {base_steps} steps vs cand {cand_steps} steps (threshold {:.1}%)\n",
+            self.threshold_pct
+        );
+        out.push_str("  metric        base       cand     delta\n");
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "  {:<12} {:>9.3} {:>9.3}  {:>+7.1}%{}{}\n",
+                d.metric,
+                d.base,
+                d.cand,
+                d.pct,
+                if d.gated { "" } else { "  (info)" },
+                if d.regressed { "  << REGRESSION" } else { "" },
+            ));
+        }
+        out.push_str(if self.regressed() {
+            "result: REGRESSED\n"
+        } else {
+            "result: ok\n"
+        });
+        out
+    }
+
+    /// One JSON object per metric plus a trailing verdict line — the same
+    /// hand-rendered JSONL idiom as the run log (machine-readable for CI).
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "{{\"metric\":\"{}\",\"base\":{},\"cand\":{},\"pct\":{},\"gated\":{},\"regressed\":{}}}\n",
+                d.metric,
+                fmt_num(d.base),
+                fmt_num(d.cand),
+                fmt_num(d.pct),
+                d.gated,
+                d.regressed,
+            ));
+        }
+        out.push_str(&format!(
+            "{{\"verdict\":\"{}\",\"threshold_pct\":{}}}\n",
+            if self.regressed() { "regressed" } else { "ok" },
+            fmt_num(self.threshold_pct),
+        ));
+        out
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn log_with_phase_scale(scale: f64, steps: u64) -> String {
+        let mut out = String::from(
+            "{\"type\":\"run_start\",\"t_us\":0,\"arch\":\"tiny\",\"devices\":3,\"steps\":10}\n",
+        );
+        for i in 1..=steps {
+            let (c, k, p) = (
+                (3000.0 * scale) as u64,
+                (6000.0 * scale) as u64,
+                (1000.0 * scale) as u64,
+            );
+            out.push_str(&format!(
+                "{{\"type\":\"step\",\"t_us\":{},\"step\":{i},\"loss\":2.0,\"devices\":3,\"comm_us\":{c},\"conv_us\":{k},\"comp_us\":{p},\"bytes\":64}}\n",
+                i * 10_000
+            ));
+        }
+        out.push_str("{\"type\":\"run_end\",\"t_us\":999999,\"steps\":10}\n");
+        out
+    }
+
+    #[test]
+    fn identical_runs_compare_clean() {
+        let base = stats_from_text(&log_with_phase_scale(1.0, 10)).unwrap();
+        let rep = compare(&base, &base, 10.0);
+        assert!(!rep.regressed(), "{}", rep.render_human(base.steps, base.steps));
+        assert!((base.step_p50_ms - 10.0).abs() < 1e-9);
+        assert!((base.conv_ms - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn injected_slowdown_trips_the_gate() {
+        let base = stats_from_text(&log_with_phase_scale(1.0, 10)).unwrap();
+        // 50% slower everywhere: well past the acceptance bar of >= 20%.
+        let cand = stats_from_text(&log_with_phase_scale(1.5, 10)).unwrap();
+        let rep = compare(&base, &cand, 10.0);
+        assert!(rep.regressed());
+        let human = rep.render_human(base.steps, cand.steps);
+        assert!(human.contains("REGRESSION"), "{human}");
+        assert!(human.contains("step_p50_ms"), "{human}");
+        // But the same pair passes at a 100% threshold.
+        assert!(!compare(&base, &cand, 100.0).regressed());
+        // And an improvement never trips.
+        assert!(!compare(&cand, &base, 10.0).regressed());
+    }
+
+    #[test]
+    fn tiny_base_phases_are_floored_not_exploded() {
+        let mut base = stats_from_text(&log_with_phase_scale(1.0, 4)).unwrap();
+        let mut cand = base.clone();
+        // base comp 1µs, cand 20µs: 1900% raw, but both under the 50µs
+        // floor — must not regress.
+        base.comp_ms = 0.001;
+        cand.comp_ms = 0.020;
+        assert!(!compare(&base, &cand, 10.0).regressed());
+    }
+
+    #[test]
+    fn jsonl_output_parses_and_counts_are_informational() {
+        let base = stats_from_text(&log_with_phase_scale(1.0, 10)).unwrap();
+        let mut cand = base.clone();
+        cand.repartitions = 50; // storm, but informational
+        let rep = compare(&base, &cand, 10.0);
+        assert!(!rep.regressed());
+        for line in rep.render_jsonl().lines() {
+            Json::parse(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+        assert!(rep.render_jsonl().contains("\"verdict\":\"ok\""));
+    }
+
+    #[test]
+    fn empty_or_step_free_logs_refuse_to_compare() {
+        assert!(stats_from_text("").is_err());
+        let only_start =
+            "{\"type\":\"run_start\",\"t_us\":0,\"arch\":\"tiny\",\"devices\":2,\"steps\":1}\n";
+        assert!(stats_from_text(only_start).is_err());
+    }
+}

@@ -1,0 +1,424 @@
+//! Per-worker health states and online step-time anomaly detection — the
+//! live tier of the observability stack (DESIGN.md §12).
+//!
+//! The paper's heterogeneous fleets fail gradually, not atomically: a
+//! thermally-throttled device first runs a little slow (*degraded*), then
+//! slow enough to dominate the step (*straggling*), and only sometimes
+//! disappears outright (*lost*).  [`FleetHealth`] condenses the signals the
+//! master already collects — the per-device EWMA sec-per-GFLOP telemetry,
+//! heartbeat drops and gather-timeout drops — into one state per device,
+//! emitting a [`HealthTransition`] whenever a device changes state.  The
+//! session mirrors transitions into the run log (`health` lines) and the
+//! metrics registry (`health.devN` gauges), which is what `--metrics-addr`
+//! and `convdist top` render.
+//!
+//! [`AnomalyDetector`] watches the step-time series itself: a rolling
+//! median/MAD window flags steps whose total time is a high outlier
+//! (`anomaly` run-log lines) — the first visible symptom of a fleet going
+//! out of balance, often steps before the re-partition policy reacts.
+
+use std::collections::VecDeque;
+
+use crate::sched::FleetTelemetry;
+
+/// Health of one device, ordered by severity.  `Lost` is terminal — device
+/// ids are never reused within a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// Noticeably slower than the fleet median (ratio >= `degraded_ratio`).
+    Degraded,
+    /// Slow enough to dominate the step (ratio >= `straggler_ratio`).
+    Straggling,
+    /// Dropped from the fleet: crashed, left, heartbeat-silent or past the
+    /// gather deadline.
+    Lost,
+}
+
+impl HealthState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Straggling => "straggling",
+            HealthState::Lost => "lost",
+        }
+    }
+
+    /// Numeric code for gauges (`health.devN`): 0 healthy, 1 degraded,
+    /// 2 straggling, 3 lost.
+    pub fn code(&self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Straggling => 2,
+            HealthState::Lost => 3,
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "healthy" => Some(HealthState::Healthy),
+            "degraded" => Some(HealthState::Degraded),
+            "straggling" => Some(HealthState::Straggling),
+            "lost" => Some(HealthState::Lost),
+            _ => None,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(HealthState::Healthy),
+            1 => Some(HealthState::Degraded),
+            2 => Some(HealthState::Straggling),
+            3 => Some(HealthState::Lost),
+            _ => None,
+        }
+    }
+}
+
+/// Thresholds for the slowness ladder, as ratios of a device's EWMA rate
+/// (seconds per GFLOP) over the fleet median.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Enter `Degraded` at `rate >= degraded_ratio * median`.
+    pub degraded_ratio: f64,
+    /// Enter `Straggling` at `rate >= straggler_ratio * median`.
+    pub straggler_ratio: f64,
+    /// Ignore devices with fewer telemetry samples than this (calibration
+    /// seeds one sample per device, so the default kicks in on step 1).
+    pub min_samples: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self { degraded_ratio: 1.6, straggler_ratio: 3.0, min_samples: 1 }
+    }
+}
+
+/// One state change, in the order it must appear in the run log.
+#[derive(Clone, Debug)]
+pub struct HealthTransition {
+    pub device: usize,
+    pub from: HealthState,
+    pub to: HealthState,
+    /// Rate-over-median ratio that drove the change (0 for `Lost` — a
+    /// membership fact, not a slowness measurement).
+    pub ratio: f64,
+}
+
+/// The per-device health state machine.  Severity moves at most one level
+/// per update in either direction — a device degrading 8x overnight still
+/// walks Healthy → Degraded → Straggling, so the run log always shows the
+/// full escalation path — except `Lost`, which is immediate (membership is
+/// a fact, not an estimate).  Recovery requires clearing the entry
+/// threshold with 20% margin (hysteresis against flapping on EWMA noise).
+pub struct FleetHealth {
+    states: Vec<HealthState>,
+    cfg: HealthConfig,
+}
+
+impl FleetHealth {
+    pub fn new(n_devices: usize, cfg: HealthConfig) -> Self {
+        Self { states: vec![HealthState::Healthy; n_devices], cfg }
+    }
+
+    pub fn states(&self) -> &[HealthState] {
+        &self.states
+    }
+
+    pub fn state(&self, device: usize) -> HealthState {
+        self.states[device]
+    }
+
+    fn severity(s: HealthState) -> u8 {
+        match s {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Straggling => 2,
+            HealthState::Lost => 3,
+        }
+    }
+
+    fn at_severity(level: u8) -> HealthState {
+        match level {
+            0 => HealthState::Healthy,
+            1 => HealthState::Degraded,
+            _ => HealthState::Straggling,
+        }
+    }
+
+    /// Fold the current telemetry into the state machine.  `active` is the
+    /// alive device-id set (master included); anything outside it is
+    /// `Lost`.  Returns the transitions in device order.
+    pub fn update(
+        &mut self,
+        active: &[usize],
+        telemetry: &FleetTelemetry,
+    ) -> Vec<HealthTransition> {
+        let mut rates: Vec<f64> = active
+            .iter()
+            .filter(|&&d| telemetry.samples(d) >= self.cfg.min_samples)
+            .filter_map(|&d| telemetry.rate(d))
+            .collect();
+        rates.sort_by(|a, b| a.total_cmp(b));
+        let median = match rates.len() {
+            0 => None,
+            n => Some((rates[(n - 1) / 2] + rates[n / 2]) / 2.0),
+        };
+        let mut out = Vec::new();
+        for d in 0..self.states.len() {
+            let cur = self.states[d];
+            let next = if !active.contains(&d) {
+                HealthState::Lost
+            } else if cur == HealthState::Lost {
+                // Terminal: a dropped device id never rejoins this run.
+                HealthState::Lost
+            } else {
+                let ratio = match (median, telemetry.rate(d)) {
+                    (Some(m), Some(r))
+                        if m > 0.0 && telemetry.samples(d) >= self.cfg.min_samples =>
+                    {
+                        r / m
+                    }
+                    _ => continue, // no estimate yet: hold the current state
+                };
+                let target = if ratio >= self.cfg.straggler_ratio {
+                    2
+                } else if ratio >= self.cfg.degraded_ratio {
+                    1
+                } else {
+                    0
+                };
+                let cur_sev = Self::severity(cur);
+                let next_sev = if target > cur_sev {
+                    cur_sev + 1 // escalate one level per step
+                } else if target < cur_sev {
+                    // De-escalate only with 20% margin below the level's
+                    // own entry threshold.
+                    let exit = match cur_sev {
+                        2 => self.cfg.straggler_ratio,
+                        _ => self.cfg.degraded_ratio,
+                    };
+                    if ratio < exit / 1.25 {
+                        cur_sev - 1
+                    } else {
+                        cur_sev
+                    }
+                } else {
+                    cur_sev
+                };
+                if next_sev != cur_sev {
+                    let to = Self::at_severity(next_sev);
+                    out.push(HealthTransition { device: d, from: cur, to, ratio });
+                    self.states[d] = to;
+                }
+                continue;
+            };
+            if next != cur {
+                out.push(HealthTransition { device: d, from: cur, to: next, ratio: 0.0 });
+                self.states[d] = next;
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Step-time anomaly detection
+// ---------------------------------------------------------------------------
+
+/// A step whose total time is a high outlier against the rolling window.
+#[derive(Clone, Debug)]
+pub struct StepAnomaly {
+    pub step_ms: f64,
+    pub median_ms: f64,
+    pub mad_ms: f64,
+}
+
+/// Rolling median/MAD outlier detector over step times.  Median/MAD rather
+/// than mean/σ so a single slow step cannot drag the baseline after itself;
+/// only *high* outliers flag (a surprisingly fast step is not a problem).
+pub struct AnomalyDetector {
+    window: VecDeque<f64>,
+    cap: usize,
+    k: f64,
+    min_n: usize,
+}
+
+impl Default for AnomalyDetector {
+    fn default() -> Self {
+        Self::new(32, 5.0, 8)
+    }
+}
+
+impl AnomalyDetector {
+    /// `cap`: window length; `k`: flag at `median + k * scale` where
+    /// `scale = max(1.4826 * MAD, 5% of median)`; `min_n`: observations
+    /// before any flagging (warmup).
+    pub fn new(cap: usize, k: f64, min_n: usize) -> Self {
+        Self { window: VecDeque::with_capacity(cap), cap: cap.max(4), k, min_n: min_n.max(2) }
+    }
+
+    fn median(sorted: &[f64]) -> f64 {
+        let n = sorted.len();
+        (sorted[(n - 1) / 2] + sorted[n / 2]) / 2.0
+    }
+
+    /// Feed one step time (ms); returns the anomaly verdict *against the
+    /// window so far* (the new sample joins the window afterwards, so a
+    /// spike cannot vouch for itself).
+    pub fn observe(&mut self, step_ms: f64) -> Option<StepAnomaly> {
+        let verdict = if step_ms.is_finite() && self.window.len() >= self.min_n {
+            let mut sorted: Vec<f64> = self.window.iter().copied().collect();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            let median = Self::median(&sorted);
+            let mut devs: Vec<f64> = sorted.iter().map(|v| (v - median).abs()).collect();
+            devs.sort_by(|a, b| a.total_cmp(b));
+            let mad = Self::median(&devs);
+            // Floor the scale: a near-constant window (virtual throttles,
+            // idle fleets) has MAD ~ 0 and would flag harmless jitter.
+            let scale = (1.4826 * mad).max(0.05 * median).max(1e-3);
+            if step_ms > median + self.k * scale {
+                Some(StepAnomaly { step_ms, median_ms: median, mad_ms: mad })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        if step_ms.is_finite() {
+            if self.window.len() == self.cap {
+                self.window.pop_front();
+            }
+            self.window.push_back(step_ms);
+        }
+        verdict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn telem(rates: &[(usize, f64)], n: usize) -> FleetTelemetry {
+        let mut t = FleetTelemetry::new(n, 1.0); // alpha 1: rate = last sample
+        for &(d, r) in rates {
+            t.record(d, r, 1e9); // seconds per GFLOP == seconds here
+        }
+        t
+    }
+
+    #[test]
+    fn escalates_one_level_per_update_and_recovers_with_hysteresis() {
+        let cfg = HealthConfig::default();
+        let mut h = FleetHealth::new(3, cfg);
+        let active = vec![0, 1, 2];
+        // Device 1 is 8x the median: must still pass through Degraded.
+        let t = telem(&[(0, 0.5), (1, 4.0), (2, 0.5)], 3);
+        let tr = h.update(&active, &t);
+        assert_eq!(tr.len(), 1);
+        assert_eq!((tr[0].device, tr[0].to), (1, HealthState::Degraded));
+        let tr = h.update(&active, &t);
+        assert_eq!((tr[0].from, tr[0].to), (HealthState::Degraded, HealthState::Straggling));
+        assert!(tr[0].ratio > 3.0, "ratio {}", tr[0].ratio);
+        // Steady state: no more transitions.
+        assert!(h.update(&active, &t).is_empty());
+        // Recovery to just under the straggler threshold is NOT enough
+        // (hysteresis); 20% under it is.
+        let t = telem(&[(0, 0.5), (1, 1.4), (2, 0.5)], 3);
+        assert!(h.update(&active, &t).is_empty(), "flapped without margin");
+        let t = telem(&[(0, 0.5), (1, 1.0), (2, 0.5)], 3);
+        let tr = h.update(&active, &t);
+        assert_eq!(tr[0].to, HealthState::Degraded, "recovery also steps one level");
+        let t = telem(&[(0, 0.5), (1, 0.55), (2, 0.5)], 3);
+        let tr = h.update(&active, &t);
+        assert_eq!(tr[0].to, HealthState::Healthy);
+    }
+
+    #[test]
+    fn departure_is_lost_immediately_and_terminal() {
+        let mut h = FleetHealth::new(3, HealthConfig::default());
+        let t = telem(&[(0, 0.5), (1, 0.5), (2, 0.5)], 3);
+        assert!(h.update(&[0, 1, 2], &t).is_empty());
+        let tr = h.update(&[0, 2], &t);
+        assert_eq!(tr.len(), 1);
+        assert_eq!((tr[0].device, tr[0].to), (1, HealthState::Lost));
+        // Still gone next update: no repeated transition, state stays Lost.
+        assert!(h.update(&[0, 2], &t).is_empty());
+        assert_eq!(h.state(1), HealthState::Lost);
+        // Even if the id reappears in the active set, Lost is terminal.
+        assert!(h.update(&[0, 1, 2], &t).is_empty());
+        assert_eq!(h.state(1), HealthState::Lost);
+    }
+
+    #[test]
+    fn no_estimate_holds_the_current_state() {
+        let mut h = FleetHealth::new(2, HealthConfig::default());
+        let t = FleetTelemetry::new(2, 0.5); // no samples at all
+        assert!(h.update(&[0, 1], &t).is_empty());
+        assert_eq!(h.state(0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn labels_and_codes_round_trip() {
+        for s in [
+            HealthState::Healthy,
+            HealthState::Degraded,
+            HealthState::Straggling,
+            HealthState::Lost,
+        ] {
+            assert_eq!(HealthState::from_label(s.label()), Some(s));
+            assert_eq!(HealthState::from_code(s.code()), Some(s));
+        }
+        assert_eq!(HealthState::from_label("zombie"), None);
+        assert_eq!(HealthState::from_code(9), None);
+    }
+
+    #[test]
+    fn anomaly_detector_flags_high_outliers_only_after_warmup() {
+        let mut det = AnomalyDetector::new(16, 5.0, 8);
+        // Warmup: even a 10x sample does not flag before min_n.
+        assert!(det.observe(1000.0).is_none());
+        for _ in 0..8 {
+            assert!(det.observe(100.0).is_none());
+        }
+        // Uniform window: moderate jitter stays quiet (floored scale)...
+        assert!(det.observe(104.0).is_none());
+        // ...a 2x step flags against median 100 (scale floor = 5ms, k=5)...
+        let a = det.observe(200.0).expect("2x step must flag");
+        assert!((a.median_ms - 100.0).abs() < 5.0, "{a:?}");
+        // ...and a *fast* outlier never flags.
+        assert!(det.observe(10.0).is_none());
+    }
+
+    #[test]
+    fn anomaly_detector_window_slides() {
+        let mut det = AnomalyDetector::new(8, 5.0, 4);
+        for _ in 0..8 {
+            det.observe(10.0);
+        }
+        // Regime change: the first slow step flags, but once the window
+        // fills with the new regime the detector re-baselines.
+        assert!(det.observe(100.0).is_some());
+        let mut flagged = 0;
+        for _ in 0..12 {
+            if det.observe(100.0).is_some() {
+                flagged += 1;
+            }
+        }
+        assert!(flagged <= 4, "detector never re-baselined: {flagged} flags");
+        assert!(det.observe(100.0).is_none());
+    }
+
+    #[test]
+    fn anomaly_detector_ignores_non_finite() {
+        let mut det = AnomalyDetector::new(8, 5.0, 2);
+        for _ in 0..4 {
+            det.observe(10.0);
+        }
+        assert!(det.observe(f64::NAN).is_none());
+        assert!(det.observe(f64::INFINITY).is_none());
+        assert!(det.observe(10.5).is_none(), "NaN must not poison the window");
+    }
+}

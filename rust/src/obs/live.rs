@@ -1,0 +1,535 @@
+//! Live metrics exposition and the `convdist top` fleet view.
+//!
+//! [`render_prometheus`] turns the [`MetricsRegistry`] into Prometheus text
+//! exposition format (version 0.0.4) and [`MetricsServer`] serves it over a
+//! deliberately tiny `std::net` HTTP listener — one thread, non-blocking
+//! accept with a stop flag, snapshot-per-request — so `--metrics-addr`
+//! never stalls the step loop: the only shared state is the registry lock
+//! the trainer already takes once per step.
+//!
+//! [`TopSnapshot`] is the shared model behind `convdist top`: built either
+//! from a scrape of the live endpoint or from a (possibly still-growing)
+//! `run.jsonl`, and rendered as a per-device table of share, throughput,
+//! phase split and health.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::health::HealthState;
+use super::runlog;
+use super::MetricsRegistry;
+
+// ---------------------------------------------------------------------------
+// Prometheus text rendering
+// ---------------------------------------------------------------------------
+
+fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' }).collect()
+}
+
+/// Map a registry key to a Prometheus series: `devN` path segments become a
+/// `device="N"` label, `gflops.<op>` keeps the op as a label, everything
+/// else flattens with `_`. All series carry the `convdist_` prefix.
+fn series(key: &str) -> (String, Option<(String, String)>) {
+    let parts: Vec<&str> = key.split('.').collect();
+    let mut name_parts: Vec<String> = Vec::new();
+    let mut label = None;
+    for p in &parts {
+        match p.strip_prefix("dev").and_then(|d| d.parse::<u64>().ok()) {
+            Some(d) if label.is_none() => label = Some(("device".to_string(), d.to_string())),
+            _ => name_parts.push(sanitize(p)),
+        }
+    }
+    if label.is_none() && parts.len() == 2 && parts[0] == "gflops" {
+        return ("convdist_gflops".to_string(), Some(("op".to_string(), parts[1].to_string())));
+    }
+    (format!("convdist_{}", name_parts.join("_")), label)
+}
+
+/// Prometheus label-value escaping: backslash, quote and newline.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_labels(extra: &[(String, String)]) -> String {
+    if extra.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        extra.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn push_typed(
+    out: &mut String,
+    typed: &mut std::collections::BTreeSet<String>,
+    name: &str,
+    ty: &str,
+) {
+    if typed.insert(name.to_string()) {
+        out.push_str(&format!("# TYPE {name} {ty}\n"));
+    }
+}
+
+/// Render the whole registry as Prometheus text exposition format. Health
+/// gauges (`health.devN`) carry the numeric [`HealthState::code`]; the
+/// mapping is documented on a `# HELP` line.
+pub fn render_prometheus(reg: &MetricsRegistry) -> String {
+    let mut out = String::from("# HELP convdist_up 1 while the session is live\n# TYPE convdist_up gauge\nconvdist_up 1\n");
+    let mut typed = std::collections::BTreeSet::new();
+    for (k, v) in reg.counters() {
+        let (name, label) = series(k);
+        push_typed(&mut out, &mut typed, &name, "counter");
+        let labels: Vec<_> = label.into_iter().collect();
+        out.push_str(&format!("{name}{} {v}\n", fmt_labels(&labels)));
+    }
+    for (k, v) in reg.gauges() {
+        let (name, label) = series(k);
+        if name == "convdist_health" && typed.insert(name.clone()) {
+            out.push_str(
+                "# HELP convdist_health 0=healthy 1=degraded 2=straggling 3=lost\n# TYPE convdist_health gauge\n",
+            );
+        } else {
+            push_typed(&mut out, &mut typed, &name, "gauge");
+        }
+        let labels: Vec<_> = label.into_iter().collect();
+        out.push_str(&format!("{name}{} {v}\n", fmt_labels(&labels)));
+    }
+    for (k, h) in reg.hists() {
+        let (name, label) = series(k);
+        push_typed(&mut out, &mut typed, &name, "summary");
+        let base: Vec<_> = label.into_iter().collect();
+        for (q, v) in [(0.5, h.quantile(0.5)), (0.95, h.quantile(0.95)), (0.99, h.quantile(0.99))]
+        {
+            let mut labels = base.clone();
+            labels.push(("quantile".to_string(), format!("{q}")));
+            out.push_str(&format!("{name}{} {v}\n", fmt_labels(&labels)));
+        }
+        let l = fmt_labels(&base);
+        out.push_str(&format!("{name}_sum{l} {}\n", h.sum()));
+        out.push_str(&format!("{name}_count{l} {}\n", h.count()));
+        for (suffix, v) in [("min", h.min()), ("max", h.max())] {
+            let n = format!("{name}_{suffix}");
+            push_typed(&mut out, &mut typed, &n, "gauge");
+            out.push_str(&format!("{n}{l} {v}\n"));
+        }
+    }
+    out
+}
+
+/// Parse Prometheus text back into `(name, labels) -> value` — enough for
+/// `convdist top` to scrape a live endpoint (and for tests to round-trip
+/// the renderer). Labels are normalized to sorted `k="v"` joined by `,`.
+pub fn parse_prometheus(text: &str) -> Result<BTreeMap<(String, String), f64>> {
+    let mut out = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = || anyhow::anyhow!("metrics line {}: unparseable {line:?}", i + 1);
+        let (series, value) = line.rsplit_once(' ').ok_or_else(err)?;
+        let value: f64 = value.parse().map_err(|_| err())?;
+        let (name, labels) = match series.split_once('{') {
+            None => (series.to_string(), String::new()),
+            Some((n, rest)) => {
+                let body = rest.strip_suffix('}').ok_or_else(err)?;
+                let mut kvs: Vec<&str> = body.split(',').filter(|s| !s.is_empty()).collect();
+                kvs.sort_unstable();
+                (n.to_string(), kvs.join(","))
+            }
+        };
+        out.insert((name, labels), value);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// The HTTP listener
+// ---------------------------------------------------------------------------
+
+/// Snapshot provider: called once per scrape, under no lock of its own.
+pub type MetricsProvider = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// A one-thread HTTP listener serving the provider's snapshot on every
+/// request (any path — scrapers use `/metrics`). Stops on [`stop`] or drop.
+///
+/// [`stop`]: MetricsServer::stop
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`; port 0 picks an ephemeral port —
+    /// read it back from [`addr`](MetricsServer::addr)) and start serving.
+    pub fn start(addr: &str, provider: MetricsProvider) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics endpoint {addr}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("convdist-metrics".into())
+            .spawn(move || serve_loop(listener, provider, flag))?;
+        Ok(Self { addr, stop, thread: Some(thread) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the serve loop and join it. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_loop(listener: TcpListener, provider: MetricsProvider, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Per-connection errors (slow client, reset) only lose that
+                // scrape; the listener keeps serving.
+                let _ = serve_one(stream, &provider);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream, provider: &MetricsProvider) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    // Read until the end of the request head (we serve the same body for
+    // every path) with a small cap against garbage peers.
+    let mut head = Vec::with_capacity(256);
+    let mut buf = [0u8; 256];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(_) => break,
+        }
+    }
+    let body = provider();
+    let resp = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+/// Minimal HTTP GET against a metrics endpoint; returns the response body.
+pub fn http_get(addr: &str) -> Result<String> {
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no address for {addr}"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, Duration::from_secs(2))
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.write_all(
+        format!("GET /metrics HTTP/1.0\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut text = String::new();
+    stream.read_to_string(&mut text)?;
+    match text.split_once("\r\n\r\n") {
+        Some((head, body)) => {
+            let status = head.lines().next().unwrap_or("");
+            if !status.contains("200") {
+                bail!("{addr} answered {status:?}");
+            }
+            Ok(body.to_string())
+        }
+        None => bail!("{addr} returned no HTTP response"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// convdist top
+// ---------------------------------------------------------------------------
+
+/// One device's row in the `top` table. `share`/`gflops` are `None` when
+/// the source doesn't carry them (a run log before its metrics snapshot).
+#[derive(Clone, Debug)]
+pub struct DeviceRow {
+    pub device: usize,
+    pub health: HealthState,
+    pub share: Option<f64>,
+    pub gflops: Option<f64>,
+}
+
+/// The fleet view behind `convdist top`: built from a live scrape or a
+/// tailed run log, rendered as one table.
+#[derive(Clone, Debug, Default)]
+pub struct TopSnapshot {
+    pub steps: u64,
+    pub step_ms_p50: f64,
+    pub step_ms_p95: f64,
+    /// (comm, conv, comp) cumulative microseconds.
+    pub phase_us: (f64, f64, f64),
+    pub repartitions: u64,
+    pub departures: u64,
+    pub anomalies: u64,
+    pub devices: Vec<DeviceRow>,
+    /// True when a trailing partial line was skipped (live tail).
+    pub truncated: bool,
+}
+
+impl TopSnapshot {
+    /// Build from a Prometheus scrape of a live endpoint.
+    pub fn from_prometheus(text: &str) -> Result<Self> {
+        let map = parse_prometheus(text)?;
+        let get = |name: &str, labels: &str| map.get(&(name.to_string(), labels.to_string()));
+        let scalar = |name: &str| get(name, "").copied().unwrap_or(0.0);
+        let mut devices: BTreeMap<usize, DeviceRow> = BTreeMap::new();
+        for ((name, labels), v) in &map {
+            let Some(d) = labels
+                .strip_prefix("device=\"")
+                .and_then(|r| r.strip_suffix('"'))
+                .and_then(|r| r.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let row = devices.entry(d).or_insert(DeviceRow {
+                device: d,
+                health: HealthState::Healthy,
+                share: None,
+                gflops: None,
+            });
+            match name.as_str() {
+                "convdist_health" => {
+                    row.health = HealthState::from_code(*v as u8).unwrap_or(HealthState::Healthy)
+                }
+                "convdist_share" => row.share = Some(*v),
+                "convdist_throughput" => row.gflops = Some(*v),
+                _ => {}
+            }
+        }
+        Ok(Self {
+            steps: scalar("convdist_steps") as u64,
+            step_ms_p50: get("convdist_step_ms", "quantile=\"0.5\"").copied().unwrap_or(0.0),
+            step_ms_p95: get("convdist_step_ms", "quantile=\"0.95\"").copied().unwrap_or(0.0),
+            phase_us: (
+                scalar("convdist_comm_us_total"),
+                scalar("convdist_conv_us_total"),
+                scalar("convdist_comp_us_total"),
+            ),
+            repartitions: scalar("convdist_sched_repartitions") as u64,
+            departures: scalar("convdist_sched_departures") as u64,
+            anomalies: scalar("convdist_anomalies") as u64,
+            devices: devices.into_values().collect(),
+            truncated: false,
+        })
+    }
+
+    /// Build from a run log, tolerating a trailing partial line (live tail).
+    pub fn from_runlog(text: &str) -> Result<Self> {
+        let tail = runlog::read_text_tail(text)?;
+        let mut snap = Self { truncated: tail.truncated, ..Self::default() };
+        let mut n_devices = 0usize;
+        let mut health: BTreeMap<usize, HealthState> = BTreeMap::new();
+        let mut step_ms: Vec<f64> = Vec::new();
+        for v in &tail.lines {
+            match v.get("type")?.as_str()? {
+                "run_start" => n_devices = v.get("devices")?.as_usize()?,
+                "step" => {
+                    snap.steps += 1;
+                    let (c, k, p) = (
+                        v.get("comm_us")?.as_f64()?,
+                        v.get("conv_us")?.as_f64()?,
+                        v.get("comp_us")?.as_f64()?,
+                    );
+                    snap.phase_us.0 += c;
+                    snap.phase_us.1 += k;
+                    snap.phase_us.2 += p;
+                    step_ms.push((c + k + p) / 1e3);
+                }
+                "repartition" => snap.repartitions += 1,
+                "worker_left" => snap.departures += 1,
+                "anomaly" => snap.anomalies += 1,
+                "health" => {
+                    let d = v.get("device")?.as_usize()?;
+                    let to = HealthState::from_label(v.get("to")?.as_str()?)
+                        .unwrap_or(HealthState::Healthy);
+                    health.insert(d, to);
+                }
+                _ => {}
+            }
+        }
+        step_ms.sort_by(|a, b| a.total_cmp(b));
+        let pct = |q: f64| {
+            if step_ms.is_empty() {
+                0.0
+            } else {
+                step_ms[((step_ms.len() as f64 * q).ceil() as usize).clamp(1, step_ms.len()) - 1]
+            }
+        };
+        snap.step_ms_p50 = pct(0.50);
+        snap.step_ms_p95 = pct(0.95);
+        snap.devices = (0..n_devices)
+            .map(|d| DeviceRow {
+                device: d,
+                health: health.get(&d).copied().unwrap_or(HealthState::Healthy),
+                share: None,
+                gflops: None,
+            })
+            .collect();
+        Ok(snap)
+    }
+
+    /// Render the table `convdist top` prints.
+    pub fn render(&self) -> String {
+        let total = (self.phase_us.0 + self.phase_us.1 + self.phase_us.2).max(1.0);
+        let mut out = format!(
+            "fleet: {} steps  step p50 {:.3} ms  p95 {:.3} ms  comm {:.1}% conv {:.1}% comp {:.1}%\n",
+            self.steps,
+            self.step_ms_p50,
+            self.step_ms_p95,
+            100.0 * self.phase_us.0 / total,
+            100.0 * self.phase_us.1 / total,
+            100.0 * self.phase_us.2 / total,
+        );
+        out.push_str(&format!(
+            "       repartitions {}  departures {}  anomalies {}{}\n",
+            self.repartitions,
+            self.departures,
+            self.anomalies,
+            if self.truncated { "  (tail: partial line skipped)" } else { "" },
+        ));
+        out.push_str("  dev  role    health      share   GFLOP/s\n");
+        for r in &self.devices {
+            let role = if r.device == 0 { "master" } else { "worker" };
+            let share = r.share.map_or("     -".to_string(), |s| format!("{:5.1}%", 100.0 * s));
+            let gf = r.gflops.map_or("      -".to_string(), |g| format!("{g:7.2}"));
+            out.push_str(&format!(
+                "  {:>3}  {role}  {:<10}  {share}  {gf}\n",
+                r.device,
+                r.health.label()
+            ));
+        }
+        if self.devices.is_empty() {
+            out.push_str("  (no devices yet — log has no run_start line)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_registry() -> MetricsRegistry {
+        let mut reg = MetricsRegistry::default();
+        reg.inc("steps", 12);
+        reg.inc("comm_us_total", 30_000);
+        reg.inc("conv_us_total", 60_000);
+        reg.inc("comp_us_total", 10_000);
+        reg.inc("anomalies", 1);
+        reg.set_gauge("sched.repartitions", 2.0);
+        reg.set_gauge("sched.departures", 1.0);
+        reg.set_gauge("util.dev1", 0.75);
+        reg.set_gauge("health.dev0", 0.0);
+        reg.set_gauge("health.dev1", 1.0);
+        reg.set_gauge("share.dev0", 0.6);
+        reg.set_gauge("share.dev1", 0.4);
+        reg.set_gauge("throughput.dev1", 3.5);
+        reg.set_gauge("gflops.conv1_fwd", 8.0);
+        reg.set_gauge("net.dev1.bytes", 4096.0);
+        for ms in [8.0, 9.0, 10.0, 11.0] {
+            reg.observe_ms("step_ms", ms);
+        }
+        reg
+    }
+
+    #[test]
+    fn prometheus_rendering_round_trips_and_labels_devices() {
+        let text = render_prometheus(&sample_registry());
+        assert!(text.contains("# TYPE convdist_steps counter"), "{text}");
+        assert!(text.contains("convdist_health{device=\"1\"} 1"), "{text}");
+        assert!(text.contains("convdist_util{device=\"1\"} 0.75"), "{text}");
+        assert!(text.contains("convdist_net_bytes{device=\"1\"} 4096"), "{text}");
+        assert!(text.contains("convdist_gflops{op=\"conv1_fwd\"} 8"), "{text}");
+        assert!(text.contains("convdist_step_ms_count 4"), "{text}");
+        assert!(text.contains("quantile=\"0.95\""), "{text}");
+        let map = parse_prometheus(&text).unwrap();
+        assert_eq!(map[&("convdist_steps".into(), "".into())], 12.0);
+        assert_eq!(map[&("convdist_share".into(), "device=\"0\"".into())], 0.6);
+        // Every non-comment line parsed.
+        let n_lines = text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).count();
+        assert_eq!(map.len(), n_lines);
+    }
+
+    #[test]
+    fn server_serves_snapshots_until_stopped() {
+        let reg = std::sync::Mutex::new(sample_registry());
+        let provider: MetricsProvider =
+            Arc::new(move || render_prometheus(&reg.lock().unwrap()));
+        let mut srv = MetricsServer::start("127.0.0.1:0", provider).unwrap();
+        let addr = srv.addr().to_string();
+        for _ in 0..2 {
+            let body = http_get(&addr).unwrap();
+            assert!(body.starts_with("# HELP convdist_up"), "{body}");
+            assert!(body.contains("convdist_health{device=\"1\"} 1"), "{body}");
+        }
+        srv.stop();
+        assert!(http_get(&addr).is_err(), "server must stop accepting");
+    }
+
+    #[test]
+    fn top_snapshot_from_scrape_and_runlog_agree_on_health() {
+        let text = render_prometheus(&sample_registry());
+        let snap = TopSnapshot::from_prometheus(&text).unwrap();
+        assert_eq!(snap.steps, 12);
+        assert_eq!(snap.devices.len(), 2);
+        assert_eq!(snap.devices[1].health, HealthState::Degraded);
+        assert_eq!(snap.anomalies, 1);
+        let table = snap.render();
+        assert!(table.contains("degraded"), "{table}");
+        assert!(table.contains("conv 60.0%"), "{table}");
+
+        // Same fleet story as a (truncated) run log.
+        let log = concat!(
+            "{\"type\":\"run_start\",\"t_us\":0,\"arch\":\"tiny\",\"devices\":2,\"steps\":12}\n",
+            "{\"type\":\"step\",\"t_us\":9,\"step\":1,\"loss\":2.0,\"devices\":2,\"comm_us\":3000,\"conv_us\":5000,\"comp_us\":1000,\"bytes\":64}\n",
+            "{\"type\":\"health\",\"t_us\":10,\"step\":1,\"device\":1,\"from\":\"healthy\",\"to\":\"degraded\",\"ratio\":2.1}\n",
+            "{\"type\":\"anomaly\",\"t_us\":11,\"step\":1,\"step_ms\":9,\"median_ms\":4,\"mad_ms\":0.5}\n",
+            "{\"type\":\"step\",\"t_us\":19,\"step\":2,\"loss\":1.9,\"devi"
+        );
+        let snap = TopSnapshot::from_runlog(log).unwrap();
+        assert!(snap.truncated);
+        assert_eq!(snap.steps, 1);
+        assert_eq!(snap.devices[1].health, HealthState::Degraded);
+        assert_eq!(snap.devices[0].health, HealthState::Healthy);
+        assert_eq!(snap.anomalies, 1);
+        let table = snap.render();
+        assert!(table.contains("degraded"), "{table}");
+        assert!(table.contains("partial line skipped"), "{table}");
+    }
+}

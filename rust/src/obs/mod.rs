@@ -25,11 +25,18 @@
 //! Tracing must stay cheap — `examples/bench_obs.rs` gates the overhead at
 //! <2% of step time on the tiny preset.
 
+pub mod compare;
+pub mod health;
+pub mod live;
 mod registry;
 pub mod report;
 pub mod runlog;
 mod trace;
 
+pub use health::{
+    AnomalyDetector, FleetHealth, HealthConfig, HealthState, HealthTransition, StepAnomaly,
+};
+pub use live::MetricsServer;
 pub use registry::{Histogram, MetricsRegistry, MS_BUCKETS};
 pub use trace::chrome_trace_json;
 
@@ -61,22 +68,38 @@ pub struct ObsConfig {
     pub dir: Option<PathBuf>,
     /// Collect the metrics registry and render a summary table at the end.
     pub metrics: bool,
+    /// When set, serve the registry + health states as Prometheus text on
+    /// this address for the lifetime of the session (the CLI's
+    /// `--metrics-addr 127.0.0.1:9184`; implies `metrics`).
+    pub metrics_addr: Option<String>,
 }
 
 impl ObsConfig {
     /// Full tracing + metrics into `dir` (the CLI's `--trace out/`).
     pub fn trace_to(dir: impl Into<PathBuf>) -> Self {
-        Self { dir: Some(dir.into()), metrics: true }
+        Self { dir: Some(dir.into()), metrics: true, metrics_addr: None }
     }
 
     /// Registry only — no files on disk (the CLI's bare `--metrics`).
     pub fn metrics_only() -> Self {
-        Self { dir: None, metrics: true }
+        Self { dir: None, metrics: true, metrics_addr: None }
+    }
+
+    /// Serve live metrics on `addr` (no files unless `dir` is also set).
+    pub fn serve(mut self, addr: impl Into<String>) -> Self {
+        self.metrics_addr = Some(addr.into());
+        self.metrics = true;
+        self
     }
 
     /// Whether spans are recorded and sinks written.
     pub fn tracing(&self) -> bool {
         self.dir.is_some()
+    }
+
+    /// Whether any observability is requested at all.
+    pub fn enabled(&self) -> bool {
+        self.tracing() || self.metrics || self.metrics_addr.is_some()
     }
 }
 
@@ -204,10 +227,12 @@ impl ObsHandle {
         }
     }
 
-    /// Mutate the metrics registry under the lock.
-    pub fn metrics(&self, f: impl FnOnce(&mut MetricsRegistry)) {
+    /// Access the metrics registry under the lock; the closure's return
+    /// value passes through (snapshot renderers use this to read without a
+    /// second locking API).
+    pub fn metrics<T>(&self, f: impl FnOnce(&mut MetricsRegistry) -> T) -> T {
         let mut inner = self.shared.inner.lock().expect("obs lock");
-        f(&mut inner.registry);
+        f(&mut inner.registry)
     }
 }
 

@@ -69,6 +69,31 @@ impl Histogram {
         }
     }
 
+    /// Smallest observed value (0 when empty). Rendered next to the
+    /// quantiles so a clamped bucket estimate can't hide the true floor.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest observed value (0 when empty). An observation past the last
+    /// bucket bound lands in the overflow bucket and caps the quantiles,
+    /// but stays exact here.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     /// Interpolated quantile (`q` in [0,1]): walk the buckets to the target
     /// rank, interpolate linearly inside the bucket, clamp to the observed
     /// [min, max].  Exact at the resolution of the bucket ladder.
@@ -178,12 +203,14 @@ impl MetricsRegistry {
         }
         for (k, h) in &self.hists {
             out.push_str(&format!(
-                "  {k:<28} n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3}\n",
+                "  {k:<28} n={} mean={:.3} min={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}\n",
                 h.count(),
                 h.mean(),
+                h.min(),
                 h.quantile(0.50),
                 h.quantile(0.95),
                 h.quantile(0.99),
+                h.max(),
             ));
         }
         out
@@ -232,6 +259,38 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn histogram_min_max_track_single_observation() {
+        let mut h = Histogram::new(MS_BUCKETS);
+        h.observe(3.25);
+        assert_eq!(h.min(), 3.25);
+        assert_eq!(h.max(), 3.25);
+        assert_eq!(h.quantile(0.5), 3.25, "single sample: quantiles clamp to it");
+        assert_eq!(h.quantile(0.99), 3.25);
+    }
+
+    #[test]
+    fn histogram_min_max_survive_out_of_range_data() {
+        let mut h = Histogram::new(MS_BUCKETS);
+        // Below the first bound and far past the last (overflow bucket).
+        h.observe(0.001);
+        h.observe(250_000.0);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 250_000.0);
+        // Bucket quantiles clamp to the observed range, never past it.
+        let p99 = h.quantile(0.99);
+        assert!(p99 <= 250_000.0 && p99 >= 0.001, "p99={p99}");
+        // And the render exposes the exact extremes the buckets can't.
+        let mut r = MetricsRegistry::default();
+        r.observe_ms("spike_ms", 0.001);
+        r.observe_ms("spike_ms", 250_000.0);
+        let table = r.render_table();
+        assert!(table.contains("max=250000.000"), "{table}");
+        assert!(table.contains("min=0.001"), "{table}");
     }
 
     #[test]

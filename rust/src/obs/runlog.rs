@@ -16,7 +16,11 @@
 //! | `checkpoint`  | `t_us`, `step`, `path` (str)                                           |
 //! | `span`        | `t_us`, `name` (str), `cat` (`step\|comm\|conv\|comp`), `device`, `layer`, `step`, `dur_us` |
 //! | `metrics`     | `t_us`, `counters` (obj), `gauges` (obj), `hists` (obj)                |
+//! | `health`      | `t_us`, `step`, `device`, `from` (state), `to` (state), `ratio`        |
+//! | `anomaly`     | `t_us`, `step`, `step_ms`, `median_ms`, `mad_ms`                       |
 //! | `run_end`     | `t_us`, `steps`                                                        |
+//!
+//! (`state` is one of `healthy|degraded|straggling|lost`; see `obs::health`.)
 //!
 //! [`validate_line`] is the single schema authority: the obs tests, the
 //! `convdist report` subcommand and the CI gate all call it.
@@ -103,6 +107,18 @@ pub fn event_line(t_us: u64, ev: &Event) -> String {
             "{{\"type\":\"checkpoint\",\"t_us\":{t_us},\"step\":{step},\"path\":\"{}\"}}",
             json_escape(&path.display().to_string())
         ),
+        Event::HealthChanged { step, device, from, to, ratio } => format!(
+            "{{\"type\":\"health\",\"t_us\":{t_us},\"step\":{step},\"device\":{device},\"from\":\"{}\",\"to\":\"{}\",\"ratio\":{}}}",
+            from.label(),
+            to.label(),
+            num(*ratio),
+        ),
+        Event::AnomalyFlagged { step, step_ms, median_ms, mad_ms } => format!(
+            "{{\"type\":\"anomaly\",\"t_us\":{t_us},\"step\":{step},\"step_ms\":{},\"median_ms\":{},\"mad_ms\":{}}}",
+            num(*step_ms),
+            num(*median_ms),
+            num(*mad_ms),
+        ),
     }
 }
 
@@ -128,13 +144,15 @@ pub fn metrics_line(t_us: u64, reg: &MetricsRegistry) -> String {
             out.push(',');
         }
         out.push_str(&format!(
-            "\"{}\":{{\"count\":{},\"mean\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+            "\"{}\":{{\"count\":{},\"mean\":{},\"min\":{},\"p50\":{},\"p95\":{},\"p99\":{},\"max\":{}}}",
             json_escape(k),
             h.count(),
             num(h.mean()),
+            num(h.min()),
             num(h.quantile(0.50)),
             num(h.quantile(0.95)),
             num(h.quantile(0.99)),
+            num(h.max()),
         ));
     }
     out.push_str("}}");
@@ -197,6 +215,23 @@ pub fn validate_line(v: &Json) -> Result<()> {
             v.get("gauges")?.as_obj()?;
             v.get("hists")?.as_obj()?;
         }
+        "health" => {
+            req_num(v, "step")?;
+            req_num(v, "device")?;
+            req_num(v, "ratio")?;
+            for k in ["from", "to"] {
+                let s = req_str(v, k)?;
+                ensure!(
+                    crate::obs::HealthState::from_label(s).is_some(),
+                    "health {k} {s:?} not one of healthy|degraded|straggling|lost"
+                );
+            }
+        }
+        "anomaly" => {
+            for k in ["step", "step_ms", "median_ms", "mad_ms"] {
+                req_num(v, k)?;
+            }
+        }
         "run_end" => {
             req_num(v, "steps")?;
         }
@@ -219,6 +254,43 @@ pub fn validate_text(text: &str) -> Result<Vec<Json>> {
     }
     ensure!(!out.is_empty(), "run log is empty");
     Ok(out)
+}
+
+/// A lenient read of a possibly-in-flight run log (see [`read_text_tail`]).
+pub struct TailRead {
+    pub lines: Vec<Json>,
+    /// True when the final line was dropped as a partial write.
+    pub truncated: bool,
+}
+
+/// Parse a run log that may still be written to (`convdist top` on a live
+/// `run.jsonl`, the compare tool on a crashed run). Interior corruption is
+/// still a hard error with its 1-based line number, but a *final* line that
+/// fails to parse or validate while the text lacks a trailing newline is
+/// treated as a partial write and skipped (`truncated: true`). An empty
+/// log is fine here — the caller renders "no steps yet".
+pub fn read_text_tail(text: &str) -> Result<TailRead> {
+    let complete_tail = text.ends_with('\n') || text.is_empty();
+    let lines: Vec<(usize, &str)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .collect();
+    let mut out = Vec::new();
+    let mut truncated = false;
+    let last = lines.len().saturating_sub(1);
+    for (idx, (lineno, line)) in lines.iter().enumerate() {
+        let parsed = Json::parse(line).and_then(|v| {
+            validate_line(&v)?;
+            Ok(v)
+        });
+        match parsed {
+            Ok(v) => out.push(v),
+            Err(_) if idx == last && !complete_tail => truncated = true,
+            Err(e) => bail!("run log line {}: {e}", lineno + 1),
+        }
+    }
+    Ok(TailRead { lines: out, truncated })
 }
 
 #[cfg(test)]
@@ -247,6 +319,14 @@ mod tests {
             Event::WorkerLeft { step: 2, devices_left: 2 },
             Event::EvalDone { step: 3, accuracy: 0.125 },
             Event::CheckpointSaved { step: 2, path: "out/step2 \"x\".ckpt".into() },
+            Event::HealthChanged {
+                step: 4,
+                device: 1,
+                from: crate::obs::HealthState::Healthy,
+                to: crate::obs::HealthState::Degraded,
+                ratio: 2.5,
+            },
+            Event::AnomalyFlagged { step: 5, step_ms: 120.0, median_ms: 40.0, mad_ms: 2.0 },
         ];
         for ev in &events {
             let line = event_line(42, ev);
@@ -294,6 +374,8 @@ mod tests {
             r#"{"type":"step","step":1}"#,                       // missing t_us
             r#"{"type":"span","t_us":0,"name":"x","cat":"io","device":0,"layer":0,"step":1,"dur_us":1}"#, // bad cat
             r#"{"type":"eval","t_us":0,"step":1,"accuracy":"hi"}"#, // mistyped
+            r#"{"type":"health","t_us":0,"step":1,"device":0,"from":"healthy","to":"zombie","ratio":1.0}"#, // bad state
+            r#"{"type":"anomaly","t_us":0,"step":1,"step_ms":9.0}"#, // missing fields
         ] {
             let v = Json::parse(bad).unwrap();
             assert!(validate_line(&v).is_err(), "should reject {bad}");
@@ -306,5 +388,37 @@ mod tests {
         let err = validate_text(&text).unwrap_err().to_string();
         assert!(err.contains("line 2"), "{err}");
         assert!(validate_text("").is_err(), "empty log must be rejected");
+    }
+
+    #[test]
+    fn tail_read_tolerates_a_partial_final_line_only() {
+        let start = run_start_line(0, "tiny", 2, 3);
+        // Partial trailing write (no newline): skipped, flagged.
+        let text = format!("{start}\n{{\"type\":\"st");
+        let r = read_text_tail(&text).unwrap();
+        assert!(r.truncated);
+        assert_eq!(r.lines.len(), 1);
+        // Same garbage but newline-terminated: a real corruption, line 2.
+        let text = format!("{start}\n{{\"type\":\"st\n");
+        let err = read_text_tail(&text).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // Interior corruption is always fatal even without a trailing \n.
+        let text = format!("{start}\ngarbage\n{start}");
+        let err = read_text_tail(&text).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // Empty logs are fine for tailing.
+        let r = read_text_tail("").unwrap();
+        assert!(r.lines.is_empty() && !r.truncated);
+    }
+
+    #[test]
+    fn metrics_line_carries_hist_min_max() {
+        let mut reg = MetricsRegistry::default();
+        reg.observe_ms("step_ms", 5.0);
+        reg.observe_ms("step_ms", 40.0);
+        let v = Json::parse(&metrics_line(1, &reg)).unwrap();
+        let h = v.get("hists").unwrap().get("step_ms").unwrap();
+        assert_eq!(h.get("min").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(h.get("max").unwrap().as_f64().unwrap(), 40.0);
     }
 }

@@ -64,7 +64,7 @@ use crate::data::{default_dataset, Batch, Dataset};
 use crate::devices::{Throttle, ThrottlePlan};
 use crate::metrics::Breakdown;
 use crate::net::{Link, LinkModel, TcpLink};
-use crate::obs::{ObsConfig, Observability};
+use crate::obs::{live, HealthState, MetricsServer, ObsConfig, Observability};
 use crate::runtime::{ArchSpec, Runtime};
 use crate::sched::AdaptiveConfig;
 
@@ -99,6 +99,19 @@ pub enum Event {
     EvalDone { step: u64, accuracy: f32 },
     /// A checkpoint was written.
     CheckpointSaved { step: u64, path: PathBuf },
+    /// A device moved on the health ladder (DESIGN.md §12).  Emitted after
+    /// the step (and any `Repartitioned`/`WorkerLeft`) it belongs to.
+    HealthChanged {
+        step: u64,
+        device: usize,
+        from: HealthState,
+        to: HealthState,
+        /// Rate-over-fleet-median ratio that drove the change (0 for Lost).
+        ratio: f64,
+    },
+    /// This step's total time was a high outlier against the rolling
+    /// median/MAD window.
+    AnomalyFlagged { step: u64, step_ms: f64, median_ms: f64, mad_ms: f64 },
 }
 
 /// An event observer.  Boxed `FnMut` so closures can accumulate state.
@@ -230,6 +243,10 @@ impl SessionBuilder {
             eprintln!("{d}");
         }
         let mut b = Self::new().trainer(cfg.trainer.clone()).adaptive(cfg.adaptive);
+        if let Some(addr) = &cfg.metrics_addr {
+            b.obs.metrics_addr = Some(addr.clone());
+            b.obs.metrics = true;
+        }
         match &cfg.arch {
             Some(ArchChoice::Preset(name)) => b = b.arch(ArchSource::Preset(name.clone())),
             Some(ArchChoice::Graph(json)) => {
@@ -435,14 +452,24 @@ impl SessionBuilder {
         )?;
         // The obs epoch starts *after* calibration so step 1's spans sit
         // near t=0 of the trace instead of behind the calibration gap.
-        let obs = if self.obs.tracing() || self.obs.metrics {
+        let (obs, live) = if self.obs.enabled() {
             let label = rt.arch().label();
             let devices = 1 + trainer.alive_workers();
             let o = Observability::new(&self.obs, &label, devices, self.trainer.steps)?;
             trainer.attach_obs(o.handle());
-            Some(o)
+            Session::snapshot_fleet_gauges(&o.handle(), &trainer);
+            let live = match &self.obs.metrics_addr {
+                Some(addr) => {
+                    let h = o.handle();
+                    let provider: live::MetricsProvider =
+                        Arc::new(move || h.metrics(|m| live::render_prometheus(m)));
+                    Some(MetricsServer::start(addr, provider)?)
+                }
+                None => None,
+            };
+            (Some(o), live)
         } else {
-            None
+            (None, None)
         };
         let dataset = match self.dataset.take() {
             Some(ds) => ds,
@@ -459,6 +486,7 @@ impl SessionBuilder {
             observers: self.observers,
             dataset,
             obs,
+            live,
             checkpoint_dir: self.checkpoint_dir,
         };
         if let Some(path) = self.resume {
@@ -510,6 +538,9 @@ pub struct Session {
     observers: Vec<Observer>,
     dataset: Box<dyn Dataset + Send>,
     obs: Option<Observability>,
+    /// Live Prometheus endpoint (`ObsConfig::metrics_addr`), stopped by
+    /// `finish_obs`/`shutdown` or drop.
+    live: Option<MetricsServer>,
     checkpoint_dir: PathBuf,
 }
 
@@ -543,13 +574,47 @@ impl Session {
         }
     }
 
+    /// Refresh the per-device fleet gauges the live endpoint serves:
+    /// `health.devN` (state code), `share.devN` (FLOP-weighted kernel
+    /// share) and `throughput.devN` (GFLOP/s from the EWMA telemetry).
+    fn snapshot_fleet_gauges(h: &crate::obs::ObsHandle, trainer: &DistTrainer) {
+        let states = trainer.health_states().to_vec();
+        let shares = trainer.device_shares();
+        let rates: Vec<Option<f64>> =
+            (0..states.len()).map(|d| trainer.telemetry().rate(d)).collect();
+        h.metrics(|m| {
+            for (d, s) in states.iter().enumerate() {
+                m.set_gauge(&format!("health.dev{d}"), s.code() as f64);
+            }
+            for (d, share) in &shares {
+                m.set_gauge(&format!("share.dev{d}"), *share);
+            }
+            for (d, r) in rates.iter().copied().enumerate() {
+                if let Some(r) = r.filter(|r| *r > 0.0) {
+                    m.set_gauge(&format!("throughput.dev{d}"), 1.0 / r);
+                }
+            }
+        });
+    }
+
     /// One training step on an explicit batch, with events.
     pub fn step(&mut self, batch: &Batch) -> Result<StepResult> {
         let devices_before = 1 + self.trainer.alive_workers();
         let r = self.trainer.step(batch)?;
         let step = self.trainer.steps_done();
         if let Some(o) = &self.obs {
-            o.handle().metrics(|m| m.absorb_breakdown(&r.breakdown));
+            let h = o.handle();
+            let stats = self.trainer.sched_stats();
+            h.metrics(|m| {
+                m.absorb_breakdown(&r.breakdown);
+                // Keep the live endpoint's scheduler counters current; the
+                // end-of-run absorb in `finish_obs` then only re-writes them.
+                m.absorb_sched(stats);
+                if r.anomaly.is_some() {
+                    m.inc("anomalies", 1);
+                }
+            });
+            Self::snapshot_fleet_gauges(&h, &self.trainer);
         }
         self.emit(Event::StepCompleted {
             step,
@@ -564,7 +629,32 @@ impl Session {
         if r.devices < devices_before {
             self.emit(Event::WorkerLeft { step, devices_left: r.devices });
         }
+        // Health and anomaly events trail the step (and any membership
+        // events) they belong to, keeping the run log causally ordered.
+        for t in &r.health {
+            self.emit(Event::HealthChanged {
+                step,
+                device: t.device,
+                from: t.from,
+                to: t.to,
+                ratio: t.ratio,
+            });
+        }
+        if let Some(a) = &r.anomaly {
+            self.emit(Event::AnomalyFlagged {
+                step,
+                step_ms: a.step_ms,
+                median_ms: a.median_ms,
+                mad_ms: a.mad_ms,
+            });
+        }
         Ok(r)
+    }
+
+    /// The bound address of the live metrics endpoint, when one is serving
+    /// (resolves an ephemeral `:0` port to the real one).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.live.as_ref().map(|s| s.addr())
     }
 
     /// The full training loop: `trainer.steps` steps from the session
@@ -674,6 +764,11 @@ impl Session {
     /// metrics are on).  Idempotent; [`Session::shutdown`] calls it too, so
     /// only call this directly to print the table before tearing down.
     pub fn finish_obs(&mut self) -> Result<Option<String>> {
+        // Stop serving scrapes before the registry gets its end-of-run
+        // absorbs — the endpoint's contract is "live while training".
+        if let Some(mut srv) = self.live.take() {
+            srv.stop();
+        }
         let Some(obs) = self.obs.as_mut() else {
             return Ok(None);
         };

@@ -6,12 +6,14 @@
 //! own Comm/Conv/Comp attribution.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use convdist::cluster::{worker_loop, WorkerOptions};
 use convdist::config::TrainerConfig;
 use convdist::devices::{Throttle, ThrottlePlan};
 use convdist::net::{inproc_pair, Link};
-use convdist::obs::{runlog, ObsConfig, PHASES_TID};
+use convdist::obs::{compare, live, runlog, HealthState, ObsConfig, PHASES_TID};
+use convdist::proto::Message;
 use convdist::runtime::{ArchSpec, Runtime};
 use convdist::sched::AdaptiveConfig;
 use convdist::session::SessionBuilder;
@@ -238,6 +240,272 @@ fn trace_json_is_valid_and_phase_spans_match_step_breakdowns() {
     }
 
     let _ = std::fs::remove_dir_all(&trace_dir);
+}
+
+/// A worker that serves calibration and `live` ConvWork frames, then wedges
+/// — keeps the link open but never replies again (the silent-straggler
+/// harness from the adaptive-sched suite).
+fn spawn_wedging_worker(id: u32, live: usize) -> Box<dyn Link> {
+    let (master_end, mut worker_end) = inproc_pair();
+    std::thread::spawn(move || {
+        let rt = Runtime::open(convdist::artifacts_dir()).unwrap();
+        worker_end.send(&Message::Hello { worker_id: id, version: 1 }).unwrap();
+        let mut served = 0usize;
+        loop {
+            match worker_end.recv() {
+                Ok(Message::Calibrate { .. }) => {
+                    worker_end.send(&Message::CalibrateResult { seconds: 0.01 }).unwrap();
+                }
+                Ok(Message::ConvWork { seq, layer, dir, bucket, inputs, kernels, extra }) => {
+                    if served >= live {
+                        loop {
+                            std::thread::sleep(Duration::from_secs(3600));
+                        }
+                    }
+                    served += 1;
+                    let reply = convdist::cluster::compute_conv_work(
+                        &rt,
+                        Throttle::none(),
+                        seq,
+                        layer,
+                        dir,
+                        bucket as usize,
+                        inputs,
+                        kernels,
+                        extra,
+                    )
+                    .unwrap();
+                    worker_end.send(&reply).unwrap();
+                }
+                Ok(Message::AllOk) | Ok(Message::ShardUpdate { .. }) => {}
+                Ok(Message::TrainOver) | Err(_) => return,
+                Ok(other) => panic!("unexpected {other:?}"),
+            }
+        }
+    });
+    Box::new(master_end)
+}
+
+/// The health ladder end to end: a worker degrading 8x mid-run must walk
+/// Healthy -> Degraded -> Straggling (never skipping a rung), and every
+/// `health` run-log line must trail the step line it belongs to.
+#[test]
+fn degrading_worker_walks_the_health_ladder_in_causal_order() {
+    let trace_dir = tmpdir("ladder");
+    let steps = 10usize;
+    let fast = Throttle::virtual_gflops(2.0);
+    let slow = Throttle::virtual_gflops(0.25); // 8x degradation
+    let links: Vec<Box<dyn Link>> = vec![
+        spawn_traced_worker(1, ThrottlePlan::degrade_after(fast, 8, slow), None),
+        spawn_traced_worker(2, ThrottlePlan::fixed(fast), None),
+    ];
+    let adaptive = AdaptiveConfig {
+        alpha: 0.5,
+        warmup_steps: 1,
+        imbalance_threshold: 0.2,
+        hysteresis: 0.05,
+        cooldown_steps: 2,
+        heartbeat_every: 0,
+        ..Default::default()
+    };
+    let cfg = TrainerConfig { steps, calib_rounds: 1, log_every: 100, ..Default::default() };
+    let mut session = SessionBuilder::new()
+        .trainer(cfg)
+        .master_throttle(fast)
+        .links(links)
+        .adaptive(adaptive)
+        .observe(ObsConfig::trace_to(&trace_dir))
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    assert_eq!(
+        session.trainer().health_states()[1],
+        HealthState::Straggling,
+        "8x straggler must end Straggling: {:?}",
+        session.trainer().health_states()
+    );
+    session.shutdown().unwrap();
+
+    let text = std::fs::read_to_string(trace_dir.join("run.jsonl")).unwrap();
+    let lines = runlog::validate_text(&text).unwrap();
+    let mut last_step = 0u64;
+    let mut ladder: Vec<(String, String)> = Vec::new();
+    for v in &lines {
+        match v.get("type").unwrap().as_str().unwrap() {
+            "step" => last_step = v.get("step").unwrap().as_u64().unwrap(),
+            "health" => {
+                assert_eq!(
+                    v.get("step").unwrap().as_u64().unwrap(),
+                    last_step,
+                    "health line out of causal position"
+                );
+                if v.get("device").unwrap().as_u64().unwrap() == 1 {
+                    ladder.push((
+                        v.get("from").unwrap().as_str().unwrap().to_string(),
+                        v.get("to").unwrap().as_str().unwrap().to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    assert!(ladder.len() >= 2, "degradation produced too few transitions: {ladder:?}");
+    assert_eq!(ladder[0], ("healthy".to_string(), "degraded".to_string()), "{ladder:?}");
+    assert_eq!(ladder[1], ("degraded".to_string(), "straggling".to_string()), "{ladder:?}");
+    // Transition chain is contiguous: each from equals the previous to.
+    for w in ladder.windows(2) {
+        assert_eq!(w[0].1, w[1].0, "ladder skipped a rung: {ladder:?}");
+    }
+
+    let _ = std::fs::remove_dir_all(&trace_dir);
+}
+
+/// A silently wedged worker blows the gather deadline, is dropped, and the
+/// run log shows it: `worker_left`, then the `health` line to `lost` — in
+/// that order, both attributed to the step the drop happened in.
+#[test]
+fn hung_worker_is_reported_lost_after_the_gather_drop() {
+    let trace_dir = tmpdir("lost");
+    let links: Vec<Box<dyn Link>> = vec![
+        spawn_wedging_worker(1, 4),
+        spawn_traced_worker(2, ThrottlePlan::fixed(Throttle::none()), None),
+    ];
+    let adaptive = AdaptiveConfig {
+        gather_timeout: Some(Duration::from_millis(500)),
+        heartbeat_every: 0,
+        ..Default::default()
+    };
+    let cfg = TrainerConfig { steps: 3, calib_rounds: 1, log_every: 100, ..Default::default() };
+    let mut session = SessionBuilder::new()
+        .trainer(cfg)
+        .links(links)
+        .adaptive(adaptive)
+        .observe(ObsConfig::trace_to(&trace_dir))
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    assert_eq!(session.trainer().health_states()[1], HealthState::Lost);
+    let table = session.finish_obs().unwrap().expect("--trace implies metrics");
+    assert!(table.contains("health.dev1"), "{table}");
+    session.shutdown().unwrap();
+
+    let text = std::fs::read_to_string(trace_dir.join("run.jsonl")).unwrap();
+    let lines = runlog::validate_text(&text).unwrap();
+    let pos = |ty_want: &str, extra: fn(&Json) -> bool| {
+        lines
+            .iter()
+            .position(|v| v.get("type").unwrap().as_str().unwrap() == ty_want && extra(v))
+    };
+    let left = pos("worker_left", |_| true).expect("no worker_left line");
+    let lost = pos("health", |v| {
+        v.get("device").unwrap().as_u64().unwrap() == 1
+            && v.get("to").unwrap().as_str().unwrap() == "lost"
+    })
+    .expect("no health->lost line");
+    assert!(lost > left, "lost health line must trail the worker_left line");
+    assert_eq!(
+        lines[left].get("step").unwrap().as_u64().unwrap(),
+        lines[lost].get("step").unwrap().as_u64().unwrap(),
+        "drop and its health transition must share a step"
+    );
+
+    let _ = std::fs::remove_dir_all(&trace_dir);
+}
+
+/// The live tier end to end: a session serving `--metrics-addr` exposes
+/// parseable Prometheus text with per-device health while running, the
+/// `top` snapshot renders the degraded worker, and the endpoint goes away
+/// with `finish_obs`.
+#[test]
+fn live_endpoint_serves_health_and_top_renders_it() {
+    let steps = 6usize;
+    let fast = Throttle::virtual_gflops(2.0);
+    let slow = Throttle::virtual_gflops(0.25);
+    let links: Vec<Box<dyn Link>> = vec![
+        spawn_traced_worker(1, ThrottlePlan::degrade_after(fast, 8, slow), None),
+        spawn_traced_worker(2, ThrottlePlan::fixed(fast), None),
+    ];
+    let adaptive = AdaptiveConfig {
+        alpha: 0.5,
+        warmup_steps: 1,
+        imbalance_threshold: 0.2,
+        hysteresis: 0.05,
+        cooldown_steps: 2,
+        heartbeat_every: 0,
+        ..Default::default()
+    };
+    let cfg = TrainerConfig { steps, calib_rounds: 1, log_every: 100, ..Default::default() };
+    let mut session = SessionBuilder::new()
+        .trainer(cfg)
+        .master_throttle(fast)
+        .links(links)
+        .adaptive(adaptive)
+        .observe(ObsConfig::metrics_only().serve("127.0.0.1:0"))
+        .build()
+        .unwrap();
+    let addr = session.metrics_addr().expect("serve() must bind an endpoint").to_string();
+
+    session.run().unwrap();
+
+    // Scrape while the session is still up (the endpoint lives until
+    // finish_obs/shutdown).
+    let body = live::http_get(&addr).unwrap();
+    assert!(body.contains("convdist_up 1"), "{body}");
+    assert!(body.contains("# TYPE convdist_steps counter"), "{body}");
+    let snap = live::TopSnapshot::from_prometheus(&body).unwrap();
+    assert_eq!(snap.steps, steps as u64);
+    assert_eq!(snap.devices.len(), 3, "{snap:?}");
+    assert_eq!(snap.devices[1].health, HealthState::Straggling, "{snap:?}");
+    assert_eq!(snap.devices[2].health, HealthState::Healthy, "{snap:?}");
+    assert!(snap.devices[1].share.is_some(), "share gauges must be live: {snap:?}");
+    let table = snap.render();
+    assert!(table.contains("straggling"), "{table}");
+
+    session.finish_obs().unwrap();
+    assert!(session.metrics_addr().is_none(), "finish_obs must stop the endpoint");
+    assert!(live::http_get(&addr).is_err(), "endpoint must stop serving");
+    session.shutdown().unwrap();
+}
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// The committed golden baseline vs itself is clean; vs the 1.5x-slowed
+/// variant (a >= 20% injected slowdown) the gate trips — the exact pair CI
+/// runs through `convdist compare`.
+#[test]
+fn compare_gate_detects_slowdown_between_fixtures() {
+    let golden = compare::stats_from_file(&fixture("golden_run.jsonl")).unwrap();
+    let slow = compare::stats_from_file(&fixture("golden_run_slow.jsonl")).unwrap();
+    assert_eq!(golden.steps, 10);
+    assert_eq!((golden.repartitions, golden.departures, golden.anomalies), (1, 1, 1));
+
+    let self_rep = compare::compare(&golden, &golden, 10.0);
+    assert!(!self_rep.regressed(), "{}", self_rep.render_human(10, 10));
+
+    let rep = compare::compare(&golden, &slow, 10.0);
+    assert!(rep.regressed(), "{}", rep.render_human(10, 10));
+    let p50 = rep.deltas.iter().find(|d| d.metric == "step_p50_ms").unwrap();
+    assert!((p50.pct - 50.0).abs() < 1.0, "expected ~50% step slowdown, got {}", p50.pct);
+
+    // An improvement (slow baseline, fast candidate) never trips.
+    assert!(!compare::compare(&slow, &golden, 10.0).regressed());
+}
+
+/// Interior corruption is a hard error with its 1-based line number — for
+/// the strict validator, the lenient tail reader, `top` and `compare` alike.
+#[test]
+fn corrupt_fixture_fails_with_its_line_number() {
+    let text = std::fs::read_to_string(fixture("corrupt_run.jsonl")).unwrap();
+    for err in [
+        runlog::validate_text(&text).unwrap_err().to_string(),
+        runlog::read_text_tail(&text).unwrap_err().to_string(),
+        live::TopSnapshot::from_runlog(&text).unwrap_err().to_string(),
+        compare::stats_from_text(&text).unwrap_err().to_string(),
+    ] {
+        assert!(err.contains("line 3"), "error must name line 3: {err}");
+    }
 }
 
 /// The `convdist report` path over a real traced run: `summarize_file`

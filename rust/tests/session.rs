@@ -229,6 +229,10 @@ fn events_fire_in_order_with_checkpoint_and_eval() {
                     "eval".into()
                 }
                 Event::CheckpointSaved { step, .. } => format!("ckpt{step}"),
+                Event::HealthChanged { device, to, .. } => {
+                    format!("health:dev{device}:{}", to.label())
+                }
+                Event::AnomalyFlagged { step, .. } => format!("anomaly{step}"),
             };
             sink.lock().unwrap().push(tag);
         })
