@@ -87,6 +87,45 @@ if command -v curl >/dev/null 2>&1; then
   wait "$live_pid"
   rm -f live_run.out live_metrics.txt
 fi
+# Serving gate (DESIGN.md §13): bitwise serve-vs-eval equivalence under a
+# pinned thread count, then a loopback deployment — train the serve-config
+# checkpoint, boot `convdist serve` with dynamic batching and a metrics
+# listener, fire concurrent `convdist infer` clients, require a non-empty
+# request-latency histogram on the scrape, drain, and wait for clean exit.
+RAYON_NUM_THREADS=1 cargo test -q --test serve
+rm -f serve.ckpt serve_run.out serve_metrics.txt
+cargo run --release -- run --config examples/configs/serve.json --save serve.ckpt
+cargo run --release -- serve --ckpt serve.ckpt --config examples/configs/serve.json \
+  --addr 127.0.0.1:0 --metrics-addr 127.0.0.1:0 >serve_run.out 2>&1 &
+serve_pid=$!
+i=0
+saddr=
+while [ "$i" -lt 100 ]; do
+  saddr=$(sed -n 's|.*serving on \([0-9.:]*\) .*|\1|p' serve_run.out | head -n 1)
+  [ -n "$saddr" ] && break
+  i=$((i + 1))
+  sleep 0.1
+done
+if [ -z "$saddr" ]; then
+  kill "$serve_pid" 2>/dev/null || true
+  echo "convdist serve never printed its bound address" >&2
+  cat serve_run.out >&2
+  exit 1
+fi
+cargo run --release -- infer --addr "$saddr" --arch tiny --requests 8 --concurrency 4
+if command -v curl >/dev/null 2>&1; then
+  maddr=$(sed -n 's|.*live metrics: http://\([0-9.:]*\)/metrics.*|\1|p' serve_run.out | head -n 1)
+  curl -fsS "http://$maddr/metrics" >serve_metrics.txt
+  grep -q '^convdist_serve_request_ms_count [1-9]' serve_metrics.txt
+  grep -q '^convdist_serve_queue_depth_count [1-9]' serve_metrics.txt
+fi
+cargo run --release -- infer --addr "$saddr" --arch tiny --requests 1 --drain
+wait "$serve_pid"
+rm -f serve.ckpt serve_run.out serve_metrics.txt
+# Dynamic-batcher bench (p50/p99 vs offered QPS, batcher on vs off; the
+# batched p50 must not lose at saturation); uploaded as a CI artifact.
+cargo run --release --example bench_serve
+test -s BENCH_serve.json
 # Adaptive end-to-end: the config pre-flight plus an adaptive-enabled run.
 cargo run --release -- run --config examples/configs/adaptive.json
 # Static-vs-adaptive step-time trajectory from the scheduler simulator;

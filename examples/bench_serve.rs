@@ -1,0 +1,173 @@
+//! `cargo run --release --example bench_serve`
+//!
+//! Load generator for `convdist serve` (DESIGN.md §13): sweeps offered QPS
+//! against a tiny-preset fleet twice — dynamic batcher off (`max_batch 1`)
+//! and on (`max_batch` = the top batch rung) — and emits `BENCH_serve.json`
+//! with p50/p99 latency and achieved throughput per sweep point.  The gate:
+//! at the saturating offered rate the batcher must not lose to batch-of-one
+//! on p50 (it amortizes per-dispatch scatter/gather over the whole rung).
+//! CI uploads the file as a workflow artifact so the curve is tracked.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use convdist::config::{ServeConfig, TrainerConfig};
+use convdist::devices::Throttle;
+use convdist::model::Params;
+use convdist::runtime::ArchSpec;
+use convdist::serve::ServeClient;
+use convdist::session::{ArchSource, Checkpoint, SessionBuilder};
+use convdist::tensor::{Pcg32, Tensor};
+
+const CONNECTIONS: usize = 4;
+const REQUESTS_PER_CONN: usize = 20;
+/// Offered request rates (whole fleet, not per connection).  The top entry
+/// is far past what serial batch-of-one dispatch sustains, so it saturates.
+const QPS_SWEEP: &[f64] = &[25.0, 100.0, 800.0];
+
+struct Point {
+    offered_qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    achieved_qps: f64,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+}
+
+/// One serve deployment, swept across `QPS_SWEEP` with open-loop pacing:
+/// each of `CONNECTIONS` clients fires on its schedule (blocking on the
+/// reply, so in-flight is bounded by the connection count, like a real
+/// frontend pool).
+fn run_mode(ckpt: &Path, batcher: bool) -> anyhow::Result<Vec<Point>> {
+    let infer = SessionBuilder::new()
+        .arch(ArchSource::Preset("tiny".into()))
+        .trainer(TrainerConfig { calib_rounds: 1, ..Default::default() })
+        .workers(&[Throttle::none(); 2])
+        .inference(ckpt)?;
+    let arch = infer.runtime().arch().clone();
+    let top_rung = arch.batch_buckets.last().copied().unwrap_or(arch.batch);
+    let scfg = if batcher {
+        ServeConfig { max_delay_ms: 5, max_batch: top_rung }
+    } else {
+        ServeConfig { max_delay_ms: 0, max_batch: 1 }
+    };
+    let serving = infer.serve("127.0.0.1:0", scfg)?;
+    let addr = serving.addr().to_string();
+
+    let mut points = Vec::new();
+    for &qps in QPS_SWEEP {
+        let interval = Duration::from_secs_f64(CONNECTIONS as f64 / qps);
+        let wall0 = Instant::now();
+        let handles: Vec<_> = (0..CONNECTIONS)
+            .map(|t| {
+                let addr = addr.clone();
+                let shape = [arch.in_ch, arch.img, arch.img];
+                std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                    let mut c = ServeClient::connect(&addr)?;
+                    let mut rng = Pcg32::seed_stream(0xBE9C, t as u64);
+                    let t0 = Instant::now();
+                    let mut lat = Vec::with_capacity(REQUESTS_PER_CONN);
+                    for i in 0..REQUESTS_PER_CONN {
+                        let due = interval.mul_f64(i as f64);
+                        let now = t0.elapsed();
+                        if now < due {
+                            std::thread::sleep(due - now);
+                        }
+                        let img = Tensor::randn(&shape, &mut rng);
+                        let s = Instant::now();
+                        c.classify(&img)?;
+                        lat.push(s.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        let mut lat = Vec::new();
+        for h in handles {
+            lat.extend(h.join().expect("client thread panicked")?);
+        }
+        let wall = wall0.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.total_cmp(b));
+        points.push(Point {
+            offered_qps: qps,
+            p50_ms: percentile(&lat, 0.50),
+            p99_ms: percentile(&lat, 0.99),
+            achieved_qps: lat.len() as f64 / wall,
+        });
+    }
+    ServeClient::connect(&addr)?.drain()?;
+    serving.join()?;
+    Ok(points)
+}
+
+fn render(points: &[Point]) -> String {
+    let rows: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"offered_qps\": {:.1}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+                 \"achieved_qps\": {:.1}}}",
+                p.offered_qps, p.p50_ms, p.p99_ms, p.achieved_qps
+            )
+        })
+        .collect();
+    format!("[\n{}\n  ]", rows.join(",\n"))
+}
+
+fn main() -> anyhow::Result<()> {
+    // The served model is a weight artifact, not a trained run: freshly
+    // initialized tiny-preset parameters exercise the exact same path.
+    let arch = ArchSpec::preset("tiny").expect("tiny preset exists");
+    let dir = std::env::temp_dir().join(format!("convdist_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join("model.ckpt");
+    Checkpoint {
+        step: 0,
+        arch_label: arch.label(),
+        params: Params::init(&arch, 7)?.to_named(),
+        velocity: vec![],
+    }
+    .save(&ckpt)?;
+
+    let off = run_mode(&ckpt, false)?;
+    let on = run_mode(&ckpt, true)?;
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let (off_sat, on_sat) = (off.last().unwrap(), on.last().unwrap());
+    let mut json = String::new();
+    writeln!(json, "{{")?;
+    writeln!(json, "  \"name\": \"serve_dynamic_batcher\",")?;
+    writeln!(json, "  \"arch\": \"tiny\",")?;
+    writeln!(json, "  \"connections\": {CONNECTIONS},")?;
+    writeln!(json, "  \"requests_per_point\": {},", CONNECTIONS * REQUESTS_PER_CONN)?;
+    writeln!(json, "  \"batcher_off\": {},", render(&off))?;
+    writeln!(json, "  \"batcher_on\": {},", render(&on))?;
+    writeln!(json, "  \"saturating_p50_off_ms\": {:.4},", off_sat.p50_ms)?;
+    writeln!(json, "  \"saturating_p50_on_ms\": {:.4}", on_sat.p50_ms)?;
+    writeln!(json, "}}")?;
+    std::fs::write("BENCH_serve.json", &json)?;
+
+    for (label, pts) in [("batcher off", &off), ("batcher on ", &on)] {
+        for p in pts.iter() {
+            println!(
+                "{label}  offered {:>6.1} qps  p50 {:>8.3} ms  p99 {:>8.3} ms  achieved {:>6.1} qps",
+                p.offered_qps, p.p50_ms, p.p99_ms, p.achieved_qps
+            );
+        }
+    }
+    println!(
+        "BENCH_serve.json written: saturating p50 {:.3} ms (batch-of-one) vs {:.3} ms (batched)",
+        off_sat.p50_ms, on_sat.p50_ms
+    );
+    anyhow::ensure!(
+        on_sat.p50_ms <= off_sat.p50_ms * 1.10,
+        "dynamic batching must not lose to batch-of-one at saturating load: \
+         p50 {:.3} ms (on) vs {:.3} ms (off)",
+        on_sat.p50_ms,
+        off_sat.p50_ms
+    );
+    Ok(())
+}

@@ -16,7 +16,8 @@ use super::diag::Report;
 use super::graph::check_spec;
 use super::plan::{check_plan, PlanCheckOptions};
 
-const ROOT_KEYS: &[&str] = &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs"];
+const ROOT_KEYS: &[&str] =
+    &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs", "serve"];
 const TRAINER_KEYS: &[&str] = &[
     "steps",
     "lr",
@@ -43,6 +44,7 @@ const ADAPTIVE_KEYS: &[&str] = &[
     "gather_timeout_ms",
 ];
 const OBS_KEYS: &[&str] = &["metrics_addr"];
+const SERVE_KEYS: &[&str] = &["max_delay_ms", "max_batch"];
 
 fn lint_keys(rep: &mut Report, v: &Json, section: &str, allowed: &[&str]) {
     if let Json::Obj(m) = v {
@@ -82,6 +84,7 @@ pub fn check_config_text(text: &str) -> Report {
         ("network", NETWORK_KEYS),
         ("adaptive", ADAPTIVE_KEYS),
         ("obs", OBS_KEYS),
+        ("serve", SERVE_KEYS),
     ] {
         if let Some(s) = v.opt(section) {
             lint_keys(&mut rep, s, section, allowed);
@@ -179,6 +182,27 @@ pub fn check_config(cfg: &ExperimentConfig) -> Report {
             );
         }
     }
+    if let Some(s) = &cfg.serve {
+        if s.max_batch == 0 {
+            rep.emit(
+                "C009",
+                Some("serve.max_batch".into()),
+                "max_batch=0 — the batcher can never form a batch, so no request \
+                 is ever answered",
+            );
+        }
+        if s.max_delay_ms > 60_000 {
+            rep.emit(
+                "C009",
+                Some("serve.max_delay_ms".into()),
+                format!(
+                    "max_delay_ms={} holds requests for over a minute — surely a \
+                     units mistake (the budget is milliseconds)",
+                    s.max_delay_ms
+                ),
+            );
+        }
+    }
     let a = &cfg.adaptive;
     if a.enabled {
         if a.warmup_steps >= steps {
@@ -258,6 +282,24 @@ pub fn check_experiment(cfg: &ExperimentConfig) -> Report {
         None => Some(ArchSpec::native_default()),
     };
     if let Some(arch) = arch {
+        // The serve batcher pads partial batches up to a rung of the arch's
+        // batch ladder; a max_batch above the top rung has no shape to run.
+        if let Some(s) = &cfg.serve {
+            let top = arch.batch_buckets.last().copied().unwrap_or(arch.batch);
+            if s.max_batch > top {
+                rep.emit(
+                    "C009",
+                    Some("serve.max_batch".into()),
+                    format!(
+                        "max_batch={} exceeds the largest batch rung {top} of arch \
+                         {:?} (ladder {:?}) — no padded batch shape can cover it",
+                        s.max_batch,
+                        arch.label(),
+                        arch.batch_buckets
+                    ),
+                );
+            }
+        }
         rep.merge(check_spec(&arch));
         rep.merge(check_plan(
             &arch,
@@ -330,6 +372,33 @@ mod tests {
             r#"{"name": "x", "trainer": {"steps": 4, "checkpoint_every": 2}}"#,
         );
         assert!(!rep.diags.iter().any(|d| d.code == "C008"), "{}", rep.render_human());
+    }
+
+    #[test]
+    fn serve_budgets_the_ladder_cannot_cover_are_c009() {
+        // tiny preset: batch 2, ladder [2] — max_batch 8 has no rung.
+        let text = r#"{"name": "x", "arch": "tiny", "serve": {"max_batch": 8}}"#;
+        let rep = check_config_text(text);
+        let d = rep.diags.iter().find(|d| d.code == "C009").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("serve.max_batch"));
+        assert!(d.message.contains("largest batch rung"), "{}", d.message);
+        assert!(rep.has_deny());
+        // Zero batch and an hour-long delay budget are denied arch-free.
+        let rep = check_config_text(r#"{"name": "x", "serve": {"max_batch": 0}}"#);
+        assert!(rep.diags.iter().any(|d| d.code == "C009"), "{}", rep.render_human());
+        let rep =
+            check_config_text(r#"{"name": "x", "serve": {"max_delay_ms": 3600000}}"#);
+        assert!(rep.diags.iter().any(|d| d.code == "C009"), "{}", rep.render_human());
+        // A budget the ladder covers passes clean.
+        let rep = check_config_text(
+            r#"{"name": "x", "arch": "tiny", "serve": {"max_batch": 2, "max_delay_ms": 5}}"#,
+        );
+        assert!(!rep.diags.iter().any(|d| d.code == "C009"), "{}", rep.render_human());
+        assert!(!rep.has_deny(), "{}", rep.render_human());
+        // Typos inside the section stay C001 with a scoped location.
+        let rep = check_config_text(r#"{"name": "x", "serve": {"max_bacth": 2}}"#);
+        let d = rep.diags.iter().find(|d| d.code == "C001").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("serve.max_bacth"));
     }
 
     #[test]

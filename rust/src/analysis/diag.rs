@@ -82,6 +82,7 @@ pub const REGISTRY: &[(&str, Severity, &str)] = &[
     ("C006", Severity::Note, "log_every exceeds steps (no mid-run step logs)"),
     ("C007", Severity::Warn, "calib_rounds is 0 (clamped to 1 at calibration time)"),
     ("C008", Severity::Deny, "checkpoint_every out of range (0 or >= trainer.steps)"),
+    ("C009", Severity::Deny, "serve batcher budget the batch ladder cannot cover"),
 ];
 
 /// Look a code up in the [`REGISTRY`].

@@ -201,7 +201,14 @@ pub fn compute_conv_work(
         1 => ConvDir::Bwd,
         d => bail!("bad conv dir {d}"),
     };
-    let exec = Manifest::conv_exec(layer as usize, dirv, bucket);
+    // Serving scatters arrive at whatever batch rung the dynamic batcher
+    // picked; those dispatch to the `_n{batch}` forward family.  The training
+    // hot path (batch == arch.batch) keeps the exact legacy names.
+    let exec = if dirv == ConvDir::Fwd && x.shape()[0] != rt.arch().batch {
+        format!("conv{}_fwd_b{}_n{}", layer, bucket, x.shape()[0])
+    } else {
+        Manifest::conv_exec(layer as usize, dirv, bucket)
+    };
     match dirv {
         ConvDir::Fwd => {
             let bias = extra.ok_or_else(|| anyhow::anyhow!("fwd ConvWork missing bias"))?.into_tensor()?;
@@ -280,5 +287,44 @@ mod tests {
         assert!(zeros.data().iter().all(|&v| v == 0.0));
         // No-op when already at target.
         assert_eq!(pad_axis1(&t, 3).unwrap(), t);
+    }
+
+    #[test]
+    fn fwd_work_below_the_training_batch_uses_the_serving_execs() {
+        // Serving rungs: batch-4 arch with a [2, 4] ladder, so a batch-2
+        // scatter must dispatch to `conv1_fwd_b4_n2` and produce exactly the
+        // first two images of the batch-4 result.
+        let mut arch = crate::runtime::ArchSpec::tiny();
+        arch.batch = 4;
+        arch.batch_buckets = vec![2, 4];
+        let rt = Runtime::for_arch(arch);
+        let mut rng = Pcg32::seed(11);
+        let x4 = Tensor::randn(&[4, 3, 32, 32], &mut rng);
+        let w = Tensor::randn(&[4, 3, 5, 5], &mut rng);
+        let bias = Tensor::randn(&[4], &mut rng);
+        let run = |x: &Tensor| {
+            let msg = compute_conv_work(
+                &rt,
+                Throttle::none(),
+                1,
+                1,
+                0,
+                4,
+                WireTensor::from(x),
+                WireTensor::from(&w),
+                Some(WireTensor::from(&bias)),
+            )
+            .unwrap();
+            match msg {
+                Message::ConvResult { outputs, .. } => {
+                    outputs.into_iter().next().unwrap().into_tensor().unwrap()
+                }
+                other => panic!("unexpected reply {}", other.tag()),
+            }
+        };
+        let y4 = run(&x4);
+        let y2 = run(&x4.slice_axis0(0, 2).unwrap());
+        assert_eq!(y2.shape()[0], 2);
+        assert_eq!(y2, y4.slice_axis0(0, 2).unwrap());
     }
 }

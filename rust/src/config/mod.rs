@@ -43,6 +43,39 @@ pub struct ExperimentConfig {
     /// run's lifetime (`"obs": {"metrics_addr": "127.0.0.1:9184"}`); the CLI
     /// `--metrics-addr` flag overrides it.  `None` = no endpoint.
     pub metrics_addr: Option<String>,
+    /// Dynamic-batcher knobs for `convdist serve`
+    /// (`"serve": {"max_delay_ms": 5, "max_batch": 4}`).  `None` = the CLI
+    /// default: hold requests up to 5 ms and batch up to the largest
+    /// `batch_buckets` rung.
+    pub serve: Option<ServeConfig>,
+}
+
+/// The `serve` section: how long the dynamic batcher may hold a request
+/// hoping for companions, and the largest batch it may coalesce.  The
+/// static analyzer (diagnostic C009) rejects values the arch's
+/// `batch_buckets` ladder cannot cover.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Latency budget: a request waits at most this long before its batch
+    /// dispatches, full or not.
+    pub max_delay_ms: u64,
+    /// Coalesce at most this many requests per forward pass.  1 = batcher
+    /// off (every request runs alone on the smallest rung).
+    pub max_batch: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_delay_ms: 5, max_batch: 1 }
+    }
+}
+
+impl ServeConfig {
+    /// The CLI default when the config has no `serve` section: batch up to
+    /// the largest rung of the (ascending) batch ladder.
+    pub fn for_ladder(rungs: &[usize]) -> Self {
+        Self { max_delay_ms: 5, max_batch: rungs.last().copied().unwrap_or(1) }
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -125,6 +158,7 @@ impl Default for ExperimentConfig {
             network: NetworkConfig::default(),
             adaptive: AdaptiveConfig::disabled(),
             metrics_addr: None,
+            serve: None,
         }
     }
 }
@@ -142,7 +176,7 @@ impl ExperimentConfig {
         let v = Json::parse(text).context("parsing experiment config JSON")?;
         check_keys(
             &v,
-            &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs"],
+            &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs", "serve"],
             "config root",
         )?;
         let mut cfg = ExperimentConfig {
@@ -308,6 +342,17 @@ impl ExperimentConfig {
                 };
             }
         }
+        if let Some(s) = v.opt("serve") {
+            check_keys(s, &["max_delay_ms", "max_batch"], "serve")?;
+            let mut d = ServeConfig::default();
+            if let Some(x) = s.opt("max_delay_ms") {
+                d.max_delay_ms = x.as_u64()?;
+            }
+            if let Some(x) = s.opt("max_batch") {
+                d.max_batch = x.as_usize()?;
+            }
+            cfg.serve = Some(d);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -381,12 +426,19 @@ impl ExperimentConfig {
             None => String::new(),
             Some(addr) => format!(",\n  \"obs\": {{\"metrics_addr\": \"{}\"}}", esc(addr)),
         };
+        let serve = match &self.serve {
+            None => String::new(),
+            Some(s) => format!(
+                ",\n  \"serve\": {{\"max_delay_ms\": {}, \"max_batch\": {}}}",
+                s.max_delay_ms, s.max_batch
+            ),
+        };
         format!(
             "{{\n  \"name\": \"{}\",{arch}{adaptive}\n  \"trainer\": {{\"steps\": {}, \"lr\": {}, \
              \"momentum\": {}, \"weight_decay\": {}, \"seed\": {}, \"log_every\": {}, \
              \"calib_rounds\": {}{ckpt}}},\n  \"cluster\": {{\"workers\": {}, \"devices\": \"{}\", \
              \"throttle\": {}, \"worker_addrs\": [{}]}},\n  \"network\": {{\"bandwidth_mbps\": {}, \
-             \"latency_ms\": {}, \"shaped\": {}}}{obs}\n}}",
+             \"latency_ms\": {}, \"shaped\": {}}}{obs}{serve}\n}}",
             esc(&self.name),
             t.steps,
             t.lr,
@@ -606,6 +658,11 @@ mod tests {
         cfg.metrics_addr = Some("127.0.0.1:9184".into());
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
         assert_eq!(back, cfg);
+        // serve section survives (and is absent when None).
+        assert!(!cfg.to_json_string().contains("\"serve\""));
+        cfg.serve = Some(ServeConfig { max_delay_ms: 7, max_batch: 4 });
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back, cfg);
         // And hostile strings: quotes, backslashes, control characters.
         cfg.name = "we\"ird\\name\nwith\tctrl\u{1}".into();
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
@@ -682,6 +739,33 @@ mod tests {
             r#"{"name": "o", "obs": {"metrics_adr": "x"}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_with_defaults_and_rejects_typos() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"name": "s", "serve": {"max_delay_ms": 10, "max_batch": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve, Some(ServeConfig { max_delay_ms: 10, max_batch: 8 }));
+        // Partial section: the other knob takes its default.
+        let cfg =
+            ExperimentConfig::from_json_str(r#"{"name": "s", "serve": {"max_batch": 2}}"#)
+                .unwrap();
+        assert_eq!(cfg.serve, Some(ServeConfig { max_delay_ms: 5, max_batch: 2 }));
+        // No section at all: None (the CLI derives a ladder-aware default).
+        let cfg = ExperimentConfig::from_json_str(r#"{"name": "s"}"#).unwrap();
+        assert_eq!(cfg.serve, None);
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "s", "serve": {"max_bacth": 2}}"#
+        )
+        .is_err());
+        // Out-of-ladder values parse here; the static analyzer (C009) is the
+        // gate that refuses to serve them.
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "s", "serve": {"max_batch": 0}}"#
+        )
+        .is_ok());
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod obs;
 pub mod proto;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod tensor;

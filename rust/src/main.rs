@@ -31,12 +31,13 @@ use anyhow::{bail, Result};
 use convdist::analysis;
 use convdist::baselines::{DataParallelTrainer, SingleDeviceTrainer};
 use convdist::cluster::{worker_loop, WorkerOptions};
-use convdist::config::{ExperimentConfig, TrainerConfig};
+use convdist::config::{ExperimentConfig, ServeConfig, TrainerConfig};
 use convdist::data::default_dataset;
 use convdist::devices::Throttle;
 use convdist::net::TcpLink;
 use convdist::obs::ObsConfig;
 use convdist::runtime::{ArchSpec, Runtime};
+use convdist::serve::ServeClient;
 use convdist::session::{ArchSource, Event, RunReport, Session, SessionBuilder};
 use convdist::sim::figures;
 use convdist::util::cli::Args;
@@ -68,6 +69,15 @@ const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|
                                     (cross-run regression gate over step-time
                                      p50/p95 and phase means; exits non-zero
                                      when the candidate regresses)
+  serve      --ckpt CKPT [--config F] [--addr HOST:PORT] [--workers N]
+             [--max-batch K] [--max-delay-ms D] [--metrics-addr HOST:PORT]
+                                    (forward-only inference over the fleet
+                                     with dynamic batching; drains and exits
+                                     when a client sends --drain)
+  infer      --addr HOST:PORT [--requests N] [--concurrency C] [--drain]
+                                    (load client: send N random images over C
+                                     connections, print latency percentiles;
+                                     --drain shuts the server down after)
 common: --artifacts DIR --arch NAME   (NAME: default|tiny|deep_cifar|tiny_deep;
                                        only without a manifest.json — a manifest
                                        pins the architecture)";
@@ -90,6 +100,8 @@ fn main() -> Result<()> {
         "report" => cmd_report(&args),
         "top" => cmd_top(&args),
         "compare" => cmd_compare(&args),
+        "serve" => cmd_serve(&args),
+        "infer" => cmd_infer(&args),
         "" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -570,6 +582,121 @@ fn cmd_compare(args: &Args) -> Result<()> {
     }
     if rep.regressed() {
         bail!("compare failed: candidate regressed past the {threshold}% threshold");
+    }
+    Ok(())
+}
+
+/// `convdist serve`: forward-only inference over the distributed fleet with
+/// dynamic batching (DESIGN.md §13).  The checkpoint supplies the weights,
+/// the config (or flags) the fleet topology and batcher budgets; the server
+/// runs until a client sends `Drain` (`convdist infer --drain`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ckpt = args.require("ckpt")?;
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:7800");
+    eprintln!(
+        "cluster: {} workers + master, devices={} throttle={}",
+        cfg.cluster.workers, cfg.cluster.devices, cfg.cluster.throttle
+    );
+    let mut builder = SessionBuilder::from_experiment(&cfg)?.observe(obs_config(args, &cfg));
+    builder = apply_arch_override(args, &cfg, builder)?;
+    let session = builder.inference(ckpt)?;
+    let rt = session.runtime().clone();
+    let ladder = rt.arch().batch_buckets.clone();
+    let mut scfg = cfg.serve.unwrap_or_else(|| ServeConfig::for_ladder(&ladder));
+    if let Some(k) = args.get_opt::<usize>("max-batch")? {
+        scfg.max_batch = k;
+    }
+    if let Some(d) = args.get_opt::<u64>("max-delay-ms")? {
+        scfg.max_delay_ms = d;
+    }
+    eprintln!(
+        "runtime: platform={} arch={} ({} conv layers, {} executables)",
+        rt.platform(),
+        rt.arch().label(),
+        rt.arch().num_convs(),
+        rt.manifest().executables.len()
+    );
+    let serving = session.serve(addr, scfg)?;
+    if let Some(a) = serving.metrics_addr() {
+        eprintln!("live metrics: http://{a}/metrics  (convdist top {a})");
+    }
+    eprintln!(
+        "serving on {}  (batcher: max_batch {}, max_delay {} ms, ladder {:?})",
+        serving.addr(),
+        scfg.max_batch,
+        scfg.max_delay_ms,
+        ladder
+    );
+    let served = serving.join()?;
+    eprintln!("drained: {served} request(s) served");
+    Ok(())
+}
+
+/// `convdist infer`: load client for a `convdist serve` endpoint.  Sends
+/// `--requests` random images (shaped by the local arch resolution — use
+/// the same `--arch`/`--config` as the server) over `--concurrency`
+/// connections and prints latency percentiles; `--drain` then shuts the
+/// server down gracefully.
+fn cmd_infer(args: &Args) -> Result<()> {
+    use std::time::Instant;
+    let addr = args.require("addr")?.to_string();
+    let requests: usize = args.get("requests", 8)?;
+    let concurrency: usize = args.get("concurrency", 2)?;
+    if requests == 0 || concurrency == 0 {
+        bail!("--requests and --concurrency must be at least 1");
+    }
+    let arch = match args.opt("config") {
+        Some(_) => {
+            let cfg = load_config(args)?;
+            SessionBuilder::from_experiment(&cfg)?.resolve_arch()?
+        }
+        None => open_runtime(args)?.arch().clone(),
+    };
+    let shape = [arch.in_ch, arch.img, arch.img];
+    let workers: Vec<std::thread::JoinHandle<Result<Vec<f64>>>> = (0..concurrency)
+        .map(|t| {
+            let addr = addr.clone();
+            let quota = requests / concurrency + usize::from(t < requests % concurrency);
+            std::thread::spawn(move || -> Result<Vec<f64>> {
+                let mut latencies = Vec::with_capacity(quota);
+                if quota == 0 {
+                    return Ok(latencies);
+                }
+                let mut client = ServeClient::connect(&addr)?;
+                let mut rng = convdist::tensor::Pcg32::seed_stream(0x1F0, t as u64);
+                for _ in 0..quota {
+                    let image = convdist::tensor::Tensor::randn(&shape, &mut rng);
+                    let start = Instant::now();
+                    let logits = client.classify(&image)?;
+                    latencies.push(start.elapsed().as_secs_f64() * 1e3);
+                    anyhow::ensure!(
+                        logits.data().iter().all(|v| v.is_finite()),
+                        "non-finite logits from server"
+                    );
+                }
+                Ok(latencies)
+            })
+        })
+        .collect();
+    let mut latencies = Vec::with_capacity(requests);
+    for w in workers {
+        let ls = w.join().map_err(|_| anyhow::anyhow!("infer client thread panicked"))??;
+        latencies.extend(ls);
+    }
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p).round() as usize];
+    println!(
+        "{} request(s) ok over {} connection(s): p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        latencies.len(),
+        concurrency,
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+    if args.flag("drain") {
+        ServeClient::connect(&addr)?.drain()?;
+        eprintln!("drain acknowledged by {addr}");
     }
     Ok(())
 }

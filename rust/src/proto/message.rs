@@ -197,6 +197,15 @@ pub enum Message {
     /// scatter round `seq`.  Piggybacked on the gather — no extra round
     /// trip — and safely ignored by masters that are not tracing.
     SpanReport { worker_id: u32, seq: u32, spans: Vec<WireSpan> },
+    /// Client -> serve frontend: classify one image (`[C, H, W]` — the
+    /// batch axis is the server's to choose).  `id` is echoed in the reply
+    /// so a client may pipeline requests over one connection.
+    InferRequest { id: u64, image: WireTensor },
+    /// Serve frontend -> client: the logits row for request `id`.
+    InferReply { id: u64, logits: WireTensor },
+    /// Client -> serve frontend: stop accepting connections, finish every
+    /// queued request, then shut the fleet down (graceful drain).
+    Drain,
 }
 
 const ID_HELLO: u8 = 0x01;
@@ -212,6 +221,9 @@ const ID_PONG: u8 = 0x0A;
 const ID_LEAVE: u8 = 0x0B;
 const ID_SHARD_UPDATE: u8 = 0x0C;
 const ID_SPAN_REPORT: u8 = 0x0D;
+const ID_INFER_REQUEST: u8 = 0x0E;
+const ID_INFER_REPLY: u8 = 0x0F;
+const ID_DRAIN: u8 = 0x10;
 
 impl Message {
     /// -> (message id, payload bytes)
@@ -288,6 +300,17 @@ impl Message {
                 }
                 (ID_SPAN_REPORT, out)
             }
+            Message::InferRequest { id, image } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                image.encode_into(&mut out);
+                (ID_INFER_REQUEST, out)
+            }
+            Message::InferReply { id, logits } => {
+                out.extend_from_slice(&id.to_le_bytes());
+                logits.encode_into(&mut out);
+                (ID_INFER_REPLY, out)
+            }
+            Message::Drain => (ID_DRAIN, out),
         }
     }
 
@@ -363,6 +386,15 @@ impl Message {
                 }
                 Message::SpanReport { worker_id, seq, spans }
             }
+            ID_INFER_REQUEST => Message::InferRequest {
+                id: take_u64(buf, &mut pos)?,
+                image: WireTensor::decode_from(buf, &mut pos)?,
+            },
+            ID_INFER_REPLY => Message::InferReply {
+                id: take_u64(buf, &mut pos)?,
+                logits: WireTensor::decode_from(buf, &mut pos)?,
+            },
+            ID_DRAIN => Message::Drain,
             other => bail!("unknown message id {other:#x}"),
         };
         Ok(msg)
@@ -384,6 +416,9 @@ impl Message {
             Message::Leave { .. } => "Leave",
             Message::ShardUpdate { .. } => "ShardUpdate",
             Message::SpanReport { .. } => "SpanReport",
+            Message::InferRequest { .. } => "InferRequest",
+            Message::InferReply { .. } => "InferReply",
+            Message::Drain => "Drain",
         }
     }
 }
@@ -499,6 +534,9 @@ mod tests {
             Message::Leave { worker_id: 1, reason: "maintenance".into() },
             Message::ShardUpdate { layer: 0, lo: 4, hi: 8, bucket: 4 },
             Message::SpanReport { worker_id: 2, seq: 3, spans: vec![] },
+            Message::InferRequest { id: u64::MAX, image: wt(&[3, 32, 32]) },
+            Message::InferReply { id: 12, logits: wt(&[10]) },
+            Message::Drain,
             Message::SpanReport {
                 worker_id: 1,
                 seq: 9,

@@ -39,6 +39,15 @@ pub enum ExecKind {
     EvalFull,
     /// `grad_full_b{batch}`: fused full-network fwd+bwd (baselines).
     GradFull { batch: usize },
+    /// `conv{layer}_fwd_b{bucket}_n{batch}`: forward kernel shard at an
+    /// explicit batch — the serving path, where the dynamic batcher picks a
+    /// rung off `batch_buckets` instead of the training batch.
+    ConvFwdAt { layer: usize, bucket: usize, batch: usize },
+    /// `mid{layer}_fwd_n{batch}`: mid segment forward at an explicit batch.
+    MidFwdAt { layer: usize, batch: usize },
+    /// `head_logits_n{batch}`: FC head logits only (no loss/grads) — the
+    /// forward-only tail of an inference session.
+    HeadLogits { batch: usize },
 }
 
 impl ExecKind {
@@ -55,6 +64,9 @@ impl ExecKind {
         if let Some(rest) = name.strip_prefix("grad_full_b") {
             return rest.parse().ok().map(|batch| ExecKind::GradFull { batch });
         }
+        if let Some(rest) = name.strip_prefix("head_logits_n") {
+            return rest.parse().ok().map(|batch| ExecKind::HeadLogits { batch });
+        }
         if let Some(rest) = name.strip_prefix("conv") {
             let (layer, rest) = rest.split_once('_')?;
             let layer: usize = layer.parse().ok()?;
@@ -62,6 +74,11 @@ impl ExecKind {
                 return None;
             }
             if let Some(b) = rest.strip_prefix("fwd_b") {
+                if let Some((bucket, batch)) = b.split_once("_n") {
+                    let bucket = bucket.parse().ok()?;
+                    let batch = batch.parse().ok()?;
+                    return Some(ExecKind::ConvFwdAt { layer, bucket, batch });
+                }
                 return b.parse().ok().map(|bucket| ExecKind::ConvFwd { layer, bucket });
             }
             if let Some(b) = rest.strip_prefix("bwd_b") {
@@ -74,6 +91,9 @@ impl ExecKind {
             let layer: usize = layer.parse().ok()?;
             if layer == 0 {
                 return None;
+            }
+            if let Some(b) = dir.strip_prefix("fwd_n") {
+                return b.parse().ok().map(|batch| ExecKind::MidFwdAt { layer, batch });
             }
             return match dir {
                 "fwd" => Some(ExecKind::MidFwd { layer }),
@@ -95,6 +115,11 @@ impl ExecKind {
             ExecKind::HeadGrad => "head_grad".into(),
             ExecKind::EvalFull => "eval_full".into(),
             ExecKind::GradFull { batch } => format!("grad_full_b{batch}"),
+            ExecKind::ConvFwdAt { layer, bucket, batch } => {
+                format!("conv{layer}_fwd_b{bucket}_n{batch}")
+            }
+            ExecKind::MidFwdAt { layer, batch } => format!("mid{layer}_fwd_n{batch}"),
+            ExecKind::HeadLogits { batch } => format!("head_logits_n{batch}"),
         }
     }
 }
@@ -256,6 +281,42 @@ pub fn spec_for(arch: &ArchSpec, kind: &ExecKind) -> ExecutableSpec {
             );
             (args, outs, 3 * net_conv_flops(arch, n))
         }
+        ExecKind::ConvFwdAt { layer, bucket, batch } => {
+            let n = *batch;
+            let (c, h) = arch.conv_input(*layer);
+            let o = arch.conv_output(*layer);
+            let (kh, kw) = arch.conv_kernel(*layer);
+            (
+                vec![
+                    f("x", vec![n, c, h, h]),
+                    f("w", vec![*bucket, c, kh, kw]),
+                    f("b", vec![*bucket]),
+                ],
+                vec![f("y", vec![n, *bucket, o, o])],
+                conv_fwd_flops(arch, *layer, *bucket, n),
+            )
+        }
+        ExecKind::MidFwdAt { layer, batch } => {
+            let n = *batch;
+            let k = arch.kernels(*layer);
+            let c = arch.conv_output(*layer);
+            let p = arch.mid_output(*layer);
+            (
+                vec![f("y", vec![n, k, c, c])],
+                vec![f("p", vec![n, k, p, p])],
+                mid_fwd_flops(arch, *layer, n),
+            )
+        }
+        ExecKind::HeadLogits { batch } => {
+            let n = *batch;
+            let nc = arch.num_convs();
+            let pn = vec![n, arch.kernels(nc), arch.mid_output(nc), arch.mid_output(nc)];
+            (
+                vec![f("p", pn), f("wf", vec![arch.fc_in, ncls]), f("bf", vec![ncls])],
+                vec![f("logits", vec![n, ncls])],
+                2 * (n * arch.fc_in * ncls) as u64,
+            )
+        }
     };
     ExecutableSpec { file: format!("<native:{}>", kind.name()), args, outs, flops, sha256: String::new() }
 }
@@ -274,6 +335,16 @@ pub fn native_manifest(config: ArchSpec, dir: &Path) -> Manifest {
     }
     for &bb in &config.batch_buckets {
         kinds.push(ExecKind::GradFull { batch: bb });
+        // Forward-only serving family: every batch rung gets its own conv
+        // shard / mid / head executables so the dynamic batcher can pick a
+        // padded shape without touching the training-batch contract.
+        kinds.push(ExecKind::HeadLogits { batch: bb });
+        for layer in 1..=config.num_convs() {
+            for &bucket in config.buckets(layer) {
+                kinds.push(ExecKind::ConvFwdAt { layer, bucket, batch: bb });
+            }
+            kinds.push(ExecKind::MidFwdAt { layer, batch: bb });
+        }
     }
     let mut executables = BTreeMap::new();
     for kind in kinds {
@@ -299,6 +370,10 @@ mod tests {
             ExecKind::HeadGrad,
             ExecKind::EvalFull,
             ExecKind::GradFull { batch: 64 },
+            ExecKind::ConvFwdAt { layer: 1, bucket: 8, batch: 4 },
+            ExecKind::ConvFwdAt { layer: 3, bucket: 12, batch: 16 },
+            ExecKind::MidFwdAt { layer: 2, batch: 4 },
+            ExecKind::HeadLogits { batch: 8 },
         ];
         for k in kinds {
             assert_eq!(ExecKind::parse(&k.name()), Some(k.clone()), "{}", k.name());
@@ -307,6 +382,10 @@ mod tests {
         assert_eq!(ExecKind::parse("conv1_sideways_b4"), None);
         assert_eq!(ExecKind::parse("mid0_fwd"), None);
         assert_eq!(ExecKind::parse("nonsense"), None);
+        assert_eq!(ExecKind::parse("conv1_fwd_b4_n"), None);
+        assert_eq!(ExecKind::parse("conv1_bwd_b4_n2"), None);
+        assert_eq!(ExecKind::parse("mid1_fwd_nx"), None);
+        assert_eq!(ExecKind::parse("head_logits_n"), None);
     }
 
     #[test]
@@ -364,19 +443,44 @@ mod tests {
         let want = [
             "conv1_bwd_b4",
             "conv1_fwd_b4",
+            "conv1_fwd_b4_n2",
             "conv2_bwd_b4",
             "conv2_bwd_b8",
             "conv2_fwd_b4",
+            "conv2_fwd_b4_n2",
             "conv2_fwd_b8",
+            "conv2_fwd_b8_n2",
             "eval_full",
             "grad_full_b2",
             "head_grad",
+            "head_logits_n2",
             "mid1_bwd",
             "mid1_fwd",
+            "mid1_fwd_n2",
             "mid2_bwd",
             "mid2_fwd",
+            "mid2_fwd_n2",
             "probe",
         ];
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn serve_forward_specs_parameterize_the_batch() {
+        // A wider ladder than tiny's [2]: mutate the preset so the serving
+        // family enumerates more than one rung.
+        let mut arch = ArchSpec::tiny();
+        arch.batch = 4;
+        arch.batch_buckets = vec![2, 4];
+        let m = native_manifest(arch, Path::new("."));
+        let s = m.spec("conv1_fwd_b4_n2").unwrap();
+        assert_eq!(s.args[0].shape()[0], 2, "batch comes from the rung, not the arch");
+        let full = m.spec("conv1_fwd_b4_n4").unwrap();
+        assert_eq!(full.args[0].shape()[0], 4);
+        let h = m.spec("head_logits_n2").unwrap();
+        assert_eq!(h.outs[0].shape(), &[2, 10]);
+        assert_eq!(h.args.len(), 3, "no labels: forward-only head");
+        assert!(m.spec("mid2_fwd_n2").is_ok());
+        assert!(m.spec("head_logits_n3").is_err(), "off-ladder batch must not appear");
     }
 }

@@ -202,7 +202,7 @@ impl NativeExec {
 impl PreparedExec for NativeExec {
     fn run(&self, args: &[Value]) -> Result<Vec<Value>> {
         match &self.kind {
-            ExecKind::Probe | ExecKind::ConvFwd { .. } => {
+            ExecKind::Probe | ExecKind::ConvFwd { .. } | ExecKind::ConvFwdAt { .. } => {
                 let y = conv_fwd(args[0].as_f32()?, args[1].as_f32()?, args[2].as_f32()?)?;
                 Ok(vec![Value::F32(y)])
             }
@@ -218,7 +218,7 @@ impl PreparedExec for NativeExec {
                     Value::F32(Tensor::new(vec![kk], gb)?),
                 ])
             }
-            ExecKind::MidFwd { layer } => {
+            ExecKind::MidFwd { layer } | ExecKind::MidFwdAt { layer, .. } => {
                 let p = mid_fwd(self.arch.mid_ops(*layer), args[0].as_f32()?)?;
                 Ok(vec![Value::F32(p)])
             }
@@ -238,6 +238,14 @@ impl PreparedExec for NativeExec {
                     Value::F32(Tensor::new(wf.shape().to_vec(), gwf)?),
                     Value::F32(Tensor::new(bf.shape().to_vec(), gbf)?),
                 ])
+            }
+            ExecKind::HeadLogits { .. } => {
+                let (p, b, _, _, _) = t4(&args[0])?;
+                let wf = args[1].as_f32()?;
+                let bf = args[2].as_f32()?;
+                let (fin, ncls) = (wf.shape()[0], wf.shape()[1]);
+                let logits = k::fc_logits(p.data(), wf.data(), bf.data(), b, fin, ncls);
+                Ok(vec![Value::F32(Tensor::new(vec![b, ncls], logits)?)])
             }
             ExecKind::EvalFull => {
                 let x = args[0].as_f32()?;

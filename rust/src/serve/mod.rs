@@ -1,0 +1,875 @@
+//! `convdist serve` — forward-only inference over the distributed fleet.
+//!
+//! The paper's Eq. 1 argument (conv layers dominate and shard cleanly by
+//! kernel range) applies unchanged to inference: a [`ForwardEngine`] runs
+//! the same scatter/convolve/gather loop as `DistTrainer::dist_conv_fwd`,
+//! but with no gradients, no optimizer state and no labels — the head runs
+//! the `head_logits_n{B}` executable instead of `head_grad`.
+//!
+//! Serving traffic arrives one image at a time, so a [`ServeServer`] fronts
+//! the engine with a **dynamic batcher**: concurrent client requests are
+//! coalesced up to a latency budget ([`ServeConfig::max_delay_ms`] /
+//! [`ServeConfig::max_batch`]), the arch's `batch_buckets` ladder picks the
+//! padded batch shape (exactly the bucket trick the kernel dimension already
+//! uses), partial batches are zero-padded, and logits rows are de-multiplexed
+//! back per request.  Zero-padding is exact: every image's logits row is
+//! independent of the other rows, so a padded batch is bit-identical to the
+//! unpadded forward pass (the equivalence test pins this).
+//!
+//! Wire protocol (the existing `net` framing):
+//! `InferRequest { id, image[C,H,W] }` -> `InferReply { id, logits[classes] }`,
+//! plus `Drain` for a graceful shutdown: stop accepting, answer everything
+//! queued, tell the fleet `TrainOver`.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::cluster::PROTO_VERSION;
+use crate::config::ServeConfig;
+use crate::model::Params;
+use crate::net::{Link, TcpLink};
+use crate::obs::{ObsHandle, SpanCat, SpanRec};
+use crate::proto::{Message, WireTensor};
+use crate::runtime::{ArchSpec, ConvDir, Manifest, Runtime};
+use crate::sched::{partition_network, Shard};
+use crate::session::Checkpoint;
+use crate::tensor::{Pcg32, Tensor, Value};
+
+// ---------------------------------------------------------------------------
+// Checkpoint -> Params (the model-artifact load path)
+// ---------------------------------------------------------------------------
+
+/// Materialize the parameter set a checkpoint carries, validated against the
+/// serving architecture.  Every failure names the checkpoint source and the
+/// expected-vs-found shapes — a serve deployment must never panic on a stale
+/// or foreign artifact.
+pub fn params_from_checkpoint(
+    arch: &ArchSpec,
+    ckpt: &Checkpoint,
+    source: &str,
+) -> Result<Params> {
+    let label = arch.label();
+    ensure!(
+        ckpt.arch_label == label,
+        "checkpoint {source} is for arch {} but the server runs {label}",
+        ckpt.arch_label
+    );
+    // Seed is irrelevant: every tensor is overwritten below; init only
+    // builds the manifest-ordered name/shape skeleton.
+    let mut params = Params::init(arch, 0)?;
+    let want = params.names().len();
+    ensure!(
+        ckpt.params.len() == want,
+        "checkpoint {source} has {} parameters, arch {label} wants {want}",
+        ckpt.params.len(),
+    );
+    for (name, t) in &ckpt.params {
+        let expect = params
+            .get(name)
+            .map_err(|_| anyhow!("checkpoint {source}: param {name:?} is not in arch {label}"))?;
+        ensure!(
+            expect.shape() == t.shape(),
+            "checkpoint {source}: param {name} has shape {:?}, arch {label} expects {:?}",
+            t.shape(),
+            expect.shape()
+        );
+    }
+    params
+        .load_named(&ckpt.params)
+        .with_context(|| format!("loading params from checkpoint {source}"))?;
+    Ok(params)
+}
+
+// ---------------------------------------------------------------------------
+// ForwardEngine
+// ---------------------------------------------------------------------------
+
+/// The forward-only master: owns the loaded parameters and the worker links,
+/// runs the distributed conv shard forward path at any batch rung on the
+/// arch's `batch_buckets` ladder.  No gradient or optimizer allocations —
+/// the executable set is `conv*_fwd_b*_n*` / `mid*_fwd_n*` / `head_logits_n*`
+/// (plus the legacy names when the rung equals the training batch).
+pub struct ForwardEngine {
+    rt: Arc<Runtime>,
+    workers: Vec<Box<dyn Link>>,
+    params: Params,
+    /// Per conv layer, the Eq. 1 shard table from the calibration probe.
+    shards: Vec<Vec<Shard>>,
+    seq: u32,
+}
+
+impl ForwardEngine {
+    /// Handshake the fleet, run the calibration probe and Eq. 1-partition
+    /// every conv layer.  `links` speak the worker protocol (Hello first).
+    pub fn new(
+        rt: Arc<Runtime>,
+        mut workers: Vec<Box<dyn Link>>,
+        params: Params,
+        calib_rounds: u32,
+    ) -> Result<Self> {
+        for (i, w) in workers.iter_mut().enumerate() {
+            match w.recv()? {
+                Message::Hello { version, .. } => {
+                    ensure!(version == PROTO_VERSION, "worker {i} protocol v{version}");
+                }
+                other => bail!("worker {i}: expected Hello, got {}", other.tag()),
+            }
+        }
+        let mut engine = Self { rt, workers, params, shards: vec![], seq: 0 };
+        let times = engine.calibrate(calib_rounds)?;
+        engine.partition(&times)?;
+        Ok(engine)
+    }
+
+    /// Number of worker links (devices = workers + 1).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// The batch rung ladder (ascending) the batcher may pick from.
+    pub fn batch_rungs(&self) -> &[usize] {
+        &self.rt.arch().batch_buckets
+    }
+
+    /// Same probe as the trainer's calibration (paper §4.1.1): master probes
+    /// itself while the slaves probe, minimum over `rounds`.
+    fn calibrate(&mut self, rounds: u32) -> Result<Vec<f64>> {
+        for w in self.workers.iter_mut() {
+            w.send(&Message::Calibrate { rounds })?;
+        }
+        let my_secs = {
+            let p = self.rt.arch().probe.clone();
+            let mut rng = Pcg32::seed_stream(0xCA11B, 0);
+            let x = Tensor::randn(&[p.batch, p.in_ch, p.img, p.img], &mut rng);
+            let w = Tensor::randn(&[p.k, p.in_ch, p.kh, p.kw], &mut rng);
+            let b = Tensor::zeros(&[p.k]);
+            let args = [Value::F32(x), Value::F32(w), Value::F32(b)];
+            let _ = self.rt.execute("probe", &args)?; // absorb compile
+            let mut best = f64::MAX;
+            for _ in 0..rounds.max(1) {
+                let (_, real) = self.rt.execute_timed("probe", &args)?;
+                best = best.min(real.as_secs_f64());
+            }
+            best
+        };
+        let mut times = vec![my_secs];
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            match w.recv()? {
+                Message::CalibrateResult { seconds } => times.push(seconds),
+                Message::Error { reason } => bail!("worker {i} calibration failed: {reason}"),
+                other => bail!("worker {i}: expected CalibrateResult, got {}", other.tag()),
+            }
+        }
+        Ok(times)
+    }
+
+    fn partition(&mut self, times: &[f64]) -> Result<()> {
+        let arch = self.rt.arch().clone();
+        let layers: Vec<(usize, &[usize])> =
+            (1..=arch.num_convs()).map(|l| (arch.kernels(l), arch.buckets(l))).collect();
+        self.shards = partition_network(&layers, times)?;
+        Ok(())
+    }
+
+    /// The forward exec name for a conv shard at batch `n`: legacy name on
+    /// the training batch (byte-identical to the training hot path), the
+    /// `_n{batch}` serving family elsewhere — mirrors the worker's dispatch.
+    fn conv_exec(&self, layer: usize, bucket: usize, n: usize) -> String {
+        if n == self.rt.arch().batch {
+            Manifest::conv_exec(layer, ConvDir::Fwd, bucket)
+        } else {
+            format!("conv{layer}_fwd_b{bucket}_n{n}")
+        }
+    }
+
+    /// Distributed forward pass: `images [n, C, H, W]` -> `logits [n, classes]`.
+    /// `n` must sit exactly on the `batch_buckets` ladder (the batcher pads
+    /// up to a rung before calling this).
+    pub fn forward(&mut self, images: &Tensor) -> Result<Tensor> {
+        let arch = self.rt.arch().clone();
+        let shp = images.shape();
+        ensure!(
+            shp.len() == 4 && shp[1] == arch.in_ch && shp[2] == arch.img && shp[3] == arch.img,
+            "image batch shape {shp:?} does not match arch {}x{}x{}",
+            arch.in_ch,
+            arch.img,
+            arch.img
+        );
+        let n = shp[0];
+        ensure!(
+            arch.batch_buckets.contains(&n),
+            "batch {n} is not on the arch's batch ladder {:?}",
+            arch.batch_buckets
+        );
+        let nconv = arch.num_convs();
+        let mut p = images.clone();
+        for l in 1..=nconv {
+            let w = self.params.get(&ArchSpec::conv_weight(l))?.clone();
+            let b = self.params.get(&ArchSpec::conv_bias(l))?.clone();
+            let shards = self.shards[l - 1].clone();
+            let y = self.dist_conv_fwd(l, n, &p, &w, &b, &shards)?;
+            let mid =
+                if n == arch.batch { format!("mid{l}_fwd") } else { format!("mid{l}_fwd_n{n}") };
+            let outs = self.rt.execute(&mid, &[Value::F32(y)])?;
+            p = outs.into_iter().next().unwrap().as_f32()?.clone();
+        }
+        let wf = self.params.get(ArchSpec::FC_W)?.clone();
+        let bf = self.params.get(ArchSpec::FC_B)?.clone();
+        let outs = self.rt.execute(
+            &format!("head_logits_n{n}"),
+            &[Value::F32(p), Value::F32(wf), Value::F32(bf)],
+        )?;
+        Ok(outs.into_iter().next().unwrap().as_f32()?.clone())
+    }
+
+    /// One scatter/convolve/gather round — the same loop as the trainer's
+    /// `dist_conv_fwd`, minus telemetry and phase attribution.
+    fn dist_conv_fwd(
+        &mut self,
+        layer: usize,
+        n: usize,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        shards: &[Shard],
+    ) -> Result<Tensor> {
+        self.seq += 1;
+        let seq = self.seq;
+        for s in shards.iter().filter(|s| s.device != 0) {
+            let wk = w.slice_axis0(s.lo, s.hi)?;
+            let bk = b.slice_axis0(s.lo, s.hi)?;
+            let msg = Message::ConvWork {
+                seq,
+                layer: layer as u8,
+                dir: 0,
+                bucket: s.bucket as u32,
+                inputs: WireTensor::from(x),
+                kernels: WireTensor::from(&wk),
+                extra: Some(WireTensor::from(&bk)),
+            };
+            self.workers[s.device - 1].send(&msg)?;
+        }
+        let mut parts: Vec<(usize, Tensor)> = Vec::with_capacity(shards.len());
+        if let Some(s) = shards.iter().find(|s| s.device == 0) {
+            let exec = self.conv_exec(layer, s.bucket, n);
+            let wk = w.slice_axis0(s.lo, s.hi)?.pad_axis0(s.bucket)?;
+            let bk = b.slice_axis0(s.lo, s.hi)?.pad_axis0(s.bucket)?;
+            let args = [Value::F32(x.clone()), Value::F32(wk), Value::F32(bk)];
+            let outs = self.rt.execute(&exec, &args)?;
+            let y = outs.into_iter().next().unwrap().as_f32()?.slice_axis1(0, s.len())?;
+            parts.push((s.lo, y));
+        }
+        for s in shards.iter().filter(|s| s.device != 0) {
+            let mut outputs = self.recv_result(s.device - 1, seq)?;
+            ensure!(outputs.len() == 1, "fwd ConvResult must carry 1 tensor");
+            parts.push((s.lo, outputs.remove(0).into_tensor()?));
+        }
+        parts.sort_by_key(|(lo, _)| *lo);
+        let tensors: Vec<Tensor> = parts.into_iter().map(|(_, t)| t).collect();
+        Tensor::concat_axis1(&tensors)
+    }
+
+    /// Gather one worker's ConvResult for round `seq`, discarding stale
+    /// replies and piggybacked span reports (the serving master does not
+    /// merge worker traces).
+    fn recv_result(&mut self, worker: usize, seq: u32) -> Result<Vec<WireTensor>> {
+        loop {
+            match self.workers[worker].recv()? {
+                Message::ConvResult { seq: got, outputs, .. } => {
+                    if got == seq {
+                        return Ok(outputs);
+                    }
+                    ensure!(got < seq, "worker {worker} replied from the future: {got} > {seq}");
+                }
+                Message::SpanReport { .. } | Message::Pong { .. } => {}
+                Message::Leave { reason, .. } => bail!("worker {worker} left the fleet: {reason}"),
+                Message::Error { reason } => bail!("worker failed: {reason}"),
+                other => bail!("expected ConvResult, got {}", other.tag()),
+            }
+        }
+    }
+
+    /// Tell every worker the session is over (`TrainOver` — the worker loop
+    /// has a single shutdown message for both modes).
+    pub fn shutdown(mut self) -> Result<()> {
+        for w in self.workers.iter_mut() {
+            let _ = w.send(&Message::TrainOver);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic batcher
+// ---------------------------------------------------------------------------
+
+/// Smallest ladder rung that covers `n` requests (`None` when `n` exceeds
+/// the ladder — the caller caps batches at the largest rung).
+pub fn rung_for(rungs: &[usize], n: usize) -> Option<usize> {
+    rungs.iter().copied().find(|&r| r >= n)
+}
+
+/// Stack per-request images `[C, H, W]` into one `[rung, C, H, W]` batch,
+/// zero-padding the tail rows.
+pub fn stack_images(images: &[&Tensor], rung: usize) -> Result<Tensor> {
+    ensure!(!images.is_empty(), "empty batch");
+    ensure!(rung >= images.len(), "rung {rung} below batch size {}", images.len());
+    let per = images[0].shape().to_vec();
+    ensure!(per.len() == 3, "request image must be [C, H, W], got {per:?}");
+    let isz: usize = per.iter().product();
+    let mut data = vec![0.0f32; rung * isz];
+    for (i, img) in images.iter().enumerate() {
+        ensure!(
+            img.shape() == per.as_slice(),
+            "request {i} shape {:?} differs from {per:?}",
+            img.shape()
+        );
+        data[i * isz..(i + 1) * isz].copy_from_slice(img.data());
+    }
+    let mut shape = vec![rung];
+    shape.extend_from_slice(&per);
+    Tensor::new(shape, data)
+}
+
+/// One admitted request waiting for its logits row.
+struct Pending {
+    id: u64,
+    image: Tensor,
+    enqueued: Instant,
+    /// Run-log timestamp at admission (0 when tracing is off).
+    ts_us: u64,
+    tx: mpsc::Sender<Result<Tensor>>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    q: VecDeque<Pending>,
+    draining: bool,
+}
+
+/// The shared request queue: handler threads push, the single dispatch
+/// thread pops batches.  A condvar covers both "work arrived" and "drain".
+#[derive(Default)]
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl Queue {
+    /// Admit a request; returns the queue depth after the push, or an error
+    /// once draining started.
+    fn push(&self, p: Pending) -> Result<usize> {
+        let mut st = self.state.lock().unwrap();
+        if st.draining {
+            bail!("server is draining");
+        }
+        st.q.push_back(p);
+        let depth = st.q.len();
+        self.cv.notify_all();
+        Ok(depth)
+    }
+
+    fn drain(&self) {
+        self.state.lock().unwrap().draining = true;
+        self.cv.notify_all();
+    }
+
+    /// Pop the next batch: wait for a first request, then hold it up to
+    /// `max_delay` hoping for companions, capped at `max_batch`.  `None`
+    /// once draining and empty — the dispatch loop's exit condition.
+    fn pop_batch(&self, max_batch: usize, max_delay: Duration) -> Option<Vec<Pending>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.draining {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        let deadline = st.q.front().unwrap().enqueued + max_delay;
+        while st.q.len() < max_batch && !st.draining {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+        let k = st.q.len().min(max_batch);
+        Some(st.q.drain(..k).collect())
+    }
+}
+
+/// Shared serving gauges backing the metrics snapshot and the drain report.
+#[derive(Default)]
+struct ServeStats {
+    inflight: AtomicU64,
+    served: AtomicU64,
+}
+
+// ---------------------------------------------------------------------------
+// The TCP front-end
+// ---------------------------------------------------------------------------
+
+/// A running serve front-end: an accept loop (one handler thread per client
+/// connection) feeding the batcher queue, and one dispatch thread that owns
+/// the [`ForwardEngine`].  Lives until a client sends [`Message::Drain`];
+/// [`ServeServer::join`] then returns the engine for fleet shutdown.
+pub struct ServeServer {
+    addr: SocketAddr,
+    queue: Arc<Queue>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServeStats>,
+    accept: Option<JoinHandle<()>>,
+    dispatch: Option<JoinHandle<ForwardEngine>>,
+}
+
+impl ServeServer {
+    /// Bind `addr` (port 0 picks an ephemeral port — read it back from
+    /// [`addr`](ServeServer::addr)) and start accepting inference traffic.
+    pub fn start(
+        engine: ForwardEngine,
+        addr: &str,
+        cfg: ServeConfig,
+        obs: Option<ObsHandle>,
+    ) -> Result<Self> {
+        let arch = engine.runtime().arch().clone();
+        let rungs = engine.batch_rungs().to_vec();
+        ensure!(!rungs.is_empty(), "arch has an empty batch ladder");
+        let top = *rungs.last().unwrap();
+        ensure!(
+            cfg.max_batch >= 1 && cfg.max_batch <= top,
+            "serve.max_batch {} is outside the batch ladder {:?} (1..={top})",
+            cfg.max_batch,
+            rungs
+        );
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding serve endpoint {addr}"))?;
+        let bound = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let queue = Arc::new(Queue::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServeStats::default());
+        let t0 = Instant::now();
+
+        let dq = queue.clone();
+        let dobs = obs.clone();
+        let dstats = stats.clone();
+        let dispatch = std::thread::Builder::new()
+            .name("convdist-serve-dispatch".into())
+            .spawn(move || {
+                let mut engine = engine;
+                dispatch_loop(&mut engine, &dq, &cfg, &rungs, dobs.as_ref(), &dstats, t0);
+                engine
+            })?;
+
+        let aq = queue.clone();
+        let astop = stop.clone();
+        let astats = stats.clone();
+        let accept = std::thread::Builder::new()
+            .name("convdist-serve-accept".into())
+            .spawn(move || accept_loop(listener, aq, astop, obs, astats, arch))?;
+
+        Ok(Self { addr: bound, queue, stop, stats, accept: Some(accept), dispatch: Some(dispatch) })
+    }
+
+    /// The bound address (resolves an ephemeral `:0` port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests answered so far.
+    pub fn requests_served(&self) -> u64 {
+        self.stats.served.load(Ordering::Relaxed)
+    }
+
+    /// Ask the server to drain from the owning side (tests; clients send
+    /// [`Message::Drain`] instead).
+    pub fn begin_drain(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.drain();
+    }
+
+    /// Block until drained: the accept loop stops, every queued request is
+    /// answered, and the engine comes back for fleet shutdown (along with
+    /// the final requests-served count).
+    pub fn join(mut self) -> Result<(ForwardEngine, u64)> {
+        if let Some(a) = self.accept.take() {
+            a.join().map_err(|_| anyhow!("serve accept thread panicked"))?;
+        }
+        // Belt and braces: a Drain handler already did both of these.
+        self.queue.drain();
+        let engine = match self.dispatch.take() {
+            Some(d) => d.join().map_err(|_| anyhow!("serve dispatch thread panicked"))?,
+            None => bail!("serve dispatch thread already taken"),
+        };
+        Ok((engine, self.stats.served.load(Ordering::Relaxed)))
+    }
+}
+
+fn dispatch_loop(
+    engine: &mut ForwardEngine,
+    queue: &Queue,
+    cfg: &ServeConfig,
+    rungs: &[usize],
+    obs: Option<&ObsHandle>,
+    stats: &ServeStats,
+    t0: Instant,
+) {
+    let max_delay = Duration::from_millis(cfg.max_delay_ms);
+    while let Some(batch) = queue.pop_batch(cfg.max_batch, max_delay) {
+        if batch.is_empty() {
+            continue;
+        }
+        run_batch(engine, batch, rungs, obs, stats, t0);
+    }
+}
+
+/// Pad one popped batch up to its ladder rung, run the distributed forward
+/// pass, de-multiplex the logits rows back per request, and record the
+/// serving metrics (latency / queue-depth histograms, QPS, counters).
+fn run_batch(
+    engine: &mut ForwardEngine,
+    batch: Vec<Pending>,
+    rungs: &[usize],
+    obs: Option<&ObsHandle>,
+    stats: &ServeStats,
+    t0: Instant,
+) {
+    let k = batch.len();
+    let rung = rung_for(rungs, k).unwrap_or_else(|| *rungs.last().unwrap());
+    let images: Vec<&Tensor> = batch.iter().map(|p| &p.image).collect();
+    let result = stack_images(&images, rung).and_then(|stacked| engine.forward(&stacked));
+    if let Some(h) = obs {
+        h.metrics(|m| {
+            m.inc("serve_batches", 1);
+            m.inc("serve_requests", k as u64);
+            m.inc("serve_padded_rows", (rung - k) as u64);
+            m.observe_ms("serve_batch_size", k as f64);
+        });
+    }
+    match result {
+        Ok(logits) => {
+            let ncls = logits.shape()[1];
+            for (i, p) in batch.into_iter().enumerate() {
+                let row = logits.data()[i * ncls..(i + 1) * ncls].to_vec();
+                let row = Tensor::new(vec![ncls], row).expect("logits row");
+                finish_request(&p, obs, stats, t0);
+                let _ = p.tx.send(Ok(row));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in batch {
+                finish_request(&p, obs, stats, t0);
+                let _ = p.tx.send(Err(anyhow!("inference failed: {msg}")));
+            }
+        }
+    }
+}
+
+/// Per-request bookkeeping at reply time: latency histogram, in-flight
+/// gauge, QPS gauge, and a run-log span covering queue wait + compute.
+fn finish_request(p: &Pending, obs: Option<&ObsHandle>, stats: &ServeStats, t0: Instant) {
+    let served = stats.served.fetch_add(1, Ordering::Relaxed) + 1;
+    let inflight = stats.inflight.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+    let latency_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+    if let Some(h) = obs {
+        let qps = served as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        h.metrics(|m| {
+            m.observe_ms("serve_request_ms", latency_ms);
+            m.set_gauge("serve_inflight", inflight as f64);
+            m.set_gauge("serve_qps", qps);
+        });
+        if h.tracing() {
+            let now = h.now_us();
+            h.span(SpanRec {
+                name: format!("infer {}", p.id),
+                cat: SpanCat::Comp,
+                device: 0,
+                layer: 0,
+                step: p.id,
+                ts_us: p.ts_us,
+                dur_us: now.saturating_sub(p.ts_us),
+            });
+        }
+    }
+}
+
+/// Non-blocking accept with a stop flag (the same poll/sleep shape as the
+/// metrics endpoint): one handler thread per connection, all joined before
+/// the accept loop returns so `join` sees every admitted request queued.
+fn accept_loop(
+    listener: TcpListener,
+    queue: Arc<Queue>,
+    stop: Arc<AtomicBool>,
+    obs: Option<ObsHandle>,
+    stats: Arc<ServeStats>,
+    arch: ArchSpec,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let q = queue.clone();
+                let s = stop.clone();
+                let o = obs.clone();
+                let st = stats.clone();
+                let a = arch.clone();
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("convdist-serve-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &q, &s, o.as_ref(), &st, &a);
+                    })
+                {
+                    handlers.push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// One client connection: sequential request/reply over the shared framing.
+/// Concurrency comes from connections, not pipelining — a client that wants
+/// parallel in-flight requests opens parallel connections (what
+/// `examples/bench_serve.rs` does).
+fn handle_conn(
+    stream: std::net::TcpStream,
+    queue: &Queue,
+    stop: &AtomicBool,
+    obs: Option<&ObsHandle>,
+    stats: &ServeStats,
+    arch: &ArchSpec,
+) -> Result<()> {
+    let mut link = TcpLink::from_stream(stream)?;
+    loop {
+        let msg = match link.recv_timeout(Duration::from_millis(100)) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(_) => return Ok(()), // peer hung up
+        };
+        match msg {
+            Message::InferRequest { id, image } => {
+                let image = match image.into_tensor() {
+                    Ok(t) => t,
+                    Err(e) => {
+                        link.send(&Message::Error { reason: format!("request {id}: {e:#}") })?;
+                        continue;
+                    }
+                };
+                let want = [arch.in_ch, arch.img, arch.img];
+                if image.shape() != want {
+                    link.send(&Message::Error {
+                        reason: format!(
+                            "request {id}: image shape {:?} does not match arch {want:?}",
+                            image.shape()
+                        ),
+                    })?;
+                    continue;
+                }
+                let (tx, rx) = mpsc::channel();
+                let ts_us = obs.map_or(0, |h| h.now_us());
+                let pending = Pending { id, image, enqueued: Instant::now(), ts_us, tx };
+                match queue.push(pending) {
+                    Ok(depth) => {
+                        stats.inflight.fetch_add(1, Ordering::Relaxed);
+                        if let Some(h) = obs {
+                            h.metrics(|m| m.observe_ms("serve_queue_depth", depth as f64));
+                        }
+                    }
+                    Err(e) => {
+                        link.send(&Message::Error { reason: format!("request {id}: {e:#}") })?;
+                        continue;
+                    }
+                }
+                match rx.recv() {
+                    Ok(Ok(row)) => link.send(&Message::InferReply {
+                        id,
+                        logits: WireTensor::from(&row),
+                    })?,
+                    Ok(Err(e)) => {
+                        link.send(&Message::Error { reason: format!("request {id}: {e:#}") })?
+                    }
+                    Err(_) => {
+                        link.send(&Message::Error {
+                            reason: format!("request {id}: server shut down mid-request"),
+                        })?
+                    }
+                }
+            }
+            Message::Drain => {
+                stop.store(true, Ordering::Relaxed);
+                queue.drain();
+                link.send(&Message::AllOk)?;
+                return Ok(());
+            }
+            other => {
+                link.send(&Message::Error {
+                    reason: format!("unexpected message for serve: {}", other.tag()),
+                })?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client helper
+// ---------------------------------------------------------------------------
+
+/// A minimal serve client over one connection: send an image, block for the
+/// logits row.  Used by `convdist infer`, the CI smoke gate and the load
+/// generator.
+pub struct ServeClient {
+    link: TcpLink,
+    next_id: u64,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(Self { link: TcpLink::connect(addr)?, next_id: 1 })
+    }
+
+    /// Classify one `[C, H, W]` image; returns the `[classes]` logits row.
+    pub fn classify(&mut self, image: &Tensor) -> Result<Tensor> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.link.send(&Message::InferRequest { id, image: WireTensor::from(image) })?;
+        match self.link.recv()? {
+            Message::InferReply { id: got, logits } => {
+                ensure!(got == id, "reply for request {got}, expected {id}");
+                logits.into_tensor()
+            }
+            Message::Error { reason } => bail!("server error: {reason}"),
+            other => bail!("expected InferReply, got {}", other.tag()),
+        }
+    }
+
+    /// Graceful shutdown: the server stops accepting, finishes the queue and
+    /// tears the fleet down.  Consumes the client.
+    pub fn drain(mut self) -> Result<()> {
+        self.link.send(&Message::Drain)?;
+        match self.link.recv()? {
+            Message::AllOk => Ok(()),
+            Message::Error { reason } => bail!("drain refused: {reason}"),
+            other => bail!("expected AllOk, got {}", other.tag()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rung_selection_walks_the_ladder() {
+        let rungs = [2, 4, 8];
+        assert_eq!(rung_for(&rungs, 1), Some(2));
+        assert_eq!(rung_for(&rungs, 2), Some(2));
+        assert_eq!(rung_for(&rungs, 3), Some(4));
+        assert_eq!(rung_for(&rungs, 8), Some(8));
+        assert_eq!(rung_for(&rungs, 9), None, "past the ladder: caller caps at max_batch");
+    }
+
+    #[test]
+    fn stack_images_zero_pads_the_tail_rows() {
+        let a = Tensor::new(vec![1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![1, 2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let batch = stack_images(&[&a, &b], 4).unwrap();
+        assert_eq!(batch.shape(), &[4, 1, 2, 2]);
+        assert_eq!(&batch.data()[..8], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert!(batch.data()[8..].iter().all(|&v| v == 0.0), "pad rows must be zero");
+        // Mismatched request shapes are refused, not silently reshaped.
+        let c = Tensor::new(vec![2, 2], vec![0.0; 4]).unwrap();
+        assert!(stack_images(&[&a, &c], 4).is_err());
+        assert!(stack_images(&[&a, &b], 1).is_err(), "rung below batch size");
+    }
+
+    #[test]
+    fn checkpoint_params_validate_arch_and_shapes() {
+        let arch = ArchSpec::tiny();
+        let good = Params::init(&arch, 7).unwrap();
+        let ckpt = Checkpoint {
+            step: 3,
+            arch_label: arch.label(),
+            params: good.to_named(),
+            velocity: vec![],
+        };
+        let loaded = params_from_checkpoint(&arch, &ckpt, "model.ckpt").unwrap();
+        assert_eq!(loaded.names(), good.names());
+
+        // Wrong arch label: named error, no panic.
+        let mut wrong = ckpt.clone();
+        wrong.arch_label = "other-arch".into();
+        let err = params_from_checkpoint(&arch, &wrong, "model.ckpt").unwrap_err();
+        assert!(err.to_string().contains("model.ckpt"), "{err}");
+        assert!(err.to_string().contains("other-arch"), "{err}");
+
+        // Mismatched tensor shape: error names the param and both shapes.
+        let mut bad = ckpt.clone();
+        bad.params[0].1 = Tensor::zeros(&[1, 1, 1, 1]);
+        let err = params_from_checkpoint(&arch, &bad, "model.ckpt").unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("expects"), "{text}");
+        assert!(text.contains("[1, 1, 1, 1]"), "{text}");
+
+        // Truncated param set: count mismatch named.
+        let mut short = ckpt;
+        short.params.pop();
+        let err = params_from_checkpoint(&arch, &short, "model.ckpt").unwrap_err();
+        assert!(err.to_string().contains("parameters"), "{err}");
+    }
+
+    #[test]
+    fn queue_batches_up_to_the_budget_and_drains() {
+        let q = Queue::default();
+        let push = |q: &Queue, id: u64| {
+            // The receiver is dropped: these tests only watch the queue
+            // itself and never deliver a reply.
+            let (tx, _rx) = mpsc::channel();
+            q.push(Pending {
+                id,
+                image: Tensor::zeros(&[1, 1, 1]),
+                enqueued: Instant::now(),
+                ts_us: 0,
+                tx,
+            })
+        };
+        assert_eq!(push(&q, 1).unwrap(), 1);
+        assert_eq!(push(&q, 2).unwrap(), 2);
+        assert_eq!(push(&q, 3).unwrap(), 3);
+        // max_batch 2: first pop takes exactly 2, oldest first.
+        let b = q.pop_batch(2, Duration::from_millis(0)).unwrap();
+        assert_eq!(b.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1, 2]);
+        let b = q.pop_batch(2, Duration::from_millis(0)).unwrap();
+        assert_eq!(b.iter().map(|p| p.id).collect::<Vec<_>>(), vec![3]);
+        // Draining: pushes refused, pop returns None once empty.
+        q.drain();
+        assert!(push(&q, 4).is_err());
+        assert!(q.pop_batch(2, Duration::from_millis(0)).is_none());
+    }
+}

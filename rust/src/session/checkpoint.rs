@@ -111,9 +111,19 @@ fn read_section(r: &mut Reader) -> Result<Vec<(String, Tensor)>> {
         ensure!(rank <= 8, "tensor {name}: implausible rank {rank}");
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
-            shape.push(r.u64()? as usize);
+            let d = r.u64()?;
+            ensure!(
+                usize::try_from(d).is_ok(),
+                "tensor {name}: dimension {d} does not fit this platform"
+            );
+            shape.push(d as usize);
         }
-        let n: usize = shape.iter().product();
+        // Checked product: a corrupted dim like 2^40 x 2^40 must come back
+        // as an error naming the tensor, not an overflow panic.
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| anyhow::anyhow!("tensor {name}: shape {shape:?} overflows"))?;
         ensure!(
             n.checked_mul(4).map(|b| b <= r.remaining()).unwrap_or(false),
             "tensor {name}: {n} elements exceed the remaining payload"
@@ -209,5 +219,57 @@ mod tests {
         let mut long = c.to_bytes();
         long.push(0);
         assert!(Checkpoint::from_bytes(&long).is_err());
+    }
+
+    /// Shared header for hand-assembled corrupt payloads.
+    fn header() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&VERSION.to_le_bytes());
+        b.extend_from_slice(&42u64.to_le_bytes());
+        write_str(&mut b, "4:8");
+        b
+    }
+
+    #[test]
+    fn rejects_overflowing_shapes_with_a_clear_error() {
+        // A 2^40 x 2^40 tensor's element count overflows usize — the reader
+        // must error naming the tensor, not panic on the multiply.
+        let mut b = header();
+        b.extend_from_slice(&1u32.to_le_bytes()); // params: 1 entry
+        write_str(&mut b, "conv1.w");
+        b.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        b.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        b.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        let msg = format!("{:#}", Checkpoint::from_bytes(&b).unwrap_err());
+        assert!(msg.contains("conv1.w") && msg.contains("overflows"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_element_counts_past_the_payload() {
+        // A plausible shape whose data the file does not actually contain.
+        let mut b = header();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        write_str(&mut b, "fc.w");
+        b.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        b.extend_from_slice(&10_000u64.to_le_bytes());
+        b.extend_from_slice(&[0u8; 16]); // 4 floats, not 10k
+        let msg = format!("{:#}", Checkpoint::from_bytes(&b).unwrap_err());
+        assert!(msg.contains("fc.w") && msg.contains("remaining payload"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_a_section_count_lie_as_truncation() {
+        let mut b = header();
+        b.extend_from_slice(&99u32.to_le_bytes()); // 99 params, zero present
+        let msg = format!("{:#}", Checkpoint::from_bytes(&b).unwrap_err());
+        assert!(msg.contains("truncated checkpoint"), "{msg}");
+    }
+
+    #[test]
+    fn load_names_the_file_in_errors() {
+        let msg =
+            format!("{:#}", Checkpoint::load("/definitely/not/here.ckpt").unwrap_err());
+        assert!(msg.contains("not/here.ckpt"), "{msg}");
     }
 }

@@ -59,7 +59,7 @@ use std::time::{Duration, Instant};
 use anyhow::{ensure, Context, Result};
 
 use crate::cluster::{spawn_workers_traced, DistTrainer, InprocCluster, StepResult, WorkerSource};
-use crate::config::{ArchChoice, ExperimentConfig, TrainerConfig};
+use crate::config::{ArchChoice, ExperimentConfig, ServeConfig, TrainerConfig};
 use crate::data::{default_dataset, Batch, Dataset};
 use crate::devices::{Throttle, ThrottlePlan};
 use crate::metrics::Breakdown;
@@ -287,6 +287,13 @@ impl SessionBuilder {
         self
     }
 
+    /// Resolve the configured arch source without building a fleet — the
+    /// `convdist infer` client uses this to shape its requests like the
+    /// server it targets.
+    pub fn resolve_arch(&self) -> Result<ArchSpec> {
+        Ok(self.arch.resolve()?.0.arch().clone())
+    }
+
     pub fn artifacts(self, dir: impl Into<PathBuf>) -> Self {
         self.arch(ArchSource::Artifacts(dir.into()))
     }
@@ -494,6 +501,180 @@ impl SessionBuilder {
             session.restore(&ckpt)?;
         }
         Ok(session)
+    }
+
+    /// Build a **forward-only inference session** instead of a trainer: the
+    /// same arch/topology/obs axes, but no gradient or optimizer
+    /// allocations — parameters come from a `CVDSESS1` checkpoint treated
+    /// as a model artifact, and the fleet runs only the distributed conv
+    /// shard *forward* path (`convdist serve`, DESIGN.md §13).
+    pub fn inference(mut self, ckpt_path: impl Into<PathBuf>) -> Result<InferenceSession> {
+        let ckpt_path = ckpt_path.into();
+        let (rt, worker_source) = self.arch.resolve()?;
+        let report = crate::analysis::check_spec(rt.arch());
+        if report.has_deny() {
+            anyhow::bail!("arch pre-flight failed:\n{}", report.render_human());
+        }
+        // Load and validate the model artifact *before* spawning workers so
+        // a bad checkpoint fails in milliseconds, not after calibration.
+        let ckpt = Checkpoint::load(&ckpt_path)?;
+        let params = crate::serve::params_from_checkpoint(
+            rt.arch(),
+            &ckpt,
+            &ckpt_path.display().to_string(),
+        )?;
+        let (links, cluster) = match std::mem::replace(&mut self.topology, TopologySpec::InProc) {
+            TopologySpec::InProc => {
+                let mut cluster = spawn_workers_traced(
+                    worker_source,
+                    &self.plans,
+                    self.shape,
+                    self.obs.tracing(),
+                )?;
+                (cluster.take_links(), Some(cluster))
+            }
+            TopologySpec::Tcp(addrs) => {
+                ensure!(!addrs.is_empty(), "TCP topology needs at least one worker address");
+                let mut links: Vec<Box<dyn Link>> = Vec::with_capacity(addrs.len());
+                for addr in &addrs {
+                    let link = TcpLink::connect(addr.trim())
+                        .with_context(|| format!("connecting to worker {addr}"))?;
+                    links.push(Box::new(link));
+                }
+                (links, None)
+            }
+            TopologySpec::Links(links) => (links, None),
+        };
+        let engine =
+            crate::serve::ForwardEngine::new(rt.clone(), links, params, self.trainer.calib_rounds)?;
+        let (obs, live) = if self.obs.enabled() {
+            let label = rt.arch().label();
+            let devices = 1 + engine.worker_count();
+            let o = Observability::new(&self.obs, &label, devices, 0)?;
+            let live = match &self.obs.metrics_addr {
+                Some(addr) => {
+                    let h = o.handle();
+                    let provider: live::MetricsProvider =
+                        Arc::new(move || h.metrics(|m| live::render_prometheus(m)));
+                    Some(MetricsServer::start(addr, provider)?)
+                }
+                None => None,
+            };
+            (Some(o), live)
+        } else {
+            (None, None)
+        };
+        Ok(InferenceSession { rt, engine: Some(engine), cluster, obs, live })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// InferenceSession
+// ---------------------------------------------------------------------------
+
+/// A calibrated forward-only fleet (see [`SessionBuilder::inference`]):
+/// drive it directly with [`InferenceSession::forward`], or hand it to the
+/// dynamic batcher's TCP front-end with [`InferenceSession::serve`].
+pub struct InferenceSession {
+    rt: Arc<Runtime>,
+    engine: Option<crate::serve::ForwardEngine>,
+    cluster: Option<InprocCluster>,
+    obs: Option<Observability>,
+    live: Option<MetricsServer>,
+}
+
+impl InferenceSession {
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Distributed forward pass: `images [n, C, H, W]` -> `logits
+    /// [n, classes]`; `n` must sit on the arch's `batch_buckets` ladder.
+    pub fn forward(&mut self, images: &crate::tensor::Tensor) -> Result<crate::tensor::Tensor> {
+        self.engine.as_mut().expect("engine present until serve/shutdown").forward(images)
+    }
+
+    /// The bound address of the live metrics endpoint, when one is serving.
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.live.as_ref().map(|s| s.addr())
+    }
+
+    /// Start the serve front-end on `addr` and return the running server
+    /// (`addr` port 0 picks an ephemeral port).  The engine moves into the
+    /// server's dispatch thread; obs/cluster teardown happens in
+    /// [`ServingSession::join`].
+    pub fn serve(mut self, addr: &str, cfg: ServeConfig) -> Result<ServingSession> {
+        let engine = self.engine.take().expect("engine present until serve/shutdown");
+        let handle = self.obs.as_ref().map(|o| o.handle());
+        let server = crate::serve::ServeServer::start(engine, addr, cfg, handle)?;
+        Ok(ServingSession {
+            server,
+            cluster: self.cluster.take(),
+            obs: self.obs.take(),
+            live: self.live.take(),
+        })
+    }
+
+    /// Tell the fleet the session is over and join the in-proc workers.
+    pub fn shutdown(mut self) -> Result<()> {
+        if let Some(mut srv) = self.live.take() {
+            srv.stop();
+        }
+        if let Some(engine) = self.engine.take() {
+            engine.shutdown()?;
+        }
+        if let Some(c) = self.cluster.take() {
+            c.join()?;
+        }
+        if let Some(o) = self.obs.as_mut() {
+            o.finish(0)?;
+        }
+        Ok(())
+    }
+}
+
+/// A live `convdist serve` deployment: the TCP front-end plus the fleet and
+/// observability it owns.  [`ServingSession::join`] blocks until a client
+/// sends `Drain`, then tears everything down in order.
+pub struct ServingSession {
+    server: crate::serve::ServeServer,
+    cluster: Option<InprocCluster>,
+    obs: Option<Observability>,
+    live: Option<MetricsServer>,
+}
+
+impl ServingSession {
+    /// The bound serve address (resolves an ephemeral `:0` port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.server.addr()
+    }
+
+    /// The bound address of the live metrics endpoint, when one is serving.
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.live.as_ref().map(|s| s.addr())
+    }
+
+    /// Requests answered so far.
+    pub fn requests_served(&self) -> u64 {
+        self.server.requests_served()
+    }
+
+    /// Block until drained: every queued request answered, fleet told
+    /// `TrainOver`, in-proc workers joined, obs sinks flushed.  Returns the
+    /// number of requests the server answered over its lifetime.
+    pub fn join(mut self) -> Result<u64> {
+        let (engine, served) = self.server.join()?;
+        engine.shutdown()?;
+        if let Some(c) = self.cluster.take() {
+            c.join()?;
+        }
+        if let Some(mut srv) = self.live.take() {
+            srv.stop();
+        }
+        if let Some(o) = self.obs.as_mut() {
+            o.finish(served)?;
+        }
+        Ok(served)
     }
 }
 

@@ -1,6 +1,10 @@
 //! Shared helpers for integration tests.  With the default native backend
 //! no artifacts are needed: `Runtime::open` synthesizes the manifest from
 //! `ArchSpec::native_default` when `manifest.json` is absent.
+//!
+//! Each test binary compiles its own copy of this module, and not every
+//! binary uses every helper — hence the dead-code allowance.
+#![allow(dead_code)]
 
 use std::sync::Arc;
 

@@ -1,0 +1,189 @@
+//! Tier-1 gate over `convdist serve` (DESIGN.md §13): the forward-only
+//! distributed path must compute the *same* logits as the fused
+//! single-device eval executable — bit for bit — whether driven directly,
+//! through the dynamic batcher over TCP, or as a zero-padded partial batch.
+//!
+//! Bitwise equality holds because every parallel axis in the serving path
+//! is per-image or per-output-channel: kernel shards split GEMM columns
+//! (never the K reduction), batch padding adds rows that are sliced away,
+//! and concat is exact.  CI additionally pins `RAYON_NUM_THREADS=1`.
+
+mod common;
+
+use std::sync::{Arc, Barrier};
+
+use convdist::config::ServeConfig;
+use convdist::devices::Throttle;
+use convdist::model::Params;
+use convdist::serve::ServeClient;
+use convdist::session::{ArchSource, Checkpoint, SessionBuilder};
+use convdist::tensor::{Pcg32, Tensor, Value};
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("convdist-serve-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Image `i` of a `[n, C, H, W]` stack as the `[C, H, W]` tensor a client sends.
+fn image_row(images: &Tensor, i: usize) -> Tensor {
+    let (c, h, w) = (images.shape()[1], images.shape()[2], images.shape()[3]);
+    let n = c * h * w;
+    Tensor::new(vec![c, h, w], images.data()[i * n..(i + 1) * n].to_vec()).unwrap()
+}
+
+fn assert_row_bitwise(got: &Tensor, want: &Tensor, row: usize, label: &str) {
+    let ncls = want.shape()[1];
+    assert_eq!(got.shape(), [ncls], "{label}: logits shape");
+    let want_row = &want.data()[row * ncls..(row + 1) * ncls];
+    for (i, (g, w)) in got.data().iter().zip(want_row).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{label}: logit {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn serve_logits_match_eval_bit_for_bit_batched_and_padded() {
+    // Train a few steps on the tiny preset and snapshot the weights.
+    let cfg = common::fast_cfg(3);
+    let dir = scratch_dir("equiv");
+    let ckpt_path = dir.join("model.ckpt");
+    let mut train = SessionBuilder::new()
+        .arch(ArchSource::Preset("tiny".into()))
+        .trainer(cfg.clone())
+        .workers(&[Throttle::none(); 2])
+        .build()
+        .unwrap();
+    train.run().unwrap();
+    train.save_checkpoint(&ckpt_path).unwrap();
+    let rt = train.runtime().clone();
+    train.shutdown().unwrap();
+
+    // Reference: the fused single-device eval path over the same weights.
+    let arch = rt.arch().clone();
+    let loaded = Checkpoint::load(&ckpt_path).unwrap();
+    let params =
+        convdist::serve::params_from_checkpoint(&arch, &loaded, "model.ckpt").unwrap();
+    let mut rng = Pcg32::seed(123);
+    let images = Tensor::randn(&[arch.batch, arch.in_ch, arch.img, arch.img], &mut rng);
+    let mut args = vec![Value::F32(images.clone())];
+    args.extend(params.in_order().into_iter().map(Value::F32));
+    let want = rt
+        .execute("eval_full", &args)
+        .unwrap()
+        .into_iter()
+        .next()
+        .unwrap()
+        .as_f32()
+        .unwrap()
+        .clone();
+    assert_eq!(want.shape(), [arch.batch, arch.num_classes]);
+
+    // Forward-only distributed session over a 2-worker fleet, driven direct.
+    let mut infer = SessionBuilder::new()
+        .arch(ArchSource::Preset("tiny".into()))
+        .trainer(cfg.clone())
+        .workers(&[Throttle::none(); 2])
+        .inference(&ckpt_path)
+        .unwrap();
+    let got = infer.forward(&images).unwrap();
+    assert_eq!(got.shape(), want.shape());
+    for (i, (g, w)) in got.data().iter().zip(want.data()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "direct forward logit {i}");
+    }
+
+    // The dynamic batcher over TCP: two concurrent single-image requests
+    // (coalesced or not, the logits must match the eval rows)...
+    let serving =
+        infer.serve("127.0.0.1:0", ServeConfig { max_delay_ms: 50, max_batch: 2 }).unwrap();
+    let addr = serving.addr().to_string();
+    let barrier = Arc::new(Barrier::new(2));
+    let handles: Vec<_> = (0..2)
+        .map(|i| {
+            let addr = addr.clone();
+            let img = image_row(&images, i);
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr).unwrap();
+                barrier.wait();
+                c.classify(&img).unwrap()
+            })
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        assert_row_bitwise(&got, &want, i, "batched request");
+    }
+    // ...then a lone request exercises the zero-padded partial batch
+    // (rung 2, one real row).
+    let mut c = ServeClient::connect(&addr).unwrap();
+    let got = c.classify(&image_row(&images, 1)).unwrap();
+    assert_row_bitwise(&got, &want, 1, "padded request");
+
+    // Graceful drain tears the whole stack down.
+    c.drain().unwrap();
+    let served = serving.join().unwrap();
+    assert_eq!(served, 3, "three requests were answered");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_replies_errors_for_bad_requests_and_refuses_bad_checkpoints() {
+    let arch = convdist::runtime::ArchSpec::preset("tiny").unwrap();
+    let params = Params::init(&arch, 1).unwrap();
+    let dir = scratch_dir("errors");
+    let ckpt_path = dir.join("model.ckpt");
+    Checkpoint {
+        step: 0,
+        arch_label: arch.label(),
+        params: params.to_named(),
+        velocity: vec![],
+    }
+    .save(&ckpt_path)
+    .unwrap();
+
+    // A checkpoint for a different architecture is refused up front, with
+    // the file and both labels in the message.
+    let other = dir.join("other.ckpt");
+    Checkpoint {
+        step: 0,
+        arch_label: "someone-else".into(),
+        params: params.to_named(),
+        velocity: vec![],
+    }
+    .save(&other)
+    .unwrap();
+    let err = SessionBuilder::new()
+        .arch(ArchSource::Preset("tiny".into()))
+        .trainer(common::fast_cfg(1))
+        .workers(&[Throttle::none(); 1])
+        .inference(&other)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("someone-else") && msg.contains("other.ckpt"),
+        "arch-mismatch error must name the file and labels: {msg}"
+    );
+
+    // A live server answers a malformed request with an error and keeps the
+    // connection usable.
+    let infer = SessionBuilder::new()
+        .arch(ArchSource::Preset("tiny".into()))
+        .trainer(common::fast_cfg(1))
+        .workers(&[Throttle::none(); 1])
+        .inference(&ckpt_path)
+        .unwrap();
+    let serving = infer.serve("127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut c = ServeClient::connect(&serving.addr().to_string()).unwrap();
+    let err = c.classify(&Tensor::zeros(&[1, 8, 8])).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("does not match arch"),
+        "shape-mismatch reply: {err:#}"
+    );
+    let mut rng = Pcg32::seed(5);
+    let good = Tensor::randn(&[arch.in_ch, arch.img, arch.img], &mut rng);
+    let logits = c.classify(&good).unwrap();
+    assert_eq!(logits.shape(), [arch.num_classes]);
+    c.drain().unwrap();
+    assert_eq!(serving.join().unwrap(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
