@@ -23,6 +23,11 @@ cargo test -q --test session
 # Static-analyzer gate (DESIGN.md §10): the bad_graphs corpus must fail
 # with its documented codes, shipped presets/configs must check clean.
 cargo test -q --test static_analysis
+# Replica-tier gate (DESIGN.md §14): 2-replica-vs-single-fleet equivalence
+# and the master-vs-ring bit-for-bit contract need a pinned thread count
+# (the tests also pin rayon internally; the env var keeps a pre-built pool
+# from another harness from widening it).
+RAYON_NUM_THREADS=1 cargo test -q --test replica
 # Observability gate (DESIGN.md §11): traced adaptive run in causal order,
 # trace.json vs step breakdowns, report rendering (also part of `cargo
 # test`; named so the target stays alive).
@@ -132,6 +137,15 @@ cargo run --release -- run --config examples/configs/adaptive.json
 # uploaded as a workflow artifact for trend tracking.
 cargo run --release --example bench_sched
 test -s BENCH_sched.json
+# Replica sweep (1/2/4 fleets, master vs ring all-reduce): step time and
+# fabric bytes, with the ring<=master wire-cost gate enforced inside;
+# uploaded as a workflow artifact for trend tracking.
+cargo run --release --example bench_replicas
+test -s BENCH_replicas.json
+# Replica end-to-end over the CLI: a short ring-all-reduce run driven
+# entirely by the checked-in config (which the check loop above already
+# pre-flights through the C010 gate).
+cargo run --release -- run --config examples/configs/replicas.json --steps 3
 # Naive vs blocked GEMM GFLOP/s on the paper's conv shapes; enforces the
 # >= 3x engine speedup gate and is uploaded as a workflow artifact.
 cargo run --release --example bench_gemm

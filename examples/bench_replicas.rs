@@ -1,0 +1,122 @@
+//! `cargo run --release --example bench_replicas`
+//!
+//! Emits `BENCH_replicas.json`: the replica-tier sweep (DESIGN.md §14) —
+//! 1, 2 and 4 replica fleets over the same global batch, each n > 1 run
+//! under both all-reduce strategies, recording mean step time and the bytes
+//! the gradient fabric moved.  CI uploads the file as a workflow artifact
+//! so scale-out overhead is tracked over time, and gates on the wire-cost
+//! contract: the ring strategy must never move more bytes than the
+//! master-rooted tree.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use convdist::data::default_dataset;
+use convdist::devices::Throttle;
+use convdist::replica::AllReduce;
+use convdist::runtime::ArchSpec;
+use convdist::session::SessionBuilder;
+
+const STEPS: usize = 6;
+
+struct Point {
+    replicas: usize,
+    allreduce: &'static str,
+    mean_step_ms: f64,
+    allreduce_bytes: u64,
+}
+
+fn run_point(arch: &ArchSpec, n: usize, strategy: AllReduce) -> anyhow::Result<Point> {
+    let cfg = convdist::config::TrainerConfig {
+        steps: STEPS,
+        calib_rounds: 1,
+        ..Default::default()
+    };
+    let seed = cfg.seed;
+    let mut b = SessionBuilder::new()
+        .arch_spec(arch.clone())
+        .trainer(cfg)
+        .master_throttle(Throttle::none())
+        .workers(&[Throttle::none()]);
+    if n > 1 {
+        b = b.replicas(n).allreduce(strategy);
+    }
+    let mut session = b.build()?;
+    let mut ds = default_dataset(arch.img, arch.in_ch, arch.num_classes, seed);
+    let mut total = 0f64;
+    for step in 0..STEPS {
+        let batch = ds.batch(arch.batch, step)?;
+        let t = Instant::now();
+        session.step(&batch)?;
+        total += t.elapsed().as_secs_f64() * 1e3;
+    }
+    let bytes = session.allreduce_bytes();
+    session.shutdown()?;
+    Ok(Point {
+        replicas: n,
+        allreduce: if n > 1 { strategy.name() } else { "none" },
+        mean_step_ms: total / STEPS as f64,
+        allreduce_bytes: bytes,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    // 4+8 kernels over a global batch of 8: divisible by every fleet count
+    // in the sweep, small enough that 4 fleets stay in milliseconds.
+    let arch = ArchSpec::from_geometry(4, 8, 8);
+    let mut points: Vec<Point> = Vec::new();
+    for n in [1usize, 2, 4] {
+        if n == 1 {
+            points.push(run_point(&arch, n, AllReduce::Master)?);
+        } else {
+            points.push(run_point(&arch, n, AllReduce::Master)?);
+            points.push(run_point(&arch, n, AllReduce::Ring)?);
+        }
+    }
+
+    let mut json = String::new();
+    writeln!(json, "{{")?;
+    writeln!(json, "  \"name\": \"replica_allreduce_sweep\",")?;
+    writeln!(json, "  \"arch\": \"{}@{}\",", arch.label(), arch.batch)?;
+    writeln!(json, "  \"steps\": {STEPS},")?;
+    writeln!(json, "  \"sweep\": [")?;
+    for (i, p) in points.iter().enumerate() {
+        let comma = if i + 1 < points.len() { "," } else { "" };
+        writeln!(
+            json,
+            "    {{\"replicas\": {}, \"allreduce\": \"{}\", \"mean_step_ms\": {:.3}, \
+             \"allreduce_bytes\": {}}}{comma}",
+            p.replicas, p.allreduce, p.mean_step_ms, p.allreduce_bytes
+        )?;
+    }
+    writeln!(json, "  ]")?;
+    writeln!(json, "}}")?;
+    std::fs::write("BENCH_replicas.json", &json)?;
+
+    for p in &points {
+        println!(
+            "replicas {} ({:>6}): step {:.3} ms  all-reduce {} B",
+            p.replicas, p.allreduce, p.mean_step_ms, p.allreduce_bytes
+        );
+    }
+    // The wire-cost contract: for every fleet count, ring <= master.
+    for n in [2usize, 4] {
+        let bytes = |s: &str| {
+            points
+                .iter()
+                .find(|p| p.replicas == n && p.allreduce == s)
+                .map(|p| p.allreduce_bytes)
+                .unwrap_or(0)
+        };
+        let (master, ring) = (bytes("master"), bytes("ring"));
+        anyhow::ensure!(master > 0 && ring > 0, "replicas {n}: fabric moved no bytes");
+        anyhow::ensure!(
+            ring <= master,
+            "replicas {n}: ring moved {ring} bytes > master {master}"
+        );
+    }
+    let single = points.iter().find(|p| p.replicas == 1).unwrap();
+    anyhow::ensure!(single.allreduce_bytes == 0, "a single fleet must have no fabric");
+    println!("BENCH_replicas.json written ({} sweep points)", points.len());
+    Ok(())
+}

@@ -17,7 +17,7 @@ use super::graph::check_spec;
 use super::plan::{check_plan, PlanCheckOptions};
 
 const ROOT_KEYS: &[&str] =
-    &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs", "serve"];
+    &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs", "serve", "replica"];
 const TRAINER_KEYS: &[&str] = &[
     "steps",
     "lr",
@@ -45,6 +45,8 @@ const ADAPTIVE_KEYS: &[&str] = &[
 ];
 const OBS_KEYS: &[&str] = &["metrics_addr"];
 const SERVE_KEYS: &[&str] = &["max_delay_ms", "max_batch"];
+const REPLICA_KEYS: &[&str] =
+    &["count", "allreduce", "chunk_kb", "rebalance_every", "rebalance_threshold"];
 
 fn lint_keys(rep: &mut Report, v: &Json, section: &str, allowed: &[&str]) {
     if let Json::Obj(m) = v {
@@ -85,6 +87,7 @@ pub fn check_config_text(text: &str) -> Report {
         ("adaptive", ADAPTIVE_KEYS),
         ("obs", OBS_KEYS),
         ("serve", SERVE_KEYS),
+        ("replica", REPLICA_KEYS),
     ] {
         if let Some(s) = v.opt(section) {
             lint_keys(&mut rep, s, section, allowed);
@@ -203,6 +206,24 @@ pub fn check_config(cfg: &ExperimentConfig) -> Report {
             );
         }
     }
+    if let Some(r) = &cfg.replica {
+        if r.count == 0 {
+            rep.emit(
+                "C010",
+                Some("replica.count".into()),
+                "count=0 — a session needs at least one replica (1 means no \
+                 replication; >= 2 enables data parallelism)",
+            );
+        }
+        if r.count == 1 && r.allreduce == crate::replica::AllReduce::Ring {
+            rep.emit(
+                "C010",
+                Some("replica.allreduce".into()),
+                "allreduce=\"ring\" with count=1 — a ring needs at least two \
+                 replicas to pass gradients around",
+            );
+        }
+    }
     let a = &cfg.adaptive;
     if a.enabled {
         if a.warmup_steps >= steps {
@@ -298,6 +319,29 @@ pub fn check_experiment(cfg: &ExperimentConfig) -> Report {
                         arch.batch_buckets
                     ),
                 );
+            }
+        }
+        // Each replica trains batch/count samples; a slice of zero (or one
+        // smaller than the lowest batch rung) has no executable shape.
+        if let Some(r) = &cfg.replica {
+            if r.count > 1 {
+                let floor = arch.batch / r.count;
+                let bottom = arch.batch_buckets.first().copied().unwrap_or(arch.batch);
+                if floor == 0 || floor < bottom {
+                    rep.emit(
+                        "C010",
+                        Some("replica.count".into()),
+                        format!(
+                            "count={} slices the global batch {} down to {floor} \
+                             samples per replica, below the smallest batch rung \
+                             {bottom} of arch {:?} (ladder {:?})",
+                            r.count,
+                            arch.batch,
+                            arch.label(),
+                            arch.batch_buckets
+                        ),
+                    );
+                }
             }
         }
         rep.merge(check_spec(&arch));
@@ -399,6 +443,38 @@ mod tests {
         let rep = check_config_text(r#"{"name": "x", "serve": {"max_bacth": 2}}"#);
         let d = rep.diags.iter().find(|d| d.code == "C001").unwrap();
         assert_eq!(d.loc.as_deref(), Some("serve.max_bacth"));
+    }
+
+    #[test]
+    fn degenerate_replica_setups_are_c010() {
+        // Zero replicas can never train anything.
+        let rep = check_config_text(r#"{"name": "x", "replica": {"count": 0}}"#);
+        let d = rep.diags.iter().find(|d| d.code == "C010").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("replica.count"));
+        assert!(rep.has_deny());
+        // A ring of one has nobody to pass gradients to.
+        let rep = check_config_text(
+            r#"{"name": "x", "replica": {"count": 1, "allreduce": "ring"}}"#,
+        );
+        let d = rep.diags.iter().find(|d| d.code == "C010").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("replica.allreduce"));
+        // tiny preset: batch 2, ladder [2] — two replicas slice to 1 sample,
+        // below the smallest rung.
+        let rep = check_config_text(
+            r#"{"name": "x", "arch": "tiny", "replica": {"count": 2}}"#,
+        );
+        let d = rep.diags.iter().find(|d| d.code == "C010").unwrap();
+        assert!(d.message.contains("smallest batch rung"), "{}", d.message);
+        // The default arch (batch 64, ladder bottom 8) covers 2 replicas fine.
+        let rep = check_config_text(
+            r#"{"name": "x", "arch": "default", "replica": {"count": 2, "allreduce": "ring"}}"#,
+        );
+        assert!(!rep.diags.iter().any(|d| d.code == "C010"), "{}", rep.render_human());
+        assert!(!rep.has_deny(), "{}", rep.render_human());
+        // Typos inside the section stay C001 with a scoped location.
+        let rep = check_config_text(r#"{"name": "x", "replica": {"cnt": 2}}"#);
+        let d = rep.diags.iter().find(|d| d.code == "C001").unwrap();
+        assert_eq!(d.loc.as_deref(), Some("replica.cnt"));
     }
 
     #[test]

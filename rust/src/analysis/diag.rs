@@ -83,6 +83,7 @@ pub const REGISTRY: &[(&str, Severity, &str)] = &[
     ("C007", Severity::Warn, "calib_rounds is 0 (clamped to 1 at calibration time)"),
     ("C008", Severity::Deny, "checkpoint_every out of range (0 or >= trainer.steps)"),
     ("C009", Severity::Deny, "serve batcher budget the batch ladder cannot cover"),
+    ("C010", Severity::Deny, "degenerate replica setup (zero replicas, ring of one, slice below ladder)"),
 ];
 
 /// Look a code up in the [`REGISTRY`].

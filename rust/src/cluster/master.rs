@@ -71,6 +71,38 @@ pub struct StepResult {
     pub anomaly: Option<StepAnomaly>,
 }
 
+/// A step stopped at the gradient: forward + backward ran, the update has
+/// not.  Produced by [`DistTrainer::step_grads`] so the replica tier can
+/// all-reduce gradients across fleets before [`DistTrainer::step_apply`]
+/// commits them; [`DistTrainer::step`] composes the two halves unchanged.
+pub struct PendingStep {
+    loss: f32,
+    grads: Grads,
+    timer: PhaseTimer,
+    step_t0: u64,
+    bytes0: u64,
+}
+
+impl PendingStep {
+    pub fn loss(&self) -> f32 {
+        self.loss
+    }
+
+    pub fn grads(&self) -> &Grads {
+        &self.grads
+    }
+
+    pub fn grads_mut(&mut self) -> &mut Grads {
+        &mut self.grads
+    }
+
+    /// Attribute all-reduce wall time to the step's Comm phase so the
+    /// printed breakdown and the trace keep summing to the step total.
+    pub fn record_comm(&mut self, d: Duration) {
+        self.timer.record(Phase::Comm, d);
+    }
+}
+
 struct WorkerSlot {
     link: Box<dyn Link>,
     alive: bool,
@@ -425,6 +457,15 @@ impl DistTrainer {
     /// the survivors and rerun the batch; after a successful step, consult
     /// the adaptive policy.
     pub fn step(&mut self, batch: &Batch) -> Result<StepResult> {
+        let pending = self.step_grads(batch)?;
+        self.step_apply(pending, None)
+    }
+
+    /// First half of [`Self::step`]: forward + backward with the same
+    /// heartbeat/recovery semantics, stopped at the gradient.  The replica
+    /// tier all-reduces the pending gradients across fleets before
+    /// committing them with [`Self::step_apply`].
+    pub fn step_grads(&mut self, batch: &Batch) -> Result<PendingStep> {
         if self.adaptive.enabled
             && self.adaptive.heartbeat_every > 0
             && self.steps_done > 0
@@ -437,25 +478,17 @@ impl DistTrainer {
             }
         }
         loop {
-            // A worker can also die *outside* try_step — a failed AllOk
-            // broadcast or ShardUpdate send marks it dead without going
-            // through the retry path.  If the tables still reference a dead
-            // device, re-absorb its range before scattering; otherwise
+            // A worker can also die *outside* try_step_grads — a failed
+            // AllOk broadcast or ShardUpdate send marks it dead without
+            // going through the retry path.  If the tables still reference a
+            // dead device, re-absorb its range before scattering; otherwise
             // send_to would fail every step with no recovery.
             if self.tables_reference_dead() {
                 self.repartition_surviving()?;
             }
             let alive_before = self.alive_workers();
-            match self.try_step(batch) {
-                Ok(mut r) => {
-                    self.steps_done += 1;
-                    if self.adaptive.enabled {
-                        r.repartitioned = self.consider_repartition()?;
-                    }
-                    r.anomaly = self.anomaly.observe(r.breakdown.total().as_secs_f64() * 1e3);
-                    r.health = self.health.update(&self.active_devices(), &self.telemetry);
-                    return Ok(r);
-                }
+            match self.try_step_grads(batch) {
+                Ok(p) => return Ok(p),
                 Err(e) => {
                     let alive_now = self.alive_workers();
                     if alive_now < alive_before {
@@ -469,6 +502,77 @@ impl DistTrainer {
                 }
             }
         }
+    }
+
+    /// Second half of [`Self::step`]: apply `grads_override` (the reduced
+    /// gradients in replica mode) or the pending gradients, acknowledge the
+    /// batch, and finish the per-step bookkeeping exactly as `step` does.
+    pub fn step_apply(
+        &mut self,
+        pending: PendingStep,
+        grads_override: Option<&Grads>,
+    ) -> Result<StepResult> {
+        let PendingStep { loss, grads, mut timer, step_t0, bytes0 } = pending;
+        let grads = grads_override.unwrap_or(&grads);
+
+        // ---------------- update ----------------
+        let opt_t0 = self.obs_now();
+        timer.time(Phase::Comp, || self.opt.step(&mut self.params, grads))?;
+        if self.obs_tracing() {
+            let now = self.obs_now();
+            self.obs_span(
+                "sgd_step".to_string(),
+                SpanCat::Comp,
+                0,
+                0,
+                opt_t0,
+                now.saturating_sub(opt_t0),
+            );
+        }
+
+        // Batch acknowledged (Algorithm 1 line 21).
+        self.broadcast(&Message::AllOk);
+
+        if let Some(o) = &self.obs {
+            let step = self.steps_done + 1;
+            if o.tracing() {
+                let now = o.now_us();
+                o.span(SpanRec {
+                    name: format!("step {step}"),
+                    cat: SpanCat::Step,
+                    device: 0,
+                    layer: 0,
+                    step,
+                    ts_us: step_t0,
+                    dur_us: now.saturating_sub(step_t0),
+                });
+                // The Figure-6 attribution row: tiled from the step start
+                // with the exact values the printed Breakdown carries, so
+                // trace and stdout always agree.
+                o.phase_spans(step, step_t0, &timer.breakdown);
+            }
+            let misuse = timer.misuse();
+            if misuse > 0 {
+                o.metrics(|m| m.inc("phase_timer_misuse", misuse));
+            }
+        }
+
+        let mut r = StepResult {
+            loss,
+            breakdown: timer.breakdown,
+            bytes_moved: self.total_bytes() - bytes0,
+            devices: 1 + self.alive_workers(),
+            repartitioned: false,
+            health: Vec::new(),
+            anomaly: None,
+        };
+        self.steps_done += 1;
+        if self.adaptive.enabled {
+            r.repartitioned = self.consider_repartition()?;
+        }
+        r.anomaly = self.anomaly.observe(r.breakdown.total().as_secs_f64() * 1e3);
+        r.health = self.health.update(&self.active_devices(), &self.telemetry);
+        Ok(r)
     }
 
     /// True when a shard table still names a dead worker (its departure was
@@ -625,7 +729,7 @@ impl DistTrainer {
         }
     }
 
-    fn try_step(&mut self, batch: &Batch) -> Result<StepResult> {
+    fn try_step_grads(&mut self, batch: &Batch) -> Result<PendingStep> {
         let bytes0 = self.total_bytes();
         let step_t0 = self.obs_now();
         let mut timer = PhaseTimer::default();
@@ -714,57 +818,7 @@ impl DistTrainer {
             gp = Value::F32(gx);
         }
 
-        // ---------------- update ----------------
-        let opt_t0 = self.obs_now();
-        timer.time(Phase::Comp, || self.opt.step(&mut self.params, &grads))?;
-        if self.obs_tracing() {
-            let now = self.obs_now();
-            self.obs_span(
-                "sgd_step".to_string(),
-                SpanCat::Comp,
-                0,
-                0,
-                opt_t0,
-                now.saturating_sub(opt_t0),
-            );
-        }
-
-        // Batch acknowledged (Algorithm 1 line 21).
-        self.broadcast(&Message::AllOk);
-
-        if let Some(o) = &self.obs {
-            let step = self.steps_done + 1;
-            if o.tracing() {
-                let now = o.now_us();
-                o.span(SpanRec {
-                    name: format!("step {step}"),
-                    cat: SpanCat::Step,
-                    device: 0,
-                    layer: 0,
-                    step,
-                    ts_us: step_t0,
-                    dur_us: now.saturating_sub(step_t0),
-                });
-                // The Figure-6 attribution row: tiled from the step start
-                // with the exact values the printed Breakdown carries, so
-                // trace and stdout always agree.
-                o.phase_spans(step, step_t0, &timer.breakdown);
-            }
-            let misuse = timer.misuse();
-            if misuse > 0 {
-                o.metrics(|m| m.inc("phase_timer_misuse", misuse));
-            }
-        }
-
-        Ok(StepResult {
-            loss,
-            breakdown: timer.breakdown,
-            bytes_moved: self.total_bytes() - bytes0,
-            devices: 1 + self.alive_workers(),
-            repartitioned: false,
-            health: Vec::new(),
-            anomaly: None,
-        })
+        Ok(PendingStep { loss, grads, timer, step_t0, bytes0 })
     }
 
     /// Distributed conv forward: scatter shards, convolve own shard, gather

@@ -48,6 +48,56 @@ pub struct ExperimentConfig {
     /// default: hold requests up to 5 ms and batch up to the largest
     /// `batch_buckets` rung.
     pub serve: Option<ServeConfig>,
+    /// Replica tier (DESIGN.md §14): `{"replica": {"count": 2, "allreduce":
+    /// "ring"}}` trains N data-parallel fleets with a synchronous gradient
+    /// all-reduce.  `None` = the classic single-fleet run.
+    pub replica: Option<ReplicaConfig>,
+}
+
+/// The `replica` section: how many replica fleets train data-parallel, how
+/// their gradients are reduced, and when batch slices rebalance.  The
+/// static analyzer (diagnostic C010) rejects degenerate combinations
+/// (`count: 0`, a ring of one, slices below the arch's bucket ladder).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaConfig {
+    /// Replica fleet count; 1 = single-fleet (the replica tier stays off).
+    pub count: usize,
+    /// Gradient all-reduce strategy: `"master"` (rooted) or `"ring"`.
+    pub allreduce: crate::replica::AllReduce,
+    /// All-reduce chunk size in KiB of f32 gradient data per frame.
+    pub chunk_kb: usize,
+    /// Propose slice rebalances at most every N steps; 0 = off.
+    pub rebalance_every: u64,
+    /// Minimum max/min slice-change ratio that justifies a fleet rebuild.
+    pub rebalance_threshold: f64,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        let r = crate::sched::RebalanceConfig::default();
+        Self {
+            count: 1,
+            allreduce: crate::replica::AllReduce::Master,
+            chunk_kb: 256,
+            rebalance_every: r.every,
+            rebalance_threshold: r.threshold,
+        }
+    }
+}
+
+impl ReplicaConfig {
+    /// Lower into the session/replica-tier spec (chunk KiB -> f32 elems).
+    pub fn to_spec(&self) -> crate::replica::ReplicaSpec {
+        crate::replica::ReplicaSpec {
+            count: self.count,
+            allreduce: self.allreduce,
+            chunk_elems: (self.chunk_kb * 1024 / 4).max(1),
+            rebalance: crate::sched::RebalanceConfig {
+                every: self.rebalance_every,
+                threshold: self.rebalance_threshold,
+            },
+        }
+    }
 }
 
 /// The `serve` section: how long the dynamic batcher may hold a request
@@ -159,6 +209,7 @@ impl Default for ExperimentConfig {
             adaptive: AdaptiveConfig::disabled(),
             metrics_addr: None,
             serve: None,
+            replica: None,
         }
     }
 }
@@ -176,7 +227,7 @@ impl ExperimentConfig {
         let v = Json::parse(text).context("parsing experiment config JSON")?;
         check_keys(
             &v,
-            &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs", "serve"],
+            &["name", "arch", "trainer", "cluster", "network", "adaptive", "obs", "serve", "replica"],
             "config root",
         )?;
         let mut cfg = ExperimentConfig {
@@ -353,6 +404,30 @@ impl ExperimentConfig {
             }
             cfg.serve = Some(d);
         }
+        if let Some(r) = v.opt("replica") {
+            check_keys(
+                r,
+                &["count", "allreduce", "chunk_kb", "rebalance_every", "rebalance_threshold"],
+                "replica",
+            )?;
+            let mut d = ReplicaConfig::default();
+            if let Some(x) = r.opt("count") {
+                d.count = x.as_usize()?;
+            }
+            if let Some(x) = r.opt("allreduce") {
+                d.allreduce = crate::replica::AllReduce::parse(x.as_str()?)?;
+            }
+            if let Some(x) = r.opt("chunk_kb") {
+                d.chunk_kb = x.as_usize()?;
+            }
+            if let Some(x) = r.opt("rebalance_every") {
+                d.rebalance_every = x.as_u64()?;
+            }
+            if let Some(x) = r.opt("rebalance_threshold") {
+                d.rebalance_threshold = x.as_f64()?;
+            }
+            cfg.replica = Some(d);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -433,12 +508,24 @@ impl ExperimentConfig {
                 s.max_delay_ms, s.max_batch
             ),
         };
+        let replica = match &self.replica {
+            None => String::new(),
+            Some(r) => format!(
+                ",\n  \"replica\": {{\"count\": {}, \"allreduce\": \"{}\", \"chunk_kb\": {}, \
+                 \"rebalance_every\": {}, \"rebalance_threshold\": {}}}",
+                r.count,
+                r.allreduce.name(),
+                r.chunk_kb,
+                r.rebalance_every,
+                r.rebalance_threshold
+            ),
+        };
         format!(
             "{{\n  \"name\": \"{}\",{arch}{adaptive}\n  \"trainer\": {{\"steps\": {}, \"lr\": {}, \
              \"momentum\": {}, \"weight_decay\": {}, \"seed\": {}, \"log_every\": {}, \
              \"calib_rounds\": {}{ckpt}}},\n  \"cluster\": {{\"workers\": {}, \"devices\": \"{}\", \
              \"throttle\": {}, \"worker_addrs\": [{}]}},\n  \"network\": {{\"bandwidth_mbps\": {}, \
-             \"latency_ms\": {}, \"shaped\": {}}}{obs}{serve}\n}}",
+             \"latency_ms\": {}, \"shaped\": {}}}{obs}{serve}{replica}\n}}",
             esc(&self.name),
             t.steps,
             t.lr,
@@ -663,6 +750,17 @@ mod tests {
         cfg.serve = Some(ServeConfig { max_delay_ms: 7, max_batch: 4 });
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
         assert_eq!(back, cfg);
+        // replica section survives (and is absent when None).
+        assert!(!cfg.to_json_string().contains("\"replica\""));
+        cfg.replica = Some(ReplicaConfig {
+            count: 4,
+            allreduce: crate::replica::AllReduce::Ring,
+            chunk_kb: 64,
+            rebalance_every: 8,
+            rebalance_threshold: 1.5,
+        });
+        let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
+        assert_eq!(back, cfg);
         // And hostile strings: quotes, backslashes, control characters.
         cfg.name = "we\"ird\\name\nwith\tctrl\u{1}".into();
         let back = ExperimentConfig::from_json_str(&cfg.to_json_string()).unwrap();
@@ -764,6 +862,39 @@ mod tests {
         // gate that refuses to serve them.
         assert!(ExperimentConfig::from_json_str(
             r#"{"name": "s", "serve": {"max_batch": 0}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn replica_section_parses_with_defaults_and_rejects_bad_input() {
+        let cfg = ExperimentConfig::from_json_str(
+            r#"{"name": "r", "replica": {"count": 2, "allreduce": "ring"}}"#,
+        )
+        .unwrap();
+        let r = cfg.replica.unwrap();
+        assert_eq!(r.count, 2);
+        assert_eq!(r.allreduce, crate::replica::AllReduce::Ring);
+        assert_eq!(r.chunk_kb, 256, "unset knobs take defaults");
+        assert_eq!(r.rebalance_every, 0);
+        let spec = r.to_spec();
+        assert_eq!(spec.chunk_elems, 256 * 1024 / 4);
+        // No section at all: None (single-fleet path).
+        let cfg = ExperimentConfig::from_json_str(r#"{"name": "r"}"#).unwrap();
+        assert_eq!(cfg.replica, None);
+        // Unknown strategy and typoed keys are loud.
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "r", "replica": {"allreduce": "tree"}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "r", "replica": {"cnt": 2}}"#
+        )
+        .is_err());
+        // Degenerate counts parse here; the static analyzer (C010) is the
+        // gate that refuses to run them.
+        assert!(ExperimentConfig::from_json_str(
+            r#"{"name": "r", "replica": {"count": 0}}"#
         )
         .is_ok());
     }

@@ -22,6 +22,32 @@ pub struct Batch {
     pub labels: ITensor,
 }
 
+impl Batch {
+    /// Number of samples in the batch.
+    pub fn len(&self) -> usize {
+        self.images.shape()[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Contiguous sub-batch `[lo, hi)` along the sample axis.  Used by the
+    /// replica tier to hand each replica a disjoint slice of the global
+    /// batch.
+    pub fn slice(&self, lo: usize, hi: usize) -> Result<Batch> {
+        let b = self.len();
+        ensure!(lo < hi && hi <= b, "batch slice [{lo}, {hi}) out of range for batch {b}");
+        let px: usize = self.images.shape()[1..].iter().product();
+        let mut shape = self.images.shape().to_vec();
+        shape[0] = hi - lo;
+        Ok(Batch {
+            images: Tensor::new(shape, self.images.data()[lo * px..hi * px].to_vec())?,
+            labels: ITensor::new(vec![hi - lo], self.labels.data()[lo..hi].to_vec())?,
+        })
+    }
+}
+
 /// Anything that yields training batches.
 pub trait Dataset {
     fn num_classes(&self) -> usize;
@@ -242,6 +268,25 @@ mod tests {
             .sum::<f32>()
             .sqrt();
         assert!(d01 > 2.0, "class templates too close: {d01}");
+    }
+
+    #[test]
+    fn batch_slice_is_contiguous_and_bounds_checked() {
+        let mut ds = SyntheticCifar::new(8, 3, 10, 7);
+        let b = ds.batch(6, 0).unwrap();
+        assert_eq!(b.len(), 6);
+        assert!(!b.is_empty());
+        let s = b.slice(2, 5).unwrap();
+        assert_eq!(s.images.shape(), &[3, 3, 8, 8]);
+        assert_eq!(s.labels.data(), &b.labels.data()[2..5]);
+        let px = 3 * 8 * 8;
+        assert_eq!(s.images.data(), &b.images.data()[2 * px..5 * px]);
+        // Slices must tile the batch exactly: [0,2) ∪ [2,5) ∪ [5,6).
+        let a = b.slice(0, 2).unwrap();
+        let c = b.slice(5, 6).unwrap();
+        assert_eq!(a.len() + s.len() + c.len(), b.len());
+        assert!(b.slice(4, 4).is_err());
+        assert!(b.slice(0, 7).is_err());
     }
 
     #[test]

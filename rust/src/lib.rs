@@ -40,6 +40,7 @@ pub mod model;
 pub mod net;
 pub mod obs;
 pub mod proto;
+pub mod replica;
 pub mod runtime;
 pub mod sched;
 pub mod serve;

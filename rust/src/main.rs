@@ -3,6 +3,7 @@
 //! ```text
 //! convdist run       [--config exp.json] [--workers N] [--steps N]
 //!                    [--throttle] [--shaped] [--arch NAME]
+//!                    [--replicas N] [--allreduce master|ring]
 //!                    [--save ckpt] [--resume ckpt]
 //!                    [--trace out/] [--metrics]
 //! convdist train     (alias of run)
@@ -44,6 +45,9 @@ use convdist::util::cli::Args;
 
 const USAGE: &str = "usage: convdist <run|train|worker|master|calibrate|figures|baseline> [options]
   run        --config F --workers N --steps N --throttle --shaped
+             --replicas N --allreduce master|ring
+             (N >= 2 data-parallel replica fleets, each Eq.1-sharded,
+              synchronous gradient all-reduce between steps)
              --save CKPT --resume CKPT     (train is an alias)
              --trace DIR --metrics    (DIR gets run.jsonl + trace.json;
                                        bare --metrics = summary table only)
@@ -177,6 +181,16 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if args.flag("shaped") {
         cfg.network.shaped = true;
     }
+    if let Some(n) = args.get_opt::<usize>("replicas")? {
+        let mut r = cfg.replica.unwrap_or_default();
+        r.count = n;
+        cfg.replica = Some(r);
+    }
+    if let Some(s) = args.opt("allreduce") {
+        let mut r = cfg.replica.unwrap_or_default();
+        r.allreduce = convdist::replica::AllReduce::parse(s)?;
+        cfg.replica = Some(r);
+    }
     Ok(cfg)
 }
 
@@ -233,6 +247,9 @@ fn logging_observer(log_every: usize, steps: usize) -> impl FnMut(&Event) + Send
             }
         }
         Event::Repartitioned { step } => eprintln!("step {step}: fleet re-sharded"),
+        Event::Rebalanced { step, shares } => {
+            eprintln!("step {step}: replica batch slices rebalanced to {shares:?}")
+        }
         Event::WorkerLeft { step, devices_left } => {
             eprintln!("step {step}: worker left ({devices_left} devices remain)")
         }

@@ -35,17 +35,28 @@ fn sanitize(s: &str) -> String {
 }
 
 /// Map a registry key to a Prometheus series: `devN` path segments become a
-/// `device="N"` label, `gflops.<op>` keeps the op as a label, everything
-/// else flattens with `_`. All series carry the `convdist_` prefix.
+/// `device="N"` label, `rN` segments a `replica="rN"` label, `gflops.<op>`
+/// keeps the op as a label, everything else flattens with `_`. All series
+/// carry the `convdist_` prefix.
 fn series(key: &str) -> (String, Option<(String, String)>) {
     let parts: Vec<&str> = key.split('.').collect();
     let mut name_parts: Vec<String> = Vec::new();
     let mut label = None;
     for p in &parts {
-        match p.strip_prefix("dev").and_then(|d| d.parse::<u64>().ok()) {
-            Some(d) if label.is_none() => label = Some(("device".to_string(), d.to_string())),
-            _ => name_parts.push(sanitize(p)),
+        if let Some(d) = p.strip_prefix("dev").and_then(|d| d.parse::<u64>().ok()) {
+            if label.is_none() {
+                label = Some(("device".to_string(), d.to_string()));
+                continue;
+            }
         }
+        if label.is_none()
+            && p.strip_prefix('r')
+                .map_or(false, |d| !d.is_empty() && d.chars().all(|c| c.is_ascii_digit()))
+        {
+            label = Some(("replica".to_string(), p.to_string()));
+            continue;
+        }
+        name_parts.push(sanitize(p));
     }
     if label.is_none() && parts.len() == 2 && parts[0] == "gflops" {
         return ("convdist_gflops".to_string(), Some(("op".to_string(), parts[1].to_string())));
@@ -460,6 +471,9 @@ mod tests {
         reg.set_gauge("share.dev0", 0.6);
         reg.set_gauge("share.dev1", 0.4);
         reg.set_gauge("throughput.dev1", 3.5);
+        reg.set_gauge("share.r0", 0.5);
+        reg.set_gauge("throughput.r1", 120.0);
+        reg.inc("allreduce.bytes", 2048);
         reg.set_gauge("gflops.conv1_fwd", 8.0);
         reg.set_gauge("net.dev1.bytes", 4096.0);
         for ms in [8.0, 9.0, 10.0, 11.0] {
@@ -476,6 +490,9 @@ mod tests {
         assert!(text.contains("convdist_util{device=\"1\"} 0.75"), "{text}");
         assert!(text.contains("convdist_net_bytes{device=\"1\"} 4096"), "{text}");
         assert!(text.contains("convdist_gflops{op=\"conv1_fwd\"} 8"), "{text}");
+        assert!(text.contains("convdist_share{replica=\"r0\"} 0.5"), "{text}");
+        assert!(text.contains("convdist_throughput{replica=\"r1\"} 120"), "{text}");
+        assert!(text.contains("convdist_allreduce_bytes 2048"), "{text}");
         assert!(text.contains("convdist_step_ms_count 4"), "{text}");
         assert!(text.contains("quantile=\"0.95\""), "{text}");
         let map = parse_prometheus(&text).unwrap();

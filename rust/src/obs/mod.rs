@@ -118,6 +118,8 @@ pub enum SpanCat {
     Conv,
     /// Non-conv compute (LRN/pool/FC/loss/optimizer).
     Comp,
+    /// Cross-replica gradient all-reduce (DESIGN.md §14).
+    Allreduce,
 }
 
 impl SpanCat {
@@ -127,6 +129,7 @@ impl SpanCat {
             SpanCat::Comm => "comm",
             SpanCat::Conv => "conv",
             SpanCat::Comp => "comp",
+            SpanCat::Allreduce => "allreduce",
         }
     }
 }

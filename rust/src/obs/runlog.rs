@@ -11,10 +11,11 @@
 //! | `run_start`   | `t_us`, `arch` (str), `devices`, `steps`                               |
 //! | `step`        | `t_us`, `step`, `loss`, `devices`, `comm_us`, `conv_us`, `comp_us`, `bytes` |
 //! | `repartition` | `t_us`, `step`                                                         |
+//! | `rebalance`   | `t_us`, `step`, `shares` (arr of numbers)                              |
 //! | `worker_left` | `t_us`, `step`, `devices_left`                                         |
 //! | `eval`        | `t_us`, `step`, `accuracy`                                             |
 //! | `checkpoint`  | `t_us`, `step`, `path` (str)                                           |
-//! | `span`        | `t_us`, `name` (str), `cat` (`step\|comm\|conv\|comp`), `device`, `layer`, `step`, `dur_us` |
+//! | `span`        | `t_us`, `name` (str), `cat` (`step\|comm\|conv\|comp\|allreduce`), `device`, `layer`, `step`, `dur_us` |
 //! | `metrics`     | `t_us`, `counters` (obj), `gauges` (obj), `hists` (obj)                |
 //! | `health`      | `t_us`, `step`, `device`, `from` (state), `to` (state), `ratio`        |
 //! | `anomaly`     | `t_us`, `step`, `step_ms`, `median_ms`, `mad_ms`                       |
@@ -95,6 +96,11 @@ pub fn event_line(t_us: u64, ev: &Event) -> String {
         ),
         Event::Repartitioned { step } => {
             format!("{{\"type\":\"repartition\",\"t_us\":{t_us},\"step\":{step}}}")
+        }
+        Event::Rebalanced { step, shares } => {
+            let shares =
+                shares.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",");
+            format!("{{\"type\":\"rebalance\",\"t_us\":{t_us},\"step\":{step},\"shares\":[{shares}]}}")
         }
         Event::WorkerLeft { step, devices_left } => format!(
             "{{\"type\":\"worker_left\",\"t_us\":{t_us},\"step\":{step},\"devices_left\":{devices_left}}}"
@@ -187,6 +193,12 @@ pub fn validate_line(v: &Json) -> Result<()> {
         "repartition" => {
             req_num(v, "step")?;
         }
+        "rebalance" => {
+            req_num(v, "step")?;
+            for s in v.get("shares")?.as_arr()? {
+                s.as_f64()?;
+            }
+        }
         "worker_left" => {
             req_num(v, "step")?;
             req_num(v, "devices_left")?;
@@ -203,8 +215,8 @@ pub fn validate_line(v: &Json) -> Result<()> {
             req_str(v, "name")?;
             let cat = req_str(v, "cat")?;
             ensure!(
-                matches!(cat, "step" | "comm" | "conv" | "comp"),
-                "span cat {cat:?} not one of step|comm|conv|comp"
+                matches!(cat, "step" | "comm" | "conv" | "comp" | "allreduce"),
+                "span cat {cat:?} not one of step|comm|conv|comp|allreduce"
             );
             for k in ["device", "layer", "step", "dur_us"] {
                 req_num(v, k)?;
@@ -316,6 +328,7 @@ mod tests {
                 bytes_moved: 1024,
             },
             Event::Repartitioned { step: 2 },
+            Event::Rebalanced { step: 2, shares: vec![40, 24] },
             Event::WorkerLeft { step: 2, devices_left: 2 },
             Event::EvalDone { step: 3, accuracy: 0.125 },
             Event::CheckpointSaved { step: 2, path: "out/step2 \"x\".ckpt".into() },
@@ -376,6 +389,8 @@ mod tests {
             r#"{"type":"eval","t_us":0,"step":1,"accuracy":"hi"}"#, // mistyped
             r#"{"type":"health","t_us":0,"step":1,"device":0,"from":"healthy","to":"zombie","ratio":1.0}"#, // bad state
             r#"{"type":"anomaly","t_us":0,"step":1,"step_ms":9.0}"#, // missing fields
+            r#"{"type":"rebalance","t_us":0,"step":1}"#,             // missing shares
+            r#"{"type":"rebalance","t_us":0,"step":1,"shares":["a"]}"#, // mistyped shares
         ] {
             let v = Json::parse(bad).unwrap();
             assert!(validate_line(&v).is_err(), "should reject {bad}");

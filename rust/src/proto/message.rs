@@ -206,6 +206,17 @@ pub enum Message {
     /// Client -> serve frontend: stop accepting connections, finish every
     /// queued request, then shut the fleet down (graceful drain).
     Drain,
+    /// Replica -> replica during the gradient all-reduce (DESIGN.md §14):
+    /// one chunk of the flattened gradient of parameter index `param`
+    /// (manifest order), starting at element `offset`.  `seq` is the
+    /// all-reduce round (the global step), echoed back so stale chunks from
+    /// an aborted round are discarded.  Chunking lets large conv-kernel
+    /// tensors pipeline through a ring instead of serializing whole.
+    GradChunk { seq: u32, param: u32, offset: u32, data: WireTensor },
+    /// Root/ring tail -> replica: the fully reduced chunk (same addressing
+    /// as the matching [`Message::GradChunk`]); every replica applies the
+    /// identical bytes, keeping parameters in bit-for-bit lockstep.
+    GradReduced { seq: u32, param: u32, offset: u32, data: WireTensor },
 }
 
 const ID_HELLO: u8 = 0x01;
@@ -224,6 +235,8 @@ const ID_SPAN_REPORT: u8 = 0x0D;
 const ID_INFER_REQUEST: u8 = 0x0E;
 const ID_INFER_REPLY: u8 = 0x0F;
 const ID_DRAIN: u8 = 0x10;
+const ID_GRAD_CHUNK: u8 = 0x11;
+const ID_GRAD_REDUCED: u8 = 0x12;
 
 impl Message {
     /// -> (message id, payload bytes)
@@ -311,6 +324,20 @@ impl Message {
                 (ID_INFER_REPLY, out)
             }
             Message::Drain => (ID_DRAIN, out),
+            Message::GradChunk { seq, param, offset, data } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&param.to_le_bytes());
+                out.extend_from_slice(&offset.to_le_bytes());
+                data.encode_into(&mut out);
+                (ID_GRAD_CHUNK, out)
+            }
+            Message::GradReduced { seq, param, offset, data } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&param.to_le_bytes());
+                out.extend_from_slice(&offset.to_le_bytes());
+                data.encode_into(&mut out);
+                (ID_GRAD_REDUCED, out)
+            }
         }
     }
 
@@ -395,6 +422,18 @@ impl Message {
                 logits: WireTensor::decode_from(buf, &mut pos)?,
             },
             ID_DRAIN => Message::Drain,
+            ID_GRAD_CHUNK => Message::GradChunk {
+                seq: take_u32(buf, &mut pos)?,
+                param: take_u32(buf, &mut pos)?,
+                offset: take_u32(buf, &mut pos)?,
+                data: WireTensor::decode_from(buf, &mut pos)?,
+            },
+            ID_GRAD_REDUCED => Message::GradReduced {
+                seq: take_u32(buf, &mut pos)?,
+                param: take_u32(buf, &mut pos)?,
+                offset: take_u32(buf, &mut pos)?,
+                data: WireTensor::decode_from(buf, &mut pos)?,
+            },
             other => bail!("unknown message id {other:#x}"),
         };
         Ok(msg)
@@ -419,6 +458,8 @@ impl Message {
             Message::InferRequest { .. } => "InferRequest",
             Message::InferReply { .. } => "InferReply",
             Message::Drain => "Drain",
+            Message::GradChunk { .. } => "GradChunk",
+            Message::GradReduced { .. } => "GradReduced",
         }
     }
 }
@@ -537,6 +578,8 @@ mod tests {
             Message::InferRequest { id: u64::MAX, image: wt(&[3, 32, 32]) },
             Message::InferReply { id: 12, logits: wt(&[10]) },
             Message::Drain,
+            Message::GradChunk { seq: 17, param: 2, offset: 64, data: wt(&[33]) },
+            Message::GradReduced { seq: 17, param: 2, offset: 64, data: wt(&[33]) },
             Message::SpanReport {
                 worker_id: 1,
                 seq: 9,

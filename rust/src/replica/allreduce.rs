@@ -1,0 +1,417 @@
+//! Chunked gradient all-reduce over the [`crate::net::Link`] framing.
+//!
+//! Two strategies, selected by `replica.allreduce`:
+//!
+//! * **master** — replica 0 is the reduction root: every other replica
+//!   ships its gradient chunks up (`GradChunk`), the root accumulates them
+//!   *in replica index order* and broadcasts the result back
+//!   (`GradReduced`).
+//! * **ring** — a pipelined chain: chunks flow 0 → 1 → … → N-1, each hop
+//!   adding its own contribution, then the fully reduced chunks flow back
+//!   N-1 → … → 0.  Accumulation is `partial + own` at every hop, i.e. the
+//!   identical left-associated `((g0 + g1) + g2) + …` sum the master root
+//!   computes — which is why `allreduce=master` and `allreduce=ring`
+//!   produce bit-identical parameters (a tested invariant, not an
+//!   accident; IEEE-754 addition is commutative but not associative, so
+//!   the *order* of accumulation is part of the wire contract).
+//!
+//! Tensors are flattened and cut into `chunk_elems`-sized pieces so large
+//! conv-kernel gradients pipeline through the fabric instead of traveling
+//! as one frame per tensor.  Both ends of every link live in the
+//! single-threaded orchestrator (the in-proc channel is unbounded, so
+//! send-then-recv on the same thread cannot deadlock), and every frame
+//! still crosses the full encode/decode path — the same bytes a
+//! multi-process deployment would put on a socket.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::model::{Grads, Params};
+use crate::net::{inproc_pair, InProcLink, Link};
+use crate::proto::{Message, WireTensor};
+
+/// Cross-replica gradient reduction strategy (`replica.allreduce`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AllReduce {
+    /// Master-rooted reduce + broadcast (replica 0 is the root).
+    #[default]
+    Master,
+    /// Chunk-pipelined chain reduce/broadcast around the replica ring.
+    Ring,
+}
+
+impl AllReduce {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "master" => Ok(AllReduce::Master),
+            "ring" => Ok(AllReduce::Ring),
+            other => bail!("unknown allreduce strategy {other:?} (try: master, ring)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllReduce::Master => "master",
+            AllReduce::Ring => "ring",
+        }
+    }
+}
+
+/// The link fabric between replicas.  `pairs[i]` is an in-proc link pair;
+/// under `Master` it connects the root to replica `i + 1`, under `Ring` it
+/// connects replica `i` to replica `i + 1`.  Either way the `.0` end sees
+/// every frame exactly once (as sender or receiver), so summing bytes over
+/// the `.0` ends counts fabric traffic without double-counting.
+pub struct ReduceFabric {
+    strategy: AllReduce,
+    chunk_elems: usize,
+    pairs: Vec<(InProcLink, InProcLink)>,
+    n: usize,
+}
+
+impl ReduceFabric {
+    pub fn new(n: usize, strategy: AllReduce, chunk_elems: usize) -> Self {
+        let pairs = (1..n).map(|_| inproc_pair()).collect();
+        Self { strategy, chunk_elems: chunk_elems.max(1), pairs, n }
+    }
+
+    pub fn strategy(&self) -> AllReduce {
+        self.strategy
+    }
+
+    /// Bytes moved over the fabric, each frame counted once.
+    pub fn bytes_moved(&self) -> u64 {
+        self.pairs.iter().map(|(a, _)| a.bytes_moved()).sum()
+    }
+
+    /// Synchronously all-reduce (sum) the gradients of every replica:
+    /// afterwards all `grads[r]` hold the identical reduced tensors.
+    /// Callers pre-scale each replica's gradients by its batch share, so
+    /// the plain sum is the global-batch mean gradient.  `seq` tags every
+    /// frame of the round (the global step), so a desynchronized peer is a
+    /// loud error instead of a silent gradient mixup.
+    pub fn all_reduce(&mut self, grads: &mut [Grads], names: &[String], seq: u32) -> Result<()> {
+        ensure!(grads.len() == self.n, "{} grad sets for {} replicas", grads.len(), self.n);
+        for (pi, name) in names.iter().enumerate() {
+            let len = grads[0].get(name)?.data().len();
+            let mut off = 0;
+            while off < len {
+                let hi = (off + self.chunk_elems).min(len);
+                match self.strategy {
+                    AllReduce::Master => self.reduce_chunk_master(grads, name, pi, off, hi, seq)?,
+                    AllReduce::Ring => self.reduce_chunk_ring(grads, name, pi, off, hi, seq)?,
+                }
+                off = hi;
+            }
+        }
+        Ok(())
+    }
+
+    /// Master-rooted reduce + broadcast of one chunk.
+    fn reduce_chunk_master(
+        &mut self,
+        grads: &mut [Grads],
+        name: &str,
+        param: usize,
+        off: usize,
+        hi: usize,
+        seq: u32,
+    ) -> Result<()> {
+        // Replicas 1..n ship their chunk to the root.
+        for r in 1..self.n {
+            let wt = wire_chunk(grads[r].get(name)?.data(), off, hi);
+            let msg = Message::GradChunk { seq, param: param as u32, offset: off as u32, data: wt };
+            self.pairs[r - 1].1.send(&msg)?;
+        }
+        // Root accumulates in replica index order — the exact associativity
+        // the ring chain reproduces.
+        for r in 1..self.n {
+            let msg = self.pairs[r - 1].0.recv()?;
+            let data = expect_chunk(msg, false, seq, param, off, hi - off)?;
+            let dst = grad_chunk_mut(&mut grads[0], name, off, hi)?;
+            for (d, s) in dst.iter_mut().zip(&data) {
+                *d += *s;
+            }
+        }
+        // Broadcast the reduced chunk back down.
+        let reduced = grads[0].get(name)?.data()[off..hi].to_vec();
+        for r in 1..self.n {
+            let wt = WireTensor { shape: vec![(hi - off) as u32], data: reduced.clone() };
+            let msg =
+                Message::GradReduced { seq, param: param as u32, offset: off as u32, data: wt };
+            self.pairs[r - 1].0.send(&msg)?;
+        }
+        for r in 1..self.n {
+            let msg = self.pairs[r - 1].1.recv()?;
+            let data = expect_chunk(msg, true, seq, param, off, hi - off)?;
+            grad_chunk_mut(&mut grads[r], name, off, hi)?.copy_from_slice(&data);
+        }
+        Ok(())
+    }
+
+    /// Chain reduce (0 → … → N-1) + chain broadcast (N-1 → … → 0) of one
+    /// chunk: every hop adds its own contribution to the incoming partial,
+    /// keeping the master root's left-associated summation order.
+    fn reduce_chunk_ring(
+        &mut self,
+        grads: &mut [Grads],
+        name: &str,
+        param: usize,
+        off: usize,
+        hi: usize,
+        seq: u32,
+    ) -> Result<()> {
+        let wt = wire_chunk(grads[0].get(name)?.data(), off, hi);
+        let msg = Message::GradChunk { seq, param: param as u32, offset: off as u32, data: wt };
+        self.pairs[0].0.send(&msg)?;
+        for r in 1..self.n {
+            let msg = self.pairs[r - 1].1.recv()?;
+            let partial = expect_chunk(msg, false, seq, param, off, hi - off)?;
+            let own = grad_chunk_mut(&mut grads[r], name, off, hi)?;
+            for (o, p) in own.iter_mut().zip(&partial) {
+                *o = *p + *o;
+            }
+            if r + 1 < self.n {
+                let wt = wire_chunk(grads[r].get(name)?.data(), off, hi);
+                let msg =
+                    Message::GradChunk { seq, param: param as u32, offset: off as u32, data: wt };
+                self.pairs[r].0.send(&msg)?;
+            }
+        }
+        for r in (0..self.n - 1).rev() {
+            let wt = wire_chunk(grads[r + 1].get(name)?.data(), off, hi);
+            let msg =
+                Message::GradReduced { seq, param: param as u32, offset: off as u32, data: wt };
+            self.pairs[r].1.send(&msg)?;
+            let got = self.pairs[r].0.recv()?;
+            let data = expect_chunk(got, true, seq, param, off, hi - off)?;
+            grad_chunk_mut(&mut grads[r], name, off, hi)?.copy_from_slice(&data);
+        }
+        Ok(())
+    }
+
+    /// Ship replica 0's parameters to every other replica over the fabric
+    /// (checkpoint-resume broadcast, DESIGN.md §14): `GradReduced` frames
+    /// carry the chunks — same wire layout, `seq` = checkpoint step.
+    pub fn broadcast_params(&mut self, src: &Params, dst: &mut [Params], seq: u32) -> Result<()> {
+        ensure!(dst.len() + 1 == self.n, "{} targets for {} replicas", dst.len(), self.n);
+        for (pi, name) in src.names().to_vec().iter().enumerate() {
+            let data = src.get(name)?.data();
+            let mut off = 0;
+            while off < data.len() {
+                let hi = (off + self.chunk_elems).min(data.len());
+                match self.strategy {
+                    AllReduce::Master => {
+                        for r in 1..self.n {
+                            let wt = wire_chunk(data, off, hi);
+                            self.pairs[r - 1].0.send(&Message::GradReduced {
+                                seq,
+                                param: pi as u32,
+                                offset: off as u32,
+                                data: wt,
+                            })?;
+                        }
+                        for r in 1..self.n {
+                            let msg = self.pairs[r - 1].1.recv()?;
+                            let chunk = expect_chunk(msg, true, seq, pi, off, hi - off)?;
+                            dst[r - 1].get_mut(name)?.data_mut()[off..hi].copy_from_slice(&chunk);
+                        }
+                    }
+                    AllReduce::Ring => {
+                        // Forward down the chain; each hop keeps a copy.
+                        let wt = wire_chunk(data, off, hi);
+                        self.pairs[0].0.send(&Message::GradReduced {
+                            seq,
+                            param: pi as u32,
+                            offset: off as u32,
+                            data: wt,
+                        })?;
+                        for r in 1..self.n {
+                            let msg = self.pairs[r - 1].1.recv()?;
+                            let chunk = expect_chunk(msg, true, seq, pi, off, hi - off)?;
+                            dst[r - 1].get_mut(name)?.data_mut()[off..hi].copy_from_slice(&chunk);
+                            if r + 1 < self.n {
+                                let wt = WireTensor {
+                                    shape: vec![(hi - off) as u32],
+                                    data: chunk,
+                                };
+                                self.pairs[r].0.send(&Message::GradReduced {
+                                    seq,
+                                    param: pi as u32,
+                                    offset: off as u32,
+                                    data: wt,
+                                })?;
+                            }
+                        }
+                    }
+                }
+                off = hi;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn wire_chunk(data: &[f32], off: usize, hi: usize) -> WireTensor {
+    WireTensor { shape: vec![(hi - off) as u32], data: data[off..hi].to_vec() }
+}
+
+fn grad_chunk_mut<'a>(g: &'a mut Grads, name: &str, off: usize, hi: usize) -> Result<&'a mut [f32]> {
+    let t = g
+        .tensors
+        .get_mut(name)
+        .ok_or_else(|| anyhow::anyhow!("no grad {name}"))?;
+    Ok(&mut t.data_mut()[off..hi])
+}
+
+/// Unpack a `GradChunk` (`reduced = false`) or `GradReduced` (`true`),
+/// checking round tag, parameter index, offset and length — a mismatch
+/// means the replicas desynchronized and must be a loud error.
+fn expect_chunk(
+    msg: Message,
+    reduced: bool,
+    seq: u32,
+    param: usize,
+    off: usize,
+    len: usize,
+) -> Result<Vec<f32>> {
+    let (tag, got_seq, got_param, got_off, data) = match msg {
+        Message::GradChunk { seq, param, offset, data } if !reduced => {
+            ("GradChunk", seq, param, offset, data)
+        }
+        Message::GradReduced { seq, param, offset, data } if reduced => {
+            ("GradReduced", seq, param, offset, data)
+        }
+        other => bail!(
+            "all-reduce desync: expected {}, got {}",
+            if reduced { "GradReduced" } else { "GradChunk" },
+            other.tag()
+        ),
+    };
+    ensure!(
+        got_seq == seq && got_param == param as u32 && got_off == off as u32,
+        "all-reduce desync: {tag} (seq {got_seq}, param {got_param}, offset {got_off}) \
+         where (seq {seq}, param {param}, offset {off}) was expected"
+    );
+    ensure!(data.data.len() == len, "{tag} chunk carries {} elems, expected {len}", data.data.len());
+    Ok(data.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Params;
+    use crate::runtime::ArchSpec;
+
+    fn grads_with(params: &Params, fill: f32) -> Grads {
+        let mut g = Grads::zeros_like(params);
+        for (i, t) in g.tensors.values_mut().enumerate() {
+            for (j, v) in t.data_mut().iter_mut().enumerate() {
+                *v = fill + i as f32 + (j % 7) as f32 * 0.25;
+            }
+        }
+        g
+    }
+
+    fn names(params: &Params) -> Vec<String> {
+        params.names().to_vec()
+    }
+
+    #[test]
+    fn master_and_ring_reduce_to_the_same_bits() {
+        let arch = ArchSpec::tiny();
+        let params = Params::init(&arch, 3).unwrap();
+        for n in [2usize, 3, 4] {
+            let base: Vec<Grads> =
+                (0..n).map(|r| grads_with(&params, 0.5 * r as f32 + 0.125)).collect();
+            let mut via_master = base.clone();
+            let mut via_ring = base.clone();
+            // A tiny chunk size forces multi-chunk tensors through the wire.
+            ReduceFabric::new(n, AllReduce::Master, 13)
+                .all_reduce(&mut via_master, &names(&params), 7)
+                .unwrap();
+            ReduceFabric::new(n, AllReduce::Ring, 13)
+                .all_reduce(&mut via_ring, &names(&params), 7)
+                .unwrap();
+            for name in params.names() {
+                let m = via_master[0].get(name).unwrap().data();
+                // Every replica converged on the same tensors…
+                for g in &via_master[1..] {
+                    assert_eq!(m, g.get(name).unwrap().data(), "{name} master fan-out");
+                }
+                for g in &via_ring {
+                    let r = g.get(name).unwrap().data();
+                    // …and master vs ring agree bit for bit.
+                    assert_eq!(m.len(), r.len());
+                    for (a, b) in m.iter().zip(r) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{name} master vs ring (n={n})");
+                    }
+                }
+                // Spot-check the value: left-associated sum of contributions.
+                let mut want = base[0].get(name).unwrap().clone();
+                for g in &base[1..] {
+                    want.axpy(1.0, g.get(name).unwrap()).unwrap();
+                }
+                assert_eq!(want.data(), m, "{name} reduced value (n={n})");
+            }
+        }
+    }
+
+    #[test]
+    fn both_strategies_move_the_same_bytes() {
+        let arch = ArchSpec::tiny();
+        let params = Params::init(&arch, 3).unwrap();
+        let base: Vec<Grads> = (0..3).map(|r| grads_with(&params, r as f32)).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let mut fm = ReduceFabric::new(3, AllReduce::Master, 64);
+        let mut fr = ReduceFabric::new(3, AllReduce::Ring, 64);
+        fm.all_reduce(&mut a, &names(&params), 1).unwrap();
+        fr.all_reduce(&mut b, &names(&params), 1).unwrap();
+        assert!(fm.bytes_moved() > 0);
+        // Chain reduce + chain broadcast moves 2(N-1) chunk frames per
+        // chunk, same as root gather + root broadcast: ring ≤ master.
+        assert!(fr.bytes_moved() <= fm.bytes_moved(), "{} vs {}", fr.bytes_moved(), fm.bytes_moved());
+    }
+
+    #[test]
+    fn param_broadcast_reaches_every_replica_over_both_fabrics() {
+        let arch = ArchSpec::tiny();
+        let src = Params::init(&arch, 42).unwrap();
+        for strategy in [AllReduce::Master, AllReduce::Ring] {
+            let mut dst = vec![Params::init(&arch, 1).unwrap(), Params::init(&arch, 2).unwrap()];
+            let mut fabric = ReduceFabric::new(3, strategy, 17);
+            fabric.broadcast_params(&src, &mut dst, 9).unwrap();
+            for d in &dst {
+                assert_eq!(src.max_abs_diff(d).unwrap(), 0.0, "{:?}", strategy);
+            }
+        }
+    }
+
+    #[test]
+    fn desync_is_a_loud_error() {
+        let arch = ArchSpec::tiny();
+        let params = Params::init(&arch, 3).unwrap();
+        let mut grads: Vec<Grads> = (0..2).map(|_| Grads::zeros_like(&params)).collect();
+        let mut fabric = ReduceFabric::new(2, AllReduce::Master, 64);
+        // Smuggle a stale frame into the fabric: the next round must refuse it.
+        fabric.pairs[0]
+            .1
+            .send(&Message::GradChunk {
+                seq: 99,
+                param: 0,
+                offset: 0,
+                data: WireTensor { shape: vec![1], data: vec![1.0] },
+            })
+            .unwrap();
+        let err = fabric.all_reduce(&mut grads, &names(&params), 1).unwrap_err();
+        assert!(err.to_string().contains("desync"), "{err:#}");
+    }
+
+    #[test]
+    fn strategy_parse_round_trips() {
+        assert_eq!(AllReduce::parse("master").unwrap(), AllReduce::Master);
+        assert_eq!(AllReduce::parse("ring").unwrap(), AllReduce::Ring);
+        assert_eq!(AllReduce::parse(AllReduce::Ring.name()).unwrap(), AllReduce::Ring);
+        assert!(AllReduce::parse("tree").is_err());
+    }
+}

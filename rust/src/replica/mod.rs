@@ -1,0 +1,448 @@
+//! Replica groups: hybrid data×model parallelism (DESIGN.md §14).
+//!
+//! One fleet already splits a conv layer's *kernels* over heterogeneous
+//! devices (Eq. 1 model parallelism).  This tier runs **N whole fleets** in
+//! parallel, each training the identical network on a disjoint slice of the
+//! global batch, and makes them exchange gradients after every backward
+//! pass — synchronous data parallelism *across* fleets composed with the
+//! paper's model parallelism *inside* each fleet.
+//!
+//! The contract per step:
+//!
+//! 1. every replica runs forward+backward on its slice
+//!    ([`DistTrainer::step_grads`]), producing slice-mean gradients;
+//! 2. each gradient set is pre-scaled by `slice / global_batch`, so the
+//!    all-reduce **sum** ([`ReduceFabric::all_reduce`]) is exactly the
+//!    global-batch mean gradient — the same tensor a single fleet at the
+//!    full batch would have computed;
+//! 3. every replica applies the identical reduced gradients
+//!    ([`DistTrainer::step_apply`]), keeping parameters, momentum and step
+//!    counters in lockstep on all replicas forever after.
+//!
+//! Because the training executables are shape-pinned to their batch, each
+//! replica owns a full `ArchSpec`/`Runtime`/worker-fleet stack built at its
+//! slice size ([`ArchSpec::with_batch`]); the slices may therefore be
+//! *uneven*, and a [`ShareRebalancer`] fed by per-replica step wall times
+//! can propose new slices when one fleet is persistently slower — the
+//! batch-level analogue of the kernel-level adaptive re-partitioner.
+
+mod allreduce;
+
+pub use allreduce::{AllReduce, ReduceFabric};
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{
+    spawn_workers_traced, DistTrainer, InprocCluster, StepResult, WorkerSource,
+};
+use crate::config::TrainerConfig;
+use crate::data::Batch;
+use crate::devices::{Throttle, ThrottlePlan};
+use crate::model::{Grads, Params};
+use crate::net::LinkModel;
+use crate::obs::{ObsHandle, SpanCat, SpanRec};
+use crate::runtime::{ArchSpec, Runtime};
+use crate::sched::{AdaptiveConfig, FleetTelemetry, RebalanceConfig, ShareRebalancer};
+use crate::tensor::Tensor;
+
+/// What the replica tier is asked to run (`replica` config section /
+/// `SessionBuilder::replicas`).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaSpec {
+    /// Number of replica fleets; `1` = the classic single-fleet path.
+    pub count: usize,
+    /// Gradient all-reduce strategy.
+    pub allreduce: AllReduce,
+    /// All-reduce chunk size in f32 elements (`replica.chunk_kb`).
+    pub chunk_elems: usize,
+    /// Cross-replica batch-share rebalancing knobs.
+    pub rebalance: RebalanceConfig,
+}
+
+impl Default for ReplicaSpec {
+    fn default() -> Self {
+        Self {
+            count: 1,
+            allreduce: AllReduce::Master,
+            chunk_elems: 64 * 1024,
+            rebalance: RebalanceConfig::default(),
+        }
+    }
+}
+
+/// Per-fleet composition knobs, shared by every replica: each replica fleet
+/// is built exactly like the single-fleet session would build its one fleet.
+pub struct FleetOpts {
+    /// One worker per entry, throttled to emulate a heterogeneous device.
+    pub plans: Vec<ThrottlePlan>,
+    /// Bandwidth/latency shaping on every master↔worker link.
+    pub shape: Option<LinkModel>,
+    /// Master-device compute throttle.
+    pub master_throttle: Throttle,
+    /// Adaptive re-partitioning config (per fleet, unchanged semantics).
+    pub adaptive: AdaptiveConfig,
+    /// Worker-side span tracing (applied to replica 0's fleet only — one
+    /// traced fleet keeps the timeline readable).
+    pub trace: bool,
+}
+
+/// Split `batch` into `n` near-even slices (remainder to the first fleets).
+pub fn split_slices(batch: usize, n: usize) -> Vec<usize> {
+    (0..n).map(|r| batch / n + usize::from(r < batch % n)).collect()
+}
+
+/// N replica fleets in lockstep.  Replica 0's trainer/cluster are owned by
+/// the caller (they double as the session's primary fleet: checkpoints,
+/// events and device telemetry read from it); this set owns replicas
+/// `1..N` plus the reduction fabric and the batch-share rebalancer.
+pub struct ReplicaSet {
+    arch: ArchSpec,
+    spec: ReplicaSpec,
+    cfg: TrainerConfig,
+    fleet: FleetOpts,
+    /// Trainers of replicas `1..N` (`trainers[r - 1]` is replica `r`).
+    trainers: Vec<DistTrainer>,
+    clusters: Vec<InprocCluster>,
+    fabric: ReduceFabric,
+    slices: Vec<usize>,
+    rebalancer: ShareRebalancer,
+    obs: Option<ObsHandle>,
+    rounds: u64,
+}
+
+impl ReplicaSet {
+    /// Build `spec.count` replica fleets over `arch`'s global batch.
+    /// Returns replica 0's trainer + cluster (the caller's primary fleet)
+    /// and the set holding the rest.
+    pub fn build(
+        arch: &ArchSpec,
+        spec: ReplicaSpec,
+        cfg: &TrainerConfig,
+        fleet: FleetOpts,
+    ) -> Result<(DistTrainer, InprocCluster, ReplicaSet)> {
+        let n = spec.count;
+        ensure!(n >= 2, "a replica set needs at least 2 replicas, got {n}");
+        let batch = arch.batch;
+        ensure!(batch >= n, "global batch {batch} cannot feed {n} replicas with ≥1 sample each");
+        let slices = split_slices(batch, n);
+        let mut trainers = Vec::with_capacity(n);
+        let mut clusters = Vec::with_capacity(n);
+        for (r, &s) in slices.iter().enumerate() {
+            let (t, c) = build_fleet(arch, s, cfg, &fleet, r == 0 && fleet.trace)?;
+            trainers.push(t);
+            clusters.push(c);
+        }
+        let t0 = trainers.remove(0);
+        let c0 = clusters.remove(0);
+        let mut set = ReplicaSet {
+            arch: arch.clone(),
+            fabric: ReduceFabric::new(n, spec.allreduce, spec.chunk_elems),
+            rebalancer: ShareRebalancer::new(n, fleet.adaptive.alpha, spec.rebalance),
+            spec,
+            cfg: cfg.clone(),
+            fleet,
+            trainers,
+            clusters,
+            slices,
+            obs: None,
+            rounds: 0,
+        };
+        // Replica 0 seeds the shared parameter state: all fleets init from
+        // the same seed so they already agree, but the broadcast makes the
+        // invariant structural rather than coincidental.
+        set.sync_params_from(&t0, 0)?;
+        Ok((t0, c0, set))
+    }
+
+    pub fn count(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Current per-replica batch slices (`slices[0]` feeds replica 0).
+    pub fn slices(&self) -> &[usize] {
+        &self.slices
+    }
+
+    pub fn strategy(&self) -> AllReduce {
+        self.fabric.strategy()
+    }
+
+    /// Replica `r`'s trainer for `r >= 1` (replica 0 is caller-owned).
+    pub fn trainer(&self, r: usize) -> &DistTrainer {
+        &self.trainers[r - 1]
+    }
+
+    /// Total bytes the gradient fabric has moved (all rounds).
+    pub fn allreduce_bytes(&self) -> u64 {
+        self.fabric.bytes_moved()
+    }
+
+    /// All-reduce rounds completed.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Per-replica EWMA step-time telemetry (seconds per sample).
+    pub fn telemetry(&self) -> &FleetTelemetry {
+        self.rebalancer.telemetry()
+    }
+
+    /// Devices across the whole set, primary fleet included.
+    pub fn total_devices(&self, t0: &DistTrainer) -> usize {
+        1 + t0.alive_workers()
+            + self.trainers.iter().map(|t| 1 + t.alive_workers()).sum::<usize>()
+    }
+
+    /// Attach the observability sink for all-reduce spans and counters.
+    /// (Replica fleets keep `obs = None` on their trainers — only the
+    /// primary fleet traces steps, or every span would appear N times.)
+    pub fn attach_obs(&mut self, obs: ObsHandle) {
+        self.obs = Some(obs);
+    }
+
+    /// One synchronous hybrid step over the global `batch`: slice, step all
+    /// fleets to their gradients, all-reduce, commit everywhere.  Returns
+    /// the merged [`StepResult`] plus a slice-rebalance proposal when the
+    /// step-time telemetry justifies one (the caller decides whether to
+    /// [`Self::apply_slices`] — it implies fleet rebuilds).
+    pub fn step(
+        &mut self,
+        t0: &mut DistTrainer,
+        batch: &Batch,
+    ) -> Result<(StepResult, Option<Vec<usize>>)> {
+        let total: usize = self.slices.iter().sum();
+        ensure!(
+            batch.len() == total,
+            "replica step fed a batch of {}, global batch is {total}",
+            batch.len()
+        );
+        let parts = self.slice_batch(batch)?;
+        let seq = (t0.steps_done() + 1) as u32;
+
+        // ---- local forward+backward on every fleet, timed for the rebalancer
+        let mut pend = Vec::with_capacity(self.count());
+        let t = Instant::now();
+        pend.push(t0.step_grads(&parts[0])?);
+        self.rebalancer.record(0, t.elapsed().as_secs_f64(), self.slices[0]);
+        for (i, tr) in self.trainers.iter_mut().enumerate() {
+            let t = Instant::now();
+            pend.push(tr.step_grads(&parts[i + 1])?);
+            self.rebalancer.record(i + 1, t.elapsed().as_secs_f64(), self.slices[i + 1]);
+        }
+        let losses: Vec<f32> = pend.iter().map(|p| p.loss()).collect();
+
+        // ---- all-reduce: pre-scale by batch share so the sum is the
+        // global-batch mean gradient
+        let bytes0 = self.fabric.bytes_moved();
+        let obs_t0 = self.obs.as_ref().map(|o| o.now_us());
+        let ar_t0 = Instant::now();
+        let mut grads: Vec<Grads> = pend
+            .iter()
+            .zip(&self.slices)
+            .map(|(p, &s)| {
+                let mut g = p.grads().clone();
+                g.scale(s as f32 / total as f32);
+                g
+            })
+            .collect();
+        let names = t0.params.names().to_vec();
+        self.fabric.all_reduce(&mut grads, &names, seq)?;
+        let ar_wall = ar_t0.elapsed();
+        let ar_bytes = self.fabric.bytes_moved() - bytes0;
+        self.rounds += 1;
+        if let Some(o) = &self.obs {
+            if o.tracing() {
+                let now = o.now_us();
+                let ts = obs_t0.unwrap_or(now);
+                o.span(SpanRec {
+                    name: format!("allreduce {seq}"),
+                    cat: SpanCat::Allreduce,
+                    device: 0,
+                    layer: 0,
+                    step: seq as u64,
+                    ts_us: ts,
+                    dur_us: now.saturating_sub(ts),
+                });
+            }
+            o.metrics(|m| {
+                m.inc("allreduce.bytes", ar_bytes);
+                m.inc("allreduce.rounds", 1);
+            });
+        }
+
+        // ---- commit the identical reduced gradients on every replica
+        let mut pend = pend.into_iter();
+        let mut p0 = pend.next().expect("replica 0 pending step");
+        // The fabric wait is communication time in the primary breakdown.
+        p0.record_comm(ar_wall);
+        let mut result = t0.step_apply(p0, Some(&grads[0]))?;
+        for (i, (tr, p)) in self.trainers.iter_mut().zip(pend).enumerate() {
+            let r = tr.step_apply(p, Some(&grads[i + 1]))?;
+            result.breakdown.add(&r.breakdown);
+            result.bytes_moved += r.bytes_moved;
+            result.devices += r.devices;
+            result.repartitioned |= r.repartitioned;
+        }
+        result.bytes_moved += ar_bytes;
+        // Loss over the global batch = slice-weighted mean of slice losses.
+        result.loss = losses
+            .iter()
+            .zip(&self.slices)
+            .map(|(l, &s)| l * s as f32 / total as f32)
+            .sum();
+
+        let proposal = self.rebalancer.propose(t0.steps_done(), &self.slices);
+        Ok((result, proposal))
+    }
+
+    /// Slice-weighted eval accuracy over the global `batch` (each fleet's
+    /// `eval_full` is shape-pinned to its slice, so every replica evaluates
+    /// its own share: the weighted mean is exactly the global accuracy).
+    pub fn eval_accuracy(&self, t0: &DistTrainer, batch: &Batch) -> Result<f32> {
+        let total: usize = self.slices.iter().sum();
+        ensure!(
+            batch.len() == total,
+            "replica eval fed a batch of {}, global batch is {total}",
+            batch.len()
+        );
+        let parts = self.slice_batch(batch)?;
+        let mut acc = 0f32;
+        for (r, part) in parts.iter().enumerate() {
+            let t = if r == 0 { t0 } else { &self.trainers[r - 1] };
+            acc += t.eval_accuracy(part)? * self.slices[r] as f32 / total as f32;
+        }
+        Ok(acc)
+    }
+
+    /// Re-sync every replica to replica 0's state after a checkpoint
+    /// restore: parameters go over the fabric (the wire broadcast the
+    /// resume path is specified to use), momentum and the step counter are
+    /// installed directly.
+    pub fn sync_from(
+        &mut self,
+        t0: &DistTrainer,
+        velocity: Vec<(String, Tensor)>,
+        step: u64,
+    ) -> Result<()> {
+        self.sync_params_from(t0, step as u32)?;
+        for t in &mut self.trainers {
+            t.optimizer_mut().import_velocity(velocity.clone());
+            t.set_steps_done(step);
+        }
+        Ok(())
+    }
+
+    fn sync_params_from(&mut self, t0: &DistTrainer, seq: u32) -> Result<()> {
+        let mut dst: Vec<Params> = self.trainers.iter().map(|t| t.params.clone()).collect();
+        self.fabric.broadcast_params(&t0.params, &mut dst, seq)?;
+        for (t, p) in self.trainers.iter_mut().zip(dst) {
+            t.params = p;
+        }
+        Ok(())
+    }
+
+    /// Adopt new batch slices: every replica whose slice changed gets a
+    /// fresh fleet at the new batch size (executables are shape-pinned),
+    /// with parameters, momentum and step counter handed over.  Expensive
+    /// by design — the rebalancer's cooldown/threshold keep it rare.
+    pub fn apply_slices(
+        &mut self,
+        t0: &mut DistTrainer,
+        c0: &mut Option<InprocCluster>,
+        new: &[usize],
+    ) -> Result<()> {
+        ensure!(new.len() == self.count(), "{} slices for {} replicas", new.len(), self.count());
+        ensure!(
+            new.iter().sum::<usize>() == self.slices.iter().sum::<usize>(),
+            "slice proposal changes the global batch"
+        );
+        ensure!(new.iter().all(|&s| s > 0), "a replica cannot train 0 samples");
+        for r in 0..new.len() {
+            if new[r] == self.slices[r] {
+                continue;
+            }
+            let (mut fresh, fresh_cluster) =
+                build_fleet(&self.arch, new[r], &self.cfg, &self.fleet, r == 0 && self.fleet.trace)?;
+            let old_t = if r == 0 { &*t0 } else { &self.trainers[r - 1] };
+            fresh.params.load_named(&old_t.params.to_named())?;
+            fresh.optimizer_mut().import_velocity(old_t.optimizer().export_velocity());
+            fresh.set_steps_done(old_t.steps_done());
+            if r == 0 {
+                if let Some(o) = &self.obs {
+                    fresh.attach_obs(o.clone());
+                }
+                let old = std::mem::replace(t0, fresh);
+                old.shutdown()?;
+                if let Some(old_c) = c0.replace(fresh_cluster) {
+                    old_c.join()?;
+                }
+            } else {
+                let old = std::mem::replace(&mut self.trainers[r - 1], fresh);
+                old.shutdown()?;
+                let old_c = std::mem::replace(&mut self.clusters[r - 1], fresh_cluster);
+                old_c.join()?;
+            }
+            self.slices[r] = new[r];
+        }
+        Ok(())
+    }
+
+    /// Tear down replicas `1..N` (the caller shuts replica 0 down itself).
+    pub fn shutdown(self) -> Result<()> {
+        for t in self.trainers {
+            t.shutdown()?;
+        }
+        for c in self.clusters {
+            c.join()?;
+        }
+        Ok(())
+    }
+
+    fn slice_batch(&self, batch: &Batch) -> Result<Vec<Batch>> {
+        let mut parts = Vec::with_capacity(self.count());
+        let mut off = 0;
+        for &s in &self.slices {
+            parts.push(batch.slice(off, off + s)?);
+            off += s;
+        }
+        Ok(parts)
+    }
+}
+
+/// One replica fleet at batch `slice`: arch rebuilt at the slice size, own
+/// runtime, own in-process workers, own trainer — exactly the single-fleet
+/// construction, repeated per replica.
+fn build_fleet(
+    arch: &ArchSpec,
+    slice: usize,
+    cfg: &TrainerConfig,
+    fleet: &FleetOpts,
+    trace: bool,
+) -> Result<(DistTrainer, InprocCluster)> {
+    let arch_r = arch.with_batch(slice)?;
+    let rt = Runtime::for_arch(arch_r.clone());
+    let mut cluster =
+        spawn_workers_traced(WorkerSource::Arch(arch_r), &fleet.plans, fleet.shape, trace)?;
+    let links = cluster.take_links();
+    let trainer = DistTrainer::new(rt, links, cfg, fleet.master_throttle, fleet.adaptive)?;
+    Ok((trainer, cluster))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slices_are_near_even_and_sum_to_the_batch() {
+        assert_eq!(split_slices(16, 2), vec![8, 8]);
+        assert_eq!(split_slices(16, 3), vec![6, 5, 5]);
+        assert_eq!(split_slices(5, 4), vec![2, 1, 1, 1]);
+        for (b, n) in [(64, 2), (64, 3), (7, 7), (100, 6)] {
+            let s = split_slices(b, n);
+            assert_eq!(s.iter().sum::<usize>(), b);
+            assert!(s.iter().max().unwrap() - s.iter().min().unwrap() <= 1);
+        }
+    }
+}

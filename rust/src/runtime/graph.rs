@@ -368,6 +368,23 @@ impl ArchSpec {
         .expect("tiny_deep is a valid graph")
     }
 
+    /// The same network at a different batch size: shape inference re-runs
+    /// (batch ladders depend on the batch), then the per-conv bucket-ladder
+    /// overrides and the probe carry over — batch does not change kernel
+    /// geometry, so a manifest-pinned ladder stays valid.  Replica fleets
+    /// use this to compile each fleet at its slice of the global batch
+    /// ([`crate::session::SessionBuilder::replicas`]); the resulting spec
+    /// shares [`ArchSpec::label`] with the original, so checkpoints move
+    /// freely between batch variants of one architecture.
+    pub fn with_batch(&self, batch: usize) -> Result<ArchSpec> {
+        let mut arch = Self::build(batch, self.img, self.in_ch, self.layers.clone())?;
+        for (cv, orig) in arch.convs.iter_mut().zip(&self.convs) {
+            cv.buckets = orig.buckets.clone();
+        }
+        arch.probe = self.probe.clone();
+        Ok(arch)
+    }
+
     /// Named presets selectable from the CLI's `--arch` (and the e2e
     /// example's `[arch]` argument).
     pub fn preset(name: &str) -> Option<ArchSpec> {
@@ -801,6 +818,19 @@ mod tests {
             assert!(l.windows(2).all(|w| w[0] < w[1]), "sorted/deduped for {k}");
             assert!(l.iter().all(|&b| b <= k));
         }
+    }
+
+    #[test]
+    fn with_batch_rebuilds_ladder_and_keeps_kernel_geometry() {
+        let a = ArchSpec::from_geometry(16, 32, 64);
+        let half = a.with_batch(32).unwrap();
+        assert_eq!(half.batch, 32);
+        assert_eq!(half.batch_buckets, vec![4, 8, 16, 32]);
+        assert_eq!(half.convs, a.convs, "kernel geometry and ladders must carry over");
+        assert_eq!(half.label(), a.label(), "label excludes batch");
+        assert_eq!(half.param_shapes, a.param_shapes);
+        assert_eq!(half.probe.flops, a.probe.flops);
+        assert!(a.with_batch(0).is_err());
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! * [`adaptive`] — the re-partitioning policy: predicts the payoff of a
 //!   fresh Eq. 1 split over the *smoothed observed* rates and orders a
 //!   re-shard behind threshold + hysteresis + cooldown (DESIGN.md §5).
+//! * [`rebalance`] — the same idea one level up: cross-replica batch-share
+//!   apportionment over per-replica step-time telemetry (DESIGN.md §14).
 //!
 //! The split keeps policy and mechanism separate: `partition` is pure
 //! math, `telemetry` pure measurement, `adaptive` a side-effect-free state
@@ -18,6 +20,7 @@
 
 mod adaptive;
 mod partition;
+mod rebalance;
 mod telemetry;
 
 pub use adaptive::{
@@ -27,4 +30,5 @@ pub use partition::{
     apportion, bottleneck_cost, fit_bucket, partition_layer, partition_network, workload_shares,
     Shard, ShardTable,
 };
+pub use rebalance::{RebalanceConfig, ShareRebalancer};
 pub use telemetry::{Ewma, FleetTelemetry};

@@ -1,0 +1,165 @@
+//! Cross-replica batch-share rebalancer (DESIGN.md §14).
+//!
+//! Inside one fleet, Eq. 1 shards conv *kernels* over heterogeneous devices.
+//! Across replica fleets the unit of work is the *batch slice*, and the same
+//! logic applies one level up: a replica whose fleet is slower than its
+//! peers should train fewer samples per step, or the synchronous all-reduce
+//! waits on it every step.  The rebalancer reuses the adaptive tier's EWMA
+//! telemetry ([`FleetTelemetry`], one slot per replica, seconds-per-sample)
+//! and the Eq. 1 largest-remainder apportionment to propose new slices
+//! ∝ observed speed, with a change threshold and a step cooldown so noise
+//! does not thrash the (expensive) fleet rebuild a slice change implies.
+
+use super::{apportion, FleetTelemetry};
+
+/// Rebalance knobs (`replica.rebalance_*` in the config schema).
+#[derive(Clone, Copy, Debug)]
+pub struct RebalanceConfig {
+    /// Propose at most every this many steps; `0` disables rebalancing
+    /// (the default — slice changes rebuild the affected replica's fleet).
+    pub every: u64,
+    /// Minimum relative slice change that justifies a rebuild: a proposal is
+    /// dropped unless some replica's slice would change by at least
+    /// `threshold - 1` of its current value (e.g. `1.25` → a ≥25% shift).
+    pub threshold: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        Self { every: 0, threshold: 1.25 }
+    }
+}
+
+/// Proposes new per-replica batch slices from smoothed step-time telemetry.
+pub struct ShareRebalancer {
+    cfg: RebalanceConfig,
+    telemetry: FleetTelemetry,
+    last: u64,
+}
+
+impl ShareRebalancer {
+    pub fn new(replicas: usize, alpha: f64, cfg: RebalanceConfig) -> Self {
+        Self { cfg, telemetry: FleetTelemetry::new(replicas, alpha), last: 0 }
+    }
+
+    /// Feed one replica's step wall time.  `samples` is its batch slice, so
+    /// the stored rate is seconds per sample — scale-free across replicas
+    /// of different slice sizes, which is all apportionment needs.
+    pub fn record(&mut self, replica: usize, seconds: f64, samples: usize) {
+        // FleetTelemetry normalizes seconds over GFLOPs; feeding samples as
+        // "GFLOPs" yields seconds-per-sample rates.  Only ratios matter.
+        self.telemetry.record(replica, seconds, samples as f64 * 1e9);
+    }
+
+    /// The per-replica EWMA telemetry (rates are seconds per sample).
+    pub fn telemetry(&self) -> &FleetTelemetry {
+        &self.telemetry
+    }
+
+    /// Propose new slices (same sum, each ≥ 1) after `step`, or `None` when
+    /// rebalancing is off, on cooldown, under-sampled, or the proposed shift
+    /// is below the change threshold.
+    pub fn propose(&mut self, step: u64, slices: &[usize]) -> Option<Vec<usize>> {
+        let n = slices.len();
+        if self.cfg.every == 0 || n < 2 || step < self.last + self.cfg.every {
+            return None;
+        }
+        let replicas: Vec<usize> = (0..n).collect();
+        let rates = self.telemetry.rates_for(&replicas, 1)?;
+        if rates.iter().any(|r| !r.is_finite() || *r <= 0.0) {
+            return None;
+        }
+        // Due now: start the cooldown whether or not the proposal clears the
+        // threshold, so a stable fleet is not re-examined every step.
+        self.last = step;
+        let speeds: Vec<f64> = rates.iter().map(|r| 1.0 / r).collect();
+        let total_speed: f64 = speeds.iter().sum();
+        let shares: Vec<f64> = speeds.iter().map(|s| s / total_speed).collect();
+        let batch: usize = slices.iter().sum();
+        let mut new = apportion(batch, &shares).ok()?;
+        // Every replica keeps at least one sample (a zero-sample replica has
+        // no gradient and would desync the lockstep parameter state).
+        loop {
+            let Some(starved) = new.iter().position(|&s| s == 0) else { break };
+            let richest = (0..n).max_by_key(|&i| new[i])?;
+            if new[richest] <= 1 {
+                return None;
+            }
+            new[richest] -= 1;
+            new[starved] += 1;
+        }
+        let significant = new.iter().zip(slices).any(|(&a, &b)| {
+            let (a, b) = (a as f64, b as f64);
+            a.max(b) / a.min(b) >= self.cfg.threshold
+        });
+        if significant && new != slices {
+            Some(new)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn balancer(every: u64, threshold: f64) -> ShareRebalancer {
+        ShareRebalancer::new(2, 0.5, RebalanceConfig { every, threshold })
+    }
+
+    #[test]
+    fn disabled_and_single_replica_never_propose() {
+        let mut r = balancer(0, 1.0);
+        r.record(0, 1.0, 8);
+        r.record(1, 4.0, 8);
+        assert!(r.propose(10, &[8, 8]).is_none(), "every=0 must disable");
+        let mut one = ShareRebalancer::new(1, 0.5, RebalanceConfig { every: 1, threshold: 1.0 });
+        one.record(0, 1.0, 8);
+        assert!(one.propose(10, &[16]).is_none());
+    }
+
+    #[test]
+    fn slow_replica_loses_share_and_sum_is_preserved() {
+        let mut r = balancer(1, 1.1);
+        // Replica 1 is 3x slower per sample.
+        for _ in 0..4 {
+            r.record(0, 1.0, 8);
+            r.record(1, 3.0, 8);
+        }
+        let new = r.propose(5, &[8, 8]).expect("imbalance must trigger");
+        assert_eq!(new.iter().sum::<usize>(), 16);
+        assert!(new[0] > new[1], "fast replica must gain: {new:?}");
+        assert!(new[1] >= 1, "no replica may starve: {new:?}");
+    }
+
+    #[test]
+    fn cooldown_and_threshold_gate_proposals() {
+        let mut r = balancer(10, 1.1);
+        for _ in 0..4 {
+            r.record(0, 1.0, 8);
+            r.record(1, 3.0, 8);
+        }
+        assert!(r.propose(5, &[8, 8]).is_none(), "inside cooldown window");
+        assert!(r.propose(10, &[8, 8]).is_some(), "due at every=10");
+        assert!(r.propose(11, &[8, 8]).is_none(), "cooldown restarts");
+        // Balanced fleet: proposal exists but is below the 10% threshold.
+        let mut even = balancer(1, 1.1);
+        for _ in 0..4 {
+            even.record(0, 1.0, 8);
+            even.record(1, 1.02, 8);
+        }
+        assert!(even.propose(2, &[8, 8]).is_none(), "near-even rates must not thrash");
+    }
+
+    #[test]
+    fn extreme_imbalance_still_leaves_one_sample() {
+        let mut r = balancer(1, 1.0);
+        for _ in 0..4 {
+            r.record(0, 0.001, 8);
+            r.record(1, 10.0, 8);
+        }
+        let new = r.propose(2, &[4, 4]).expect("imbalance must trigger");
+        assert_eq!(new, vec![7, 1]);
+    }
+}

@@ -65,6 +65,7 @@ use crate::devices::{Throttle, ThrottlePlan};
 use crate::metrics::Breakdown;
 use crate::net::{Link, LinkModel, TcpLink};
 use crate::obs::{live, HealthState, MetricsServer, ObsConfig, Observability};
+use crate::replica::{AllReduce, FleetOpts, ReplicaSet, ReplicaSpec};
 use crate::runtime::{ArchSpec, Runtime};
 use crate::sched::AdaptiveConfig;
 
@@ -112,6 +113,9 @@ pub enum Event {
     /// This step's total time was a high outlier against the rolling
     /// median/MAD window.
     AnomalyFlagged { step: u64, step_ms: f64, median_ms: f64, mad_ms: f64 },
+    /// The cross-replica rebalancer adopted new per-replica batch slices
+    /// after this step (replica sessions only; implies fleet rebuilds).
+    Rebalanced { step: u64, shares: Vec<usize> },
 }
 
 /// An event observer.  Boxed `FnMut` so closures can accumulate state.
@@ -196,6 +200,7 @@ pub struct SessionBuilder {
     resume: Option<PathBuf>,
     obs: ObsConfig,
     checkpoint_dir: PathBuf,
+    replica: ReplicaSpec,
 }
 
 impl Default for SessionBuilder {
@@ -222,6 +227,7 @@ impl SessionBuilder {
             resume: None,
             obs: ObsConfig::default(),
             checkpoint_dir: PathBuf::from("checkpoints"),
+            replica: ReplicaSpec::default(),
         }
     }
 
@@ -243,6 +249,9 @@ impl SessionBuilder {
             eprintln!("{d}");
         }
         let mut b = Self::new().trainer(cfg.trainer.clone()).adaptive(cfg.adaptive);
+        if let Some(rc) = &cfg.replica {
+            b = b.replica_spec(rc.to_spec());
+        }
         if let Some(addr) = &cfg.metrics_addr {
             b.obs.metrics_addr = Some(addr.clone());
             b.obs.metrics = true;
@@ -371,6 +380,31 @@ impl SessionBuilder {
         self
     }
 
+    // -- replica tier --------------------------------------------------------
+
+    /// Train `n` replica fleets data-parallel over the global batch, each an
+    /// Eq. 1-partitioned copy of the configured fleet on a disjoint batch
+    /// slice, with a synchronous gradient all-reduce every step (DESIGN.md
+    /// §14).  `1` (the default) is the classic single-fleet path; `n > 1`
+    /// composes with every arch/scheduling knob but requires the in-proc
+    /// topology (each replica's runtime is shape-pinned to its slice).
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replica.count = n;
+        self
+    }
+
+    /// Gradient all-reduce strategy for `replicas(n > 1)`.
+    pub fn allreduce(mut self, strategy: AllReduce) -> Self {
+        self.replica.allreduce = strategy;
+        self
+    }
+
+    /// Full replica-tier spec (count, strategy, chunking, rebalance knobs).
+    pub fn replica_spec(mut self, spec: ReplicaSpec) -> Self {
+        self.replica = spec;
+        self
+    }
+
     /// Replace the default dataset (synthetic CIFAR seeded from the trainer
     /// seed, or `data/cifar-10-batches-bin` when present).
     pub fn dataset(mut self, ds: Box<dyn Dataset + Send>) -> Self {
@@ -426,44 +460,74 @@ impl SessionBuilder {
         if report.has_deny() {
             anyhow::bail!("arch pre-flight failed:\n{}", report.render_human());
         }
-        let (links, cluster) = match std::mem::replace(&mut self.topology, TopologySpec::InProc) {
-            TopologySpec::InProc => {
-                let mut cluster = spawn_workers_traced(
-                    worker_source,
-                    &self.plans,
-                    self.shape,
-                    self.obs.tracing(),
-                )?;
-                (cluster.take_links(), Some(cluster))
-            }
-            TopologySpec::Tcp(addrs) => {
-                ensure!(!addrs.is_empty(), "TCP topology needs at least one worker address");
-                // No artificial shaping on real sockets: TCP links carry
-                // real network timing already (`shaped` is an in-proc knob).
-                let mut links: Vec<Box<dyn Link>> = Vec::with_capacity(addrs.len());
-                for addr in &addrs {
-                    let link = TcpLink::connect(addr.trim())
-                        .with_context(|| format!("connecting to worker {addr}"))?;
-                    links.push(Box::new(link));
-                }
-                (links, None)
-            }
-            TopologySpec::Links(links) => (links, None),
+        let (mut trainer, cluster, mut replicas) = if self.replica.count > 1 {
+            // Each replica runs a full fleet at its own batch slice; remote
+            // workers' runtimes are shape-pinned to the global batch, so the
+            // replica tier composes with the in-proc topology only.
+            ensure!(
+                matches!(self.topology, TopologySpec::InProc),
+                "replicas({}) requires the in-proc topology (TCP/custom-link workers are \
+                 shape-pinned to the global batch)",
+                self.replica.count
+            );
+            let fleet = FleetOpts {
+                plans: self.plans.clone(),
+                shape: self.shape,
+                master_throttle: self.master_throttle,
+                adaptive: self.adaptive,
+                trace: self.obs.tracing(),
+            };
+            let (t, c, set) = ReplicaSet::build(rt.arch(), self.replica, &self.trainer, fleet)?;
+            (t, Some(c), Some(set))
+        } else {
+            let (links, cluster) =
+                match std::mem::replace(&mut self.topology, TopologySpec::InProc) {
+                    TopologySpec::InProc => {
+                        let mut cluster = spawn_workers_traced(
+                            worker_source,
+                            &self.plans,
+                            self.shape,
+                            self.obs.tracing(),
+                        )?;
+                        (cluster.take_links(), Some(cluster))
+                    }
+                    TopologySpec::Tcp(addrs) => {
+                        ensure!(!addrs.is_empty(), "TCP topology needs at least one worker address");
+                        // No artificial shaping on real sockets: TCP links carry
+                        // real network timing already (`shaped` is an in-proc knob).
+                        let mut links: Vec<Box<dyn Link>> = Vec::with_capacity(addrs.len());
+                        for addr in &addrs {
+                            let link = TcpLink::connect(addr.trim())
+                                .with_context(|| format!("connecting to worker {addr}"))?;
+                            links.push(Box::new(link));
+                        }
+                        (links, None)
+                    }
+                    TopologySpec::Links(links) => (links, None),
+                };
+            let trainer = DistTrainer::new(
+                rt.clone(),
+                links,
+                &self.trainer,
+                self.master_throttle,
+                self.adaptive,
+            )?;
+            (trainer, cluster, None)
         };
-        let mut trainer = DistTrainer::new(
-            rt.clone(),
-            links,
-            &self.trainer,
-            self.master_throttle,
-            self.adaptive,
-        )?;
         // The obs epoch starts *after* calibration so step 1's spans sit
         // near t=0 of the trace instead of behind the calibration gap.
         let (obs, live) = if self.obs.enabled() {
             let label = rt.arch().label();
-            let devices = 1 + trainer.alive_workers();
+            let devices = match &replicas {
+                Some(set) => set.total_devices(&trainer),
+                None => 1 + trainer.alive_workers(),
+            };
             let o = Observability::new(&self.obs, &label, devices, self.trainer.steps)?;
             trainer.attach_obs(o.handle());
+            if let Some(set) = replicas.as_mut() {
+                set.attach_obs(o.handle());
+                Session::snapshot_replica_gauges(&o.handle(), set);
+            }
             Session::snapshot_fleet_gauges(&o.handle(), &trainer);
             let live = match &self.obs.metrics_addr {
                 Some(addr) => {
@@ -489,6 +553,7 @@ impl SessionBuilder {
             rt,
             trainer,
             cluster,
+            replicas,
             cfg: self.trainer,
             observers: self.observers,
             dataset,
@@ -498,7 +563,9 @@ impl SessionBuilder {
         };
         if let Some(path) = self.resume {
             let ckpt = Checkpoint::load(&path)?;
-            session.restore(&ckpt)?;
+            session
+                .restore(&ckpt)
+                .with_context(|| format!("resuming from checkpoint {}", path.display()))?;
         }
         Ok(session)
     }
@@ -713,8 +780,12 @@ impl RunReport {
 /// ([`Session::step`] per batch); both emit [`Event`]s.
 pub struct Session {
     rt: Arc<Runtime>,
+    /// Replica 0's trainer — the primary fleet in a replica session, the
+    /// only fleet otherwise (checkpoints and telemetry read from it).
     trainer: DistTrainer,
     cluster: Option<InprocCluster>,
+    /// Replicas `1..N` plus the gradient fabric when `replicas(n > 1)`.
+    replicas: Option<ReplicaSet>,
     cfg: TrainerConfig,
     observers: Vec<Observer>,
     dataset: Box<dyn Dataset + Send>,
@@ -778,8 +849,21 @@ impl Session {
         });
     }
 
-    /// One training step on an explicit batch, with events.
+    /// One training step on an explicit batch, with events.  In a replica
+    /// session the batch is the *global* batch: it is sliced across the
+    /// fleets and the gradients all-reduced before anyone commits.
     pub fn step(&mut self, batch: &Batch) -> Result<StepResult> {
+        match self.replicas.take() {
+            Some(mut set) => {
+                let out = self.replica_step(&mut set, batch);
+                self.replicas = Some(set);
+                out
+            }
+            None => self.single_step(batch),
+        }
+    }
+
+    fn single_step(&mut self, batch: &Batch) -> Result<StepResult> {
         let devices_before = 1 + self.trainer.alive_workers();
         let r = self.trainer.step(batch)?;
         let step = self.trainer.steps_done();
@@ -797,6 +881,39 @@ impl Session {
             });
             Self::snapshot_fleet_gauges(&h, &self.trainer);
         }
+        self.emit_step_events(&r, step, devices_before);
+        Ok(r)
+    }
+
+    /// The replica path of [`Session::step`]: hybrid step over all fleets,
+    /// then (rarely) adopt a slice-rebalance proposal — the `Rebalanced`
+    /// event trails the step it follows, keeping the run log causal.
+    fn replica_step(&mut self, set: &mut ReplicaSet, batch: &Batch) -> Result<StepResult> {
+        let devices_before = set.total_devices(&self.trainer);
+        let (r, proposal) = set.step(&mut self.trainer, batch)?;
+        let step = self.trainer.steps_done();
+        if let Some(o) = &self.obs {
+            let h = o.handle();
+            let stats = self.trainer.sched_stats();
+            h.metrics(|m| {
+                m.absorb_breakdown(&r.breakdown);
+                m.absorb_sched(stats);
+                if r.anomaly.is_some() {
+                    m.inc("anomalies", 1);
+                }
+            });
+            Self::snapshot_fleet_gauges(&h, &self.trainer);
+            Self::snapshot_replica_gauges(&h, set);
+        }
+        self.emit_step_events(&r, step, devices_before);
+        if let Some(new) = proposal {
+            set.apply_slices(&mut self.trainer, &mut self.cluster, &new)?;
+            self.emit(Event::Rebalanced { step, shares: new });
+        }
+        Ok(r)
+    }
+
+    fn emit_step_events(&mut self, r: &StepResult, step: u64, devices_before: usize) {
         self.emit(Event::StepCompleted {
             step,
             loss: r.loss,
@@ -829,7 +946,50 @@ impl Session {
                 mad_ms: a.mad_ms,
             });
         }
-        Ok(r)
+    }
+
+    /// Refresh the per-replica gauges: `share.rN` (batch-slice fraction)
+    /// and `throughput.rN` (samples/s from the rebalancer's EWMA).
+    fn snapshot_replica_gauges(h: &crate::obs::ObsHandle, set: &ReplicaSet) {
+        let slices = set.slices().to_vec();
+        let total: usize = slices.iter().sum();
+        let rates: Vec<Option<f64>> =
+            (0..slices.len()).map(|r| set.telemetry().rate(r)).collect();
+        h.metrics(|m| {
+            for (r, s) in slices.iter().enumerate() {
+                m.set_gauge(&format!("share.r{r}"), *s as f64 / total.max(1) as f64);
+            }
+            for (r, rate) in rates.iter().copied().enumerate() {
+                if let Some(rate) = rate.filter(|v| *v > 0.0) {
+                    m.set_gauge(&format!("throughput.r{r}"), 1.0 / rate);
+                }
+            }
+        });
+    }
+
+    /// The replica set (replicas `1..N` + fabric), when this is a replica
+    /// session.
+    pub fn replicas(&self) -> Option<&ReplicaSet> {
+        self.replicas.as_ref()
+    }
+
+    /// Bytes the gradient all-reduce fabric has moved (0 for single-fleet).
+    pub fn allreduce_bytes(&self) -> u64 {
+        self.replicas.as_ref().map_or(0, |s| s.allreduce_bytes())
+    }
+
+    /// Manually adopt new per-replica batch slices — the same rebuild path
+    /// a rebalancer proposal takes (emits [`Event::Rebalanced`]).
+    pub fn rebalance(&mut self, shares: &[usize]) -> Result<()> {
+        let mut set =
+            self.replicas.take().context("rebalance requires a replica session (replicas > 1)")?;
+        let out = set.apply_slices(&mut self.trainer, &mut self.cluster, shares);
+        if out.is_ok() {
+            let step = self.trainer.steps_done();
+            self.emit(Event::Rebalanced { step, shares: shares.to_vec() });
+        }
+        self.replicas = Some(set);
+        out
     }
 
     /// The bound address of the live metrics endpoint, when one is serving
@@ -885,9 +1045,14 @@ impl Session {
         })
     }
 
-    /// Evaluate accuracy on a batch (emits [`Event::EvalDone`]).
+    /// Evaluate accuracy on a batch (emits [`Event::EvalDone`]).  A replica
+    /// session slices the batch across fleets (each `eval_full` is
+    /// shape-pinned to its slice) and weight-averages the accuracies.
     pub fn eval(&mut self, batch: &Batch) -> Result<f32> {
-        let accuracy = self.trainer.eval_accuracy(batch)?;
+        let accuracy = match &self.replicas {
+            Some(set) => set.eval_accuracy(&self.trainer, batch)?,
+            None => self.trainer.eval_accuracy(batch)?,
+        };
         let step = self.trainer.steps_done();
         self.emit(Event::EvalDone { step, accuracy });
         Ok(accuracy)
@@ -936,6 +1101,11 @@ impl Session {
         }
         self.trainer.optimizer_mut().import_velocity(ckpt.velocity.clone());
         self.trainer.set_steps_done(ckpt.step);
+        // Replica sessions: broadcast the restored state so every replica
+        // resumes bit-identical to replica 0 (params go over the fabric).
+        if let Some(set) = self.replicas.as_mut() {
+            set.sync_from(&self.trainer, ckpt.velocity.clone(), ckpt.step)?;
+        }
         Ok(())
     }
 
@@ -966,10 +1136,13 @@ impl Session {
     /// flushing the observability sinks).
     pub fn shutdown(mut self) -> Result<()> {
         let finish = self.finish_obs();
-        let Session { trainer, cluster, .. } = self;
+        let Session { trainer, cluster, replicas, .. } = self;
         trainer.shutdown()?;
         if let Some(c) = cluster {
             c.join()?;
+        }
+        if let Some(set) = replicas {
+            set.shutdown()?;
         }
         finish.map(|_| ())
     }

@@ -1,0 +1,228 @@
+//! The replica-tier contract (DESIGN.md §14): hybrid data×model parallelism
+//! over N fleets must train like one fleet on the same global batch, the
+//! master-rooted and ring all-reduce strategies must be bit-identical, and
+//! checkpoint/resume must broadcast the restored state to every replica.
+//!
+//! Determinism setup mirrors tests/session.rs: rayon pinned to one thread
+//! (before any pool exists in this binary) so intra-op reduction splits
+//! cannot vary, and virtual-time throttles so calibration probes — and
+//! therefore Eq. 1 shard tables — are identical across runs.
+
+use std::sync::Once;
+
+use convdist::config::TrainerConfig;
+use convdist::devices::Throttle;
+use convdist::replica::AllReduce;
+use convdist::runtime::ArchSpec;
+use convdist::session::SessionBuilder;
+use convdist::tensor::Tensor;
+
+static SERIAL_RAYON: Once = Once::new();
+
+/// Pin the global rayon pool to one thread (set before any rayon use in
+/// this process, so the pool is built single-threaded).
+fn serial_rayon() {
+    SERIAL_RAYON.call_once(|| {
+        std::env::set_var("RAYON_NUM_THREADS", "1");
+    });
+}
+
+/// Virtual device speed: slow enough that virtual time dominates real
+/// compute (deterministic probes), fast enough to stay in milliseconds.
+fn vthrottle() -> Throttle {
+    Throttle::virtual_gflops(0.2)
+}
+
+fn cfg(steps: usize) -> TrainerConfig {
+    TrainerConfig {
+        steps,
+        lr: 0.05,
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        seed: 42,
+        log_every: 100,
+        calib_rounds: 1,
+        checkpoint_every: None,
+    }
+}
+
+/// A small-but-divisible geometry: 4+8 kernels over a global batch of 8,
+/// so 2 replicas slice to 4 samples each and 3 replicas to [3, 3, 2].
+fn arch() -> ArchSpec {
+    ArchSpec::from_geometry(4, 8, 8)
+}
+
+/// One master + one worker per fleet, all virtual-time.
+fn builder(steps: usize) -> SessionBuilder {
+    SessionBuilder::new()
+        .arch_spec(arch())
+        .trainer(cfg(steps))
+        .master_throttle(vthrottle())
+        .workers(&[vthrottle()])
+}
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("convdist-replica-{tag}-{}.ckpt", std::process::id()))
+}
+
+#[test]
+fn two_replicas_match_a_single_fleet_on_the_same_global_batch() {
+    serial_rayon();
+    let steps = 4;
+    let mut single = builder(steps).build().unwrap();
+    let single_report = single.run().unwrap();
+    let mut hybrid = builder(steps).replicas(2).build().unwrap();
+    let hybrid_report = hybrid.run().unwrap();
+
+    // Same batch sequence, gradients averaged slice-weighted: the loss
+    // trajectory and final params agree up to float re-association.
+    assert_eq!(single_report.losses.len(), hybrid_report.losses.len());
+    for (i, (a, b)) in single_report.losses.iter().zip(&hybrid_report.losses).enumerate() {
+        assert!((a - b).abs() < 1e-3, "step {i}: single loss {a} vs hybrid {b}");
+    }
+    let diff = single.trainer().params.max_abs_diff(&hybrid.trainer().params).unwrap();
+    assert!(diff < 5e-3, "single vs hybrid params diverged: max |d| = {diff}");
+    // Eval on the same held-out batch: at most two argmax flips of 8.
+    let acc_gap = (single_report.eval_accuracy - hybrid_report.eval_accuracy).abs();
+    assert!(acc_gap < 0.26, "eval accuracy gap {acc_gap}");
+
+    // Every replica committed the same all-reduced update: bit-identical.
+    let set = hybrid.replicas().expect("replica session");
+    assert_eq!(set.count(), 2);
+    assert_eq!(set.slices(), &[4, 4]);
+    for r in 1..set.count() {
+        let d = set.trainer(r).params.max_abs_diff(&hybrid.trainer().params).unwrap();
+        assert_eq!(d, 0.0, "replica {r} params differ from replica 0");
+    }
+    assert!(hybrid.allreduce_bytes() > 0, "all-reduce moved no bytes");
+    assert_eq!(single.allreduce_bytes(), 0, "single fleet has no fabric");
+
+    single.shutdown().unwrap();
+    hybrid.shutdown().unwrap();
+}
+
+#[test]
+fn master_and_ring_allreduce_train_bit_identically() {
+    serial_rayon();
+    let steps = 3;
+    let run = |strategy: AllReduce| -> (Vec<f32>, Vec<(String, Tensor)>, u64) {
+        let mut s = builder(steps).replicas(3).allreduce(strategy).build().unwrap();
+        assert_eq!(s.replicas().unwrap().strategy(), strategy);
+        let report = s.run().unwrap();
+        let params = s.trainer().params.to_named();
+        let bytes = s.allreduce_bytes();
+        s.shutdown().unwrap();
+        (report.losses, params, bytes)
+    };
+    let (master_losses, master_params, master_bytes) = run(AllReduce::Master);
+    let (ring_losses, ring_params, ring_bytes) = run(AllReduce::Ring);
+
+    for (i, (a, b)) in master_losses.iter().zip(&ring_losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "step {i}: master loss {a} vs ring {b}");
+    }
+    for ((na, ta), (nb, tb)) in master_params.iter().zip(&ring_params) {
+        assert_eq!(na, nb);
+        assert!(
+            ta.data().iter().zip(tb.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "param {na}: master and ring updates diverged"
+        );
+    }
+    assert!(master_bytes > 0 && ring_bytes > 0);
+    assert!(
+        ring_bytes <= master_bytes,
+        "ring moved {ring_bytes} bytes > master {master_bytes}"
+    );
+}
+
+#[test]
+fn resume_broadcasts_identical_params_to_every_replica() {
+    serial_rayon();
+    let path = ckpt_path("resume");
+    let mut first = builder(2).replicas(2).build().unwrap();
+    first.run().unwrap();
+    first.save_checkpoint(&path).unwrap();
+    first.shutdown().unwrap();
+
+    let mut resumed = builder(2).replicas(2).resume_from(&path).build().unwrap();
+    assert_eq!(resumed.trainer().steps_done(), 2);
+    let set = resumed.replicas().expect("replica session");
+    for r in 1..set.count() {
+        let d = set.trainer(r).params.max_abs_diff(&resumed.trainer().params).unwrap();
+        assert_eq!(d, 0.0, "replica {r} not bit-identical to replica 0 after resume");
+        assert_eq!(set.trainer(r).steps_done(), 2, "replica {r} step counter not restored");
+    }
+    let report = resumed.run().unwrap();
+    assert_eq!(report.first_step, 2);
+    assert!(report.final_loss().is_finite());
+    resumed.shutdown().unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn arch_mismatched_checkpoint_is_refused_citing_the_file() {
+    serial_rayon();
+    let path = ckpt_path("mismatch");
+    let mut donor = builder(1).build().unwrap();
+    donor.save_checkpoint(&path).unwrap();
+    donor.shutdown().unwrap();
+
+    // A different kernel geometry (8:16 vs 4:8) must be refused with an
+    // error naming both the offending file and the arch mismatch.
+    let err = SessionBuilder::new()
+        .arch_spec(ArchSpec::from_geometry(8, 16, 8))
+        .trainer(cfg(1))
+        .master_throttle(vthrottle())
+        .workers(&[vthrottle()])
+        .replicas(2)
+        .resume_from(&path)
+        .build()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checkpoint is for arch"), "unhelpful error: {msg}");
+    assert!(
+        msg.contains(&path.display().to_string()),
+        "error does not cite the checkpoint file: {msg}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn manual_rebalance_rebuilds_fleets_and_training_continues() {
+    serial_rayon();
+    let mut s = builder(2).replicas(2).build().unwrap();
+    s.run().unwrap();
+    let before = s.trainer().params.to_named();
+
+    s.rebalance(&[5, 3]).unwrap();
+    assert_eq!(s.replicas().unwrap().slices(), &[5, 3]);
+    // The rebuild carries the trained state over bit-for-bit.
+    for ((na, ta), (nb, tb)) in s.trainer().params.to_named().iter().zip(&before) {
+        assert_eq!(na, nb);
+        assert!(
+            ta.data().iter().zip(tb.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "param {na} changed across the rebuild"
+        );
+    }
+    let set = s.replicas().unwrap();
+    for r in 1..set.count() {
+        let d = set.trainer(r).params.max_abs_diff(&s.trainer().params).unwrap();
+        assert_eq!(d, 0.0, "replica {r} diverged across the rebuild");
+    }
+
+    let report = s.run().unwrap();
+    assert_eq!(report.steps_run, 2);
+    assert!(report.final_loss().is_finite());
+
+    // Degenerate share vectors are refused without killing the session.
+    assert!(s.rebalance(&[8, 0]).is_err(), "zero slice must be refused");
+    assert!(s.rebalance(&[4, 4, 4]).is_err(), "wrong count must be refused");
+    assert!(s.rebalance(&[5, 5]).is_err(), "wrong sum must be refused");
+    assert_eq!(s.replicas().unwrap().slices(), &[5, 3], "refusals must not change slices");
+    s.shutdown().unwrap();
+
+    // A single-fleet session has nothing to rebalance.
+    let mut single = builder(1).build().unwrap();
+    let err = single.rebalance(&[4, 4]).unwrap_err();
+    assert!(format!("{err:#}").contains("replica session"), "{err:#}");
+    single.shutdown().unwrap();
+}

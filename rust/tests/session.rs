@@ -223,6 +223,7 @@ fn events_fire_in_order_with_checkpoint_and_eval() {
                     format!("step{step}")
                 }
                 Event::Repartitioned { .. } => "repartition".into(),
+                Event::Rebalanced { .. } => "rebalance".into(),
                 Event::WorkerLeft { .. } => "left".into(),
                 Event::EvalDone { accuracy, .. } => {
                     assert!((0.0..=1.0).contains(accuracy));
